@@ -1,0 +1,84 @@
+//! FPGA design-space exploration (the paper's §5 study, interactively).
+//!
+//! Sweeps unroll × banking × stage-mapping over the GRU accelerator model
+//! and prints the Pareto view: interval vs resources, who fits the
+//! PYNQ-Z2, and where extra banking stops paying (the paper's
+//! "Limitations of Excessive Banking").
+//!
+//! Run with:  `cargo run --release --example fpga_design_space`
+
+use merinda::fpga::gru_accel::{all_stage_maps, stage_map_name, GruAccel, GruAccelConfig};
+use merinda::fpga::hls::Binding;
+use merinda::fpga::resources::Device;
+use merinda::report::Table;
+
+fn main() {
+    let dev = Device::pynq_z2();
+
+    // --- Sweep 1: unroll × banks under DATAFLOW. ---
+    let mut t = Table::new(
+        "Unroll x banking sweep (DATAFLOW, s1D_s2L_s3L_s4D)",
+        &["unroll", "banks", "interval", "cycles", "DSP", "BRAM", "LUT", "fits", "II"],
+    );
+    for &unroll in &[4u32, 8, 16, 32, 64, 96] {
+        for &banks in &[1u32, 2, 4, 8, 16, 32] {
+            let cfg = GruAccelConfig {
+                unroll,
+                banks,
+                dataflow: true,
+                ddr_spill: false,
+                stage_map: [Binding::Dsp, Binding::Lut, Binding::Lut, Binding::Dsp],
+                ..GruAccelConfig::base()
+            };
+            let r = GruAccel::new(cfg).report();
+            t.row(vec![
+                unroll.to_string(),
+                banks.to_string(),
+                r.interval.to_string(),
+                r.cycles.to_string(),
+                r.resources.dsp.to_string(),
+                r.resources.bram18.to_string(),
+                r.resources.lut.to_string(),
+                if r.fits_pynq { "yes" } else { "NO" }.into(),
+                r.worst_stage_ii.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.to_text());
+
+    // --- Sweep 2: the banking law in isolation (paper §5.3.1). ---
+    println!("\nBanking law check (unroll=32): II should fall as ceil(R/2B)");
+    for &banks in &[1u32, 2, 4, 8, 16, 32, 64] {
+        let cfg = GruAccelConfig {
+            unroll: 32,
+            banks,
+            dataflow: true,
+            ddr_spill: false,
+            ..GruAccelConfig::base()
+        };
+        let r = GruAccel::new(cfg).report();
+        println!(
+            "  B={banks:<3} II={} interval={} BRAM18={}{}",
+            r.worst_stage_ii,
+            r.interval,
+            r.resources.bram18,
+            if r.worst_stage_ii == 1 && banks > 16 {
+                "   <- past the knee: pure BRAM cost, no II gain"
+            } else {
+                ""
+            }
+        );
+    }
+
+    // --- Sweep 3: best stage map at the concurrent operating point. ---
+    let mut best: Option<(String, u64)> = None;
+    for m in all_stage_maps() {
+        let r = GruAccel::new(GruAccelConfig::concurrent().with_stage_map(m)).report();
+        if best.as_ref().map(|(_, c)| r.cycles < *c).unwrap_or(true) {
+            best = Some((stage_map_name(&m), r.cycles));
+        }
+    }
+    let (name, cycles) = best.unwrap();
+    println!("\nbest stage mapping: {name} at {cycles} cycles (paper: s1D_s2L_s3L_s4D at 380)");
+    println!("device: {} ({} LUT, {} DSP, {} BRAM18)", dev.name, dev.capacity.lut, dev.capacity.dsp, dev.capacity.bram18);
+}

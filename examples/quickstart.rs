@@ -1,0 +1,63 @@
+//! Quickstart: recover a sparse ODE model from data in a few lines.
+//!
+//! Generates a Lotka–Volterra trace, runs the MERINDA pipeline (GRU neural
+//! flow trained through the AOT PJRT artifacts + sparsity-guided ridge
+//! polish), and prints the recovered equations.
+//!
+//! Run with:  `make artifacts && cargo run --release --example quickstart`
+
+use merinda::mr::recover::{recover_merinda, recover_sindy, MerindaOpts};
+use merinda::mr::train::TrainOpts;
+use merinda::runtime::Runtime;
+use merinda::systems::{CaseStudy, LotkaVolterra};
+use merinda::util::Prng;
+
+fn main() -> Result<(), merinda::Error> {
+    // 1. Data: 1 500 samples of predator/prey dynamics at dt = 0.01.
+    let system = LotkaVolterra::default();
+    let mut rng = Prng::new(42);
+    let trace = system.generate(1500, 0.01, &mut rng);
+    println!("generated {} samples of {}", trace.samples(), system.name());
+
+    // 2. Load the AOT artifacts (built once by `make artifacts`).
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 3. Recover with MERINDA (neural flow + sparse polish)...
+    let merinda = recover_merinda(
+        &rt,
+        &trace,
+        MerindaOpts {
+            train: TrainOpts {
+                steps: 100,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )?;
+
+    // ...and with the SINDy baseline for comparison.
+    let sindy = recover_sindy(&trace)?;
+
+    for rec in [&merinda, &sindy] {
+        println!("\n[{}] {} nonzero terms, {:.2}s, reconstruction MSE {:.3e}",
+            rec.method, rec.model.nnz(), rec.wall_s, rec.recon_mse);
+        let names = rec.model.library.names();
+        let p = rec.model.library.len();
+        for d in 0..rec.model.xdim {
+            let terms: Vec<String> = (0..p)
+                .filter(|&i| rec.model.coeffs[d * p + i] != 0.0)
+                .map(|i| format!("{:+.4}·{}", rec.model.coeffs[d * p + i], names[i]))
+                .collect();
+            println!("  dx{d}/dt = {}", terms.join(" "));
+        }
+    }
+
+    // 4. Check against ground truth.
+    let truth = system.true_coeffs().unwrap();
+    let cmse = merinda::mr::loss::coefficient_mse(&merinda.model.coeffs, &truth);
+    println!("\nMERINDA coefficient MSE vs ground truth: {cmse:.3e}");
+    assert!(cmse < 0.1, "recovery failed");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Streaming recovery service under load (the L3 serving story).
+//!
+//! Spins up the coordinator with the PJRT backend, fires windows from
+//! multiple client threads at increasing offered load, and reports
+//! throughput / latency / batching efficiency / backpressure behaviour.
+//!
+//! Run with:  `make artifacts && cargo run --release --example streaming_service`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use merinda::coordinator::{
+    BatcherConfig, PjrtBackend, RecoveryRequest, Service, ServiceConfig,
+};
+use merinda::systems::{CaseStudy, Lorenz};
+use merinda::util::Prng;
+
+fn main() {
+    let mut rng = Prng::new(99);
+    let tr = Lorenz::default().generate(2000, 0.005, &mut rng);
+    let (y, u) = tr.padded_f32(3, 1);
+    let scale: f32 = y.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+    let y: Arc<Vec<f32>> = Arc::new(y.iter().map(|v| v / scale).collect());
+    let u = Arc::new(u);
+
+    println!("offered-load sweep (4 client threads, PJRT backend):");
+    println!(
+        "{:>8} {:>9} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "target", "served", "rej", "req/s", "p50 ms", "p99 ms", "occup"
+    );
+
+    for &per_client in &[8usize, 32, 64, 128] {
+        let svc = Arc::new(Service::start(
+            ServiceConfig {
+                batcher: BatcherConfig {
+                    batch: 8,
+                    max_wait: Duration::from_millis(4),
+                },
+                queue_depth: 128,
+            },
+            || PjrtBackend::new("artifacts", None, 1).expect("run `make artifacts` first"),
+        ));
+
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..4u64 {
+            let svc = svc.clone();
+            let y = y.clone();
+            let u = u.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Prng::new(1000 + c);
+                let mut served = 0u64;
+                let mut rejected = 0u64;
+                let seq = 64;
+                for i in 0..per_client {
+                    let s0 = rng.below(2000 - seq);
+                    let req = RecoveryRequest {
+                        id: c * 10_000 + i as u64,
+                        y: y[s0 * 3..(s0 + seq) * 3].to_vec(),
+                        u: u[s0..s0 + seq].to_vec(),
+                    };
+                    match svc.submit(req) {
+                        Ok(rx) => {
+                            if rx.recv().is_ok() {
+                                served += 1;
+                            }
+                        }
+                        Err(_) => rejected += 1,
+                    }
+                }
+                (served, rejected)
+            }));
+        }
+        let mut served = 0;
+        let mut rejected = 0;
+        for h in handles {
+            let (s, r) = h.join().unwrap();
+            served += s;
+            rejected += r;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = svc.metrics.snapshot();
+        println!(
+            "{:>8} {:>9} {:>10} {:>10.1} {:>10.2} {:>9.2} {:>8.2}",
+            4 * per_client,
+            served,
+            rejected,
+            served as f64 / wall,
+            m.latency.p50_ms,
+            m.latency.p99_ms,
+            m.mean_batch_occupancy
+        );
+    }
+    println!("\nstreaming_service OK");
+}

@@ -1,0 +1,180 @@
+"""AOT compiler: lower every L2 entry point to HLO text + manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts
+Writes artifacts/<entry>.hlo.txt and artifacts/manifest.json. Python never
+runs after this step; the Rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.gru_cell import gru_cell
+from .kernels.fixedpoint import quantize
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec_list(shapes):
+    return [f32(*s) for s in shapes]
+
+
+def entries():
+    """(name, fn, arg_specs, arg_names, n_outputs) for every artifact."""
+    B, K, X, U, H = model.BATCH, model.SEQ, model.XDIM, model.UDIM, model.HID
+    P = model.PLIB
+    param_specs = [f32(*s) for _, s in model.PARAM_SHAPES]
+    param_names = [n for n, _ in model.PARAM_SHAPES]
+    ltc_specs = [f32(*s) for _, s in model.LTC_PARAM_SHAPES]
+    ltc_names = [n for n, _ in model.LTC_PARAM_SHAPES]
+
+    out = []
+
+    # L1 kernel alone: Rust integration tests pin the native GRU against it.
+    out.append((
+        "gru_cell",
+        lambda x, h, w, u, b: (gru_cell(x, h, w, u, b),),
+        [f32(B, X + U), f32(B, H), f32(X + U, 3 * H), f32(H, 3 * H), f32(3 * H)],
+        ["x", "h", "gru_w", "gru_u", "gru_b"],
+        1,
+    ))
+
+    # ap_fixed quantization kernel (16-bit word, 8 fractional bits).
+    out.append((
+        "quantize_q8_16",
+        lambda x: (quantize(x, frac_bits=8, word_bits=16),),
+        [f32(B, H)],
+        ["x"],
+        1,
+    ))
+
+    # Inference: Pallas-backed forward.
+    out.append((
+        "merinda_forward",
+        lambda *a: (model.merinda_forward(list(a[:7]), a[7], a[8]),),
+        param_specs + [f32(B, K, X), f32(B, K, U)],
+        param_names + ["y", "u"],
+        1,
+    ))
+
+    # ODE-loss evaluation (for validation curves).
+    out.append((
+        "merinda_loss",
+        lambda *a: (model.merinda_loss(list(a[:7]), a[7], a[8], a[9], a[10]),),
+        param_specs + [f32(B, K, X), f32(B, K, U), f32(), f32()],
+        param_names + ["y", "u", "dt", "lam"],
+        1,
+    ))
+
+    # Training: one fused Adam step (7 params + 7 m + 7 v + step + batch).
+    def train(*a):
+        params, m, v = list(a[0:7]), list(a[7:14]), list(a[14:21])
+        step, y, u, dt, lr, lam = a[21], a[22], a[23], a[24], a[25], a[26]
+        return model.merinda_train_step(params, m, v, step, y, u, dt, lr, lam)
+
+    out.append((
+        "merinda_train_step",
+        train,
+        param_specs + param_specs + param_specs
+        + [f32(), f32(B, K, X), f32(B, K, U), f32(), f32(), f32()],
+        param_names
+        + [f"m_{n}" for n in param_names]
+        + [f"v_{n}" for n in param_names]
+        + ["step", "y", "u", "dt", "lr", "lam"],
+        23,
+    ))
+
+    # LTC baseline forward (the iterative-solver workload of Tables 1/2/8).
+    out.append((
+        "ltc_forward",
+        lambda *a: (model.ltc_forward(list(a[:7]), a[7], a[8], a[9]),),
+        ltc_specs + [f32(B, K, X), f32(B, K, U), f32()],
+        ltc_names + ["y", "u", "dt"],
+        1,
+    ))
+
+    # Reconstruction rollout alone (serving path: theta -> trajectory).
+    out.append((
+        "rk4_rollout",
+        lambda theta, y0, u, dt: (model.rk4_rollout(theta, y0, u, dt),),
+        [f32(B, X, P), f32(B, X), f32(B, K, U), f32()],
+        ["theta", "y0", "u", "dt"],
+        1,
+    ))
+
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    wanted = set(args.only.split(",")) if args.only else None
+
+    manifest = {
+        "version": 1,
+        "dims": {
+            "xdim": model.XDIM,
+            "udim": model.UDIM,
+            "plib": model.PLIB,
+            "hid": model.HID,
+            "dense": model.DENSE,
+            "batch": model.BATCH,
+            "seq": model.SEQ,
+            "ltc_unfold": model.LTC_UNFOLD,
+        },
+        "entries": [],
+    }
+
+    for name, fn, specs, names, n_out in entries():
+        if wanted and name not in wanted:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["entries"].append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "outputs": n_out,
+            "args": [
+                {"name": n, "shape": list(s.shape), "dtype": "f32"}
+                for n, s in zip(names, specs)
+            ],
+        })
+        print(f"lowered {name}: {len(text)} chars, {len(specs)} args")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {args.out}/manifest.json ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

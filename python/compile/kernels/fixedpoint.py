@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: ap_fixed quantization simulation.
+
+The paper uses 8-16 bit activations and 12-16 bit weights (Sec. 5, Sec. 6.4,
+``ap_fixed``). This kernel reproduces the quantize -> saturate -> dequantize
+round-trip so the L2 model can evaluate accuracy under the same numeric
+budget the FPGA uses. It must stay bit-identical to the Rust model
+(`rust/src/fpga/fixedpoint.rs`); `python/tests/test_kernel.py` and the Rust
+integration tests both pin this behaviour.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, o_ref, *, frac_bits: int, word_bits: int):
+    x = x_ref[...]
+    scale = jnp.float32(2.0 ** frac_bits)
+    q = x * scale
+    q = jnp.sign(q) * jnp.floor(jnp.abs(q) + 0.5)  # round half away from zero
+    lo = jnp.float32(-(2.0 ** (word_bits - 1)))
+    hi = jnp.float32(2.0 ** (word_bits - 1) - 1.0)
+    o_ref[...] = jnp.clip(q, lo, hi) / scale
+
+
+def quantize(x, frac_bits: int = 8, word_bits: int = 16, row_tile: int | None = None):
+    """Elementwise ap_fixed<word_bits, word_bits-frac_bits> round-trip.
+
+    Args:
+      x: (R, C) f32 tensor.
+      frac_bits: fractional bits (the paper's activation formats use 4-12).
+      word_bits: total word width including sign.
+      row_tile: rows per grid step.
+    """
+    rows, cols = x.shape
+    tr = row_tile or rows
+    assert rows % tr == 0
+    kernel = functools.partial(_quant_kernel, frac_bits=frac_bits, word_bits=word_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // tr,),
+        in_specs=[pl.BlockSpec((tr, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x)

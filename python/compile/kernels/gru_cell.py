@@ -1,0 +1,146 @@
+"""L1 Pallas kernel: fused, banked GRU cell step.
+
+This is the paper's compute hot-spot (Sec. 5.2): one GRU step fusing the
+three gate affines, the LUT nonlinearities and the final interpolation into
+a single kernel so no intermediate leaves on-chip memory (the Pallas/VMEM
+analogue of the paper's BRAM-FIFO DATAFLOW pipeline).
+
+Hardware adaptation (DESIGN.md section "Hardware-Adaptation"): the paper banks
+BRAM so that all unrolled DSP MAC lanes receive operands every cycle
+(2B >= R  =>  II = 1). Here the packed gate weight matrices are processed
+in ``BANKS`` column groups; each group is one matmul tile kept resident in
+VMEM, mirroring one BRAM bank feeding one MAC lane group. On a real TPU
+the (3H, H+I) fused tile targets the MXU; on CPU we lower with
+``interpret=True`` (Mosaic custom-calls cannot run on the CPU PJRT plugin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Number of column banks the packed 3H gate axis is split into. Must divide
+# 3 * HID. Mirrors the ARRAY_PARTITION factor in the paper's HLS design
+# (factor=4 cyclic, Sec. 5.3.2); we use contiguous (block) banking because
+# VMEM tiles are contiguous.
+BANKS = 4
+
+
+def _gru_kernel(x_ref, h_ref, w_ref, u_ref, b_ref, o_ref, *, hid: int):
+    """Kernel body: one batch tile, full weight residency.
+
+    Stage structure mirrors Fig. 6 of the paper:
+      stage 1  gate affines (banked matmul accumulation)  -> DSP
+      stage 2  sigmoid(r), sigmoid(z)                     -> LUT
+      stage 3  candidate tanh with reset modulation       -> DSP+LUT
+      stage 4  interpolation h' = (1-z) n + z h           -> DSP
+    """
+    x = x_ref[...]
+    h = h_ref[...]
+    b = b_ref[...]
+
+    three_h = 3 * hid
+    bank_w = three_h // BANKS
+
+    # Stage 1: banked gate affines. Each bank is a column tile of the packed
+    # [Wr|Wz|Wn] matrix — one MAC-lane group's worth of work. The recurrent
+    # term h @ [Ur|Uz] only feeds the r/z gates; the candidate gate's
+    # recurrent term is reset-modulated and computed in stage 3.
+    parts = []
+    for k in range(BANKS):
+        lo = k * bank_w
+        wk = w_ref[:, lo : lo + bank_w]
+        parts.append(
+            jnp.dot(x, wk, preferred_element_type=jnp.float32) + b[lo : lo + bank_w]
+        )
+    gx = jnp.concatenate(parts, axis=-1)  # (TB, 3H) input pre-activations
+
+    two_h = 2 * hid
+    rz_bank = two_h // BANKS if two_h % BANKS == 0 else two_h
+    rz_parts = []
+    for k in range(two_h // rz_bank):
+        lo = k * rz_bank
+        uk = u_ref[:, lo : lo + rz_bank]
+        rz_parts.append(jnp.dot(h, uk, preferred_element_type=jnp.float32))
+    gh = jnp.concatenate(rz_parts, axis=-1)  # (TB, 2H) recurrent r/z terms
+
+    # Stage 2: gate nonlinearities (LUT analogue: elementwise VPU ops).
+    r = jax.nn.sigmoid(gx[:, :hid] + gh[:, :hid])
+    z = jax.nn.sigmoid(gx[:, hid : 2 * hid] + gh[:, hid:])
+
+    # Stage 3: candidate with reset-modulated recurrent term. The (r*h) @ Un
+    # product is also banked over Un's columns.
+    un = u_ref[:, 2 * hid :]
+    rh = r * h
+    cand_parts = []
+    cbank = hid // BANKS if hid % BANKS == 0 else hid
+    nb = hid // cbank
+    for k in range(nb):
+        lo = k * cbank
+        cand_parts.append(
+            jnp.dot(rh, un[:, lo : lo + cbank], preferred_element_type=jnp.float32)
+        )
+    cand = jnp.concatenate(cand_parts, axis=-1)
+    n = jnp.tanh(gx[:, 2 * hid :] + cand)
+
+    # Stage 4: interpolation (paper Eq. 15).
+    o_ref[...] = (1.0 - z) * n + z * h
+
+
+def gru_cell(x, h, w, u, b, *, batch_tile: int | None = None):
+    """Banked fused GRU step via pallas_call.
+
+    Args:
+      x: (B, I) f32 input.
+      h: (B, H) f32 previous hidden state.
+      w: (I, 3H) packed input weights [Wr|Wz|Wn].
+      u: (H, 3H) packed recurrent weights [Ur|Uz|Un].
+      b: (3H,) packed biases.
+      batch_tile: rows per grid step (defaults to whole batch).
+
+    Returns:
+      (B, H) next hidden state.
+    """
+    bsz, hid = h.shape
+    isz = x.shape[1]
+    tb = batch_tile or bsz
+    assert bsz % tb == 0, (bsz, tb)
+    assert (3 * hid) % BANKS == 0, (hid, BANKS)
+
+    grid = (bsz // tb,)
+    kernel = functools.partial(_gru_kernel, hid=hid)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, isz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, hid), lambda i: (i, 0)),
+            # Weights: one resident block reused by every grid step (the
+            # "one setup, then continuous streaming" property of the paper).
+            pl.BlockSpec((isz, 3 * hid), lambda i: (0, 0)),
+            pl.BlockSpec((hid, 3 * hid), lambda i: (0, 0)),
+            pl.BlockSpec((3 * hid,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, hid), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hid), jnp.float32),
+        interpret=True,
+    )(x, h, w, u, b)
+
+
+def vmem_bytes(batch_tile: int, isz: int, hid: int) -> int:
+    """Static VMEM footprint estimate for one grid step (bytes, f32).
+
+    Used by the perf pass (EXPERIMENTS.md section Perf) to check the block
+    schedule fits a 16 MiB VMEM with double-buffering headroom.
+    """
+    x = batch_tile * isz
+    h = batch_tile * hid
+    w = isz * 3 * hid
+    u = hid * 3 * hid
+    b = 3 * hid
+    g = batch_tile * 3 * hid  # pre-activation scratch
+    out = batch_tile * hid
+    return 4 * (x + h + w + u + b + g + out)

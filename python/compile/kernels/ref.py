@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops. `python/tests/` asserts allclose between
+kernel and oracle across a randomized shape sweep; the Rust native
+implementations (`rust/src/mr/gru.rs`, `rust/src/fpga/fixedpoint.rs`) are
+integration-tested against the lowered HLO of these same functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gru_cell_ref(x, h, w, u, b):
+    """One GRU step, gate order (r, z, n) along the packed 3H axis.
+
+    Args:
+      x: (B, I) input at time t.
+      h: (B, H) previous hidden state.
+      w: (I, 3H) input-to-gate weights, packed [Wr | Wz | Wn].
+      u: (H, 3H) hidden-to-gate weights, packed [Ur | Uz | Un].
+      b: (3H,) gate biases, packed [br | bz | bn].
+
+    Returns:
+      (B, H) next hidden state:
+        r = sigmoid(x Wr + h Ur + br)
+        z = sigmoid(x Wz + h Uz + bz)
+        n = tanh  (x Wn + (r * h) Un + bn)
+        h' = (1 - z) * n + z * h
+    """
+    hid = h.shape[-1]
+    gx = x @ w + b          # (B, 3H)
+    gh = h @ u              # (B, 3H)
+    r = jnp.reciprocal(1.0 + jnp.exp(-(gx[:, :hid] + gh[:, :hid])))
+    z = jnp.reciprocal(1.0 + jnp.exp(-(gx[:, hid:2 * hid] + gh[:, hid:2 * hid])))
+    n = jnp.tanh(gx[:, 2 * hid:] + (r * h) @ u[:, 2 * hid:])
+    return (1.0 - z) * n + z * h
+
+
+def quantize_ref(x, frac_bits: int, word_bits: int):
+    """ap_fixed<word_bits, word_bits-frac_bits> quantization simulation.
+
+    scale -> round-half-away-from-zero -> saturate -> rescale, matching
+    `rust/src/fpga/fixedpoint.rs` bit-for-bit on f32 inputs.
+    """
+    scale = jnp.float32(2.0 ** frac_bits)
+    q = x * scale
+    # round half away from zero (jnp.round would be half-to-even).
+    q = jnp.sign(q) * jnp.floor(jnp.abs(q) + 0.5)
+    lo = -(2.0 ** (word_bits - 1))
+    hi = 2.0 ** (word_bits - 1) - 1.0
+    return jnp.clip(q, lo, hi) / scale
+
+
+def poly_library_ref(y, u):
+    """Second-order polynomial candidate library over state y and input u.
+
+    Args:
+      y: (..., XDIM) state.
+      u: (..., UDIM) input.
+
+    Returns:
+      (..., P) features: [1, v_1..v_d, v_i v_j for i<=j] with v = [y, u],
+      P = 1 + d + d(d+1)/2 for d = XDIM + UDIM.
+    """
+    v = jnp.concatenate([y, u], axis=-1)
+    d = v.shape[-1]
+    ones = jnp.ones(v.shape[:-1] + (1,), dtype=v.dtype)
+    quad = [v[..., i:i + 1] * v[..., j:j + 1] for i in range(d) for j in range(i, d)]
+    return jnp.concatenate([ones, v] + quad, axis=-1)

@@ -1,0 +1,249 @@
+"""L2: the MERINDA model and the LTC baseline, in JAX (build-time only).
+
+MERINDA (paper Fig. 4): a GRU-NN encodes the (Y, U) trace into V hidden
+states; a dense head maps the final hidden state to the p = |Theta| sparse
+ODE coefficient estimates; an RK4 solver integrates the estimated dynamics
+from Y(0) and the ODE loss (MSE between trace and reconstruction, plus an
+L1 sparsity term) trains the whole stack end to end.
+
+LTC baseline (paper Fig. 1 left / Table 8 row 1): a liquid-time-constant
+cell whose forward pass runs a fused fixed-point ODE solver for
+``LTC_UNFOLD`` sub-steps per time step — the iterative structure the paper
+replaces.
+
+All functions here are lowered once by ``aot.py`` to HLO text; the Rust
+coordinator executes them via PJRT. The *inference* artifact uses the
+Pallas GRU kernel (L1); the *training* artifact uses the pure-jnp oracle
+(same math, pinned equal by tests) because ``pallas_call`` has no VJP rule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gru_cell import gru_cell
+from .kernels.ref import gru_cell_ref, poly_library_ref
+
+# ---------------------------------------------------------------------------
+# Canonical model dimensions (fixed at AOT time; see DESIGN.md).
+# Systems with fewer state/input dims are zero-padded by the Rust side.
+# ---------------------------------------------------------------------------
+XDIM = 3          # state dimension n
+UDIM = 1          # external input dimension m
+VDIM = XDIM + UDIM
+PLIB = 1 + VDIM + VDIM * (VDIM + 1) // 2  # 15 second-order library terms
+HID = 32          # GRU hidden units (paper's V)
+DENSE = 48        # dense-head width
+BATCH = 8         # windows per training batch
+SEQ = 64          # window length k
+LTC_UNFOLD = 6    # ODE solver sub-steps per LTC step (paper Table 1)
+
+PARAM_SHAPES = [
+    ("gru_w", (XDIM + UDIM, 3 * HID)),
+    ("gru_u", (HID, 3 * HID)),
+    ("gru_b", (3 * HID,)),
+    ("dense_w1", (HID, DENSE)),
+    ("dense_b1", (DENSE,)),
+    ("dense_w2", (DENSE, XDIM * PLIB)),
+    ("dense_b2", (XDIM * PLIB,)),
+]
+
+LTC_PARAM_SHAPES = [
+    ("ltc_wf", (XDIM + UDIM, HID)),
+    ("ltc_uf", (HID, HID)),
+    ("ltc_bf", (HID,)),
+    ("ltc_a", (HID,)),      # bias/asymptote vector A
+    ("ltc_tau", (HID,)),    # time constants
+    ("ltc_wo", (HID, XDIM)),
+    ("ltc_bo", (XDIM,)),
+]
+
+
+def init_params(key):
+    """Glorot-ish init matching rust/src/mr/train.rs `init_merinda`."""
+    params = []
+    for name, shape in PARAM_SHAPES:
+        key, sub = jax.random.split(key)
+        fan = shape[0] if len(shape) > 1 else shape[0]
+        std = 1.0 / jnp.sqrt(jnp.float32(fan))
+        if name.endswith("_b") or name.endswith("b1") or name.endswith("b2"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MERINDA forward
+# ---------------------------------------------------------------------------
+
+
+def _gru_scan(cell, params, yu):
+    """Run `cell` over the time axis of yu (B, K, XDIM+UDIM)."""
+    gru_w, gru_u, gru_b = params[0], params[1], params[2]
+    h0 = jnp.zeros((yu.shape[0], HID), jnp.float32)
+
+    def step(h, x_t):
+        h_next = cell(x_t, h, gru_w, gru_u, gru_b)
+        return h_next, ()
+
+    h_final, _ = jax.lax.scan(step, h0, jnp.transpose(yu, (1, 0, 2)))
+    return h_final
+
+
+def _dense_head(params, h):
+    """ReLU MLP head: hidden state -> per-window Theta estimates."""
+    w1, b1, w2, b2 = params[3], params[4], params[5], params[6]
+    z = jax.nn.relu(h @ w1 + b1)
+    theta = z @ w2 + b2
+    return theta.reshape((h.shape[0], XDIM, PLIB))
+
+
+def merinda_forward(params, y, u):
+    """Inference path (Pallas L1 kernel): (Y, U) window -> Theta estimate.
+
+    Args:
+      params: list of 7 arrays per PARAM_SHAPES.
+      y: (B, K, XDIM) observed states.
+      u: (B, K, UDIM) inputs.
+
+    Returns:
+      (B, XDIM, PLIB) estimated sparse coefficient matrices.
+    """
+    yu = jnp.concatenate([y, u], axis=-1)
+    h = _gru_scan(gru_cell, params, yu)
+    return _dense_head(params, h)
+
+
+def merinda_forward_ref(params, y, u):
+    """Training-path forward: identical math via the jnp oracle cell."""
+    yu = jnp.concatenate([y, u], axis=-1)
+    h = _gru_scan(gru_cell_ref, params, yu)
+    return _dense_head(params, h)
+
+
+# ---------------------------------------------------------------------------
+# ODE loss: RK4 reconstruction of the window from Theta_est
+# ---------------------------------------------------------------------------
+
+
+def _dyn(theta, y, u_t):
+    """dY/dt = Theta . L(Y, U): the recovered sparse dynamics."""
+    feats = poly_library_ref(y, u_t)                # (B, PLIB)
+    return jnp.einsum("bxp,bp->bx", theta, feats)   # (B, XDIM)
+
+
+def rk4_rollout(theta, y0, u, dt):
+    """Integrate the estimated dynamics over the window (zero-order-hold U).
+
+    Args:
+      theta: (B, XDIM, PLIB) coefficients.
+      y0: (B, XDIM) initial state.
+      u: (B, K, UDIM) input trace.
+      dt: scalar step size.
+
+    Returns:
+      (B, K, XDIM) reconstructed trajectory (first sample = y0).
+    """
+    clip = 1.0e3  # keep early-training rollouts finite
+
+    def step(y, u_t):
+        k1 = _dyn(theta, y, u_t)
+        k2 = _dyn(theta, y + 0.5 * dt * k1, u_t)
+        k3 = _dyn(theta, y + 0.5 * dt * k2, u_t)
+        k4 = _dyn(theta, y + dt * k3, u_t)
+        y_next = y + (dt / 6.0) * (k1 + 2.0 * k2 + 2.0 * k3 + k4)
+        y_next = jnp.clip(y_next, -clip, clip)
+        return y_next, y_next
+
+    u_t = jnp.transpose(u, (1, 0, 2))  # (K, B, UDIM)
+    _, ys = jax.lax.scan(step, y0, u_t[:-1])
+    ys = jnp.transpose(ys, (1, 0, 2))  # (B, K-1, XDIM)
+    return jnp.concatenate([y0[:, None, :], ys], axis=1)
+
+
+def merinda_loss(params, y, u, dt, lam):
+    """ODE reconstruction MSE + L1 sparsity (paper Sec. 4)."""
+    theta = merinda_forward_ref(params, y, u)
+    y_est = rk4_rollout(theta, y[:, 0, :], u, dt)
+    mse = jnp.mean((y - y_est) ** 2)
+    sparsity = jnp.mean(jnp.abs(theta))
+    return mse + lam * sparsity
+
+
+# ---------------------------------------------------------------------------
+# Training step (Adam), lowered as one HLO module
+# ---------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1.0e-8
+
+
+def merinda_train_step(params, m, v, step, y, u, dt, lr, lam):
+    """One Adam step on the MERINDA loss.
+
+    Args:
+      params/m/v: lists of 7 arrays (parameters, first and second moments).
+      step: scalar f32 step count (pre-increment).
+      y, u: training window batch.
+      dt: integration step. lr: learning rate. lam: sparsity weight.
+
+    Returns:
+      (new_params..., new_m..., new_v..., new_step, loss)
+    """
+    loss, grads = jax.value_and_grad(merinda_loss)(params, y, u, dt, lam)
+    step = step + 1.0
+    bc1 = 1.0 - ADAM_B1**step
+    bc2 = 1.0 - ADAM_B2**step
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        update = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_params.append(p - update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return tuple(new_params) + tuple(new_m) + tuple(new_v) + (step, loss)
+
+
+# ---------------------------------------------------------------------------
+# LTC baseline (iterative fused ODE solver — what the paper replaces)
+# ---------------------------------------------------------------------------
+
+
+def ltc_cell(x_t, h, wf, uf, bf, a, tau, dt):
+    """One LTC time step: LTC_UNFOLD fused-Euler solver sub-steps.
+
+    Hasani's fused solver: h <- (h + dt f(x,h) A) / (1 + dt (1/tau + f)).
+    The sub-step loop is the sequential dependency chain that dominates the
+    paper's Table 1/2 profile.
+    """
+    def sub_step(h, _):
+        f = jax.nn.sigmoid(x_t @ wf + h @ uf + bf)
+        h_next = (h + dt * f * a) / (1.0 + dt * (1.0 / tau + f))
+        return h_next, ()
+
+    h_out, _ = jax.lax.scan(sub_step, h, None, length=LTC_UNFOLD)
+    return h_out
+
+
+def ltc_forward(params, y, u, dt):
+    """LTC sequence model: (Y, U) -> per-window state prediction.
+
+    Args:
+      params: list of 7 arrays per LTC_PARAM_SHAPES.
+
+    Returns:
+      (B, XDIM) prediction from the final hidden state.
+    """
+    wf, uf, bf, a, tau, wo, bo = params
+    yu = jnp.concatenate([y, u], axis=-1)
+    h0 = jnp.zeros((y.shape[0], HID), jnp.float32)
+
+    def step(h, x_t):
+        return ltc_cell(x_t, h, wf, uf, bf, a, tau, dt), ()
+
+    h_final, _ = jax.lax.scan(step, h0, jnp.transpose(yu, (1, 0, 2)))
+    return h_final @ wo + bo

@@ -1,0 +1,84 @@
+"""AOT pipeline tests: every entry lowers, manifest is consistent."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+class TestEntries:
+    def test_entry_inventory(self):
+        names = [e[0] for e in aot.entries()]
+        assert names == [
+            "gru_cell",
+            "quantize_q8_16",
+            "merinda_forward",
+            "merinda_loss",
+            "merinda_train_step",
+            "ltc_forward",
+            "rk4_rollout",
+        ]
+
+    def test_arg_names_match_spec_counts(self):
+        for name, _fn, specs, arg_names, _n in aot.entries():
+            assert len(specs) == len(arg_names), name
+
+    def test_train_step_arity(self):
+        entry = [e for e in aot.entries() if e[0] == "merinda_train_step"][0]
+        _, _, specs, _, n_out = entry
+        assert len(specs) == 27  # 21 state + step + y + u + dt + lr + lam
+        assert n_out == 23
+
+    def test_small_entry_lowers_to_hlo_text(self):
+        entry = [e for e in aot.entries() if e[0] == "quantize_q8_16"][0]
+        _, fn, specs, _, _ = entry
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ROOT" in text
+
+    def test_f32_spec_helper(self):
+        s = aot.f32(2, 3)
+        assert s.shape == (2, 3) and s.dtype == jnp.float32
+
+
+class TestManifestOnDisk:
+    """Validate the artifacts built by `make artifacts` (if present)."""
+
+    def _manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            import pytest
+
+            pytest.skip("artifacts not built")
+        with open(path) as fh:
+            return json.load(fh), os.path.dirname(path)
+
+    def test_dims_match_model(self):
+        m, _ = self._manifest()
+        d = m["dims"]
+        assert d["xdim"] == model.XDIM
+        assert d["plib"] == model.PLIB
+        assert d["hid"] == model.HID
+        assert d["batch"] == model.BATCH
+        assert d["seq"] == model.SEQ
+
+    def test_all_files_exist_and_are_hlo(self):
+        m, base = self._manifest()
+        assert len(m["entries"]) == 7
+        for e in m["entries"]:
+            p = os.path.join(base, e["file"])
+            assert os.path.exists(p), e["file"]
+            with open(p) as fh:
+                head = fh.read(64)
+            assert head.startswith("HloModule"), e["file"]
+
+    def test_shapes_recorded(self):
+        m, _ = self._manifest()
+        gru = [e for e in m["entries"] if e["name"] == "gru_cell"][0]
+        shapes = {a["name"]: a["shape"] for a in gru["args"]}
+        assert shapes["x"] == [model.BATCH, model.XDIM + model.UDIM]
+        assert shapes["gru_u"] == [model.HID, 3 * model.HID]

@@ -1,0 +1,159 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+The CORE cross-layer correctness signal: these same oracles are pinned
+against the native Rust implementations by `rust/tests/integration.rs`,
+so kernel == oracle == Rust == lowered HLO.
+
+Hypothesis sweeps shapes and magnitudes; fixed seeds keep CI deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fixedpoint import quantize
+from compile.kernels.gru_cell import gru_cell, vmem_bytes, BANKS
+from compile.kernels.ref import gru_cell_ref, poly_library_ref, quantize_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+class TestGruCell:
+    @given(
+        batch=st.sampled_from([1, 2, 4, 8]),
+        isz=st.sampled_from([1, 2, 4, 7]),
+        hid=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle_across_shapes(self, batch, isz, hid, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = rand(ks[0], batch, isz)
+        h = rand(ks[1], batch, hid)
+        w = rand(ks[2], isz, 3 * hid, scale=0.3)
+        u = rand(ks[3], hid, 3 * hid, scale=0.3)
+        b = rand(ks[4], 3 * hid, scale=0.1)
+        out = gru_cell(x, h, w, u, b)
+        ref = gru_cell_ref(x, h, w, u, b)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_batch_tiling_invariant(self, seed):
+        """Grid tiling over the batch must not change the numbers."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        B, I, H = 8, 4, 16
+        x, h = rand(ks[0], B, I), rand(ks[1], B, H)
+        w = rand(ks[2], I, 3 * H, scale=0.3)
+        u = rand(ks[3], H, 3 * H, scale=0.3)
+        b = rand(ks[4], 3 * H, scale=0.1)
+        full = gru_cell(x, h, w, u, b)
+        for tile in (1, 2, 4):
+            tiled = gru_cell(x, h, w, u, b, batch_tile=tile)
+            np.testing.assert_allclose(full, tiled, rtol=1e-6, atol=1e-6)
+
+    def test_output_bounded(self):
+        """GRU output from bounded h stays in (-1, 1]."""
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        B, I, H = 8, 4, 32
+        x = rand(ks[0], B, I, scale=5.0)
+        h = jnp.zeros((B, H), jnp.float32)
+        w = rand(ks[2], I, 3 * H)
+        u = rand(ks[3], H, 3 * H)
+        b = rand(ks[4], 3 * H)
+        out = gru_cell(x, h, w, u, b)
+        assert jnp.all(jnp.abs(out) <= 1.0)
+
+    def test_zero_params_halve_state(self):
+        """All-zero weights: r=z=0.5, n=0 -> h' = h/2 (pins gate order)."""
+        B, I, H = 2, 3, 8
+        x = jnp.zeros((B, I), jnp.float32)
+        h = jnp.ones((B, H), jnp.float32)
+        w = jnp.zeros((I, 3 * H), jnp.float32)
+        u = jnp.zeros((H, 3 * H), jnp.float32)
+        b = jnp.zeros((3 * H,), jnp.float32)
+        out = gru_cell(x, h, w, u, b)
+        np.testing.assert_allclose(out, 0.5 * h, rtol=1e-6)
+
+    def test_hidden_must_divide_banks(self):
+        with pytest.raises(AssertionError):
+            ks = jax.random.split(jax.random.PRNGKey(0), 5)
+            H = BANKS + 1  # 3H not divisible by BANKS
+            gru_cell(
+                rand(ks[0], 2, 2),
+                rand(ks[1], 2, H),
+                rand(ks[2], 2, 3 * H),
+                rand(ks[3], H, 3 * H),
+                rand(ks[4], 3 * H),
+            )
+
+    def test_vmem_estimate_fits_budget(self):
+        """The shipped block schedule must fit VMEM with double-buffering."""
+        assert vmem_bytes(8, 4, 32) * 2 < 16 * 1024 * 1024
+
+
+class TestQuantize:
+    @given(
+        frac=st.integers(2, 12),
+        word=st.integers(8, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle(self, frac, word, seed):
+        if frac >= word:
+            return
+        x = rand(jax.random.PRNGKey(seed), 8, 32, scale=100.0)
+        out = quantize(x, frac_bits=frac, word_bits=word)
+        ref = quantize_ref(x, frac, word)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_idempotent(self):
+        x = rand(jax.random.PRNGKey(1), 4, 16, scale=10.0)
+        q1 = quantize(x, 8, 16)
+        q2 = quantize(q1, 8, 16)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+    def test_saturation(self):
+        x = jnp.full((1, 4), 1e6, jnp.float32)
+        q = quantize(x, 8, 16)
+        assert float(q[0, 0]) == (2**15 - 1) / 2**8
+
+    def test_half_away_from_zero(self):
+        # 0.5 LSB cases must round away from zero (matches ap_fixed AP_RND
+        # and rust FixedFormat).
+        x = jnp.array([[0.5 / 256.0, -0.5 / 256.0]], jnp.float32)
+        q = quantize(x, 8, 16)
+        np.testing.assert_allclose(q, [[1.0 / 256.0, -1.0 / 256.0]])
+
+
+class TestPolyLibrary:
+    def test_term_count_and_order(self):
+        y = jnp.array([[1.0, 2.0, 3.0]], jnp.float32)
+        u = jnp.array([[0.5]], jnp.float32)
+        f = poly_library_ref(y, u)
+        assert f.shape == (1, 15)
+        assert float(f[0, 0]) == 1.0
+        np.testing.assert_allclose(f[0, 1:5], [1.0, 2.0, 3.0, 0.5])
+        # first quadratic is v0*v0
+        assert float(f[0, 5]) == 1.0
+        # last is u*u
+        assert float(f[0, 14]) == 0.25
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_manual_products(self, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        y = rand(ks[0], 4, 3)
+        u = rand(ks[1], 4, 1)
+        f = np.asarray(poly_library_ref(y, u))
+        v = np.concatenate([np.asarray(y), np.asarray(u)], axis=-1)
+        idx = 5
+        for i in range(4):
+            for j in range(i, 4):
+                np.testing.assert_allclose(
+                    f[:, idx], v[:, i] * v[:, j], rtol=1e-6, atol=1e-6
+                )
+                idx += 1

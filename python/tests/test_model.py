@@ -1,0 +1,140 @@
+"""L2 model tests: shapes, loss behaviour, train-step semantics, LTC."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def params(seed=0):
+    return model.init_params(jax.random.PRNGKey(seed))
+
+
+def batch(seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    y = jax.random.normal(ks[0], (model.BATCH, model.SEQ, model.XDIM)) * 0.5
+    u = jax.random.normal(ks[1], (model.BATCH, model.SEQ, model.UDIM)) * 0.5
+    return y, u
+
+
+class TestForward:
+    def test_theta_shape(self):
+        y, u = batch()
+        theta = model.merinda_forward(params(), y, u)
+        assert theta.shape == (model.BATCH, model.XDIM, model.PLIB)
+
+    def test_pallas_and_ref_paths_agree(self):
+        y, u = batch(2)
+        p = params(3)
+        a = model.merinda_forward(p, y, u)
+        b = model.merinda_forward_ref(p, y, u)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+    def test_deterministic(self):
+        y, u = batch(4)
+        p = params(5)
+        a = model.merinda_forward_ref(p, y, u)
+        b = model.merinda_forward_ref(p, y, u)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestRollout:
+    def test_rollout_shape_and_ic(self):
+        y, u = batch(6)
+        theta = jnp.zeros((model.BATCH, model.XDIM, model.PLIB), jnp.float32)
+        ys = model.rk4_rollout(theta, y[:, 0, :], u, 0.1)
+        assert ys.shape == (model.BATCH, model.SEQ, model.XDIM)
+        # Zero dynamics: trajectory constant at y0.
+        np.testing.assert_allclose(
+            np.asarray(ys), np.broadcast_to(np.asarray(y[:, 0:1, :]), ys.shape)
+        )
+
+    def test_linear_decay_matches_exact(self):
+        # theta encodes dy_i/dt = -y_i via the linear terms.
+        theta = np.zeros((model.BATCH, model.XDIM, model.PLIB), np.float32)
+        for d in range(model.XDIM):
+            theta[:, d, 1 + d] = -1.0  # library order: [1, x0, x1, x2, u, ...]
+        y0 = jnp.ones((model.BATCH, model.XDIM), jnp.float32)
+        u = jnp.zeros((model.BATCH, model.SEQ, model.UDIM), jnp.float32)
+        ys = model.rk4_rollout(jnp.asarray(theta), y0, u, 0.05)
+        t_last = 0.05 * (model.SEQ - 1)
+        np.testing.assert_allclose(
+            np.asarray(ys[:, -1, :]), np.exp(-t_last) * np.ones((model.BATCH, model.XDIM)),
+            rtol=1e-5,
+        )
+
+    def test_rollout_clipped_under_unstable_theta(self):
+        theta = jnp.full((model.BATCH, model.XDIM, model.PLIB), 5.0, jnp.float32)
+        y0 = jnp.ones((model.BATCH, model.XDIM), jnp.float32)
+        u = jnp.zeros((model.BATCH, model.SEQ, model.UDIM), jnp.float32)
+        ys = model.rk4_rollout(theta, y0, u, 0.1)
+        assert bool(jnp.all(jnp.isfinite(ys)))
+        assert float(jnp.max(jnp.abs(ys))) <= 1.0e3
+
+
+class TestLossAndTraining:
+    def test_loss_finite_and_sparsity_term(self):
+        y, u = batch(7)
+        p = params(8)
+        l0 = model.merinda_loss(p, y, u, 0.1, 0.0)
+        l1 = model.merinda_loss(p, y, u, 0.1, 10.0)
+        assert np.isfinite(float(l0))
+        assert float(l1) > float(l0)
+
+    def test_train_step_structure(self):
+        y, u = batch(9)
+        p = params(10)
+        m = [jnp.zeros_like(x) for x in p]
+        v = [jnp.zeros_like(x) for x in p]
+        out = model.merinda_train_step(p, m, v, jnp.float32(0.0), y, u, 0.1, 1e-3, 1e-3)
+        assert len(out) == 23
+        assert float(out[21]) == 1.0  # step incremented
+        assert np.isfinite(float(out[22]))
+        # Params must actually move.
+        assert not np.allclose(np.asarray(out[0]), np.asarray(p[0]))
+
+    def test_loss_decreases_over_steps(self):
+        y, u = batch(11)
+        p = params(12)
+        m = [jnp.zeros_like(x) for x in p]
+        v = [jnp.zeros_like(x) for x in p]
+        step = jnp.float32(0.0)
+        losses = []
+        fn = jax.jit(model.merinda_train_step, static_argnums=())
+        for _ in range(15):
+            out = model.merinda_train_step(p, m, v, step, y, u, 0.1, 3e-3, 1e-3)
+            p, m, v = list(out[0:7]), list(out[7:14]), list(out[14:21])
+            step = out[21]
+            losses.append(float(out[22]))
+        assert losses[-1] < losses[0], losses
+        del fn
+
+
+class TestLtc:
+    def test_forward_shape(self):
+        ks = jax.random.split(jax.random.PRNGKey(13), len(model.LTC_PARAM_SHAPES))
+        p = [
+            jax.random.normal(k, s, jnp.float32) * 0.3
+            for k, (_, s) in zip(ks, model.LTC_PARAM_SHAPES)
+        ]
+        # tau must be positive.
+        p[4] = jnp.abs(p[4]) + 0.5
+        y, u = batch(14)
+        out = model.ltc_forward(p, y, u, 0.1)
+        assert out.shape == (model.BATCH, model.XDIM)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_unfold_depth_matters(self):
+        ks = jax.random.split(jax.random.PRNGKey(15), len(model.LTC_PARAM_SHAPES))
+        p = [
+            jax.random.normal(k, s, jnp.float32) * 0.3
+            for k, (_, s) in zip(ks, model.LTC_PARAM_SHAPES)
+        ]
+        p[4] = jnp.abs(p[4]) + 0.5
+        y, u = batch(16)
+        h = jnp.zeros((model.BATCH, model.HID), jnp.float32)
+        x_t = jnp.concatenate([y[:, 0, :], u[:, 0, :]], axis=-1)
+        one = model.ltc_cell(x_t, h, p[0], p[1], p[2], p[3], p[4], 0.1)
+        assert one.shape == h.shape
+        assert not np.allclose(np.asarray(one), np.asarray(h))

@@ -1,0 +1,171 @@
+//! Ablation benches for the design choices DESIGN.md calls out.
+//!
+//! A1  fixed-point width vs GRU fidelity (the paper's "accuracy-budgeted
+//!     fixed-point widths", §5)
+//! A2  activation-table size vs max error (§5.2.2 LUT tables)
+//! A3  FIFO depth vs backpressure (undersized STREAM FIFOs, §5.3.2)
+//! A4  banking factor past the knee (§5.3.2 "Limitations of Excessive
+//!     Banking")
+//! A5  multi-FPGA tower scale-out (paper §8 future work)
+
+use merinda::fpga::cluster::{scaling_sweep, Sharding};
+use merinda::fpga::fixedpoint::FixedFormat;
+use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use merinda::fpga::lut::{Activation, ActivationTable};
+use merinda::fpga::pipeline::{Pipeline, Stage};
+use merinda::mr::gru::{GruCell, GruParams};
+use merinda::report::Table;
+use merinda::util::Prng;
+
+fn a1_fixed_point_width() {
+    let mut rng = Prng::new(42);
+    let base = GruAccelConfig::concurrent();
+    let params = GruParams::random(base.input, base.hidden, &mut rng, 0.3);
+    let xs = rng.normal_vec_f32(64 * base.input, 0.8);
+    let float = GruCell::new(params.clone()).run(&xs, 64);
+
+    let mut t = Table::new(
+        "A1: fixed-point width vs 64-step GRU fidelity",
+        &["format", "max |err|", "BRAM bits/weight", "verdict"],
+    );
+    for (word, frac) in [(8u32, 4u32), (10, 6), (12, 8), (16, 8), (16, 12)] {
+        let mut cfg = base.clone();
+        cfg.act_fmt = FixedFormat::new(word, frac);
+        cfg.weight_fmt = FixedFormat::new(word, frac);
+        let fixed = GruAccel::new(cfg).forward_fixed(&params, &xs, 64);
+        let err = fixed
+            .iter()
+            .zip(&float)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        t.row(vec![
+            format!("Q{}.{}", word - frac, frac),
+            format!("{err:.5}"),
+            word.to_string(),
+            if err < 0.02 {
+                "ok"
+            } else if err < 0.1 {
+                "marginal"
+            } else {
+                "too coarse"
+            }
+            .into(),
+        ]);
+    }
+    println!("{}", t.to_text());
+}
+
+fn a2_table_size() {
+    let mut t = Table::new(
+        "A2: activation-table entries vs max error (tanh, interpolated)",
+        &["entries", "max error", "LUT cost"],
+    );
+    for entries in [32usize, 64, 128, 256, 512, 1024] {
+        let tab = ActivationTable::new(Activation::Tanh, entries, 8.0, true);
+        t.row(vec![
+            entries.to_string(),
+            format!("{:.2e}", tab.max_error()),
+            tab.resources(16).lut.to_string(),
+        ]);
+    }
+    println!("{}", t.to_text());
+}
+
+fn a3_fifo_depth() {
+    // Finding (recorded in EXPERIMENTS.md): with the GRU's *constant*
+    // per-stage rates, throughput is set by the slowest stage and any
+    // FIFO depth >= 1 sustains it — the event simulation confirms zero
+    // stall penalty. The paper's `depth=256` pragmas therefore buy margin
+    // against rate *variability* (DMA bursts), not steady-state speed,
+    // and each extra depth step costs BRAM.
+    let mut t = Table::new(
+        "A3: STREAM FIFO depth: steady-state cycles vs BRAM cost",
+        &["fifo depth", "total cycles (256 items)", "stall penalty", "BRAM18 (3 FIFOs)"],
+    );
+    let mk = |depth: Option<u32>| {
+        Pipeline::new(vec![
+            Stage::new("produce", 1, 2),
+            Stage::new("compute", 6, 24),
+            Stage::new("drain", 1, 2),
+        ])
+        .with_fifos(vec![depth, depth])
+    };
+    let deep = mk(Some(1024)).simulate(256).total_cycles;
+    for depth in [1u32, 2, 4, 16, 64, 256, 1024] {
+        let total = mk(Some(depth)).simulate(256).total_cycles;
+        let bram = 3 * merinda::fpga::bram::BramFifo::new("f", depth as u64, 16)
+            .resources()
+            .bram18;
+        t.row(vec![
+            depth.to_string(),
+            total.to_string(),
+            format!("{:+}", total as i64 - deep as i64),
+            bram.to_string(),
+        ]);
+    }
+    println!("{}", t.to_text());
+}
+
+fn a4_banking_knee() {
+    let mut t = Table::new(
+        "A4: banking factor past the knee (unroll=16 => knee at B=8)",
+        &["banks", "worst II", "interval", "BRAM18", "verdict"],
+    );
+    for banks in [1u32, 2, 4, 8, 16, 32, 64] {
+        let r = GruAccel::new(GruAccelConfig {
+            unroll: 16,
+            banks,
+            dataflow: true,
+            ddr_spill: false,
+            ..GruAccelConfig::base()
+        })
+        .report();
+        t.row(vec![
+            banks.to_string(),
+            r.worst_stage_ii.to_string(),
+            r.interval.to_string(),
+            r.resources.bram18.to_string(),
+            if r.worst_stage_ii == 1 && banks > 8 {
+                "pure BRAM cost"
+            } else if r.worst_stage_ii == 1 {
+                "at/below knee"
+            } else {
+                "port-starved"
+            }
+            .into(),
+        ]);
+    }
+    println!("{}", t.to_text());
+}
+
+fn a5_tower_scaleout() {
+    for sharding in [Sharding::DataParallel, Sharding::ModelParallel] {
+        let mut t = Table::new(
+            format!("A5: multi-FPGA tower scale-out ({sharding:?})"),
+            &["boards", "steps/s", "latency µs", "speedup", "efficiency", "power W"],
+        );
+        for r in scaling_sweep(
+            &GruAccelConfig::concurrent(),
+            sharding,
+            &[1, 2, 4, 8, 16, 32],
+        ) {
+            t.row(vec![
+                r.boards.to_string(),
+                format!("{:.2e}", r.throughput_steps_per_s),
+                format!("{:.2}", r.step_latency_s * 1e6),
+                format!("{:.2}", r.speedup),
+                format!("{:.2}", r.efficiency),
+                format!("{:.1}", r.power_w),
+            ]);
+        }
+        println!("{}", t.to_text());
+    }
+}
+
+fn main() {
+    a1_fixed_point_width();
+    a2_table_size();
+    a3_fifo_depth();
+    a4_banking_knee();
+    a5_tower_scaleout();
+}

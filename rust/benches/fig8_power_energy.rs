@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Fig. 8 (power linear / energy log, 4 configs).
+use merinda::report::experiments::fig8;
+
+fn main() {
+    println!("{}", fig8());
+}

@@ -1,0 +1,113 @@
+//! Bench: hot-path microbenchmarks for the §Perf optimization pass.
+//!
+//! Measures the three layers' Rust-side hot loops:
+//!   L3a  FPGA simulator structural evaluation (report generation)
+//!   L3b  fixed-point functional GRU forward (datapath emulation)
+//!   L3c  native f32 GRU step / sequence
+//!   L3d  polynomial library design-matrix build (SINDy hot loop)
+//!   L3e  PJRT train step + forward (whole-stack request path)
+//!   L3f  coordinator round trip with mock backend (routing overhead)
+
+use merinda::coordinator::{MockBackend, RecoveryRequest, Service, ServiceConfig};
+use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use merinda::mr::gru::{GruCell, GruParams};
+use merinda::mr::library::PolyLibrary;
+use merinda::util::bench::Bench;
+use merinda::util::Prng;
+
+fn main() {
+    let b = Bench::new(3, 20);
+    let mut rng = Prng::new(1);
+
+    // L3a: structural report.
+    let m = b.run("fpga report (concurrent cfg)", || {
+        GruAccel::new(GruAccelConfig::concurrent()).report()
+    });
+    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
+
+    // L3b: fixed-point functional forward, 64 steps.
+    let cfg = GruAccelConfig::concurrent();
+    let params = GruParams::random(cfg.input, cfg.hidden, &mut rng, 0.3);
+    let xs = rng.normal_vec_f32(64 * cfg.input, 0.8);
+    let accel = GruAccel::new(cfg);
+    let m = b.run("fixed-point GRU forward (64 steps)", || {
+        accel.forward_fixed(&params, &xs, 64)
+    });
+    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
+
+    // L3c: native f32 GRU sequence (the runtime reference).
+    let cell = GruCell::new(params.clone());
+    let m = b.run("native f32 GRU forward (64 steps)", || cell.run(&xs, 64));
+    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
+
+    // L3d: library design matrix, 2000 samples x 15 terms.
+    let lib = PolyLibrary::new(3, 1, 2);
+    let n = 2000;
+    let xsd: Vec<f64> = (0..n * 3).map(|i| (i as f64 * 0.01).sin()).collect();
+    let usd: Vec<f64> = (0..n).map(|i| (i as f64 * 0.02).cos()).collect();
+    let m = b.run("poly design matrix (2000x15)", || {
+        lib.design_matrix(&xsd, &usd, n)
+    });
+    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
+
+    // L3e: PJRT train step + forward (needs artifacts).
+    if let Ok(rt) = merinda::runtime::Runtime::new("artifacts") {
+        use merinda::mr::train::{sample_batch, PjrtTrainer};
+        let dims = rt.manifest.dims.clone();
+        let trace_y = rng.normal_vec_f32(512 * dims.xdim, 0.5);
+        let trace_u = rng.normal_vec_f32(512 * dims.udim, 0.5);
+        let batch = sample_batch(&dims, &trace_y, &trace_u, &mut rng).unwrap();
+        let mut trainer = PjrtTrainer::new(&rt, 5).unwrap();
+        let m = b.run("PJRT merinda_train_step", || {
+            trainer.train_step(&batch, 0.1, 1e-3, 1e-3).unwrap()
+        });
+        println!("{:<44} {:>10.3} ms", m.name, m.mean_ms());
+
+        let exe = rt.load("merinda_forward").unwrap();
+        let tr = PjrtTrainer::new(&rt, 6).unwrap();
+        let mut args: Vec<&[f32]> = tr.state.params.iter().map(|p| p.as_slice()).collect();
+        args.push(&batch.y);
+        args.push(&batch.u);
+        let m = b.run("PJRT merinda_forward (batch 8)", || {
+            exe.run_f32(&args).unwrap()
+        });
+        println!("{:<44} {:>10.3} ms", m.name, m.mean_ms());
+    } else {
+        println!("(artifacts not built; PJRT rows skipped)");
+    }
+
+    // L3g: native BPTT step (the FPGA-side training path, paper §6.2).
+    {
+        use merinda::mr::backprop::GruBptt;
+        let mut rng2 = Prng::new(9);
+        let params = GruParams::random(4, 16, &mut rng2, 0.3);
+        let mut net = GruBptt::new(params, 3, &mut rng2);
+        let seq = 64;
+        let xs = rng2.normal_vec_f32(seq * 4, 0.8);
+        let target = rng2.normal_vec_f32(3, 0.5);
+        let m = b.run("native BPTT step (seq 64, H=16)", || {
+            net.sgd_step(&[(&xs[..], &target[..])], seq, 0.01)
+        });
+        println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
+        let t = GruAccel::new(GruAccelConfig::concurrent()).training_report();
+        println!(
+            "{:<44} {:>10} cycles (interval)",
+            "fpga training step (concurrent cfg)", t.interval
+        );
+    }
+
+    // L3f: coordinator routing overhead with a zero-cost backend.
+    let svc = Service::start(ServiceConfig::default(), MockBackend::default);
+    let mk = |i: u64| RecoveryRequest {
+        id: i,
+        y: vec![0.1; 64 * 3],
+        u: vec![0.0; 64],
+    };
+    let m = b.run("coordinator round trip (batch of 8, mock)", || {
+        let rxs: Vec<_> = (0..8).map(|i| svc.submit(mk(i)).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+    });
+    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate paper Table 1 (LTC forward-pass breakdown) and time
+//! the full LTC forward both natively and through the PJRT artifact.
+use merinda::report::experiments::table1;
+use merinda::util::bench::Bench;
+
+fn main() {
+    println!("{}", table1().to_text());
+
+    // End-to-end LTC forward through PJRT (if artifacts are built).
+    if let Ok(rt) = merinda::runtime::Runtime::new("artifacts") {
+        if let Ok(exe) = rt.load("ltc_forward") {
+            let mut rng = merinda::util::Prng::new(3);
+            let args_data: Vec<Vec<f32>> = exe
+                .spec
+                .args
+                .iter()
+                .map(|a| rng.normal_vec_f32(a.elements(), 0.3))
+                .collect();
+            let mut args: Vec<&[f32]> = args_data.iter().map(|v| v.as_slice()).collect();
+            let dt = [0.1f32];
+            let n = args.len();
+            args[n - 1] = &dt;
+            let b = Bench::new(3, 15);
+            let m = b.run("ltc_forward (PJRT, batch 8 x seq 64 x 6 substeps)", || {
+                exe.run_f32(&args).unwrap()
+            });
+            println!(
+                "{}: {:.3} ms/call (median {:.3} ms)",
+                m.name,
+                m.mean_ms(),
+                m.median_ms()
+            );
+        }
+    } else {
+        println!("(artifacts not built; PJRT timing skipped)");
+    }
+}

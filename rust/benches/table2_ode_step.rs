@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Table 2 (per-ODE-step component breakdown).
+use merinda::report::experiments::table2;
+
+fn main() {
+    println!("{}", table2().to_text());
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Table 4 (SINDy MR time/energy/DRAM per system).
+use merinda::report::experiments::table4;
+
+fn main() {
+    match table4() {
+        Ok(t) => println!("{}", t.to_text()),
+        Err(e) => {
+            eprintln!("table4 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

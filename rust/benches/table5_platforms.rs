@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Table 5 (workloads x platforms on AID).
+use merinda::report::experiments::table5;
+
+fn main() {
+    match table5(None) {
+        Ok(t) => println!("{}", t.to_text()),
+        Err(e) => {
+            eprintln!("table5 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Bench: regenerate paper Table 6 (EMILY vs PINN+SR vs MERINDA accuracy).
+//!
+//! Requires `make artifacts` (MERINDA trains through the PJRT train-step
+//! artifact). MERINDA_STEPS env var overrides the training budget.
+use merinda::report::experiments::{table6, Table6Opts};
+use merinda::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+    let steps = std::env::var("MERINDA_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let opts = Table6Opts {
+        merinda_steps: steps,
+        ..Default::default()
+    };
+    match table6(&rt, opts) {
+        Ok(t) => println!("{}", t.to_text()),
+        Err(e) => {
+            eprintln!("table6 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Table 7 (16-way DSP/LUT stage-mapping sweep).
+use merinda::report::experiments::table7;
+
+fn main() {
+    println!("{}", table7().to_text());
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate paper Table 8 (LTC vs GRU accelerator configs).
+use merinda::report::experiments::{table8, table8_speedups};
+
+fn main() {
+    println!("{}", table8().to_text());
+    let (s1, s2, s3) = table8_speedups();
+    println!(
+        "interval speedups: LTC->GRU {s1:.1}x (paper 44.3x), GRU->DATAFLOW {s2:.2}x (paper 1.87x), DATAFLOW->banking {s3:.2}x (paper 1.36x)"
+    );
+    println!("overall LTC->banked: {:.0}x (paper ~112x)", s1 * s2 * s3);
+}

@@ -1,0 +1,63 @@
+//! `merinda serve --requests N` — streaming recovery service demo.
+
+use std::time::Instant;
+
+use merinda::coordinator::{PjrtBackend, RecoveryRequest, Service, ServiceConfig};
+use merinda::systems::{Aid, CaseStudy};
+use merinda::util::cli::Args;
+use merinda::util::{Prng, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 64);
+    let seed = args.get_u64("seed", 42);
+    let dir = args.get_or("artifacts", "artifacts");
+
+    // Pre-generate request windows from AID traces.
+    let mut rng = Prng::new(seed);
+    let tr = Aid::default().generate(400, 5.0, &mut rng);
+    let (y, u) = tr.padded_f32(3, 1);
+    let scale: f32 = y.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+    let y: Vec<f32> = y.iter().map(|v| v / scale).collect();
+
+    let seq = 64;
+    let (xd, ud) = (3, 1);
+    let windows: Vec<RecoveryRequest> = (0..n)
+        .map(|i| {
+            let s0 = rng.below(400 - seq);
+            RecoveryRequest {
+                id: i as u64,
+                y: y[s0 * xd..(s0 + seq) * xd].to_vec(),
+                u: u[s0 * ud..(s0 + seq) * ud].to_vec(),
+            }
+        })
+        .collect();
+
+    println!("starting service (PJRT backend, artifacts={dir})...");
+    let svc = Service::start(ServiceConfig::default(), move || {
+        PjrtBackend::new(dir, None, seed).expect("backend init (run `make artifacts`)")
+    });
+
+    let t0 = Instant::now();
+    let rxs: Vec<_> = windows
+        .into_iter()
+        .filter_map(|w| svc.submit(w).ok())
+        .collect();
+    let accepted = rxs.len();
+    let mut done = 0;
+    for rx in rxs {
+        if rx.recv().is_ok() {
+            done += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let s = svc.metrics.snapshot();
+    println!("\nserved {done}/{accepted} requests in {wall:.3}s ({:.1} req/s)", done as f64 / wall);
+    println!("batches executed     {}", s.batches);
+    println!("mean batch occupancy {:.2} / 8", s.mean_batch_occupancy);
+    println!(
+        "latency mean/p50/p99 {:.2} / {:.2} / {:.2} ms",
+        s.latency.mean_ms, s.latency.p50_ms, s.latency.p99_ms
+    );
+    Ok(())
+}

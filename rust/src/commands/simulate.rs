@@ -1,0 +1,76 @@
+//! `merinda simulate --config C` — FPGA accelerator structural report.
+
+use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use merinda::fpga::ltc_accel::{LtcAccel, LtcAccelConfig};
+use merinda::fpga::resources::Device;
+use merinda::util::cli::Args;
+use merinda::util::{Error, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let config = args.get_or("config", "concurrent");
+    let device = Device::pynq_z2();
+
+    if config == "ltc" {
+        let r = LtcAccel::new(LtcAccelConfig::base()).report();
+        println!("LTC (ODE) accelerator:");
+        println!("  cycles/item      {}", r.cycles);
+        println!("  interval         {}", r.interval);
+        println!("  resources        {}", r.resources);
+        println!("  power            {:.3} W", r.power_w);
+        println!("  energy/output    {:.3e} J", r.energy_per_output_j);
+        println!(
+            "  throughput       {:.0} items/s @ {} MHz",
+            device.clock_mhz * 1e6 / r.interval as f64,
+            device.clock_mhz
+        );
+        return Ok(());
+    }
+
+    let cfg = match config.as_str() {
+        "baseline" => GruAccelConfig::gru_baseline(),
+        "concurrent" => GruAccelConfig::concurrent(),
+        "bram" | "bram-optimal" => GruAccelConfig::bram_optimal(),
+        other => {
+            return Err(Error::config(format!(
+                "unknown config {other:?} (ltc|baseline|concurrent|bram)"
+            )))
+        }
+    };
+    let accel = GruAccel::new(cfg);
+    let r = accel.report();
+    println!("GRU accelerator [{config}]:");
+    println!("  unroll={} banks={} dataflow={}", accel.cfg.unroll, accel.cfg.banks, accel.cfg.dataflow);
+    println!("  stage map        {}", r.name);
+    println!("  cycles/item      {}", r.cycles);
+    println!("  interval         {} (worst stage II={})", r.interval, r.worst_stage_ii);
+    println!("  resources        {}", r.resources);
+    println!(
+        "  fits PYNQ-Z2     {} (utilization {:.1}%)",
+        r.fits_pynq,
+        100.0 * device.utilization(&r.resources)
+    );
+    println!("  power            {:.3} W", r.power_w);
+    println!("  energy/output    {:.3e} J", r.energy_per_output_j);
+    println!(
+        "  throughput       {:.0} items/s @ {} MHz",
+        device.clock_mhz * 1e6 / r.interval as f64,
+        device.clock_mhz
+    );
+    // Stage detail.
+    println!("\n  per-stage schedule:");
+    for s in accel.stages() {
+        println!(
+            "    {:<16} II={} depth={} cycles={} {}{}",
+            s.name,
+            s.ii,
+            s.depth,
+            s.cycles,
+            s.resources,
+            s.bottleneck
+                .as_deref()
+                .map(|b| format!("  [bound by {b}]"))
+                .unwrap_or_default()
+        );
+    }
+    Ok(())
+}

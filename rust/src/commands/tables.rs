@@ -1,0 +1,71 @@
+//! `merinda table <N>` and `merinda info`.
+
+use merinda::report::experiments as exp;
+use merinda::runtime::Runtime;
+use merinda::util::cli::Args;
+use merinda::util::{Error, Result};
+
+fn artifact_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts")
+}
+
+pub fn info(args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifact_dir(args))?;
+    println!("platform: {}", rt.platform());
+    let d = &rt.manifest.dims;
+    println!(
+        "model dims: xdim={} udim={} plib={} hid={} dense={} batch={} seq={}",
+        d.xdim, d.udim, d.plib, d.hid, d.dense, d.batch, d.seq
+    );
+    println!("artifact entries:");
+    for e in &rt.manifest.entries {
+        println!(
+            "  {:<22} args={:<3} outputs={}",
+            e.name,
+            e.args.len(),
+            e.outputs
+        );
+    }
+    Ok(())
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::config("usage: merinda table <1|2|4|5|6|7|8|fig8|all>"))?
+        .as_str();
+    let print = |t: merinda::report::Table| {
+        println!("{}", t.to_text());
+    };
+    match which {
+        "1" => print(exp::table1()),
+        "2" => print(exp::table2()),
+        "4" => print(exp::table4()?),
+        "5" => print(exp::table5(None)?),
+        "6" => {
+            let rt = Runtime::new(artifact_dir(args))?;
+            let opts = exp::Table6Opts {
+                merinda_steps: args.get_usize("steps", 120),
+                seed: args.get_u64("seed", 23),
+                ..Default::default()
+            };
+            print(exp::table6(&rt, opts)?);
+        }
+        "7" => print(exp::table7()),
+        "8" => print(exp::table8()),
+        "fig8" => println!("{}", exp::fig8()),
+        "all" => {
+            print(exp::table1());
+            print(exp::table2());
+            print(exp::table4()?);
+            print(exp::table5(None)?);
+            print(exp::table7());
+            print(exp::table8());
+            println!("{}", exp::fig8());
+            println!("(table 6 skipped in 'all' — run `merinda table 6` for the trained comparison)");
+        }
+        other => return Err(Error::config(format!("unknown table {other:?}"))),
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! `merinda train --system S --steps N` — PJRT neural-flow training run.
+
+use merinda::mr::train::{PjrtTrainer, TrainOpts};
+use merinda::runtime::Runtime;
+use merinda::util::cli::Args;
+use merinda::util::{Prng, Result};
+
+use super::recover::system_by_name;
+
+pub fn run(args: &Args) -> Result<()> {
+    let sys = system_by_name(&args.get_or("system", "aid"))?;
+    let steps = args.get_usize("steps", 300);
+    let samples = args.get_usize("samples", 1000);
+    let dt = args.get_f64("dt", if sys.name() == "AID" { 5.0 } else { 0.01 });
+    let seed = args.get_u64("seed", 42);
+    let lr = args.get_f64("lr", 3e-3) as f32;
+
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    println!("platform={} system={} steps={steps}", rt.platform(), sys.name());
+
+    let mut rng = Prng::new(seed);
+    let tr = sys.generate(samples, dt, &mut rng);
+    let dims = rt.manifest.dims.clone();
+    let (y, u) = tr.padded_f32(dims.xdim, dims.udim);
+    let scale: f32 = y.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+    let y: Vec<f32> = y.iter().map(|v| v / scale).collect();
+
+    let mut trainer = PjrtTrainer::new(&rt, seed)?;
+    println!("params: {}", trainer.state.param_count());
+    let report = trainer.train(
+        &y,
+        &u,
+        TrainOpts {
+            steps,
+            lr,
+            seed,
+            log_every: (steps / 20).max(1),
+            ..Default::default()
+        },
+    )?;
+    println!("\nloss curve:");
+    for (s, l) in &report.losses {
+        println!("  step {s:>5}  loss {l:.6}");
+    }
+    println!(
+        "\nfinal loss {:.6} after {} steps in {:.1}s ({:.1} ms/step)",
+        report.final_loss,
+        report.steps,
+        report.wall_s,
+        1e3 * report.wall_s / report.steps as f64
+    );
+    Ok(())
+}

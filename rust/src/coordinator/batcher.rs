@@ -1,0 +1,175 @@
+//! Dynamic batcher: groups window requests into fixed-size model batches.
+//!
+//! The AOT artifacts are lowered for a fixed batch B; the batcher fills a
+//! batch either to capacity or until `max_wait` elapses since the first
+//! queued item, then flushes (padding with replicas of the last row so the
+//! executable's shape is always satisfied — padded rows are dropped on the
+//! way out). Ordering within a stream is preserved: requests are drained
+//! FIFO.
+
+use std::time::{Duration, Instant};
+
+/// Batcher policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Model batch size (from the artifact manifest).
+    pub batch: usize,
+    /// Flush deadline measured from the oldest queued request.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            batch: 8,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// An accumulating batch of requests with payload rows.
+#[derive(Debug)]
+pub struct PendingBatch<T> {
+    cfg: BatcherConfig,
+    items: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> PendingBatch<T> {
+    pub fn new(cfg: BatcherConfig) -> PendingBatch<T> {
+        PendingBatch {
+            cfg,
+            items: Vec::with_capacity(cfg.batch),
+            oldest: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Add an item; returns true if the batch is now full.
+    pub fn push(&mut self, item: T) -> bool {
+        if self.items.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.items.push(item);
+        self.items.len() >= self.cfg.batch
+    }
+
+    /// Should we flush now (full or deadline hit)?
+    pub fn should_flush(&self, now: Instant) -> bool {
+        if self.items.len() >= self.cfg.batch {
+            return true;
+        }
+        match self.oldest {
+            Some(t0) if !self.items.is_empty() => now.duration_since(t0) >= self.cfg.max_wait,
+            _ => false,
+        }
+    }
+
+    /// Time until the deadline (for the executor's poll timeout).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t0| {
+            let elapsed = now.duration_since(t0);
+            self.cfg.max_wait.saturating_sub(elapsed)
+        })
+    }
+
+    /// Take the accumulated items, resetting the batch.
+    pub fn take(&mut self) -> Vec<T> {
+        self.oldest = None;
+        std::mem::take(&mut self.items)
+    }
+}
+
+/// Pad a flat row-major payload (rows × row_len) out to `batch` rows by
+/// repeating the final row. Returns the padded buffer and the real count.
+pub fn pad_rows(mut data: Vec<f32>, row_len: usize, batch: usize) -> (Vec<f32>, usize) {
+    assert!(row_len > 0);
+    assert_eq!(data.len() % row_len, 0);
+    let rows = data.len() / row_len;
+    assert!(rows > 0 && rows <= batch, "rows={rows} batch={batch}");
+    if rows < batch {
+        let last = data[(rows - 1) * row_len..rows * row_len].to_vec();
+        for _ in rows..batch {
+            data.extend_from_slice(&last);
+        }
+    }
+    (data, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_capacity() {
+        let mut b = PendingBatch::new(BatcherConfig {
+            batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        assert!(!b.push(1));
+        assert!(!b.push(2));
+        assert!(b.push(3));
+        assert!(b.should_flush(Instant::now()));
+        assert_eq!(b.take(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let mut b = PendingBatch::new(BatcherConfig {
+            batch: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(42);
+        assert!(!b.should_flush(Instant::now()));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.should_flush(Instant::now()));
+        assert_eq!(b.take(), vec![42]);
+    }
+
+    #[test]
+    fn empty_batch_never_flushes() {
+        let b: PendingBatch<u32> = PendingBatch::new(BatcherConfig::default());
+        std::thread::sleep(Duration::from_millis(6));
+        assert!(!b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = PendingBatch::new(BatcherConfig {
+            batch: 4,
+            max_wait: Duration::from_secs(1),
+        });
+        for i in 0..4 {
+            b.push(i);
+        }
+        assert_eq!(b.take(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn padding_repeats_last_row() {
+        let (padded, real) = pad_rows(vec![1.0, 2.0, 3.0, 4.0], 2, 4);
+        assert_eq!(real, 2);
+        assert_eq!(padded, vec![1.0, 2.0, 3.0, 4.0, 3.0, 4.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn padding_noop_when_full() {
+        let (padded, real) = pad_rows(vec![1.0; 8], 2, 4);
+        assert_eq!(real, 4);
+        assert_eq!(padded.len(), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn padding_rejects_overfull() {
+        pad_rows(vec![1.0; 10], 2, 4);
+    }
+}

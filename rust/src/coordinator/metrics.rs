@@ -1,0 +1,138 @@
+//! Service metrics: counters and latency distribution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Latency statistics over recorded samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Shared metrics sink (thread-safe).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    batches: AtomicU64,
+    batched_items: AtomicU64,
+    latencies_ms: Mutex<Vec<f64>>,
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    /// Mean items per executed batch (batching efficiency).
+    pub mean_batch_occupancy: f64,
+    pub latency: LatencyStats,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, items: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(items, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies_ms
+            .lock()
+            .unwrap()
+            .push(latency.as_secs_f64() * 1e3);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lats = self.latencies_ms.lock().unwrap().clone();
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batched_items.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches,
+            mean_batch_occupancy: if batches > 0 {
+                items as f64 / batches as f64
+            } else {
+                0.0
+            },
+            latency: latency_stats(&lats),
+        }
+    }
+}
+
+fn latency_stats(lats: &[f64]) -> LatencyStats {
+    if lats.is_empty() {
+        return LatencyStats::default();
+    }
+    use crate::util::stats;
+    LatencyStats {
+        count: lats.len() as u64,
+        mean_ms: stats::mean(lats),
+        p50_ms: stats::percentile(lats, 50.0),
+        p99_ms: stats::percentile(lats, 99.0),
+        max_ms: lats.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_batch(6);
+        m.on_batch(8);
+        m.on_complete(Duration::from_millis(10));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_occupancy - 7.0).abs() < 1e-12);
+        assert!(s.latency.mean_ms >= 9.0);
+    }
+
+    #[test]
+    fn empty_latency_stats() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.latency.count, 0);
+        assert_eq!(s.latency.p99_ms, 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.on_complete(Duration::from_millis(i));
+        }
+        let l = m.snapshot().latency;
+        assert!(l.p50_ms <= l.p99_ms);
+        assert!(l.p99_ms <= l.max_ms);
+    }
+}

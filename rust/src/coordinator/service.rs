@@ -1,0 +1,452 @@
+//! The recovery service: request router → dynamic batcher → executor.
+//!
+//! One executor thread owns the inference backend (the PJRT client is not
+//! Send, so it is constructed *inside* the thread); clients talk over
+//! bounded channels. `MockBackend` lets the full pipeline be tested
+//! without artifacts.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::{Error, Result};
+
+use super::batcher::{pad_rows, BatcherConfig, PendingBatch};
+use super::metrics::Metrics;
+
+/// One inference request: a (seq, xdim) window + (seq, udim) inputs.
+#[derive(Clone, Debug)]
+pub struct RecoveryRequest {
+    pub id: u64,
+    pub y: Vec<f32>,
+    pub u: Vec<f32>,
+}
+
+/// The response: estimated (xdim × plib) coefficients for the window.
+#[derive(Clone, Debug)]
+pub struct RecoveryResponse {
+    pub id: u64,
+    pub theta: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// Anything that can run a fixed-size forward batch.
+///
+/// `y`: (B, K, X) flattened; `u`: (B, K, U) flattened. Returns (B, X*P)
+/// per-window coefficient estimates, flattened.
+pub trait InferenceBackend {
+    fn batch(&self) -> usize;
+    fn theta_len(&self) -> usize;
+    fn window_y_len(&self) -> usize;
+    fn window_u_len(&self) -> usize;
+    fn forward_batch(&self, y: &[f32], u: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// PJRT-backed backend using the `merinda_forward` artifact.
+pub struct PjrtBackend {
+    rt: crate::runtime::Runtime,
+    exe: Arc<crate::runtime::Executable>,
+    params: Vec<Vec<f32>>,
+}
+
+impl PjrtBackend {
+    /// Load artifacts from `dir` with parameters (e.g. a trained
+    /// `TrainState`'s params); random params if `None`.
+    pub fn new(
+        dir: impl AsRef<std::path::Path>,
+        params: Option<Vec<Vec<f32>>>,
+        seed: u64,
+    ) -> Result<PjrtBackend> {
+        let rt = crate::runtime::Runtime::new(dir)?;
+        let exe = rt.load("merinda_forward")?;
+        let params = match params {
+            Some(p) => p,
+            None => {
+                let dims = rt.manifest.dims.clone();
+                let mut rng = crate::util::Prng::new(seed);
+                crate::mr::train::TrainState::init(&dims, &mut rng).params
+            }
+        };
+        Ok(PjrtBackend { rt, exe, params })
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn batch(&self) -> usize {
+        self.rt.manifest.dims.batch
+    }
+
+    fn theta_len(&self) -> usize {
+        let d = &self.rt.manifest.dims;
+        d.xdim * d.plib
+    }
+
+    fn window_y_len(&self) -> usize {
+        let d = &self.rt.manifest.dims;
+        d.seq * d.xdim
+    }
+
+    fn window_u_len(&self) -> usize {
+        let d = &self.rt.manifest.dims;
+        d.seq * d.udim
+    }
+
+    fn forward_batch(&self, y: &[f32], u: &[f32]) -> Result<Vec<f32>> {
+        let mut args: Vec<&[f32]> = self.params.iter().map(|p| p.as_slice()).collect();
+        args.push(y);
+        args.push(u);
+        let out = self.exe.run_f32(&args)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+/// Deterministic mock: theta[i] = mean(y) + i (tests the routing fabric).
+pub struct MockBackend {
+    pub batch: usize,
+    pub theta_len: usize,
+    pub window_y_len: usize,
+    pub window_u_len: usize,
+    /// Artificial per-batch service time.
+    pub delay: Duration,
+}
+
+impl Default for MockBackend {
+    fn default() -> Self {
+        MockBackend {
+            batch: 8,
+            theta_len: 45,
+            window_y_len: 64 * 3,
+            window_u_len: 64,
+            delay: Duration::ZERO,
+        }
+    }
+}
+
+impl InferenceBackend for MockBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn theta_len(&self) -> usize {
+        self.theta_len
+    }
+    fn window_y_len(&self) -> usize {
+        self.window_y_len
+    }
+    fn window_u_len(&self) -> usize {
+        self.window_u_len
+    }
+
+    fn forward_batch(&self, y: &[f32], _u: &[f32]) -> Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mut out = vec![0.0f32; self.batch * self.theta_len];
+        for b in 0..self.batch {
+            let win = &y[b * self.window_y_len..(b + 1) * self.window_y_len];
+            let mean: f32 = win.iter().sum::<f32>() / win.len() as f32;
+            for i in 0..self.theta_len {
+                out[b * self.theta_len + i] = mean + i as f32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Service configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    pub batcher: BatcherConfig,
+    /// Bounded submission queue depth (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            batcher: BatcherConfig::default(),
+            queue_depth: 256,
+        }
+    }
+}
+
+struct InFlight {
+    req: RecoveryRequest,
+    t0: Instant,
+    resp: SyncSender<RecoveryResponse>,
+}
+
+enum Msg {
+    Request(InFlight),
+    Shutdown,
+}
+
+/// A running recovery service.
+pub struct Service {
+    tx: SyncSender<Msg>,
+    pub metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the service with a backend factory. The factory runs on the
+    /// executor thread, so non-Send backends (PJRT) are fine.
+    pub fn start<B, F>(cfg: ServiceConfig, make_backend: F) -> Service
+    where
+        B: InferenceBackend,
+        F: FnOnce() -> B + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let worker = std::thread::spawn(move || executor_loop(rx, cfg, make_backend(), m));
+        Service {
+            tx,
+            metrics,
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit a request; returns a receiver for the response. Fails fast
+    /// with backpressure if the queue is full.
+    pub fn submit(&self, req: RecoveryRequest) -> Result<Receiver<RecoveryResponse>> {
+        let (rtx, rrx) = sync_channel(1);
+        self.metrics.on_submit();
+        self.tx
+            .try_send(Msg::Request(InFlight {
+                req,
+                t0: Instant::now(),
+                resp: rtx,
+            }))
+            .map_err(|_| {
+                self.metrics.on_reject();
+                Error::config("service queue full (backpressure)")
+            })?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait.
+    pub fn recover(&self, req: RecoveryRequest) -> Result<RecoveryResponse> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .map_err(|_| Error::config("service shut down mid-request"))
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn executor_loop<B: InferenceBackend>(
+    rx: Receiver<Msg>,
+    cfg: ServiceConfig,
+    backend: B,
+    metrics: Arc<Metrics>,
+) {
+    let mut pending: PendingBatch<InFlight> = PendingBatch::new(BatcherConfig {
+        batch: backend.batch(),
+        ..cfg.batcher
+    });
+    loop {
+        let now = Instant::now();
+        let timeout = pending
+            .time_to_deadline(now)
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Request(inflight)) => {
+                let full = pending.push(inflight);
+                if full {
+                    flush(&backend, &mut pending, &metrics);
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                if !pending.is_empty() {
+                    flush(&backend, &mut pending, &metrics);
+                }
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if pending.should_flush(Instant::now()) {
+                    flush(&backend, &mut pending, &metrics);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    flush(&backend, &mut pending, &metrics);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn flush<B: InferenceBackend>(
+    backend: &B,
+    pending: &mut PendingBatch<InFlight>,
+    metrics: &Metrics,
+) {
+    let items = pending.take();
+    if items.is_empty() {
+        return;
+    }
+    let ylen = backend.window_y_len();
+    let ulen = backend.window_u_len();
+    let mut y = Vec::with_capacity(items.len() * ylen);
+    let mut u = Vec::with_capacity(items.len() * ulen);
+    for it in &items {
+        // Shape guard: malformed requests answered with zeros rather than
+        // poisoning the whole batch.
+        if it.req.y.len() == ylen && it.req.u.len() == ulen {
+            y.extend_from_slice(&it.req.y);
+            u.extend_from_slice(&it.req.u);
+        } else {
+            y.extend(std::iter::repeat(0.0).take(ylen));
+            u.extend(std::iter::repeat(0.0).take(ulen));
+        }
+    }
+    let (y, real) = pad_rows(y, ylen, backend.batch());
+    let (u, _) = pad_rows(u, ulen, backend.batch());
+    metrics.on_batch(real as u64);
+
+    match backend.forward_batch(&y, &u) {
+        Ok(thetas) => {
+            let tl = backend.theta_len();
+            for (b, it) in items.into_iter().enumerate() {
+                let theta = thetas[b * tl..(b + 1) * tl].to_vec();
+                let latency = it.t0.elapsed();
+                metrics.on_complete(latency);
+                let _ = it.resp.send(RecoveryResponse {
+                    id: it.req.id,
+                    theta,
+                    latency,
+                });
+            }
+        }
+        Err(_) => {
+            // Drop responders; callers observe a closed channel.
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_req(id: u64, fill: f32) -> RecoveryRequest {
+        RecoveryRequest {
+            id,
+            y: vec![fill; 64 * 3],
+            u: vec![0.0; 64],
+        }
+    }
+
+    #[test]
+    fn single_request_round_trip() {
+        let svc = Service::start(ServiceConfig::default(), MockBackend::default);
+        let resp = svc.recover(mk_req(7, 1.5)).unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.theta.len(), 45);
+        // Mock: theta[i] = mean + i = 1.5 + i.
+        assert!((resp.theta[0] - 1.5).abs() < 1e-6);
+        assert!((resp.theta[44] - 45.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_of_eight_single_flush() {
+        let svc = Service::start(ServiceConfig::default(), MockBackend::default);
+        let rxs: Vec<_> = (0..8)
+            .map(|i| svc.submit(mk_req(i, i as f32)).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.id, i as u64);
+            assert!((r.theta[0] - i as f32).abs() < 1e-6, "demux mismatch");
+        }
+        let s = svc.metrics.snapshot();
+        assert_eq!(s.completed, 8);
+        assert_eq!(s.batches, 1, "should have been one full batch");
+        assert!((s.mean_batch_occupancy - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_deadline() {
+        let cfg = ServiceConfig {
+            batcher: BatcherConfig {
+                batch: 8,
+                max_wait: Duration::from_millis(2),
+            },
+            ..Default::default()
+        };
+        let svc = Service::start(cfg, MockBackend::default);
+        let resp = svc.recover(mk_req(1, 0.5)).unwrap();
+        assert_eq!(resp.id, 1);
+        let s = svc.metrics.snapshot();
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch_occupancy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Slow backend + tiny queue: the second/third submits must fail.
+        let cfg = ServiceConfig {
+            queue_depth: 1,
+            batcher: BatcherConfig {
+                batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+        };
+        let svc = Service::start(cfg, || MockBackend {
+            batch: 1,
+            delay: Duration::from_millis(50),
+            ..Default::default()
+        });
+        let mut rejected = 0;
+        let mut kept = Vec::new();
+        for i in 0..6 {
+            match svc.submit(mk_req(i, 0.0)) {
+                Ok(rx) => kept.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        for rx in kept {
+            let _ = rx.recv();
+        }
+    }
+
+    #[test]
+    fn malformed_request_gets_zero_theta_not_poisoned_batch() {
+        let svc = Service::start(ServiceConfig::default(), MockBackend::default);
+        let bad = RecoveryRequest {
+            id: 9,
+            y: vec![1.0; 3], // wrong length
+            u: vec![],
+        };
+        let good = mk_req(10, 2.0);
+        let rx_bad = svc.submit(bad).unwrap();
+        let rx_good = svc.submit(good).unwrap();
+        let rb = rx_bad.recv().unwrap();
+        let rg = rx_good.recv().unwrap();
+        assert!((rb.theta[0] - 0.0).abs() < 1e-6);
+        assert!((rg.theta[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn throughput_many_requests() {
+        let svc = Service::start(ServiceConfig::default(), MockBackend::default);
+        let rxs: Vec<_> = (0..100)
+            .map(|i| svc.submit(mk_req(i, 0.1)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let s = svc.metrics.snapshot();
+        assert_eq!(s.completed, 100);
+        assert!(s.batches >= 13); // ≥ ceil(100/8)
+        assert!(s.latency.p50_ms <= s.latency.p99_ms);
+    }
+}

@@ -1,0 +1,256 @@
+//! On-chip BRAM model: dual-port banks, partitioning, reshaping, and
+//! per-cycle port arbitration.
+//!
+//! This is the heart of the paper's low-level contribution (§5.3): a true
+//! dual-port BRAM supplies 2 accesses/cycle, so a loop needing R reads per
+//! iteration stalls to II ≥ ⌈R/2⌉ unless the array is split into B banks
+//! (`ARRAY_PARTITION`), giving 2B ports and II ≥ ⌈R/(2B)⌉. `ARRAY_RESHAPE`
+//! instead widens the word so one access fetches `factor` elements.
+
+use super::resources::Resources;
+
+/// How an array is split across banks (HLS `ARRAY_PARTITION` modes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    /// Single bank (no pragma).
+    None,
+    /// `cyclic factor=B`: element i lives in bank i mod B.
+    Cyclic(u32),
+    /// `block factor=B`: element i lives in bank i / ceil(N/B).
+    Block(u32),
+}
+
+impl Partition {
+    pub fn banks(&self) -> u32 {
+        match self {
+            Partition::None => 1,
+            Partition::Cyclic(b) | Partition::Block(b) => (*b).max(1),
+        }
+    }
+}
+
+/// A banked on-chip array.
+#[derive(Clone, Debug)]
+pub struct BankedArray {
+    pub name: String,
+    /// Total logical elements.
+    pub elements: u64,
+    /// Element width in bits (fixed-point word width).
+    pub elem_bits: u32,
+    pub partition: Partition,
+    /// `ARRAY_RESHAPE factor`: elements packed per physical word.
+    pub reshape: u32,
+    /// Ports per bank (BRAM is true dual-port).
+    pub ports_per_bank: u32,
+}
+
+impl BankedArray {
+    pub fn new(name: impl Into<String>, elements: u64, elem_bits: u32) -> BankedArray {
+        BankedArray {
+            name: name.into(),
+            elements,
+            elem_bits,
+            partition: Partition::None,
+            reshape: 1,
+            ports_per_bank: 2,
+        }
+    }
+
+    /// Apply `ARRAY_PARTITION`.
+    pub fn partitioned(mut self, p: Partition) -> BankedArray {
+        self.partition = p;
+        self
+    }
+
+    /// Apply `ARRAY_RESHAPE factor=r` (wide-word packing).
+    pub fn reshaped(mut self, r: u32) -> BankedArray {
+        self.reshape = r.max(1);
+        self
+    }
+
+    pub fn banks(&self) -> u32 {
+        self.partition.banks()
+    }
+
+    /// Element accesses deliverable per cycle: ports × words/access.
+    pub fn accesses_per_cycle(&self) -> u32 {
+        self.banks() * self.ports_per_bank * self.reshape
+    }
+
+    /// Initiation interval needed to supply `reads` element reads per loop
+    /// iteration — the paper's II ≥ ⌈R / 2B⌉ law (extended by reshape).
+    pub fn ii_for_reads(&self, reads: u32) -> u32 {
+        if reads == 0 {
+            return 1;
+        }
+        reads.div_ceil(self.accesses_per_cycle()).max(1)
+    }
+
+    /// Which bank serves logical element `i`?
+    pub fn bank_of(&self, i: u64) -> u32 {
+        let b = self.banks() as u64;
+        match self.partition {
+            Partition::None => 0,
+            Partition::Cyclic(_) => (i / self.reshape as u64 % b) as u32,
+            Partition::Block(_) => {
+                let per = self.elements.div_ceil(b);
+                ((i / per).min(b - 1)) as u32
+            }
+        }
+    }
+
+    /// Cycle-accurate arbitration: given one iteration's element indices,
+    /// how many cycles until all are served? Each bank serves
+    /// `ports_per_bank` *word* accesses per cycle; a word covers `reshape`
+    /// consecutive elements, so indices in the same word coalesce.
+    pub fn cycles_for_accesses(&self, indices: &[u64]) -> u32 {
+        if indices.is_empty() {
+            return 0;
+        }
+        let banks = self.banks() as usize;
+        let mut words_per_bank: Vec<std::collections::BTreeSet<u64>> =
+            vec![std::collections::BTreeSet::new(); banks];
+        for &i in indices {
+            let word = i / self.reshape as u64;
+            let bank = self.bank_of(i) as usize;
+            words_per_bank[bank].insert(word);
+        }
+        words_per_bank
+            .iter()
+            .map(|w| (w.len() as u32).div_ceil(self.ports_per_bank))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// BRAM18 blocks consumed: each bank independently needs
+    /// ⌈bits_per_bank / 18 Kb⌉ blocks (and at least one).
+    pub fn bram18_blocks(&self) -> u64 {
+        let banks = self.banks() as u64;
+        let elems_per_bank = self.elements.div_ceil(banks);
+        let bits_per_bank = elems_per_bank * self.elem_bits as u64;
+        banks * bits_per_bank.div_ceil(18 * 1024).max(1)
+    }
+
+    /// Resource bundle (BRAM plus address/decode LUT overhead per bank).
+    pub fn resources(&self) -> Resources {
+        let banks = self.banks() as u64;
+        Resources {
+            lut: 12 * banks + 4 * (self.reshape as u64 - 1) * banks,
+            ff: 8 * banks,
+            dsp: 0,
+            bram18: self.bram18_blocks(),
+        }
+    }
+}
+
+/// A BRAM-backed FIFO between DATAFLOW stages (`STREAM ... impl=bram`).
+#[derive(Clone, Debug)]
+pub struct BramFifo {
+    pub name: String,
+    pub depth: u64,
+    pub elem_bits: u32,
+}
+
+impl BramFifo {
+    pub fn new(name: impl Into<String>, depth: u64, elem_bits: u32) -> BramFifo {
+        BramFifo {
+            name: name.into(),
+            depth,
+            elem_bits,
+        }
+    }
+
+    pub fn resources(&self) -> Resources {
+        let bits = self.depth * self.elem_bits as u64;
+        Resources {
+            lut: 24,
+            ff: 16,
+            dsp: 0,
+            bram18: bits.div_ceil(18 * 1024).max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ii_law_single_bank() {
+        // Paper §5.3.1: R=4, B=1 → II ≥ ⌈4/2⌉ = 2.
+        let a = BankedArray::new("w", 1024, 16);
+        assert_eq!(a.ii_for_reads(4), 2);
+        assert_eq!(a.ii_for_reads(2), 1);
+        assert_eq!(a.ii_for_reads(8), 4);
+    }
+
+    #[test]
+    fn ii_law_banked() {
+        // Paper §5.3.1: R=4, B=2 → II = 1; R=8 needs B=4 wait no: 2B=8 ≥ 8.
+        let a2 = BankedArray::new("w", 1024, 16).partitioned(Partition::Cyclic(2));
+        assert_eq!(a2.ii_for_reads(4), 1);
+        let a4 = BankedArray::new("w", 1024, 16).partitioned(Partition::Cyclic(4));
+        assert_eq!(a4.ii_for_reads(8), 1);
+    }
+
+    #[test]
+    fn reshape_multiplies_bandwidth() {
+        let a = BankedArray::new("w", 1024, 16).reshaped(4);
+        // One dual-port bank of 4-wide words: 8 elements/cycle.
+        assert_eq!(a.accesses_per_cycle(), 8);
+        assert_eq!(a.ii_for_reads(8), 1);
+    }
+
+    #[test]
+    fn cyclic_bank_mapping() {
+        let a = BankedArray::new("w", 16, 16).partitioned(Partition::Cyclic(4));
+        assert_eq!(a.bank_of(0), 0);
+        assert_eq!(a.bank_of(1), 1);
+        assert_eq!(a.bank_of(5), 1);
+        assert_eq!(a.bank_of(7), 3);
+    }
+
+    #[test]
+    fn block_bank_mapping() {
+        let a = BankedArray::new("w", 16, 16).partitioned(Partition::Block(4));
+        assert_eq!(a.bank_of(0), 0);
+        assert_eq!(a.bank_of(3), 0);
+        assert_eq!(a.bank_of(4), 1);
+        assert_eq!(a.bank_of(15), 3);
+    }
+
+    #[test]
+    fn arbitration_matches_ii_law_for_cyclic_unrolled_lanes() {
+        // 4 unrolled lanes read consecutive elements each cycle. With
+        // cyclic(4) each lane hits its own bank → 1 cycle.
+        let a = BankedArray::new("w", 64, 16).partitioned(Partition::Cyclic(4));
+        assert_eq!(a.cycles_for_accesses(&[0, 1, 2, 3]), 1);
+        // With block(4) partitioning those 4 indices are in one bank → 2.
+        let b = BankedArray::new("w", 64, 16).partitioned(Partition::Block(4));
+        assert_eq!(b.cycles_for_accesses(&[0, 1, 2, 3]), 2);
+    }
+
+    #[test]
+    fn coalesced_wide_words() {
+        let a = BankedArray::new("w", 64, 16).reshaped(4);
+        // Elements 0..4 live in one word → a single port access.
+        assert_eq!(a.cycles_for_accesses(&[0, 1, 2, 3]), 1);
+        assert_eq!(a.cycles_for_accesses(&[0, 4, 8, 12]), 2); // 4 words, 2 ports
+    }
+
+    #[test]
+    fn bram_block_accounting() {
+        // 1024 × 16-bit = 16 Kb → fits one BRAM18.
+        let a = BankedArray::new("w", 1024, 16);
+        assert_eq!(a.bram18_blocks(), 1);
+        // Banking 4-way forces 4 physical blocks even if underfilled.
+        let b = BankedArray::new("w", 1024, 16).partitioned(Partition::Cyclic(4));
+        assert_eq!(b.bram18_blocks(), 4);
+    }
+
+    #[test]
+    fn fifo_resources() {
+        let f = BramFifo::new("r_pre", 256, 16);
+        assert_eq!(f.resources().bram18, 1);
+    }
+}

@@ -1,0 +1,219 @@
+//! Multi-FPGA "tower" scale-out model (the paper's §8 future work).
+//!
+//! The conclusion proposes scale-out on multi-FPGA clusters to assess
+//! throughput and latency at larger problem sizes. This module models a
+//! tower of `n` boards fed by one host NIC: requests are sharded
+//! round-robin (data parallel) or the GRU hidden dimension is split
+//! across boards (model parallel, all-gather each step). The interconnect
+//! is a simple store-and-forward Ethernet/Aurora model.
+
+use super::gru_accel::{AccelReport, GruAccel, GruAccelConfig};
+use super::resources::Device;
+
+/// How work is split across boards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sharding {
+    /// Each board serves whole requests (round-robin).
+    DataParallel,
+    /// Hidden state split across boards; per-step all-gather.
+    ModelParallel,
+}
+
+/// Interconnect between boards (and to the host).
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// Sustained payload bandwidth, bytes per second.
+    pub bandwidth_bps: f64,
+    /// One-way latency, seconds.
+    pub latency_s: f64,
+}
+
+impl Link {
+    /// 10 GbE host link (PYNQ clusters typically aggregate through one).
+    pub fn ten_gbe() -> Link {
+        Link {
+            bandwidth_bps: 10e9 / 8.0,
+            latency_s: 8e-6,
+        }
+    }
+
+    /// Board-to-board Aurora-style serial link.
+    pub fn aurora() -> Link {
+        Link {
+            bandwidth_bps: 25e9 / 8.0,
+            latency_s: 1e-6,
+        }
+    }
+
+    /// Seconds to move `bytes` point-to-point.
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// A tower of identical boards running the GRU accelerator.
+#[derive(Clone, Debug)]
+pub struct Tower {
+    pub boards: usize,
+    pub cfg: GruAccelConfig,
+    pub sharding: Sharding,
+    pub host_link: Link,
+    pub mesh_link: Link,
+    pub device: Device,
+}
+
+/// Scale-out evaluation result.
+#[derive(Clone, Debug)]
+pub struct TowerReport {
+    pub boards: usize,
+    pub sharding: Sharding,
+    /// Sustained GRU steps per second across the tower.
+    pub throughput_steps_per_s: f64,
+    /// Latency for one step (including communication), seconds.
+    pub step_latency_s: f64,
+    /// Speedup over one board.
+    pub speedup: f64,
+    /// Parallel efficiency (speedup / boards).
+    pub efficiency: f64,
+    /// Aggregate power (W).
+    pub power_w: f64,
+    pub per_board: AccelReport,
+}
+
+impl Tower {
+    pub fn new(boards: usize, cfg: GruAccelConfig, sharding: Sharding) -> Tower {
+        assert!(boards >= 1);
+        Tower {
+            boards,
+            cfg,
+            sharding,
+            host_link: Link::ten_gbe(),
+            mesh_link: Link::aurora(),
+            device: Device::pynq_z2(),
+        }
+    }
+
+    /// Bytes per request crossing the host link (input window + theta).
+    fn io_bytes(&self) -> u64 {
+        let wb = (self.cfg.act_fmt.word_bits as u64).div_ceil(8);
+        ((self.cfg.input + self.cfg.hidden) as u64) * wb
+    }
+
+    pub fn report(&self) -> TowerReport {
+        let single = GruAccel::new(self.cfg.clone()).report();
+        let step_s = single.interval as f64 * self.device.period_ns() * 1e-9;
+        let single_tput = 1.0 / step_s;
+
+        let (throughput, latency) = match self.sharding {
+            Sharding::DataParallel => {
+                // Boards work independently; the shared host NIC caps
+                // aggregate ingest.
+                let compute_tput = self.boards as f64 * single_tput;
+                let nic_tput = self.host_link.bandwidth_bps / self.io_bytes() as f64;
+                (
+                    compute_tput.min(nic_tput),
+                    step_s + self.host_link.transfer_s(self.io_bytes()),
+                )
+            }
+            Sharding::ModelParallel => {
+                // Hidden split: per-board compute shrinks ~1/n, but every
+                // step all-gathers the hidden state around the ring.
+                let shard_step = step_s / self.boards as f64;
+                let wb = (self.cfg.act_fmt.word_bits as u64).div_ceil(8);
+                let shard_bytes = (self.cfg.hidden as u64 * wb) / self.boards as u64;
+                let allgather =
+                    (self.boards - 1) as f64 * self.mesh_link.transfer_s(shard_bytes.max(1));
+                let lat = shard_step + allgather;
+                (1.0 / lat, lat + self.host_link.transfer_s(self.io_bytes()))
+            }
+        };
+
+        let speedup = throughput / single_tput;
+        TowerReport {
+            boards: self.boards,
+            sharding: self.sharding,
+            throughput_steps_per_s: throughput,
+            step_latency_s: latency,
+            speedup,
+            efficiency: speedup / self.boards as f64,
+            power_w: single.power_w * self.boards as f64 + 6.0, // + switch
+            per_board: single,
+        }
+    }
+}
+
+/// Sweep tower sizes for a sharding strategy.
+pub fn scaling_sweep(
+    cfg: &GruAccelConfig,
+    sharding: Sharding,
+    sizes: &[usize],
+) -> Vec<TowerReport> {
+    sizes
+        .iter()
+        .map(|&n| Tower::new(n, cfg.clone(), sharding).report())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GruAccelConfig {
+        GruAccelConfig::concurrent()
+    }
+
+    #[test]
+    fn one_board_matches_single_accel() {
+        let t = Tower::new(1, cfg(), Sharding::DataParallel).report();
+        assert!((t.speedup - 1.0).abs() < 0.01);
+        assert!((t.efficiency - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn data_parallel_scales_until_nic_bound() {
+        let reports = scaling_sweep(&cfg(), Sharding::DataParallel, &[1, 2, 4, 8, 16, 64]);
+        // Throughput is non-decreasing in boards.
+        for w in reports.windows(2) {
+            assert!(w[1].throughput_steps_per_s >= w[0].throughput_steps_per_s * 0.999);
+        }
+        // Efficiency eventually decays (shared NIC).
+        let last = reports.last().unwrap();
+        assert!(
+            last.efficiency < 1.0,
+            "NIC should bound large towers: eff={}",
+            last.efficiency
+        );
+    }
+
+    #[test]
+    fn model_parallel_latency_hits_communication_wall() {
+        // For this tiny hidden state, all-gather latency swamps the
+        // compute shrink — the classic small-model scale-out lesson.
+        let r2 = Tower::new(2, cfg(), Sharding::ModelParallel).report();
+        let r16 = Tower::new(16, cfg(), Sharding::ModelParallel).report();
+        assert!(r16.step_latency_s > r2.step_latency_s * 0.9);
+        assert!(r16.efficiency < 0.5);
+    }
+
+    #[test]
+    fn data_parallel_beats_model_parallel_for_small_models() {
+        let d = Tower::new(8, cfg(), Sharding::DataParallel).report();
+        let m = Tower::new(8, cfg(), Sharding::ModelParallel).report();
+        assert!(d.throughput_steps_per_s > m.throughput_steps_per_s);
+    }
+
+    #[test]
+    fn power_scales_with_boards() {
+        let r1 = Tower::new(1, cfg(), Sharding::DataParallel).report();
+        let r4 = Tower::new(4, cfg(), Sharding::DataParallel).report();
+        assert!(r4.power_w > 3.5 * r1.per_board.power_w);
+    }
+
+    #[test]
+    fn link_transfer_time() {
+        let l = Link::ten_gbe();
+        // 1.25 GB/s → 1 MB ≈ 0.8 ms + 8 µs latency.
+        let t = l.transfer_s(1 << 20);
+        assert!(t > 8e-4 && t < 1e-3, "t={t}");
+    }
+}

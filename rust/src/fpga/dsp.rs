@@ -1,0 +1,147 @@
+//! DSP48 slice model: pipelined fused multiply–accumulate lanes.
+//!
+//! A DSP48E1/E2 provides `P = A×B + C` with dedicated pipeline registers,
+//! sustaining II = 1 at several hundred MHz (§5.2.1). Linear GRU work
+//! (matvecs, bias adds, blending) maps onto arrays of these lanes; bias
+//! adds are absorbed in the post-adder.
+
+use super::resources::Resources;
+
+/// One DSP48 MAC lane.
+#[derive(Clone, Copy, Debug)]
+pub struct DspLane {
+    /// Pipeline depth in cycles (MREG + PREG + input regs).
+    pub latency: u32,
+}
+
+impl Default for DspLane {
+    fn default() -> Self {
+        // 4-stage: AREG/BREG, MREG, PREG (+ output) — typical full-pipe DSP48.
+        DspLane { latency: 4 }
+    }
+}
+
+/// An array of MAC lanes executing a dense linear operation.
+#[derive(Clone, Debug)]
+pub struct DspMacArray {
+    pub lanes: u32,
+    pub lane: DspLane,
+}
+
+impl DspMacArray {
+    pub fn new(lanes: u32) -> DspMacArray {
+        DspMacArray {
+            lanes: lanes.max(1),
+            lane: DspLane::default(),
+        }
+    }
+
+    /// Cycles to compute `macs` multiply–accumulates when memory can supply
+    /// `memory_ii` iterations-worth of operands (II from the BRAM model).
+    ///
+    /// Each cycle the array retires `lanes` MACs if fed; the effective
+    /// launch rate is one iteration per `memory_ii` cycles. Total =
+    /// pipeline fill + steady issue.
+    pub fn cycles(&self, macs: u64, memory_ii: u32) -> u64 {
+        if macs == 0 {
+            return 0;
+        }
+        let iters = macs.div_ceil(self.lanes as u64);
+        self.lane.latency as u64 + iters * memory_ii as u64 - 1
+    }
+
+    /// Cycles at perfect II=1 feeding.
+    pub fn cycles_fed(&self, macs: u64) -> u64 {
+        self.cycles(macs, 1)
+    }
+
+    /// Resource bundle: one DSP slice per lane, plus accumulation /
+    /// control fabric.
+    pub fn resources(&self) -> Resources {
+        Resources {
+            lut: 40 * self.lanes as u64,
+            ff: 60 * self.lanes as u64,
+            dsp: self.lanes as u64,
+            bram18: 0,
+        }
+    }
+}
+
+/// Elementwise DSP stage (e.g. the final interpolation, Eq. 15: two
+/// multiplies + one add per element → 2 DSPs per parallel element lane).
+#[derive(Clone, Debug)]
+pub struct DspElementwise {
+    /// Parallel element lanes.
+    pub lanes: u32,
+    /// DSPs consumed per lane.
+    pub dsp_per_lane: u32,
+    pub latency: u32,
+}
+
+impl DspElementwise {
+    pub fn new(lanes: u32, dsp_per_lane: u32) -> DspElementwise {
+        DspElementwise {
+            lanes: lanes.max(1),
+            dsp_per_lane,
+            latency: 4,
+        }
+    }
+
+    /// Cycles to process `elems` elements.
+    pub fn cycles(&self, elems: u64, memory_ii: u32) -> u64 {
+        if elems == 0 {
+            return 0;
+        }
+        let iters = elems.div_ceil(self.lanes as u64);
+        self.latency as u64 + iters * memory_ii as u64 - 1
+    }
+
+    pub fn resources(&self) -> Resources {
+        Resources {
+            lut: 25 * self.lanes as u64,
+            ff: 40 * self.lanes as u64,
+            dsp: (self.lanes * self.dsp_per_lane) as u64,
+            bram18: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_cycles_scale_with_lanes() {
+        let a1 = DspMacArray::new(1);
+        let a4 = DspMacArray::new(4);
+        // 960 MACs: 1 lane → 960 iters; 4 lanes → 240 iters.
+        assert_eq!(a1.cycles_fed(960), 4 + 960 - 1);
+        assert_eq!(a4.cycles_fed(960), 4 + 240 - 1);
+    }
+
+    #[test]
+    fn memory_stall_doubles_cycles() {
+        let a = DspMacArray::new(4);
+        // II=2 (unbanked memory): issue every other cycle.
+        assert_eq!(a.cycles(960, 2), 4 + 480 - 1);
+    }
+
+    #[test]
+    fn zero_work_is_free() {
+        assert_eq!(DspMacArray::new(8).cycles_fed(0), 0);
+        assert_eq!(DspElementwise::new(4, 2).cycles(0, 1), 0);
+    }
+
+    #[test]
+    fn resources_one_dsp_per_lane() {
+        assert_eq!(DspMacArray::new(16).resources().dsp, 16);
+        assert_eq!(DspElementwise::new(4, 2).resources().dsp, 8);
+    }
+
+    #[test]
+    fn elementwise_cycles() {
+        let e = DspElementwise::new(4, 2);
+        // 16 elements on 4 lanes: 4 iterations + fill.
+        assert_eq!(e.cycles(16, 1), 4 + 4 - 1);
+    }
+}

@@ -1,0 +1,230 @@
+//! `ap_fixed`-style fixed-point arithmetic model.
+//!
+//! The paper's accelerator uses 8–16 bit activations and 12–16 bit
+//! weights/accumulators (§5, §6.4). This module models Vitis HLS
+//! `ap_fixed<W, I>` with round-half-away-from-zero and saturation — the
+//! same policy as the L1 `fixedpoint.py` Pallas kernel, pinned bit-equal by
+//! `rust/tests/integration.rs` and property-tested in
+//! `rust/tests/proptests.rs`.
+
+/// A fixed-point format: `word_bits` total (incl. sign), `frac_bits`
+/// fractional. Integer bits = word − frac (sign included).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FixedFormat {
+    pub word_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl FixedFormat {
+    pub fn new(word_bits: u32, frac_bits: u32) -> FixedFormat {
+        assert!(word_bits >= 2 && word_bits <= 32, "word_bits {word_bits}");
+        assert!(frac_bits < word_bits, "frac {frac_bits} >= word {word_bits}");
+        FixedFormat {
+            word_bits,
+            frac_bits,
+        }
+    }
+
+    /// The paper's activation format sweet spot (Q8.8).
+    pub fn q8_8() -> FixedFormat {
+        FixedFormat::new(16, 8)
+    }
+
+    /// The paper's weight format (12-bit word, 8 frac).
+    pub fn q4_8() -> FixedFormat {
+        FixedFormat::new(12, 8)
+    }
+
+    /// Scale factor 2^frac.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac_bits) as f64
+    }
+
+    /// Largest representable value.
+    #[inline]
+    pub fn max_value(&self) -> f64 {
+        (((1i64 << (self.word_bits - 1)) - 1) as f64) / self.scale()
+    }
+
+    /// Smallest (most negative) representable value.
+    #[inline]
+    pub fn min_value(&self) -> f64 {
+        (-(1i64 << (self.word_bits - 1)) as f64) / self.scale()
+    }
+
+    /// Quantization step (LSB weight).
+    #[inline]
+    pub fn resolution(&self) -> f64 {
+        1.0 / self.scale()
+    }
+
+    /// Quantize to the raw integer code (saturating).
+    #[inline]
+    pub fn to_raw(&self, x: f64) -> i64 {
+        let scaled = x * self.scale();
+        // round half away from zero, like the HLS AP_RND mode we model
+        let r = scaled.signum() * (scaled.abs() + 0.5).floor();
+        let lo = -(1i64 << (self.word_bits - 1));
+        let hi = (1i64 << (self.word_bits - 1)) - 1;
+        (r as i64).clamp(lo, hi)
+    }
+
+    /// Dequantize a raw code.
+    #[inline]
+    pub fn from_raw(&self, raw: i64) -> f64 {
+        raw as f64 / self.scale()
+    }
+
+    /// Round-trip quantization f64 → f64.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> f64 {
+        self.from_raw(self.to_raw(x))
+    }
+
+    /// Round-trip quantization in f32 (bit-matched to the Pallas kernel,
+    /// which computes in f32).
+    #[inline]
+    pub fn quantize_f32(&self, x: f32) -> f32 {
+        let scale = self.scale() as f32;
+        let scaled = x * scale;
+        let r = scaled.signum() * (scaled.abs() + 0.5).floor();
+        let lo = -((1i64 << (self.word_bits - 1)) as f32);
+        let hi = ((1i64 << (self.word_bits - 1)) - 1) as f32;
+        r.clamp(lo, hi) / scale
+    }
+
+    /// Quantize a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = self.quantize_f32(*x);
+        }
+    }
+}
+
+/// A fixed-point number with its format (for accumulator modeling).
+#[derive(Clone, Copy, Debug)]
+pub struct Fixed {
+    pub raw: i64,
+    pub fmt: FixedFormat,
+}
+
+impl Fixed {
+    pub fn from_f64(x: f64, fmt: FixedFormat) -> Fixed {
+        Fixed {
+            raw: fmt.to_raw(x),
+            fmt,
+        }
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.fmt.from_raw(self.raw)
+    }
+
+    /// Saturating add in the shared format.
+    pub fn add(&self, other: &Fixed) -> Fixed {
+        assert_eq!(self.fmt, other.fmt);
+        let lo = -(1i64 << (self.fmt.word_bits - 1));
+        let hi = (1i64 << (self.fmt.word_bits - 1)) - 1;
+        Fixed {
+            raw: (self.raw + other.raw).clamp(lo, hi),
+            fmt: self.fmt,
+        }
+    }
+
+    /// Multiply: product has 2×frac bits; rescale back with rounding, then
+    /// saturate — models the DSP48 post-multiply truncation path.
+    pub fn mul(&self, other: &Fixed) -> Fixed {
+        assert_eq!(self.fmt, other.fmt);
+        let prod = self.raw as i128 * other.raw as i128;
+        let shift = self.fmt.frac_bits;
+        let half = 1i128 << (shift - 1).min(126);
+        let rounded = if prod >= 0 {
+            (prod + half) >> shift
+        } else {
+            -((-prod + half) >> shift)
+        };
+        let lo = -(1i128 << (self.fmt.word_bits - 1));
+        let hi = (1i128 << (self.fmt.word_bits - 1)) - 1;
+        Fixed {
+            raw: rounded.clamp(lo, hi) as i64,
+            fmt: self.fmt,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_lsb() {
+        let fmt = FixedFormat::q8_8();
+        for i in -1000..1000 {
+            let x = i as f64 * 0.013;
+            if x.abs() < fmt.max_value() {
+                let q = fmt.quantize(x);
+                assert!(
+                    (q - x).abs() <= fmt.resolution() / 2.0 + 1e-12,
+                    "x={x} q={q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn saturates_at_bounds() {
+        let fmt = FixedFormat::new(8, 4); // range [-8, 7.9375]
+        assert_eq!(fmt.quantize(100.0), fmt.max_value());
+        assert_eq!(fmt.quantize(-100.0), fmt.min_value());
+        assert!((fmt.max_value() - 7.9375).abs() < 1e-12);
+        assert!((fmt.min_value() + 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_half_away_from_zero() {
+        let fmt = FixedFormat::new(16, 1); // steps of 0.5
+        assert_eq!(fmt.quantize(0.25), 0.5); // halfway rounds away
+        assert_eq!(fmt.quantize(-0.25), -0.5);
+        assert_eq!(fmt.quantize(0.24), 0.0);
+    }
+
+    #[test]
+    fn f32_and_f64_paths_agree() {
+        let fmt = FixedFormat::q8_8();
+        for i in -500..500 {
+            let x = i as f32 * 0.037;
+            let a = fmt.quantize_f32(x);
+            let b = fmt.quantize(x as f64) as f32;
+            assert_eq!(a, b, "x={x}");
+        }
+    }
+
+    #[test]
+    fn fixed_mul_matches_float_approximately() {
+        let fmt = FixedFormat::new(16, 8);
+        let a = Fixed::from_f64(1.5, fmt);
+        let b = Fixed::from_f64(-2.25, fmt);
+        let c = a.mul(&b);
+        assert!((c.to_f64() + 3.375).abs() <= fmt.resolution());
+    }
+
+    #[test]
+    fn fixed_add_saturates() {
+        let fmt = FixedFormat::new(8, 0); // integers in [-128, 127]
+        let a = Fixed::from_f64(100.0, fmt);
+        let b = Fixed::from_f64(100.0, fmt);
+        assert_eq!(a.add(&b).to_f64(), 127.0);
+    }
+
+    #[test]
+    fn quantize_slice_in_place() {
+        let fmt = FixedFormat::new(12, 4);
+        let mut xs = vec![0.1f32, 0.2, -0.33];
+        fmt.quantize_slice(&mut xs);
+        for x in &xs {
+            let scaled = *x * 16.0;
+            assert!((scaled - scaled.round()).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,615 @@
+//! The MERINDA GRU accelerator model (paper §5, Fig. 5–6, Tables 7–8).
+//!
+//! Assembles the four-stage GRU forward pipeline from the HLS scheduler
+//! primitives and evaluates it two ways:
+//!
+//! * **Structurally** — [`GruAccel::report`] derives cycles, interval,
+//!   resources, power and energy from the schedule (what Tables 7/8 show).
+//! * **Functionally** — [`GruAccel::forward_fixed`] executes the same
+//!   datapath numerically in fixed-point with LUT activation tables, so
+//!   quantization accuracy is measurable against the f32 reference
+//!   (`mr::gru::GruCell`).
+//!
+//! Timing definitions used throughout this repo (the paper's own Table 8
+//! mixes several; see EXPERIMENTS.md notes):
+//! * `cycles`   — end-to-end latency for one GRU step (pipeline fill).
+//! * `interval` — steady-state spacing between outputs on a long stream.
+
+use super::bram::{BankedArray, BramFifo, Partition};
+use super::fixedpoint::FixedFormat;
+use super::hls::{schedule, Binding, LoopNest, ScheduledLoop};
+use super::interconnect::DdrModel;
+use super::lut::{Activation, ActivationTable};
+use super::power::{Activity, PowerModel};
+use super::resources::{Device, Resources};
+use crate::mr::gru::GruParams;
+
+/// Stage-to-fabric mapping, Table 7's configuration axis.
+pub type StageMap = [Binding; 4];
+
+/// Short config name like `s1D_s2L_s3L_s4D`.
+pub fn stage_map_name(m: &StageMap) -> String {
+    format!(
+        "s1{}_s2{}_s3{}_s4{}",
+        m[0].letter(),
+        m[1].letter(),
+        m[2].letter(),
+        m[3].letter()
+    )
+}
+
+/// All 16 stage mappings in Table 7's row order.
+pub fn all_stage_maps() -> Vec<StageMap> {
+    let b = [Binding::Dsp, Binding::Lut];
+    let mut out = Vec::with_capacity(16);
+    for s1 in b {
+        for s2 in b {
+            for s3 in b {
+                for s4 in b {
+                    out.push([s1, s2, s3, s4]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// GRU accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct GruAccelConfig {
+    /// Input vector width fed per time step.
+    pub input: usize,
+    /// Hidden units.
+    pub hidden: usize,
+    /// UNROLL factor: parallel MAC lanes per matvec stage.
+    pub unroll: u32,
+    /// ARRAY_PARTITION factor on the weight arrays.
+    pub banks: u32,
+    /// ARRAY_RESHAPE factor (wide words).
+    pub reshape: u32,
+    /// DATAFLOW on/off (stage overlap).
+    pub dataflow: bool,
+    /// Spill intermediates to DDR between stages (pre-optimization
+    /// baseline behaviour; off when DATAFLOW FIFOs are used).
+    pub ddr_spill: bool,
+    /// Per-stage fabric binding.
+    pub stage_map: StageMap,
+    /// Fixed-point activation format.
+    pub act_fmt: FixedFormat,
+    /// Fixed-point weight format.
+    pub weight_fmt: FixedFormat,
+    /// Inter-stage FIFO depth (elements).
+    pub fifo_depth: u32,
+}
+
+impl GruAccelConfig {
+    /// Paper-scale accelerator dims (their HLS design; distinct from the
+    /// L2 training model size).
+    pub fn base() -> GruAccelConfig {
+        GruAccelConfig {
+            input: 4,
+            hidden: 16,
+            unroll: 8,
+            banks: 1,
+            reshape: 1,
+            dataflow: false,
+            ddr_spill: true,
+            stage_map: [Binding::Dsp; 4],
+            act_fmt: FixedFormat::new(16, 8),
+            weight_fmt: FixedFormat::new(16, 8),
+            fifo_depth: 256,
+        }
+    }
+
+    /// Table 8 row 2: conventional GRU forward, no concurrency.
+    pub fn gru_baseline() -> GruAccelConfig {
+        GruAccelConfig::base()
+    }
+
+    /// Table 8 row 3: + DATAFLOW concurrency (on-chip FIFOs, banked ×4).
+    pub fn concurrent() -> GruAccelConfig {
+        GruAccelConfig {
+            unroll: 32,
+            banks: 8,
+            dataflow: true,
+            ddr_spill: false,
+            stage_map: [Binding::Dsp, Binding::Lut, Binding::Lut, Binding::Dsp],
+            ..GruAccelConfig::base()
+        }
+    }
+
+    /// Table 8 row 4: + aggressive BRAM banking and wider unroll.
+    pub fn bram_optimal() -> GruAccelConfig {
+        GruAccelConfig {
+            unroll: 96,
+            banks: 32,
+            reshape: 4,
+            dataflow: true,
+            ddr_spill: false,
+            stage_map: [Binding::Dsp; 4],
+            ..GruAccelConfig::base()
+        }
+    }
+
+    /// With a different stage map (Table 7 sweep).
+    pub fn with_stage_map(mut self, m: StageMap) -> GruAccelConfig {
+        self.stage_map = m;
+        self
+    }
+
+    /// MACs in stage 1 (gate affines: W·x for 3 gates + U·h for r,z).
+    pub fn stage1_macs(&self) -> u64 {
+        (self.input * 3 * self.hidden + self.hidden * 2 * self.hidden) as u64
+    }
+
+    /// MACs in stage 3 (candidate recurrent term (r∘h)·Un).
+    pub fn stage3_macs(&self) -> u64 {
+        (self.hidden * self.hidden) as u64
+    }
+}
+
+/// Structural evaluation of one configuration.
+#[derive(Clone, Debug)]
+pub struct AccelReport {
+    pub name: String,
+    /// End-to-end latency for one GRU step.
+    pub cycles: u64,
+    /// Steady-state output spacing.
+    pub interval: u64,
+    pub resources: Resources,
+    pub power_w: f64,
+    /// Energy per produced hidden-state vector (J).
+    pub energy_per_output_j: f64,
+    /// Achieved II of the binding stage.
+    pub worst_stage_ii: u32,
+    pub fits_pynq: bool,
+}
+
+/// The assembled accelerator.
+pub struct GruAccel {
+    pub cfg: GruAccelConfig,
+    pub ddr: DdrModel,
+    pub power: PowerModel,
+    pub device: Device,
+}
+
+impl GruAccel {
+    pub fn new(cfg: GruAccelConfig) -> GruAccel {
+        GruAccel {
+            cfg,
+            ddr: DdrModel::default(),
+            power: PowerModel::default(),
+            device: Device::pynq_z2(),
+        }
+    }
+
+    fn weight_array(&self, name: &str, elements: u64) -> BankedArray {
+        let mut a = BankedArray::new(name, elements, self.cfg.weight_fmt.word_bits);
+        if self.cfg.banks > 1 {
+            a = a.partitioned(Partition::Cyclic(self.cfg.banks));
+        }
+        if self.cfg.reshape > 1 {
+            a = a.reshaped(self.cfg.reshape);
+        }
+        a
+    }
+
+    /// Schedule the four stages of Fig. 6.
+    pub fn stages(&self) -> Vec<ScheduledLoop> {
+        let c = &self.cfg;
+        let h = c.hidden as u64;
+
+        // Stage 1: gate affines. One weight read per MAC lane per cycle.
+        let w_elems = (c.input * 3 * c.hidden + c.hidden * 2 * c.hidden) as u64;
+        let s1 = schedule(
+            &LoopNest::new("s1_gate_affine", c.stage1_macs())
+                .unrolled(c.unroll)
+                .macs(1)
+                .bound(c.stage_map[0])
+                .with_array(self.weight_array("gate_weights", w_elems), 1, 0),
+        );
+
+        // Stage 2: sigmoid(r), sigmoid(z) lookups + reset modulation r∘h.
+        // Under DATAFLOW the pre-activations arrive through STREAM FIFOs
+        // (1 pop/cycle/lane, no BRAM port contention — §5.3.2); without it
+        // they sit in a shared BRAM buffer and compete for ports.
+        let act_lanes = c.unroll.min(2 * c.hidden as u32);
+        let mut s2_loop = LoopNest::new("s2_sigmoid", 2 * h)
+            .unrolled(act_lanes)
+            .activations(1)
+            .elementwise(1)
+            .bound(c.stage_map[1]);
+        if !c.dataflow {
+            s2_loop = s2_loop.with_array(self.weight_array("h_prev", h).reshaped(c.reshape), 1, 0);
+        }
+        let s2 = schedule(&s2_loop);
+
+        // Stage 3: candidate (r∘h)·Un + tanh.
+        let s3 = schedule(
+            &LoopNest::new("s3_candidate", c.stage3_macs())
+                .unrolled(c.unroll)
+                .macs(1)
+                .activations(1)
+                .bound(c.stage_map[2])
+                .with_array(self.weight_array("Un", h * h), 1, 0),
+        );
+
+        // Stage 4: interpolation h' = (1−z)∘n + z∘h (2 mul + 1 add each).
+        // Same FIFO-vs-buffer distinction as stage 2.
+        let mut s4_loop = LoopNest::new("s4_interp", h)
+            .unrolled(c.unroll.min(c.hidden as u32))
+            .elementwise(3)
+            .bound(c.stage_map[3]);
+        if !c.dataflow {
+            s4_loop = s4_loop.with_array(self.weight_array("z_gate", h), 2, 1);
+        }
+        let s4 = schedule(&s4_loop);
+
+        vec![s1, s2, s3, s4]
+    }
+
+    /// Per-item DDR traffic in bytes (input + output always; intermediates
+    /// too when `ddr_spill`).
+    fn ddr_bytes_per_item(&self) -> u64 {
+        let c = &self.cfg;
+        let wb = (c.act_fmt.word_bits as u64).div_ceil(8);
+        let io = (c.input as u64 + c.hidden as u64) * wb;
+        if c.ddr_spill {
+            // 3H gate pre-activations out + back, r/z/n intermediates.
+            io + (3 * c.hidden as u64) * 2 * wb + (3 * c.hidden as u64) * wb
+        } else {
+            io
+        }
+    }
+
+    /// Structural report for this configuration.
+    pub fn report(&self) -> AccelReport {
+        let stages = self.stages();
+        let c = &self.cfg;
+
+        // Per-item service time of each stage (its internal loop drain).
+        let services: Vec<u64> = stages.iter().map(|s| s.cycles).collect();
+        let sum_service: u64 = services.iter().sum();
+        let max_service: u64 = *services.iter().max().unwrap();
+
+        // DDR cost per item.
+        let ddr_cycles = if c.ddr_spill {
+            // Scattered small transactions between stages.
+            self.ddr
+                .scattered_cycles(4, self.ddr_bytes_per_item() / 4)
+        } else {
+            // Streaming: amortized burst, overlapped with compute under
+            // DATAFLOW; only the non-overlapped remainder shows up.
+            let burst = self.ddr.burst_cycles(self.ddr_bytes_per_item());
+            if c.dataflow {
+                burst.saturating_sub(max_service).min(burst / 4)
+            } else {
+                burst
+            }
+        };
+
+        let (cycles, interval) = if c.dataflow {
+            let fifo_skew = 2 * (stages.len() as u64 - 1); // FIFO handshakes
+            (
+                sum_service + fifo_skew + ddr_cycles,
+                max_service + ddr_cycles,
+            )
+        } else {
+            let per_item = sum_service + ddr_cycles;
+            (per_item, per_item)
+        };
+
+        // Resources: stages + FIFOs (dataflow) + DMA engine + AXI.
+        let mut res = Resources::ZERO;
+        for s in &stages {
+            res += s.resources;
+        }
+        if c.dataflow {
+            for name in ["r_pre", "z_pre", "h_pre"] {
+                res += BramFifo::new(name, c.fifo_depth as u64, c.act_fmt.word_bits).resources();
+            }
+        }
+        // DMA + AXI crossbar + control.
+        res += Resources::new(1_800, 2_400, 0, 2);
+
+        // Activity: a stalled pipeline (II>1 or sequential stages) toggles
+        // compute less but hammers DDR more.
+        let worst_ii = stages.iter().map(|s| s.ii).max().unwrap();
+        let busy = if c.dataflow {
+            max_service as f64 / interval.max(1) as f64
+        } else {
+            // Each stage active only its share of the item time.
+            sum_service as f64 / (4.0 * interval.max(1) as f64)
+        };
+        let act = Activity {
+            dsp: busy / worst_ii as f64,
+            lut: 0.35 + 0.25 * busy,
+            bram: (0.4 + 0.5 * busy).min(1.0),
+            ddr: (ddr_cycles as f64 / interval.max(1) as f64).min(1.0)
+                + if c.ddr_spill { 0.55 } else { 0.15 },
+        };
+        let act = Activity {
+            ddr: act.ddr.min(1.0),
+            ..act
+        };
+
+        let power_w = self.power.watts(&res, &act);
+        let energy = self
+            .power
+            .energy_per_output_j(&res, &act, interval, self.device.clock_mhz);
+
+        AccelReport {
+            name: stage_map_name(&c.stage_map),
+            cycles,
+            interval,
+            resources: res,
+            power_w,
+            energy_per_output_j: energy,
+            worst_stage_ii: worst_ii,
+            fits_pynq: self.device.fits(&res),
+        }
+    }
+
+    /// Structural report for one *training* step (paper §6.2: forward and
+    /// backpropagation both run on the fabric).
+    ///
+    /// BPTT reverses the same dataflow with roughly 2× the forward MAC
+    /// volume (∂h→gate deltas reuse Uᵀ/Wᵀ; weight-gradient accumulation
+    /// adds an outer-product pass), plus a weight-update sweep. No stage
+    /// overlap exists across the forward/backward boundary (the backward
+    /// pass needs the cached activations of the whole window), so training
+    /// interval ≈ fwd interval + bwd interval + update.
+    pub fn training_report(&self) -> AccelReport {
+        let fwd = self.report();
+        let c = &self.cfg;
+        // Backward MAC volume ≈ 2× forward (delta backprop + weight grads).
+        let bwd_macs = 2 * (c.stage1_macs() + c.stage3_macs());
+        let lanes = c.unroll.max(1) as u64;
+        let mem_ii = fwd.worst_stage_ii as u64;
+        let bwd_cycles = 6 + bwd_macs.div_ceil(lanes) * mem_ii;
+        // Weight update: one read-modify-write per parameter through the
+        // banked ports.
+        let params = (c.input * 3 * c.hidden + c.hidden * 3 * c.hidden) as u64;
+        let ports = (2 * c.banks * c.reshape).max(2) as u64;
+        let upd_cycles = params.div_ceil(ports);
+        let interval = fwd.interval + bwd_cycles + upd_cycles;
+        let cycles = fwd.cycles + bwd_cycles + upd_cycles;
+        // Backward reuses the forward MAC lanes (time-multiplexed), adds
+        // gradient accumulators (FF-heavy) and the cached-activation BRAM.
+        let mut res = fwd.resources;
+        res += Resources::new(2_400, 9_000, 0, 4);
+        let power_w = fwd.power_w * 1.12; // higher sustained activity
+        let energy = power_w * interval as f64 / (self.device.clock_mhz * 1e6);
+        AccelReport {
+            name: format!("{}_train", fwd.name),
+            cycles,
+            interval,
+            resources: res,
+            power_w,
+            energy_per_output_j: energy,
+            worst_stage_ii: fwd.worst_stage_ii,
+            fits_pynq: self.device.fits(&res),
+        }
+    }
+
+    /// Functional fixed-point forward pass through the modeled datapath.
+    ///
+    /// Quantizes weights/activations to the configured formats and
+    /// evaluates sigmoid/tanh through the LUT tables — the numbers a real
+    /// bitstream would produce. `xs` is (K, input) row-major.
+    pub fn forward_fixed(&self, params: &GruParams, xs: &[f32], seq: usize) -> Vec<f32> {
+        let c = &self.cfg;
+        assert_eq!(params.input, c.input);
+        assert_eq!(params.hidden, c.hidden);
+        let (i_sz, hid) = (c.input, c.hidden);
+        let th = 3 * hid;
+        let wf = c.weight_fmt;
+        let af = c.act_fmt;
+        let sig = ActivationTable::default_for(Activation::Sigmoid);
+        let tanh = ActivationTable::default_for(Activation::Tanh);
+
+        // Quantize weights once (they live in BRAM).
+        let qw: Vec<f32> = params.w.iter().map(|&v| wf.quantize_f32(v)).collect();
+        let qu: Vec<f32> = params.u.iter().map(|&v| wf.quantize_f32(v)).collect();
+        let qb: Vec<f32> = params.b.iter().map(|&v| wf.quantize_f32(v)).collect();
+
+        // Scratch buffers reused across time steps (§Perf: the original
+        // per-step allocations dominated this emulation loop).
+        let mut h = vec![0.0f32; hid];
+        let mut x = vec![0.0f32; i_sz];
+        let mut gx = vec![0.0f32; th];
+        let mut gh = vec![0.0f32; 2 * hid];
+        let mut r = vec![0.0f32; hid];
+        let mut z = vec![0.0f32; hid];
+        let mut cand = vec![0.0f32; hid];
+        let mut n = vec![0.0f32; hid];
+        for t in 0..seq {
+            for (xd, &xv) in x.iter_mut().zip(&xs[t * i_sz..(t + 1) * i_sz]) {
+                *xd = af.quantize_f32(xv);
+            }
+
+            // Stage 1: gate affines with quantized accumulate.
+            gx.copy_from_slice(&qb);
+            for (ii, &xv) in x.iter().enumerate() {
+                let row = &qw[ii * th..(ii + 1) * th];
+                for (g, &w) in gx.iter_mut().zip(row) {
+                    *g += xv * w;
+                }
+            }
+            gh.fill(0.0);
+            for (hi, &hv) in h.iter().enumerate() {
+                let row = &qu[hi * th..hi * th + 2 * hid];
+                for (g, &u) in gh.iter_mut().zip(row) {
+                    *g += hv * u;
+                }
+            }
+            for v in gx.iter_mut() {
+                *v = af.quantize_f32(*v);
+            }
+            for v in gh.iter_mut() {
+                *v = af.quantize_f32(*v);
+            }
+
+            // Stage 2: LUT sigmoids + reset modulation.
+            for j in 0..hid {
+                r[j] = af.quantize_f32(sig.eval_f32(gx[j] + gh[j]));
+                z[j] = af.quantize_f32(sig.eval_f32(gx[hid + j] + gh[hid + j]));
+            }
+
+            // Stage 3: candidate.
+            cand.fill(0.0);
+            for hi in 0..hid {
+                let rh = af.quantize_f32(r[hi] * h[hi]);
+                if rh != 0.0 {
+                    let row = &qu[hi * th + 2 * hid..(hi + 1) * th];
+                    for (c, &u) in cand.iter_mut().zip(row) {
+                        *c += rh * u;
+                    }
+                }
+            }
+            for j in 0..hid {
+                n[j] = af.quantize_f32(tanh.eval_f32(gx[2 * hid + j] + af.quantize_f32(cand[j])));
+            }
+
+            // Stage 4: interpolation.
+            for j in 0..hid {
+                h[j] = af.quantize_f32((1.0 - z[j]) * n[j] + z[j] * h[j]);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mr::gru::GruCell;
+    use crate::util::Prng;
+
+    #[test]
+    fn dataflow_improves_interval() {
+        let base = GruAccel::new(GruAccelConfig::gru_baseline()).report();
+        let conc = GruAccel::new(GruAccelConfig::concurrent()).report();
+        assert!(
+            conc.interval < base.interval,
+            "conc={} base={}",
+            conc.interval,
+            base.interval
+        );
+        assert!(conc.cycles < base.cycles);
+    }
+
+    #[test]
+    fn banking_improves_interval_further() {
+        let conc = GruAccel::new(GruAccelConfig::concurrent()).report();
+        let bank = GruAccel::new(GruAccelConfig::bram_optimal()).report();
+        assert!(bank.interval < conc.interval);
+        // ...at a steep resource cost (paper: DSP ×3, LUT ×14 vs concurrent).
+        assert!(bank.resources.dsp > 2 * conc.resources.dsp);
+    }
+
+    #[test]
+    fn concurrent_fits_pynq_banked_overflows() {
+        let conc = GruAccel::new(GruAccelConfig::concurrent()).report();
+        assert!(conc.fits_pynq, "{:?}", conc.resources);
+        let bank = GruAccel::new(GruAccelConfig::bram_optimal()).report();
+        // Paper's BRAM-optimal row exceeds the 7020 too (276 k LUTs).
+        assert!(!bank.fits_pynq || bank.resources.dsp > 220);
+    }
+
+    #[test]
+    fn stage_map_lut_heavy_reduces_dsp() {
+        let all_d = GruAccel::new(
+            GruAccelConfig::concurrent().with_stage_map([Binding::Dsp; 4]),
+        )
+        .report();
+        let all_l = GruAccel::new(
+            GruAccelConfig::concurrent().with_stage_map([Binding::Lut; 4]),
+        )
+        .report();
+        assert!(all_l.resources.dsp < all_d.resources.dsp / 2);
+        assert!(all_l.resources.lut > all_d.resources.lut);
+    }
+
+    #[test]
+    fn fixed_point_forward_tracks_f32() {
+        let mut rng = Prng::new(77);
+        let cfg = GruAccelConfig::concurrent();
+        let params = GruParams::random(cfg.input, cfg.hidden, &mut rng, 0.3);
+        let accel = GruAccel::new(cfg);
+        let seq = 32;
+        let xs = rng.normal_vec_f32(seq * accel.cfg.input, 0.8);
+
+        let fixed = accel.forward_fixed(&params, &xs, seq);
+        let float = GruCell::new(params).run(&xs, seq);
+        let err: f32 = fixed
+            .iter()
+            .zip(&float)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        // Q8.8 activations: per-step error ~2^-8, accumulated over 32 steps
+        // stays well under 0.1 (paper: "preserving fidelity").
+        assert!(err < 0.1, "fixed-point drift {err}");
+    }
+
+    #[test]
+    fn narrower_format_is_less_accurate() {
+        let mut rng = Prng::new(3);
+        let mut cfg_hi = GruAccelConfig::concurrent();
+        cfg_hi.act_fmt = FixedFormat::new(16, 12);
+        let mut cfg_lo = GruAccelConfig::concurrent();
+        cfg_lo.act_fmt = FixedFormat::new(8, 4);
+        let params = GruParams::random(cfg_hi.input, cfg_hi.hidden, &mut rng, 0.3);
+        let xs = rng.normal_vec_f32(16 * cfg_hi.input, 0.8);
+        let float = GruCell::new(params.clone()).run(&xs, 16);
+        let err = |cfg: GruAccelConfig| -> f32 {
+            GruAccel::new(cfg)
+                .forward_fixed(&params, &xs, 16)
+                .iter()
+                .zip(&float)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max)
+        };
+        assert!(err(cfg_lo) > err(cfg_hi));
+    }
+
+    #[test]
+    fn sixteen_stage_maps_enumerated() {
+        let maps = all_stage_maps();
+        assert_eq!(maps.len(), 16);
+        assert_eq!(stage_map_name(&maps[0]), "s1D_s2D_s3D_s4D");
+        assert_eq!(stage_map_name(&maps[15]), "s1L_s2L_s3L_s4L");
+    }
+
+    #[test]
+    fn training_costs_roughly_three_forwards() {
+        // Paper intuition: fwd + bwd(≈2×) + update. The training interval
+        // must be 2.5–6× the inference interval across configs.
+        for cfg in [
+            GruAccelConfig::gru_baseline(),
+            GruAccelConfig::concurrent(),
+            GruAccelConfig::bram_optimal(),
+        ] {
+            let a = GruAccel::new(cfg);
+            let f = a.report();
+            let t = a.training_report();
+            let ratio = t.interval as f64 / f.interval as f64;
+            assert!(
+                (1.5..8.0).contains(&ratio),
+                "{}: train/infer interval ratio {ratio}",
+                f.name
+            );
+            assert!(t.resources.ff > f.resources.ff);
+            assert!(t.power_w > f.power_w);
+        }
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let a = GruAccel::new(GruAccelConfig::concurrent()).report();
+        let b = GruAccel::new(GruAccelConfig::concurrent()).report();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.interval, b.interval);
+        assert_eq!(a.resources, b.resources);
+    }
+}

@@ -1,0 +1,303 @@
+//! HLS-style scheduler: from loop nest + pragmas to II, cycles, resources.
+//!
+//! Models what Vitis HLS does with the paper's directives (§5.3.2):
+//! `UNROLL factor=U` replicates the loop body into U lanes;
+//! `ARRAY_PARTITION`/`ARRAY_RESHAPE` provision memory ports; `PIPELINE`
+//! gives II = max(1, ⌈R/(ports)⌉) per array; `BIND_OP` selects DSP or LUT
+//! fabric for the arithmetic. The output of scheduling one loop is a
+//! [`ScheduledLoop`] whose `(ii, cycles, resources)` feed the
+//! [`Pipeline`](super::pipeline::Pipeline) stage graph.
+
+use super::bram::BankedArray;
+use super::dsp::DspMacArray;
+use super::lut::{lut_add_cost, ActivationTable, LutMacArray};
+use super::resources::Resources;
+
+/// Which fabric executes a stage's arithmetic (Table 7's D/L axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Binding {
+    Dsp,
+    Lut,
+}
+
+impl Binding {
+    pub fn letter(&self) -> char {
+        match self {
+            Binding::Dsp => 'D',
+            Binding::Lut => 'L',
+        }
+    }
+}
+
+/// One array accessed by a loop, with per-iteration read/write counts.
+#[derive(Clone, Debug)]
+pub struct ArrayAccess {
+    pub array: BankedArray,
+    /// Element reads per (unrolled) loop iteration.
+    pub reads_per_iter: u32,
+    /// Element writes per iteration.
+    pub writes_per_iter: u32,
+}
+
+/// A pipelined, possibly unrolled loop to schedule.
+#[derive(Clone, Debug)]
+pub struct LoopNest {
+    pub name: String,
+    /// Trip count of the innermost loop before unrolling.
+    pub trip: u64,
+    /// UNROLL factor (parallel lanes).
+    pub unroll: u32,
+    /// MAC operations per original iteration.
+    pub macs_per_iter: u32,
+    /// Non-MAC elementwise ops per original iteration (adds, muls, divs).
+    pub elementwise_per_iter: u32,
+    /// Activation-table lookups per original iteration.
+    pub activations_per_iter: u32,
+    pub arrays: Vec<ArrayAccess>,
+    pub binding: Binding,
+    /// Fixed-point word width (drives LUT fabric cost).
+    pub word_bits: u32,
+}
+
+impl LoopNest {
+    pub fn new(name: impl Into<String>, trip: u64) -> LoopNest {
+        LoopNest {
+            name: name.into(),
+            trip,
+            unroll: 1,
+            macs_per_iter: 0,
+            elementwise_per_iter: 0,
+            activations_per_iter: 0,
+            arrays: Vec::new(),
+            binding: Binding::Dsp,
+            word_bits: 16,
+        }
+    }
+
+    pub fn unrolled(mut self, u: u32) -> LoopNest {
+        self.unroll = u.max(1);
+        self
+    }
+
+    pub fn macs(mut self, m: u32) -> LoopNest {
+        self.macs_per_iter = m;
+        self
+    }
+
+    pub fn elementwise(mut self, e: u32) -> LoopNest {
+        self.elementwise_per_iter = e;
+        self
+    }
+
+    pub fn activations(mut self, a: u32) -> LoopNest {
+        self.activations_per_iter = a;
+        self
+    }
+
+    pub fn bound(mut self, b: Binding) -> LoopNest {
+        self.binding = b;
+        self
+    }
+
+    pub fn with_array(mut self, array: BankedArray, reads: u32, writes: u32) -> LoopNest {
+        self.arrays.push(ArrayAccess {
+            array,
+            reads_per_iter: reads,
+            writes_per_iter: writes,
+        });
+        self
+    }
+}
+
+/// Scheduling result for one loop.
+#[derive(Clone, Debug)]
+pub struct ScheduledLoop {
+    pub name: String,
+    /// Achieved initiation interval (cycles between unrolled iterations).
+    pub ii: u32,
+    /// Pipeline depth (fill latency) in cycles.
+    pub depth: u32,
+    /// Total cycles to drain the whole loop once.
+    pub cycles: u64,
+    pub resources: Resources,
+    /// The array that bound the II (None if compute-bound at II=1).
+    pub bottleneck: Option<String>,
+}
+
+/// Schedule a loop nest under the paper's II law.
+pub fn schedule(l: &LoopNest) -> ScheduledLoop {
+    let lanes = l.unroll;
+    // Memory-constrained II: each array must supply reads+writes for all
+    // unrolled lanes every launch (paper: II >= ceil(R / 2B)).
+    let mut ii = 1u32;
+    let mut bottleneck = None;
+    for a in &l.arrays {
+        let per_launch = (a.reads_per_iter + a.writes_per_iter) * lanes;
+        let this = a.array.ii_for_reads(per_launch);
+        if this > ii {
+            ii = this;
+            bottleneck = Some(a.array.name.clone());
+        }
+    }
+
+    let iters = l.trip.div_ceil(lanes as u64);
+    let total_macs = l.trip * l.macs_per_iter as u64;
+    let total_elem = l.trip * l.elementwise_per_iter as u64;
+
+    // Compute unit + latency model per binding.
+    let (depth, mut res) = match l.binding {
+        Binding::Dsp => {
+            let mac = DspMacArray::new(lanes * l.macs_per_iter.max(1));
+            let mut r = Resources::ZERO;
+            if l.macs_per_iter > 0 {
+                r += DspMacArray::new(lanes * l.macs_per_iter).resources();
+            }
+            if l.elementwise_per_iter > 0 {
+                r += super::dsp::DspElementwise::new(lanes, l.elementwise_per_iter).resources();
+            }
+            (mac.lane.latency + 1, r)
+        }
+        Binding::Lut => {
+            let mut r = Resources::ZERO;
+            if l.macs_per_iter > 0 {
+                r += LutMacArray::new(lanes * l.macs_per_iter, l.word_bits).resources();
+            }
+            if l.elementwise_per_iter > 0 {
+                r += Resources {
+                    lut: (lut_add_cost(l.word_bits) * 3) * (lanes as u64),
+                    ff: (l.word_bits as u64 * 2) * lanes as u64,
+                    dsp: 0,
+                    bram18: 0,
+                };
+            }
+            (7, r)
+        }
+    };
+
+    // Activation tables are LUT-resident regardless of the MAC binding
+    // (the paper never burns DSPs on sigmoid/tanh).
+    if l.activations_per_iter > 0 {
+        let t = ActivationTable::default_for(super::lut::Activation::Sigmoid);
+        res += t.resources(l.word_bits).scaled(lanes as u64);
+    }
+
+    // Array storage + loop control overhead.
+    for a in &l.arrays {
+        res += a.array.resources();
+    }
+    res += Resources {
+        lut: 50 + 8 * lanes as u64,
+        ff: 70 + 10 * lanes as u64,
+        dsp: 0,
+        bram18: 0,
+    };
+
+    let cycles = depth as u64 + iters.saturating_sub(1) * ii as u64 + (ii as u64 - 1)
+        + (total_macs + total_elem) / (total_macs + total_elem).max(1); // +1 if any work
+
+    ScheduledLoop {
+        name: l.name.clone(),
+        ii,
+        depth,
+        cycles,
+        resources: res,
+        bottleneck,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::bram::Partition;
+    use super::*;
+
+    fn weight_array(banks: u32) -> BankedArray {
+        let a = BankedArray::new("params.Wr", 1024, 16);
+        if banks > 1 {
+            a.partitioned(Partition::Cyclic(banks))
+        } else {
+            a
+        }
+    }
+
+    #[test]
+    fn paper_example_unroll4_unbanked_stalls() {
+        // §5.3.1: UNROLL=4, one weight read per lane per cycle, B=1 → II=2.
+        let l = LoopNest::new("gate", 256)
+            .unrolled(4)
+            .macs(1)
+            .with_array(weight_array(1), 1, 0);
+        let s = schedule(&l);
+        assert_eq!(s.ii, 2);
+        assert_eq!(s.bottleneck.as_deref(), Some("params.Wr"));
+    }
+
+    #[test]
+    fn paper_example_unroll4_banked_full_throughput() {
+        // §5.3.1: B=2 → 4 ports ≥ 4 reads → II=1.
+        let l = LoopNest::new("gate", 256)
+            .unrolled(4)
+            .macs(1)
+            .with_array(weight_array(2), 1, 0);
+        assert_eq!(schedule(&l).ii, 1);
+    }
+
+    #[test]
+    fn paper_example_r8_needs_b4() {
+        // §5.3.1: 4 lanes × 2 matrices = 8 reads → B=4 for II=1.
+        let both = |banks| {
+            LoopNest::new("gate", 256)
+                .unrolled(4)
+                .macs(2)
+                .with_array(weight_array(banks), 2, 0)
+        };
+        assert_eq!(schedule(&both(2)).ii, 2);
+        assert_eq!(schedule(&both(4)).ii, 1);
+    }
+
+    #[test]
+    fn banking_cuts_cycles() {
+        let mk = |banks| {
+            schedule(
+                &LoopNest::new("gate", 960)
+                    .unrolled(4)
+                    .macs(1)
+                    .with_array(weight_array(banks), 1, 0),
+            )
+        };
+        let un = mk(1);
+        let banked = mk(4);
+        assert!(banked.cycles < un.cycles);
+        assert!(un.cycles as f64 / banked.cycles as f64 > 1.8);
+    }
+
+    #[test]
+    fn lut_binding_swaps_dsp_for_lut() {
+        let base = LoopNest::new("gate", 256)
+            .unrolled(4)
+            .macs(1)
+            .with_array(weight_array(2), 1, 0);
+        let d = schedule(&base.clone().bound(Binding::Dsp));
+        let l = schedule(&base.bound(Binding::Lut));
+        assert!(d.resources.dsp > 0);
+        assert_eq!(l.resources.dsp, 0);
+        assert!(l.resources.lut > d.resources.lut);
+        // Same steady-state II either way.
+        assert_eq!(d.ii, l.ii);
+    }
+
+    #[test]
+    fn unroll_scales_resources_linearly_ish() {
+        let mk = |u| {
+            schedule(
+                &LoopNest::new("gate", 1024)
+                    .unrolled(u)
+                    .macs(1)
+                    .with_array(weight_array(u), 1, 0),
+            )
+        };
+        let u2 = mk(2);
+        let u8 = mk(8);
+        assert!(u8.resources.dsp >= 4 * u2.resources.dsp - 2);
+        assert!(u8.cycles < u2.cycles);
+    }
+}

@@ -1,0 +1,135 @@
+//! AXI/DMA interconnect and DDR model.
+//!
+//! §5.1: a Memory Reader/Writer engine streams inputs/parameters from
+//! off-chip DDR into BRAM over AXI master ports. Designs that keep
+//! intermediates on-chip (DATAFLOW + FIFOs) touch DDR only at the stream
+//! boundaries; the baseline and the iterative LTC design bounce
+//! intermediate state through DDR, which is where their latency and power
+//! go.
+
+/// DDR + AXI DMA timing/energy model.
+#[derive(Clone, Copy, Debug)]
+pub struct DdrModel {
+    /// Sustained bytes per PL cycle once a burst is streaming
+    /// (128-bit AXI at matched clock = 16 B/cycle).
+    pub bytes_per_cycle: f64,
+    /// Fixed latency per DMA transaction (descriptor setup + DDR access).
+    pub burst_latency_cycles: u64,
+    /// Energy per byte moved (pJ) — DDR3 on PYNQ ≈ 70 pJ/B end to end.
+    pub pj_per_byte: f64,
+}
+
+impl Default for DdrModel {
+    fn default() -> Self {
+        DdrModel {
+            bytes_per_cycle: 16.0,
+            burst_latency_cycles: 150,
+            pj_per_byte: 70.0,
+        }
+    }
+}
+
+impl DdrModel {
+    /// Cycles for one DMA burst of `bytes`.
+    pub fn burst_cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        self.burst_latency_cycles + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+
+    /// Cycles for `n` separate small transactions (no coalescing) — the
+    /// penalty pattern of iterative designs that reload per sub-step.
+    pub fn scattered_cycles(&self, n: u64, bytes_each: u64) -> u64 {
+        n * self.burst_cycles(bytes_each)
+    }
+
+    /// Energy in joules for moving `bytes`.
+    pub fn energy_j(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.pj_per_byte * 1e-12
+    }
+}
+
+/// DRAM footprint estimator for an MR workload (Table 4/5 DRAM column).
+#[derive(Clone, Copy, Debug)]
+pub struct DramFootprint {
+    /// Model parameters resident in DDR (bytes).
+    pub params_bytes: u64,
+    /// Training/serving trace buffers.
+    pub trace_bytes: u64,
+    /// Host-side runtime overhead (allocator, descriptors, bitstream...).
+    pub runtime_bytes: u64,
+}
+
+impl DramFootprint {
+    pub fn total_bytes(&self) -> u64 {
+        self.params_bytes + self.trace_bytes + self.runtime_bytes
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total_bytes() as f64 / (1024.0 * 1024.0)
+    }
+
+    /// FPGA-side footprint for a workload: params + double-buffered traces
+    /// + a lean bare-metal runtime (no framework heap).
+    pub fn fpga(params: u64, trace: u64) -> DramFootprint {
+        DramFootprint {
+            params_bytes: params,
+            trace_bytes: 2 * trace,
+            runtime_bytes: 64 << 20, // PYNQ Linux + XRT-lite ≈ 64 MB
+        }
+    }
+
+    /// GPU-side footprint: framework (TF/Keras per the paper) dominates.
+    pub fn gpu(params: u64, trace: u64) -> DramFootprint {
+        DramFootprint {
+            params_bytes: 4 * params, // fp32 master + optimizer copies
+            trace_bytes: 8 * trace,   // pipeline prefetch + staging
+            runtime_bytes: 2_300 << 20, // CUDA context + TF runtime
+        }
+    }
+
+    /// Mobile-GPU (Jetson) footprint: shared LPDDR, smaller runtime.
+    pub fn mobile_gpu(params: u64, trace: u64) -> DramFootprint {
+        DramFootprint {
+            params_bytes: 4 * params,
+            trace_bytes: 4 * trace,
+            runtime_bytes: 900 << 20,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_amortizes_latency() {
+        let d = DdrModel::default();
+        let one_big = d.burst_cycles(16 * 1024);
+        let many_small = d.scattered_cycles(1024, 16);
+        assert!(many_small > 10 * one_big);
+    }
+
+    #[test]
+    fn zero_bytes_zero_cycles() {
+        assert_eq!(DdrModel::default().burst_cycles(0), 0);
+    }
+
+    #[test]
+    fn energy_scales_linearly() {
+        let d = DdrModel::default();
+        assert!((d.energy_j(2_000_000) - 2.0 * d.energy_j(1_000_000)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fpga_footprint_much_smaller_than_gpu() {
+        let params = 2 << 20;
+        let trace = 4 << 20;
+        let f = DramFootprint::fpga(params, trace);
+        let g = DramFootprint::gpu(params, trace);
+        assert!(g.total_mb() > 10.0 * f.total_mb());
+        // Paper Table 5: FPGA MR footprint ≈ 72 MB.
+        assert!(f.total_mb() > 30.0 && f.total_mb() < 200.0);
+    }
+}

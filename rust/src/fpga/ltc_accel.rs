@@ -1,0 +1,255 @@
+//! LTC (ODE) accelerator baseline — Table 8 row 1.
+//!
+//! The liquid-time-constant cell advances its state with an iterative
+//! fused ODE solver: `LTC_UNFOLD` sequential sub-steps per time step, each
+//! a full matvec + sigmoid + elementwise divide, with a true data
+//! dependency between sub-steps (§1, Fig. 1 left). Nothing overlaps: the
+//! solver cannot be pipelined across sub-steps, and because the
+//! coefficients adapt online the next item's solve cannot be prefetched —
+//! each sub-step round-trips state through the memory subsystem. This is
+//! exactly the behaviour the MERINDA GRU block removes.
+
+use super::bram::BankedArray;
+use super::fixedpoint::FixedFormat;
+use super::hls::{schedule, Binding, LoopNest};
+use super::interconnect::DdrModel;
+use super::lut::{Activation, ActivationTable};
+use super::power::{Activity, PowerModel};
+use super::resources::{Device, Resources};
+use crate::mr::ltc::LtcParams;
+
+/// LTC accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct LtcAccelConfig {
+    pub input: usize,
+    pub hidden: usize,
+    /// ODE solver sub-steps per time step (paper: 6).
+    pub solver_steps: u32,
+    /// MAC lanes.
+    pub unroll: u32,
+    pub act_fmt: FixedFormat,
+    pub weight_fmt: FixedFormat,
+}
+
+impl LtcAccelConfig {
+    pub fn base() -> LtcAccelConfig {
+        LtcAccelConfig {
+            input: 4,
+            hidden: 16,
+            solver_steps: 6,
+            unroll: 8,
+            act_fmt: FixedFormat::new(16, 8),
+            weight_fmt: FixedFormat::new(16, 8),
+        }
+    }
+}
+
+/// Structural evaluation result (same shape as the GRU report).
+#[derive(Clone, Debug)]
+pub struct LtcReport {
+    pub cycles: u64,
+    pub interval: u64,
+    pub resources: Resources,
+    pub power_w: f64,
+    pub energy_per_output_j: f64,
+}
+
+pub struct LtcAccel {
+    pub cfg: LtcAccelConfig,
+    pub ddr: DdrModel,
+    pub power: PowerModel,
+    pub device: Device,
+}
+
+impl LtcAccel {
+    pub fn new(cfg: LtcAccelConfig) -> LtcAccel {
+        LtcAccel {
+            cfg,
+            ddr: DdrModel::default(),
+            power: PowerModel::default(),
+            device: Device::pynq_z2(),
+        }
+    }
+
+    /// One solver sub-step: f = σ(Wx + Uh + b), then the fused update
+    /// h ← (h + dt·f∘A) / (1 + dt·(1/τ + f)).
+    fn substep_cycles(&self) -> (u64, Resources) {
+        let c = &self.cfg;
+        let h = c.hidden as u64;
+        let macs = (c.input * c.hidden + c.hidden * c.hidden) as u64;
+        let w = BankedArray::new("ltc_w", macs, c.weight_fmt.word_bits);
+        let s_mac = schedule(
+            &LoopNest::new("ltc_affine", macs)
+                .unrolled(c.unroll)
+                .macs(1)
+                .bound(Binding::Dsp)
+                .with_array(w, 1, 0),
+        );
+        // Sigmoid lookups + fused update: 1 div ≈ 8 elementwise ops (no
+        // hard divider; iterative reciprocal on DSP).
+        let s_upd = schedule(
+            &LoopNest::new("ltc_update", h)
+                .unrolled(c.unroll.min(c.hidden as u32))
+                .activations(1)
+                .elementwise(10)
+                .bound(Binding::Dsp)
+                .with_array(
+                    BankedArray::new("ltc_state", h, c.act_fmt.word_bits),
+                    3,
+                    1,
+                ),
+        );
+        (
+            s_mac.cycles + s_upd.cycles,
+            s_mac.resources + s_upd.resources,
+        )
+    }
+
+    pub fn report(&self) -> LtcReport {
+        let c = &self.cfg;
+        let (sub_cycles, sub_res) = self.substep_cycles();
+
+        // Sequential sub-steps; latency = solver_steps × substep.
+        let cycles = sub_cycles * c.solver_steps as u64;
+
+        // Interval: no cross-item overlap, plus per-sub-step costs that the
+        // feed-forward GRU design simply does not have:
+        //  (a) state out + state in + adaptive-coefficient reload as three
+        //      scattered DMA transactions (online coefficients defeat
+        //      prefetch/caching);
+        //  (b) a PS-side solver-control round trip — the adaptive step
+        //      size/convergence check runs on the ARM core, an AXI-Lite
+        //      poll + interrupt costing ~5 µs ≈ 865 cycles at 173 MHz.
+        // This is the paper's §1 complaint ("iterative dependencies,
+        // kernel-launch overheads, high data-movement latency") in cycles.
+        let wb = (c.act_fmt.word_bits as u64).div_ceil(8);
+        let state_bytes = (c.hidden as u64) * wb;
+        let coef_bytes = ((c.input + c.hidden) as u64 * c.hidden as u64) * wb;
+        let ddr_per_substep = self.ddr.scattered_cycles(2, state_bytes)
+            + self.ddr.burst_cycles(coef_bytes);
+        let ps_sync = 865u64;
+        let interval = cycles + c.solver_steps as u64 * (ddr_per_substep + ps_sync);
+
+        // Resources shared across sub-steps (same engine reused) + solver
+        // sequencing control.
+        let mut res = sub_res;
+        res += Resources::new(9_000, 18_000, 4, 2); // solver FSM + buffers
+        res += Resources::new(1_800, 2_400, 0, 2); // DMA + AXI
+
+        let busy = cycles as f64 / interval.max(1) as f64;
+        let act = Activity {
+            dsp: 0.75 * busy,
+            lut: 0.35 + 0.3 * busy,
+            bram: 0.5,
+            ddr: (1.0 - busy).clamp(0.3, 1.0),
+        };
+        let power_w = self.power.watts(&res, &act);
+        let energy = self
+            .power
+            .energy_per_output_j(&res, &act, interval, self.device.clock_mhz);
+        LtcReport {
+            cycles,
+            interval,
+            resources: res,
+            power_w,
+            energy_per_output_j: energy,
+        }
+    }
+
+    /// Functional fixed-point LTC forward (one sequence), mirroring the
+    /// modeled datapath — used for the accuracy columns.
+    pub fn forward_fixed(&self, params: &LtcParams, xs: &[f32], seq: usize, dt: f32) -> Vec<f32> {
+        let c = &self.cfg;
+        let (i_sz, hid) = (c.input, c.hidden);
+        let af = c.act_fmt;
+        let wf = c.weight_fmt;
+        let sig = ActivationTable::default_for(Activation::Sigmoid);
+
+        let qwf: Vec<f32> = params.wf.iter().map(|&v| wf.quantize_f32(v)).collect();
+        let quf: Vec<f32> = params.uf.iter().map(|&v| wf.quantize_f32(v)).collect();
+        let qbf: Vec<f32> = params.bf.iter().map(|&v| wf.quantize_f32(v)).collect();
+
+        let mut h = vec![0.0f32; hid];
+        for t in 0..seq {
+            let x = &xs[t * i_sz..(t + 1) * i_sz];
+            for _ in 0..c.solver_steps {
+                let mut pre = qbf.clone();
+                for (ii, &xv) in x.iter().enumerate() {
+                    for j in 0..hid {
+                        pre[j] += xv * qwf[ii * hid + j];
+                    }
+                }
+                for (hi, &hv) in h.iter().enumerate() {
+                    for j in 0..hid {
+                        pre[j] += hv * quf[hi * hid + j];
+                    }
+                }
+                for j in 0..hid {
+                    let f = af.quantize_f32(sig.eval(af.quantize_f32(pre[j]) as f64) as f32);
+                    let num = h[j] + dt * f * params.a[j];
+                    let den = 1.0 + dt * (1.0 / params.tau[j] + f);
+                    h[j] = af.quantize_f32(num / den);
+                }
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::gru_accel::{GruAccel, GruAccelConfig};
+    use crate::mr::ltc::LtcCell;
+    use crate::util::Prng;
+
+    #[test]
+    fn ltc_much_slower_than_any_gru_config() {
+        let ltc = LtcAccel::new(LtcAccelConfig::base()).report();
+        let gru = GruAccel::new(GruAccelConfig::gru_baseline()).report();
+        // Paper: LTC interval 12014 vs GRU 271 (~44×); we require ≫.
+        assert!(
+            ltc.interval > 5 * gru.interval,
+            "ltc={} gru={}",
+            ltc.interval,
+            gru.interval
+        );
+        assert!(ltc.cycles > gru.cycles);
+    }
+
+    #[test]
+    fn solver_steps_scale_latency_linearly() {
+        let mut c3 = LtcAccelConfig::base();
+        c3.solver_steps = 3;
+        let mut c6 = LtcAccelConfig::base();
+        c6.solver_steps = 6;
+        let r3 = LtcAccel::new(c3).report();
+        let r6 = LtcAccel::new(c6).report();
+        assert_eq!(r6.cycles, 2 * r3.cycles);
+    }
+
+    #[test]
+    fn ltc_energy_dwarfs_gru_energy() {
+        let ltc = LtcAccel::new(LtcAccelConfig::base()).report();
+        let gru = GruAccel::new(GruAccelConfig::concurrent()).report();
+        // Paper: GRU configs are ~98-99% lower energy/output than LTC.
+        assert!(ltc.energy_per_output_j > 10.0 * gru.energy_per_output_j);
+    }
+
+    #[test]
+    fn fixed_forward_tracks_f32_ltc() {
+        let mut rng = Prng::new(5);
+        let cfg = LtcAccelConfig::base();
+        let params = LtcParams::random(cfg.input, cfg.hidden, &mut rng, 0.3);
+        let accel = LtcAccel::new(cfg.clone());
+        let xs = rng.normal_vec_f32(24 * cfg.input, 0.8);
+        let fixed = accel.forward_fixed(&params, &xs, 24, 0.1);
+        let float = LtcCell::new(params, cfg.solver_steps as usize).run(&xs, 24, 0.1);
+        let err: f32 = fixed
+            .iter()
+            .zip(&float)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 0.15, "LTC fixed-point drift {err}");
+    }
+}

@@ -1,0 +1,262 @@
+//! LUT-fabric functional units: activation tables and carry-chain logic.
+//!
+//! §5.2.2: sigmoid/tanh are implemented as lookup / piecewise-linear tables
+//! in distributed LUT RAM, returning a value in one cycle without touching
+//! DSPs. This module provides (a) a *functional* table implementation used
+//! by the fixed-point datapath (so accuracy under table quantization is
+//! measurable), and (b) *cost models* for mapping arithmetic onto LUT
+//! fabric instead of DSPs — the `sN = L` configurations of Table 7.
+
+use super::resources::Resources;
+
+/// Activation function selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Sigmoid,
+    Tanh,
+}
+
+impl Activation {
+    pub fn exact(&self, x: f64) -> f64 {
+        match self {
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::Tanh => x.tanh(),
+        }
+    }
+}
+
+/// A piecewise-linear activation table stored in LUT RAM.
+///
+/// `entries` breakpoints uniformly span `[-range, range]`; outside the
+/// range the function saturates to its asymptote. With linear
+/// interpolation between breakpoints the error for sigmoid/tanh at 64
+/// entries over ±8 is already below 1e-3 — consistent with the paper's
+/// "minimal accuracy loss" claim for LUT activations.
+#[derive(Clone, Debug)]
+pub struct ActivationTable {
+    pub func: Activation,
+    pub entries: usize,
+    pub range: f64,
+    table: Vec<f64>,
+    /// f32 copy of the table + precomputed index scale for the hot path
+    /// (EXPERIMENTS.md §Perf: the functional datapath emulation calls this
+    /// per element per step).
+    table_f32: Vec<f32>,
+    inv_step_f32: f32,
+    /// One-cycle lookup (paper: "constant time (one cycle)").
+    pub latency: u32,
+    /// Linear interpolation between breakpoints (vs staircase).
+    pub interpolate: bool,
+}
+
+impl ActivationTable {
+    pub fn new(func: Activation, entries: usize, range: f64, interpolate: bool) -> Self {
+        assert!(entries >= 2);
+        let table: Vec<f64> = (0..entries)
+            .map(|i| {
+                let x = -range + 2.0 * range * i as f64 / (entries - 1) as f64;
+                func.exact(x)
+            })
+            .collect();
+        let table_f32: Vec<f32> = table.iter().map(|&v| v as f32).collect();
+        let inv_step_f32 = ((entries - 1) as f64 / (2.0 * range)) as f32;
+        ActivationTable {
+            func,
+            entries,
+            range,
+            table,
+            table_f32,
+            inv_step_f32,
+            latency: 1,
+            interpolate,
+        }
+    }
+
+    /// f32 hot-path evaluation (identical math to `eval`, single-precision
+    /// index arithmetic; bounded by the same table error).
+    #[inline]
+    pub fn eval_f32(&self, x: f32) -> f32 {
+        let r = self.range as f32;
+        if x <= -r {
+            return self.table_f32[0];
+        }
+        if x >= r {
+            return self.table_f32[self.entries - 1];
+        }
+        let pos = (x + r) * self.inv_step_f32;
+        let idx = pos as usize; // x > -r so pos >= 0
+        if !self.interpolate || idx + 1 >= self.entries {
+            return self.table_f32[idx.min(self.entries - 1)];
+        }
+        let frac = pos - idx as f32;
+        self.table_f32[idx] * (1.0 - frac) + self.table_f32[idx + 1] * frac
+    }
+
+    /// Paper-style default: 256-entry interpolated table over ±8.
+    pub fn default_for(func: Activation) -> Self {
+        ActivationTable::new(func, 256, 8.0, true)
+    }
+
+    /// Evaluate through the table (the hardware datapath).
+    pub fn eval(&self, x: f64) -> f64 {
+        if x <= -self.range {
+            return self.table[0];
+        }
+        if x >= self.range {
+            return self.table[self.entries - 1];
+        }
+        let pos = (x + self.range) / (2.0 * self.range) * (self.entries - 1) as f64;
+        let idx = pos.floor() as usize;
+        if !self.interpolate || idx + 1 >= self.entries {
+            return self.table[idx.min(self.entries - 1)];
+        }
+        let frac = pos - idx as f64;
+        self.table[idx] * (1.0 - frac) + self.table[idx + 1] * frac
+    }
+
+    /// Maximum absolute error vs the exact function, sampled densely.
+    pub fn max_error(&self) -> f64 {
+        let mut worst: f64 = 0.0;
+        let samples = 4 * self.entries;
+        for i in 0..=samples {
+            let x = -self.range + 2.0 * self.range * i as f64 / samples as f64;
+            worst = worst.max((self.eval(x) - self.func.exact(x)).abs());
+        }
+        worst
+    }
+
+    /// LUT cost: table bits in distributed RAM (64 bits per LUT as RAM64)
+    /// plus interpolation adder/multiplier if enabled.
+    pub fn resources(&self, word_bits: u32) -> Resources {
+        let table_bits = self.entries as u64 * word_bits as u64;
+        let lutram = table_bits.div_ceil(64);
+        let interp = if self.interpolate {
+            // One small multiplier (frac × delta) + adder in fabric.
+            lut_mult_cost(word_bits.min(12)) + word_bits as u64
+        } else {
+            0
+        };
+        Resources {
+            lut: lutram + interp + 16,
+            ff: word_bits as u64 * 2,
+            dsp: 0,
+            bram18: 0,
+        }
+    }
+}
+
+/// LUT cost of a W×W-bit array multiplier in fabric (no DSP): roughly
+/// W²·1.1 LUTs for a carry-save array — the price of `sN = L` mappings in
+/// Table 7 (DSP count drops, LUT count balloons).
+pub fn lut_mult_cost(word_bits: u32) -> u64 {
+    let w = word_bits as u64;
+    (w * w).max(1) + w / 2
+}
+
+/// LUT cost of a W-bit carry-chain adder (§1: "carry-chain adders").
+pub fn lut_add_cost(word_bits: u32) -> u64 {
+    word_bits as u64
+}
+
+/// A MAC lane built from LUT fabric instead of a DSP slice: same function,
+/// ~2× the latency (carry chains are slower than hard DSP pipes), zero DSP.
+#[derive(Clone, Debug)]
+pub struct LutMacArray {
+    pub lanes: u32,
+    pub word_bits: u32,
+    pub latency: u32,
+}
+
+impl LutMacArray {
+    pub fn new(lanes: u32, word_bits: u32) -> LutMacArray {
+        LutMacArray {
+            lanes: lanes.max(1),
+            word_bits,
+            latency: 6, // array multiplier + carry chain, pipelined deeper
+        }
+    }
+
+    /// Cycles to retire `macs` multiply–accumulates at the given memory II.
+    /// Throughput matches the DSP array (II=1 capable once pipelined); the
+    /// cost is fabric area and a longer fill.
+    pub fn cycles(&self, macs: u64, memory_ii: u32) -> u64 {
+        if macs == 0 {
+            return 0;
+        }
+        let iters = macs.div_ceil(self.lanes as u64);
+        self.latency as u64 + iters * memory_ii as u64 - 1
+    }
+
+    pub fn resources(&self) -> Resources {
+        let per_lane = lut_mult_cost(self.word_bits) + 2 * lut_add_cost(self.word_bits);
+        Resources {
+            lut: per_lane * self.lanes as u64 + 30,
+            ff: (self.word_bits as u64 * 4) * self.lanes as u64,
+            dsp: 0,
+            bram18: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_table_accuracy() {
+        let t = ActivationTable::default_for(Activation::Sigmoid);
+        assert!(t.max_error() < 1e-3, "err={}", t.max_error());
+    }
+
+    #[test]
+    fn tanh_table_accuracy() {
+        let t = ActivationTable::default_for(Activation::Tanh);
+        assert!(t.max_error() < 2e-3, "err={}", t.max_error());
+    }
+
+    #[test]
+    fn more_entries_monotonically_better() {
+        let small = ActivationTable::new(Activation::Sigmoid, 32, 8.0, true);
+        let big = ActivationTable::new(Activation::Sigmoid, 512, 8.0, true);
+        assert!(big.max_error() < small.max_error());
+    }
+
+    #[test]
+    fn interpolation_beats_staircase() {
+        let stair = ActivationTable::new(Activation::Tanh, 128, 8.0, false);
+        let interp = ActivationTable::new(Activation::Tanh, 128, 8.0, true);
+        assert!(interp.max_error() < stair.max_error());
+    }
+
+    #[test]
+    fn saturates_outside_range() {
+        let t = ActivationTable::default_for(Activation::Sigmoid);
+        assert!((t.eval(100.0) - 1.0).abs() < 1e-3);
+        assert!(t.eval(-100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn lut_mac_uses_no_dsp_but_many_luts() {
+        let lut = LutMacArray::new(4, 16);
+        let r = lut.resources();
+        assert_eq!(r.dsp, 0);
+        assert!(r.lut > 1000, "lut={}", r.lut);
+    }
+
+    #[test]
+    fn lut_and_dsp_macs_same_steady_throughput() {
+        use super::super::dsp::DspMacArray;
+        let l = LutMacArray::new(4, 16);
+        let d = DspMacArray::new(4);
+        let big = 100_000;
+        let dl = l.cycles(big, 1) as f64;
+        let dd = d.cycles_fed(big) as f64;
+        assert!((dl - dd).abs() / dd < 0.01);
+    }
+
+    #[test]
+    fn activation_exact_values() {
+        assert!((Activation::Sigmoid.exact(0.0) - 0.5).abs() < 1e-12);
+        assert!(Activation::Tanh.exact(0.0).abs() < 1e-12);
+    }
+}

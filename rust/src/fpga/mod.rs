@@ -1,0 +1,23 @@
+//! Cycle-level FPGA dataflow simulator — the paper's hardware substrate.
+//!
+//! The paper evaluates MERINDA on a PYNQ-Z2 via Vitis HLS; this module
+//! reproduces that study structurally (DESIGN.md §2): BRAM banking and the
+//! II law (`bram`), DSP48 MAC lanes (`dsp`), LUT activation tables and
+//! fabric arithmetic (`lut`), fixed-point numerics (`fixedpoint`), the
+//! DATAFLOW stage pipeline (`pipeline`), an HLS-style scheduler (`hls`),
+//! DDR/AXI transfers (`interconnect`), the calibrated power model
+//! (`power`), device capacities (`resources`), and the assembled GRU and
+//! LTC accelerators (`gru_accel`, `ltc_accel`) behind Tables 7–8 / Fig. 8.
+
+pub mod bram;
+pub mod cluster;
+pub mod dsp;
+pub mod fixedpoint;
+pub mod gru_accel;
+pub mod hls;
+pub mod interconnect;
+pub mod lut;
+pub mod ltc_accel;
+pub mod pipeline;
+pub mod power;
+pub mod resources;

@@ -1,0 +1,188 @@
+//! FPGA resource accounting and device capacity model.
+//!
+//! Resources are the four currencies of the paper's evaluation (Tables 7/8):
+//! LUTs, flip-flops, DSP48 slices and BRAM18 blocks. The device model is
+//! the PYNQ-Z2's Zynq-7020 fabric (§6.2). Note the paper's BRAM-optimal
+//! design (276 k LUTs) exceeds the 7020 — those rows are HLS synthesis
+//! estimates, and our simulator reports the same kind of estimate plus an
+//! explicit `fits()` check.
+
+use std::fmt;
+use std::ops::{Add, AddAssign};
+
+/// A bundle of fabric resources.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Resources {
+    pub lut: u64,
+    pub ff: u64,
+    pub dsp: u64,
+    /// 18 Kb BRAM blocks (a BRAM36 counts as two).
+    pub bram18: u64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources {
+        lut: 0,
+        ff: 0,
+        dsp: 0,
+        bram18: 0,
+    };
+
+    pub fn new(lut: u64, ff: u64, dsp: u64, bram18: u64) -> Resources {
+        Resources {
+            lut,
+            ff,
+            dsp,
+            bram18,
+        }
+    }
+
+    /// Scale all fields by an integer factor (unrolling replicas).
+    pub fn scaled(&self, k: u64) -> Resources {
+        Resources {
+            lut: self.lut * k,
+            ff: self.ff * k,
+            dsp: self.dsp * k,
+            bram18: self.bram18 * k,
+        }
+    }
+
+    /// Component-wise max (for mutually exclusive resource phases).
+    pub fn max(&self, other: &Resources) -> Resources {
+        Resources {
+            lut: self.lut.max(other.lut),
+            ff: self.ff.max(other.ff),
+            dsp: self.dsp.max(other.dsp),
+            bram18: self.bram18.max(other.bram18),
+        }
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            dsp: self.dsp + o.dsp,
+            bram18: self.bram18 + o.bram18,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        *self = *self + o;
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "LUT={} FF={} DSP={} BRAM18={}",
+            self.lut, self.ff, self.dsp, self.bram18
+        )
+    }
+}
+
+/// An FPGA device's capacity.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub capacity: Resources,
+    /// Default PL clock in MHz (paper drives 150–200 MHz).
+    pub clock_mhz: f64,
+}
+
+impl Device {
+    /// PYNQ-Z2 / Zynq XC7Z020: 53 200 LUTs, 106 400 FFs, 220 DSP48E1,
+    /// 140 BRAM36 (= 280 BRAM18).
+    pub fn pynq_z2() -> Device {
+        Device {
+            name: "PYNQ-Z2 (Zynq-7020)",
+            capacity: Resources::new(53_200, 106_400, 220, 280),
+            clock_mhz: 173.0, // paper Table 5 FPGA frequency for MR
+        }
+    }
+
+    /// A larger Ultrascale+ part for headroom studies (ZU7EV-class).
+    pub fn zu7ev() -> Device {
+        Device {
+            name: "Zynq UltraScale+ ZU7EV",
+            capacity: Resources::new(230_400, 460_800, 1_728, 624),
+            clock_mhz: 300.0,
+        }
+    }
+
+    /// Does a design fit this device?
+    pub fn fits(&self, used: &Resources) -> bool {
+        used.lut <= self.capacity.lut
+            && used.ff <= self.capacity.ff
+            && used.dsp <= self.capacity.dsp
+            && used.bram18 <= self.capacity.bram18
+    }
+
+    /// Peak utilization fraction across resource classes (>1 = overflow).
+    pub fn utilization(&self, used: &Resources) -> f64 {
+        let frac = |u: u64, c: u64| u as f64 / c as f64;
+        frac(used.lut, self.capacity.lut)
+            .max(frac(used.ff, self.capacity.ff))
+            .max(frac(used.dsp, self.capacity.dsp))
+            .max(frac(used.bram18, self.capacity.bram18))
+    }
+
+    /// Clock period in nanoseconds.
+    pub fn period_ns(&self) -> f64 {
+        1_000.0 / self.clock_mhz
+    }
+
+    /// Convert a cycle count to seconds at this device's clock.
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.period_ns() * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_scale() {
+        let a = Resources::new(10, 20, 3, 1);
+        let b = Resources::new(5, 5, 1, 0);
+        let c = a + b;
+        assert_eq!(c, Resources::new(15, 25, 4, 1));
+        assert_eq!(a.scaled(2), Resources::new(20, 40, 6, 2));
+    }
+
+    #[test]
+    fn pynq_fits_small_design() {
+        let d = Device::pynq_z2();
+        assert!(d.fits(&Resources::new(10_000, 15_000, 44, 14)));
+        // The paper's BRAM-optimal row must NOT fit (276 047 LUTs).
+        assert!(!d.fits(&Resources::new(276_047, 130_106, 524, 36)));
+    }
+
+    #[test]
+    fn utilization_peaks_on_binding_resource() {
+        let d = Device::pynq_z2();
+        let u = d.utilization(&Resources::new(0, 0, 220, 0));
+        assert!((u - 1.0).abs() < 1e-12);
+        assert!(d.utilization(&Resources::new(0, 0, 440, 0)) > 1.0);
+    }
+
+    #[test]
+    fn cycle_timing() {
+        let d = Device::pynq_z2();
+        let s = d.cycles_to_seconds(173_000_000);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn component_max() {
+        let a = Resources::new(10, 0, 5, 0);
+        let b = Resources::new(3, 7, 1, 2);
+        assert_eq!(a.max(&b), Resources::new(10, 7, 5, 2));
+    }
+}

@@ -1,0 +1,30 @@
+//! MERINDA: Model Recovery in Dynamic Architecture.
+//!
+//! Reproduction of "Hardware Software Optimizations for Fast Model Recovery
+//! on Reconfigurable Architectures" (Xu, Banerjee, Gupta — 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas GRU-cell / fixed-point
+//!   kernels, the compute hot-spot, validated against a pure-jnp oracle.
+//! * **L2** (`python/compile/model.py`) — the MERINDA model (GRU → dense →
+//!   coefficient head → RK4 ODE loss) and the LTC baseline, AOT-lowered to
+//!   HLO text once at build time (`make artifacts`).
+//! * **L3** (this crate) — the Rust coordinator: PJRT runtime that loads the
+//!   artifacts, a streaming training/serving coordinator, the cycle-level
+//!   FPGA dataflow simulator that reproduces the paper's hardware study, the
+//!   model-recovery algorithm suite (SINDy, ridge/STLSQ, ODE solvers) and
+//!   the dynamical-system case studies.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+
+pub mod coordinator;
+pub mod fpga;
+pub mod mr;
+pub mod platform;
+pub mod report;
+pub mod runtime;
+pub mod systems;
+pub mod util;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,55 @@
+//! MERINDA command-line interface (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   info                       — artifact + device summary
+//!   recover  --system S --method M   — run one recovery end to end
+//!   train    --system S --steps N    — train the neural flow via PJRT
+//!   simulate --config C        — FPGA accelerator report (table-8 configs)
+//!   serve    --requests N      — run the streaming service demo
+//!   table <1|2|4|5|6|7|8|fig8> — regenerate a paper table/figure
+//!
+//! `cargo run --release -- <subcommand> [flags]`
+
+use merinda::util::cli;
+
+mod commands {
+    pub mod recover;
+    pub mod serve;
+    pub mod simulate;
+    pub mod tables;
+    pub mod train;
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(
+        &argv,
+        &[
+            "system", "method", "steps", "config", "requests", "seed", "samples", "dt", "lr",
+            "artifacts", "out",
+        ],
+    );
+    let result = match args.subcommand() {
+        Some("info") => commands::tables::info(&args),
+        Some("recover") => commands::recover::run(&args),
+        Some("train") => commands::train::run(&args),
+        Some("simulate") => commands::simulate::run(&args),
+        Some("serve") => commands::serve::run(&args),
+        Some("table") => commands::tables::run(&args),
+        _ => {
+            eprintln!(
+                "usage: merinda <info|recover|train|simulate|serve|table> [--flags]\n\
+                 examples:\n\
+                 \x20 merinda recover --system lotka --method merinda\n\
+                 \x20 merinda train --system aid --steps 300\n\
+                 \x20 merinda simulate --config concurrent\n\
+                 \x20 merinda table 8"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

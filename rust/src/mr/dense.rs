@@ -1,0 +1,167 @@
+//! Dense head: the MLP that maps GRU hidden states to coefficient
+//! estimates (paper §4), plus the sparsity-driven pruning MERINDA adds on
+//! top of the neural-flow architecture ("further pruning the dense layer",
+//! §3.1).
+
+use crate::util::Prng;
+
+/// A two-layer ReLU MLP head matching the L2 `_dense_head`.
+#[derive(Clone, Debug)]
+pub struct DenseHead {
+    pub input: usize,
+    pub hidden: usize,
+    pub output: usize,
+    /// (input, hidden) row-major.
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    /// (hidden, output) row-major.
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    /// Optional output mask from structural pruning (None = dense).
+    pub mask: Option<Vec<bool>>,
+}
+
+impl DenseHead {
+    pub fn random(input: usize, hidden: usize, output: usize, rng: &mut Prng) -> DenseHead {
+        let s1 = 1.0 / (input as f64).sqrt();
+        let s2 = 1.0 / (hidden as f64).sqrt();
+        DenseHead {
+            input,
+            hidden,
+            output,
+            w1: rng.normal_vec_f32(input * hidden, s1),
+            b1: vec![0.0; hidden],
+            w2: rng.normal_vec_f32(hidden * output, s2),
+            b2: vec![0.0; output],
+            mask: None,
+        }
+    }
+
+    /// Forward: h (input,) → theta (output,). ReLU between layers; masked
+    /// outputs are forced to exactly zero (pruned library terms).
+    pub fn forward(&self, h: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(h.len(), self.input);
+        let mut z = self.b1.clone();
+        for (i, &hv) in h.iter().enumerate() {
+            let row = &self.w1[i * self.hidden..(i + 1) * self.hidden];
+            for (zv, &w) in z.iter_mut().zip(row) {
+                *zv += hv * w;
+            }
+        }
+        for v in z.iter_mut() {
+            *v = v.max(0.0); // ReLU
+        }
+        let mut out = self.b2.clone();
+        for (j, &zv) in z.iter().enumerate() {
+            if zv != 0.0 {
+                let row = &self.w2[j * self.output..(j + 1) * self.output];
+                for (ov, &w) in out.iter_mut().zip(row) {
+                    *ov += zv * w;
+                }
+            }
+        }
+        if let Some(mask) = &self.mask {
+            for (o, &keep) in out.iter_mut().zip(mask) {
+                if !keep {
+                    *o = 0.0;
+                }
+            }
+        }
+        out
+    }
+
+    /// MERINDA's sparsity-exploiting pruning: keep only the `keep` largest
+    /// |output| units measured over a calibration batch — the paper's
+    /// "dropout rate of |Θ|" that leaves exactly the active terms.
+    pub fn prune_to_top(&mut self, calib_outputs: &[Vec<f32>], keep: usize) {
+        let mut mag = vec![0.0f64; self.output];
+        for out in calib_outputs {
+            for (m, &v) in mag.iter_mut().zip(out) {
+                *m += (v as f64).abs();
+            }
+        }
+        let mut idx: Vec<usize> = (0..self.output).collect();
+        idx.sort_by(|&a, &b| mag[b].partial_cmp(&mag[a]).unwrap());
+        let mut mask = vec![false; self.output];
+        for &i in idx.iter().take(keep) {
+            mask[i] = true;
+        }
+        self.mask = Some(mask);
+    }
+
+    /// Fraction of outputs pruned away.
+    pub fn sparsity(&self) -> f64 {
+        match &self.mask {
+            None => 0.0,
+            Some(m) => m.iter().filter(|&&k| !k).count() as f64 / m.len() as f64,
+        }
+    }
+
+    /// Multiply–accumulate count for one forward pass (for the FPGA cost
+    /// model): pruned outputs cost nothing.
+    pub fn macs(&self) -> u64 {
+        let active_out = match &self.mask {
+            None => self.output,
+            Some(m) => m.iter().filter(|&&k| k).count(),
+        };
+        (self.input * self.hidden + self.hidden * active_out) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head(seed: u64) -> DenseHead {
+        DenseHead::random(8, 16, 10, &mut Prng::new(seed))
+    }
+
+    #[test]
+    fn forward_shape_and_determinism() {
+        let d = head(1);
+        let h = vec![0.5f32; 8];
+        let a = d.forward(&h);
+        assert_eq!(a.len(), 10);
+        assert_eq!(a, d.forward(&h));
+    }
+
+    #[test]
+    fn relu_blocks_negative_path() {
+        // With large negative b1, layer-1 output is all zero → out = b2.
+        let mut d = head(2);
+        d.b1 = vec![-1e6; d.hidden];
+        let out = d.forward(&vec![0.1; 8]);
+        assert_eq!(out, d.b2);
+    }
+
+    #[test]
+    fn pruning_zeroes_small_outputs() {
+        let mut d = head(3);
+        let calib: Vec<Vec<f32>> = (0..4)
+            .map(|i| d.forward(&vec![0.1 * (i as f32 + 1.0); 8]))
+            .collect();
+        d.prune_to_top(&calib, 4);
+        assert!((d.sparsity() - 0.6).abs() < 1e-9);
+        let out = d.forward(&vec![0.3; 8]);
+        assert_eq!(out.iter().filter(|v| **v != 0.0).count() <= 4, true);
+    }
+
+    #[test]
+    fn pruning_reduces_macs() {
+        let mut d = head(4);
+        let full = d.macs();
+        let calib = vec![d.forward(&vec![0.2; 8])];
+        d.prune_to_top(&calib, 3);
+        assert!(d.macs() < full);
+    }
+
+    #[test]
+    fn kept_outputs_unchanged_by_mask() {
+        let mut d = head(5);
+        let h = vec![0.25f32; 8];
+        let dense_out = d.forward(&h);
+        let calib = vec![dense_out.clone()];
+        d.prune_to_top(&calib, 10); // keep all
+        assert_eq!(d.forward(&h), dense_out);
+    }
+}

@@ -1,0 +1,269 @@
+//! GRU cell and sequence model (native Rust, f32).
+//!
+//! Gate packing matches `python/compile/kernels/ref.py` exactly:
+//! `w: (I, 3H)` packed `[Wr | Wz | Wn]`, `u: (H, 3H)` packed
+//! `[Ur | Uz | Un]`, `b: (3H,)`. `rust/tests/integration.rs` pins this
+//! implementation against the Pallas-kernel HLO so the FPGA simulator, the
+//! L1 kernel and this code all compute the same function.
+
+use crate::util::Prng;
+
+/// Packed GRU parameters.
+#[derive(Clone, Debug)]
+pub struct GruParams {
+    pub input: usize,
+    pub hidden: usize,
+    /// (I, 3H) row-major input weights.
+    pub w: Vec<f32>,
+    /// (H, 3H) row-major recurrent weights.
+    pub u: Vec<f32>,
+    /// (3H,) biases.
+    pub b: Vec<f32>,
+}
+
+impl GruParams {
+    /// Random N(0, std) init (matches the integration-test convention).
+    pub fn random(input: usize, hidden: usize, rng: &mut Prng, std: f64) -> GruParams {
+        GruParams {
+            input,
+            hidden,
+            w: rng.normal_vec_f32(input * 3 * hidden, std),
+            u: rng.normal_vec_f32(hidden * 3 * hidden, std),
+            b: rng.normal_vec_f32(3 * hidden, std * 0.3),
+        }
+    }
+
+    /// Zero-initialized parameters.
+    pub fn zeros(input: usize, hidden: usize) -> GruParams {
+        GruParams {
+            input,
+            hidden,
+            w: vec![0.0; input * 3 * hidden],
+            u: vec![0.0; hidden * 3 * hidden],
+            b: vec![0.0; 3 * hidden],
+        }
+    }
+
+    /// Total parameter count.
+    pub fn len(&self) -> usize {
+        self.w.len() + self.u.len() + self.b.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Reusable scratch buffers for [`GruCell::step_into`].
+#[derive(Clone, Debug)]
+pub struct GruScratch {
+    gx: Vec<f32>,
+    gh: Vec<f32>,
+    r: Vec<f32>,
+    z: Vec<f32>,
+    cand: Vec<f32>,
+}
+
+impl GruScratch {
+    pub fn new(hidden: usize) -> GruScratch {
+        GruScratch {
+            gx: vec![0.0; 3 * hidden],
+            gh: vec![0.0; 2 * hidden],
+            r: vec![0.0; hidden],
+            z: vec![0.0; hidden],
+            cand: vec![0.0; hidden],
+        }
+    }
+}
+
+/// A GRU cell: owns parameters, steps one sample at a time.
+#[derive(Clone, Debug)]
+pub struct GruCell {
+    pub params: GruParams,
+}
+
+impl GruCell {
+    pub fn new(params: GruParams) -> GruCell {
+        GruCell { params }
+    }
+
+    /// One step: x (I,), h (H,) → h' (H,).
+    ///
+    /// Allocating wrapper around [`GruCell::step_into`].
+    pub fn step(&self, x: &[f32], h: &[f32]) -> Vec<f32> {
+        let mut scratch = GruScratch::new(self.params.hidden);
+        let mut out = vec![0.0f32; self.params.hidden];
+        self.step_into(x, h, &mut out, &mut scratch);
+        out
+    }
+
+    /// One step into a caller-provided buffer with reused scratch
+    /// (§Perf: the per-step allocations dominated `run` on long traces).
+    ///
+    /// r = σ(x·Wr + h·Ur + br); z = σ(x·Wz + h·Uz + bz);
+    /// n = tanh(x·Wn + (r∘h)·Un + bn); h' = (1−z)∘n + z∘h.
+    pub fn step_into(&self, x: &[f32], h: &[f32], out: &mut [f32], s: &mut GruScratch) {
+        let p = &self.params;
+        let (i_sz, hid) = (p.input, p.hidden);
+        debug_assert_eq!(x.len(), i_sz);
+        debug_assert_eq!(h.len(), hid);
+        let th = 3 * hid;
+        debug_assert_eq!(out.len(), hid);
+
+        // gx = x W + b over the packed 3H axis.
+        let gx = &mut s.gx;
+        gx.copy_from_slice(&p.b);
+        for (ii, &xv) in x.iter().enumerate() {
+            let row = &p.w[ii * th..(ii + 1) * th];
+            for (g, &wv) in gx.iter_mut().zip(row) {
+                *g += xv * wv;
+            }
+        }
+        // gh = h U over the r/z columns only (first 2H).
+        let gh = &mut s.gh;
+        gh.fill(0.0);
+        for (hi, &hv) in h.iter().enumerate() {
+            let row = &p.u[hi * th..hi * th + 2 * hid];
+            for (g, &uv) in gh.iter_mut().zip(row) {
+                *g += hv * uv;
+            }
+        }
+
+        let (r, z) = (&mut s.r, &mut s.z);
+        for j in 0..hid {
+            r[j] = sigmoid(gx[j] + gh[j]);
+            z[j] = sigmoid(gx[hid + j] + gh[hid + j]);
+        }
+
+        // candidate: n = tanh(gx_n + (r∘h) Un)
+        let cand = &mut s.cand;
+        cand.fill(0.0);
+        for hi in 0..hid {
+            let rh = r[hi] * h[hi];
+            if rh != 0.0 {
+                let row = &p.u[hi * th + 2 * hid..(hi + 1) * th];
+                for (c, &uv) in cand.iter_mut().zip(row) {
+                    *c += rh * uv;
+                }
+            }
+        }
+        for j in 0..hid {
+            let n = (gx[2 * hid + j] + cand[j]).tanh();
+            out[j] = (1.0 - z[j]) * n + z[j] * h[j];
+        }
+    }
+
+    /// Run a sequence: xs is (K, I) row-major; returns final hidden state.
+    pub fn run(&self, xs: &[f32], seq: usize) -> Vec<f32> {
+        let i_sz = self.params.input;
+        let hid = self.params.hidden;
+        debug_assert_eq!(xs.len(), seq * i_sz);
+        let mut scratch = GruScratch::new(hid);
+        let mut h = vec![0.0f32; hid];
+        let mut next = vec![0.0f32; hid];
+        for t in 0..seq {
+            self.step_into(&xs[t * i_sz..(t + 1) * i_sz], &h, &mut next, &mut scratch);
+            std::mem::swap(&mut h, &mut next);
+        }
+        h
+    }
+
+    /// Run a sequence returning every hidden state (K, H).
+    pub fn run_all(&self, xs: &[f32], seq: usize) -> Vec<Vec<f32>> {
+        let i_sz = self.params.input;
+        let mut h = vec![0.0f32; self.params.hidden];
+        let mut out = Vec::with_capacity(seq);
+        for t in 0..seq {
+            h = self.step(&xs[t * i_sz..(t + 1) * i_sz], &h);
+            out.push(h.clone());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(i: usize, h: usize, seed: u64) -> GruCell {
+        let mut rng = Prng::new(seed);
+        GruCell::new(GruParams::random(i, h, &mut rng, 0.3))
+    }
+
+    #[test]
+    fn state_is_bounded() {
+        // h' is a convex combination of tanh(·) ∈ (−1,1) and previous h, so
+        // starting from 0 the state stays in (−1, 1) forever.
+        let c = cell(4, 16, 42);
+        let mut rng = Prng::new(7);
+        let mut h = vec![0.0f32; 16];
+        for _ in 0..200 {
+            let x = rng.normal_vec_f32(4, 2.0);
+            h = c.step(&x, &h);
+            assert!(h.iter().all(|v| v.abs() < 1.0), "state escaped: {h:?}");
+        }
+    }
+
+    #[test]
+    fn zero_params_zero_input_fixed_point() {
+        // With all-zero parameters: r=z=0.5, n=tanh(0)=0, so h'=0.5 h.
+        let c = GruCell::new(GruParams::zeros(2, 4));
+        let h = vec![1.0f32; 4];
+        let out = c.step(&[0.0, 0.0], &h);
+        for v in out {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn step_deterministic() {
+        let c = cell(3, 8, 1);
+        let x = vec![0.5f32, -0.2, 0.1];
+        let h = vec![0.1f32; 8];
+        assert_eq!(c.step(&x, &h), c.step(&x, &h));
+    }
+
+    #[test]
+    fn run_matches_manual_stepping() {
+        let c = cell(2, 6, 9);
+        let mut rng = Prng::new(3);
+        let xs = rng.normal_vec_f32(10 * 2, 1.0);
+        let final_h = c.run(&xs, 10);
+        let mut h = vec![0.0f32; 6];
+        for t in 0..10 {
+            h = c.step(&xs[t * 2..(t + 1) * 2], &h);
+        }
+        assert_eq!(final_h, h);
+    }
+
+    #[test]
+    fn run_all_last_equals_run() {
+        let c = cell(2, 6, 11);
+        let mut rng = Prng::new(5);
+        let xs = rng.normal_vec_f32(7 * 2, 1.0);
+        let all = c.run_all(&xs, 7);
+        assert_eq!(all.last().unwrap(), &c.run(&xs, 7));
+    }
+
+    #[test]
+    fn reset_gate_controls_memory() {
+        // Large negative r-bias forces r≈0: candidate ignores h entirely,
+        // so two different initial states converge after one step when z≈0.
+        let mut p = GruParams::zeros(1, 2);
+        for j in 0..2 {
+            p.b[j] = -50.0; // br → r≈0
+            p.b[2 + j] = -50.0; // bz → z≈0
+        }
+        let c = GruCell::new(p);
+        let a = c.step(&[0.3], &[0.9, -0.9]);
+        let b = c.step(&[0.3], &[-0.5, 0.5]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

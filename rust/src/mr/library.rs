@@ -1,0 +1,257 @@
+//! Polynomial candidate library Θ(X, U) for sparse model recovery.
+//!
+//! §3.1: an n-dimensional model with Mth-order nonlinearity draws from
+//! C(M+n, n) candidate terms; a sparse model uses p ≪ that. This module
+//! builds the design matrix for SINDy/ridge and mirrors the L2
+//! `poly_library_ref` (order-2 over [states | inputs], leading 1).
+
+/// A single library term: product of variables with exponents.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Term {
+    /// exponents[i] = power of variable i (states then inputs).
+    pub exponents: Vec<u32>,
+}
+
+impl Term {
+    pub fn degree(&self) -> u32 {
+        self.exponents.iter().sum()
+    }
+
+    /// Human-readable name like `x0*x1` or `1`.
+    pub fn name(&self, xdim: usize) -> String {
+        let mut parts = Vec::new();
+        for (i, &e) in self.exponents.iter().enumerate() {
+            let var = if i < xdim {
+                format!("x{i}")
+            } else {
+                format!("u{}", i - xdim)
+            };
+            for _ in 0..e {
+                parts.push(var.clone());
+            }
+        }
+        if parts.is_empty() {
+            "1".to_string()
+        } else {
+            parts.join("*")
+        }
+    }
+
+    /// Evaluate on a concatenated [x | u] vector.
+    pub fn eval(&self, v: &[f64]) -> f64 {
+        let mut acc = 1.0;
+        for (i, &e) in self.exponents.iter().enumerate() {
+            for _ in 0..e {
+                acc *= v[i];
+            }
+        }
+        acc
+    }
+}
+
+/// A polynomial library over `xdim` states and `udim` inputs up to `order`.
+#[derive(Clone, Debug)]
+pub struct PolyLibrary {
+    pub xdim: usize,
+    pub udim: usize,
+    pub order: u32,
+    pub terms: Vec<Term>,
+}
+
+/// Number of monomials in d variables up to degree M: C(M+d, d).
+pub fn library_size(dims: usize, order: u32) -> usize {
+    // Compute binomial(order + dims, dims) without overflow for our sizes.
+    let mut num = 1u64;
+    let mut den = 1u64;
+    for i in 1..=dims as u64 {
+        num *= order as u64 + i;
+        den *= i;
+    }
+    (num / den) as usize
+}
+
+impl PolyLibrary {
+    /// Build all monomials of total degree ≤ order, in graded-lex order
+    /// matching `poly_library_ref` for order 2 (1, linear, quadratic).
+    pub fn new(xdim: usize, udim: usize, order: u32) -> PolyLibrary {
+        let dims = xdim + udim;
+        let mut terms = Vec::new();
+        // Degree 0.
+        terms.push(Term {
+            exponents: vec![0; dims],
+        });
+        // Degree 1..=order, graded: within a degree, enumerate monomials
+        // v_i v_j v_k … with i ≤ j ≤ k — matching the ref kernel's i ≤ j
+        // ordering at order 2.
+        fn rec_exact(
+            dims: usize,
+            left: u32,
+            start: usize,
+            exps: &mut Vec<u32>,
+            out: &mut Vec<Term>,
+        ) {
+            if left == 0 {
+                out.push(Term {
+                    exponents: exps.clone(),
+                });
+                return;
+            }
+            for v in start..dims {
+                exps[v] += 1;
+                rec_exact(dims, left - 1, v, exps, out);
+                exps[v] -= 1;
+            }
+        }
+        for deg in 1..=order {
+            let mut exps = vec![0u32; dims];
+            rec_exact(dims, deg, 0, &mut exps, &mut terms);
+        }
+        PolyLibrary {
+            xdim,
+            udim,
+            order,
+            terms,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Evaluate all terms for one sample (x, u) into `out`.
+    pub fn eval_into(&self, x: &[f64], u: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.xdim);
+        debug_assert_eq!(u.len(), self.udim);
+        debug_assert_eq!(out.len(), self.terms.len());
+        let mut v = Vec::with_capacity(self.xdim + self.udim);
+        v.extend_from_slice(x);
+        v.extend_from_slice(u);
+        for (o, t) in out.iter_mut().zip(&self.terms) {
+            *o = t.eval(&v);
+        }
+    }
+
+    /// Evaluate all terms for one sample, allocating.
+    pub fn eval(&self, x: &[f64], u: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.terms.len()];
+        self.eval_into(x, u, &mut out);
+        out
+    }
+
+    /// Build the (samples, terms) design matrix from trajectories.
+    /// `xs`: (samples, xdim), `us`: (samples, udim) row-major.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): order-2 libraries (every system in
+    /// the paper) take a direct-product fast path — 1, v_i, v_i·v_j written
+    /// straight into the row — instead of the generic exponent-walk in
+    /// `Term::eval`, which costs ~3× more in this hot loop.
+    pub fn design_matrix(&self, xs: &[f64], us: &[f64], samples: usize) -> Vec<f64> {
+        let p = self.terms.len();
+        let mut m = vec![0.0; samples * p];
+        let d = self.xdim + self.udim;
+        if self.order == 2 && p == 1 + d + d * (d + 1) / 2 {
+            let mut v = vec![0.0f64; d];
+            for s in 0..samples {
+                v[..self.xdim].copy_from_slice(&xs[s * self.xdim..(s + 1) * self.xdim]);
+                if self.udim > 0 {
+                    v[self.xdim..].copy_from_slice(&us[s * self.udim..(s + 1) * self.udim]);
+                }
+                let row = &mut m[s * p..(s + 1) * p];
+                row[0] = 1.0;
+                row[1..1 + d].copy_from_slice(&v);
+                let mut k = 1 + d;
+                for i in 0..d {
+                    let vi = v[i];
+                    for &vj in v.iter().skip(i) {
+                        row[k] = vi * vj;
+                        k += 1;
+                    }
+                }
+            }
+            return m;
+        }
+        let empty: [f64; 0] = [];
+        for s in 0..samples {
+            let x = &xs[s * self.xdim..(s + 1) * self.xdim];
+            let u = if self.udim > 0 {
+                &us[s * self.udim..(s + 1) * self.udim]
+            } else {
+                &empty[..]
+            };
+            self.eval_into(x, u, &mut m[s * p..(s + 1) * p]);
+        }
+        m
+    }
+
+    /// Term names (for report printing).
+    pub fn names(&self) -> Vec<String> {
+        self.terms.iter().map(|t| t.name(self.xdim)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_sizes() {
+        // Paper §3.1: C(M+n, n). Order 2, 4 vars → C(6,4)=15.
+        assert_eq!(library_size(4, 2), 15);
+        assert_eq!(library_size(3, 2), 10);
+        assert_eq!(library_size(3, 3), 20);
+    }
+
+    #[test]
+    fn library_matches_binomial_count() {
+        for (x, u, m) in [(3, 1, 2), (2, 0, 2), (3, 0, 3), (2, 1, 3)] {
+            let lib = PolyLibrary::new(x, u, m);
+            assert_eq!(lib.len(), library_size(x + u, m), "x={x} u={u} m={m}");
+        }
+    }
+
+    #[test]
+    fn matches_l2_kernel_ordering_order2() {
+        // poly_library_ref: [1, v1..v4, v_i v_j (i<=j)] for v=[x,u].
+        let lib = PolyLibrary::new(3, 1, 2);
+        let names = lib.names();
+        assert_eq!(names[0], "1");
+        assert_eq!(names[1], "x0");
+        assert_eq!(names[4], "u0");
+        assert_eq!(names[5], "x0*x0");
+        assert_eq!(names[6], "x0*x1");
+        assert_eq!(names[14], "u0*u0");
+    }
+
+    #[test]
+    fn evaluation_correct() {
+        let lib = PolyLibrary::new(2, 0, 2);
+        // terms: 1, x0, x1, x0², x0x1, x1²
+        let f = lib.eval(&[2.0, 3.0], &[]);
+        assert_eq!(f, vec![1.0, 2.0, 3.0, 4.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn design_matrix_rows() {
+        let lib = PolyLibrary::new(1, 1, 2);
+        let xs = [1.0, 2.0];
+        let us = [0.5, -1.0];
+        let m = lib.design_matrix(&xs, &us, 2);
+        let p = lib.len();
+        assert_eq!(m.len(), 2 * p);
+        assert_eq!(&m[0..p], lib.eval(&[1.0], &[0.5]).as_slice());
+        assert_eq!(&m[p..2 * p], lib.eval(&[2.0], &[-1.0]).as_slice());
+    }
+
+    #[test]
+    fn term_names_and_degrees() {
+        let lib = PolyLibrary::new(2, 1, 2);
+        for t in &lib.terms {
+            assert!(t.degree() <= 2);
+        }
+        assert!(lib.names().contains(&"x0*u0".to_string()));
+    }
+}

@@ -1,0 +1,97 @@
+//! Loss functions for model recovery.
+//!
+//! The paper's training objective (§4): ODE reconstruction MSE between the
+//! observed trace Y and the RK4-integrated estimate Y_est, plus an L1
+//! sparsity term on the coefficient estimates — mirrors `merinda_loss` in
+//! the L2 model.
+
+/// Mean squared error over two equal-length f32 slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// L1 (mean absolute) sparsity penalty.
+pub fn l1_mean(theta: &[f32]) -> f64 {
+    if theta.is_empty() {
+        return 0.0;
+    }
+    theta.iter().map(|&v| (v as f64).abs()).sum::<f64>() / theta.len() as f64
+}
+
+/// The combined MERINDA objective.
+pub fn ode_loss(y: &[f32], y_est: &[f32], theta: &[f32], lambda: f64) -> f64 {
+    mse(y, y_est) + lambda * l1_mean(theta)
+}
+
+/// Parameter-recovery MSE (Table 6's metric): error between estimated and
+/// ground-truth coefficient matrices, over the nonzero support of truth ∪
+/// estimate so structural misses are penalized.
+pub fn coefficient_mse(est: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(est.len(), truth.len());
+    let mut se = 0.0;
+    let mut n = 0usize;
+    for (e, t) in est.iter().zip(truth) {
+        if *e != 0.0 || *t != 0.0 {
+            se += (e - t) * (e - t);
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        se / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((mse(&[0.0, 0.0], &[1.0, -1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l1_mean_value() {
+        assert!((l1_mean(&[1.0, -3.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(l1_mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn lambda_weights_sparsity() {
+        let y = [1.0f32; 4];
+        let t = [2.0f32; 8];
+        let l0 = ode_loss(&y, &y, &t, 0.0);
+        let l1 = ode_loss(&y, &y, &t, 0.5);
+        assert_eq!(l0, 0.0);
+        assert!((l1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coefficient_mse_over_support() {
+        // truth has 2 active terms; est misses one and adds a spurious one.
+        let truth = [1.0, 0.0, -0.5, 0.0];
+        let est = [0.9, 0.2, 0.0, 0.0];
+        let m = coefficient_mse(&est, &truth);
+        // support = {0, 1, 2}: errors 0.1², 0.2², 0.5².
+        assert!((m - (0.01 + 0.04 + 0.25) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coefficient_mse_all_zero() {
+        assert_eq!(coefficient_mse(&[0.0; 3], &[0.0; 3]), 0.0);
+    }
+}

@@ -1,0 +1,270 @@
+//! Liquid-time-constant cell (the paper's baseline workload).
+//!
+//! LTC networks (Hasani et al.) advance the hidden state with a fused
+//! implicit-Euler solver: each time step runs `unfold` sequential solver
+//! sub-steps of
+//!
+//! `h ← (h + dt · f(x,h) ∘ A) / (1 + dt · (1/τ + f(x,h)))`,
+//!
+//! `f = σ(Wx + Uh + b)`. The sub-step chain is the sequential dependency
+//! MERINDA eliminates; Tables 1/2 profile exactly this loop.
+
+use crate::util::Prng;
+
+use super::gru::sigmoid;
+
+/// LTC parameters (row-major matrices).
+#[derive(Clone, Debug)]
+pub struct LtcParams {
+    pub input: usize,
+    pub hidden: usize,
+    /// (I, H) input weights.
+    pub wf: Vec<f32>,
+    /// (H, H) recurrent weights.
+    pub uf: Vec<f32>,
+    /// (H,) bias.
+    pub bf: Vec<f32>,
+    /// (H,) asymptote vector A.
+    pub a: Vec<f32>,
+    /// (H,) time constants τ (positive).
+    pub tau: Vec<f32>,
+}
+
+impl LtcParams {
+    pub fn random(input: usize, hidden: usize, rng: &mut Prng, std: f64) -> LtcParams {
+        LtcParams {
+            input,
+            hidden,
+            wf: rng.normal_vec_f32(input * hidden, std),
+            uf: rng.normal_vec_f32(hidden * hidden, std),
+            bf: rng.normal_vec_f32(hidden, std * 0.3),
+            a: rng.normal_vec_f32(hidden, 1.0),
+            tau: (0..hidden)
+                .map(|_| 0.5 + rng.uniform_f32(0.0, 1.5))
+                .collect(),
+        }
+    }
+}
+
+/// Timing breakdown of one forward pass (drives Tables 1/2).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LtcProfile {
+    /// Seconds in input/sensory preprocessing.
+    pub sensory_s: f64,
+    /// Seconds in the ODE solver loop in total.
+    pub solver_s: f64,
+    /// Per-solver-step component seconds.
+    pub recurrent_sigmoid_s: f64,
+    pub weight_activation_s: f64,
+    pub reversal_activation_s: f64,
+    pub sum_ops_s: f64,
+    pub euler_update_s: f64,
+    pub steps: u64,
+}
+
+/// An LTC cell with a fixed solver unfolding depth.
+#[derive(Clone, Debug)]
+pub struct LtcCell {
+    pub params: LtcParams,
+    pub unfold: usize,
+}
+
+impl LtcCell {
+    pub fn new(params: LtcParams, unfold: usize) -> LtcCell {
+        LtcCell { params, unfold }
+    }
+
+    /// One time step (all solver sub-steps).
+    pub fn step(&self, x: &[f32], h: &[f32], dt: f32) -> Vec<f32> {
+        let mut h = h.to_vec();
+        for _ in 0..self.unfold {
+            h = self.sub_step(x, &h, dt);
+        }
+        h
+    }
+
+    /// One fused-solver sub-step.
+    pub fn sub_step(&self, x: &[f32], h: &[f32], dt: f32) -> Vec<f32> {
+        let p = &self.params;
+        let hid = p.hidden;
+        let mut pre = p.bf.clone();
+        for (i, &xv) in x.iter().enumerate() {
+            let row = &p.wf[i * hid..(i + 1) * hid];
+            for (s, &w) in pre.iter_mut().zip(row) {
+                *s += xv * w;
+            }
+        }
+        for (i, &hv) in h.iter().enumerate() {
+            let row = &p.uf[i * hid..(i + 1) * hid];
+            for (s, &u) in pre.iter_mut().zip(row) {
+                *s += hv * u;
+            }
+        }
+        let mut out = vec![0.0f32; hid];
+        for j in 0..hid {
+            let f = sigmoid(pre[j]);
+            out[j] = (h[j] + dt * f * p.a[j]) / (1.0 + dt * (1.0 / p.tau[j] + f));
+        }
+        out
+    }
+
+    /// Run a sequence (K, I) returning the final hidden state.
+    pub fn run(&self, xs: &[f32], seq: usize, dt: f32) -> Vec<f32> {
+        let mut h = vec![0.0f32; self.params.hidden];
+        for t in 0..seq {
+            h = self.step(&xs[t * self.params.input..(t + 1) * self.params.input], &h, dt);
+        }
+        h
+    }
+
+    /// Instrumented forward pass: times each component for Tables 1/2.
+    ///
+    /// "Sensory processing" is the input affine (Wx); within a solver step
+    /// we time the recurrent+sigmoid evaluation, the weighted/reversal
+    /// activation products (f·A and 1/τ terms), the summations and the
+    /// fused Euler update, matching the paper's row labels.
+    pub fn profile(&self, xs: &[f32], seq: usize, dt: f32) -> LtcProfile {
+        use std::time::Instant;
+        let p = &self.params;
+        let hid = p.hidden;
+        let mut prof = LtcProfile::default();
+        let mut h = vec![0.0f32; hid];
+
+        for t in 0..seq {
+            let x = &xs[t * p.input..(t + 1) * p.input];
+
+            // Sensory processing: input affine, computed once per step.
+            let t0 = Instant::now();
+            let mut sensory = p.bf.clone();
+            for (i, &xv) in x.iter().enumerate() {
+                let row = &p.wf[i * hid..(i + 1) * hid];
+                for (s, &w) in sensory.iter_mut().zip(row) {
+                    *s += xv * w;
+                }
+            }
+            prof.sensory_s += t0.elapsed().as_secs_f64();
+
+            let solver0 = Instant::now();
+            for _ in 0..self.unfold {
+                // Recurrent + sigmoid.
+                let t1 = Instant::now();
+                let mut pre = sensory.clone();
+                for (i, &hv) in h.iter().enumerate() {
+                    let row = &p.uf[i * hid..(i + 1) * hid];
+                    for (s, &u) in pre.iter_mut().zip(row) {
+                        *s += hv * u;
+                    }
+                }
+                let f: Vec<f32> = pre.iter().map(|&v| sigmoid(v)).collect();
+                prof.recurrent_sigmoid_s += t1.elapsed().as_secs_f64();
+
+                // Weight activation: f ∘ A.
+                let t2 = Instant::now();
+                let fa: Vec<f32> = f.iter().zip(&p.a).map(|(&fv, &av)| fv * av).collect();
+                prof.weight_activation_s += t2.elapsed().as_secs_f64();
+
+                // Reversal activation: 1/τ + f (the decay path).
+                let t3 = Instant::now();
+                let rev: Vec<f32> = f
+                    .iter()
+                    .zip(&p.tau)
+                    .map(|(&fv, &tv)| 1.0 / tv + fv)
+                    .collect();
+                prof.reversal_activation_s += t3.elapsed().as_secs_f64();
+
+                // Sum operations: numerator/denominator assembly.
+                let t4 = Instant::now();
+                let num: Vec<f32> = h.iter().zip(&fa).map(|(&hv, &w)| hv + dt * w).collect();
+                let den: Vec<f32> = rev.iter().map(|&r| 1.0 + dt * r).collect();
+                prof.sum_ops_s += t4.elapsed().as_secs_f64();
+
+                // Euler update: the divide + state write.
+                let t5 = Instant::now();
+                for j in 0..hid {
+                    h[j] = num[j] / den[j];
+                }
+                prof.euler_update_s += t5.elapsed().as_secs_f64();
+                prof.steps += 1;
+            }
+            prof.solver_s += solver0.elapsed().as_secs_f64();
+        }
+        prof
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(seed: u64) -> LtcCell {
+        let mut rng = Prng::new(seed);
+        LtcCell::new(LtcParams::random(4, 16, &mut rng, 0.3), 6)
+    }
+
+    #[test]
+    fn state_remains_finite() {
+        let c = cell(1);
+        let mut rng = Prng::new(2);
+        let xs = rng.normal_vec_f32(100 * 4, 2.0);
+        let h = c.run(&xs, 100, 0.1);
+        assert!(h.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fused_solver_contracts_toward_asymptote() {
+        // With f ≈ 1 (large positive bias) and A = const, h converges —
+        // check a fixed point is reached.
+        let mut p = LtcParams::random(1, 4, &mut Prng::new(3), 0.0);
+        p.bf = vec![10.0; 4];
+        p.a = vec![2.0; 4];
+        p.tau = vec![1.0; 4];
+        let c = LtcCell::new(p, 6);
+        let mut h = vec![0.0f32; 4];
+        for _ in 0..200 {
+            h = c.step(&[0.0], &h, 0.1);
+        }
+        let h2 = c.step(&[0.0], &h, 0.1);
+        for (a, b) in h.iter().zip(&h2) {
+            assert!((a - b).abs() < 1e-4, "not converged: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn unfold_matches_manual_substeps() {
+        let c = cell(5);
+        let x = vec![0.1f32, -0.2, 0.3, 0.0];
+        let h0 = vec![0.05f32; 16];
+        let stepped = c.step(&x, &h0, 0.1);
+        let mut manual = h0;
+        for _ in 0..6 {
+            manual = c.sub_step(&x, &manual, 0.1);
+        }
+        assert_eq!(stepped, manual);
+    }
+
+    #[test]
+    fn profile_solver_dominates() {
+        // Paper Table 1: ODE solver ≈ 87.7% of forward-pass time. With 6
+        // unfolded sub-steps each containing the recurrent matvec, the
+        // solver share must dominate the single sensory affine.
+        let c = cell(7);
+        let mut rng = Prng::new(8);
+        let xs = rng.normal_vec_f32(64 * 4, 1.0);
+        let p = c.profile(&xs, 64, 0.1);
+        let total = p.sensory_s + p.solver_s;
+        assert!(p.solver_s / total > 0.6, "solver share {}", p.solver_s / total);
+        assert_eq!(p.steps, 64 * 6);
+    }
+
+    #[test]
+    fn profile_sigmoid_is_top_substep_cost() {
+        // Paper Table 2: recurrent sigmoid 46.7% — the biggest component.
+        let c = cell(9);
+        let mut rng = Prng::new(10);
+        let xs = rng.normal_vec_f32(128 * 4, 1.0);
+        let p = c.profile(&xs, 128, 0.1);
+        assert!(p.recurrent_sigmoid_s > p.weight_activation_s);
+        assert!(p.recurrent_sigmoid_s > p.reversal_activation_s);
+        assert!(p.recurrent_sigmoid_s > p.euler_update_s);
+    }
+}

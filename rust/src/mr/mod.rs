@@ -1,0 +1,20 @@
+//! Model-recovery algorithm suite (native Rust).
+//!
+//! Everything the paper's MR pipeline needs on the FPGA/edge side:
+//! the GRU and LTC cells (f32 and fixed-point), ODE solvers, the sparse
+//! polynomial candidate library, ridge/STLSQ (SINDy) regression, dense
+//! heads and the Adam trainer. The native implementations mirror the L2
+//! jax definitions and are pinned against the lowered HLO by
+//! `rust/tests/integration.rs`.
+
+pub mod backprop;
+pub mod dense;
+pub mod gru;
+pub mod library;
+pub mod loss;
+pub mod recover;
+pub mod ltc;
+pub mod ode;
+pub mod ridge;
+pub mod sindy;
+pub mod train;

@@ -1,0 +1,342 @@
+//! ODE solvers: fixed-step Euler/RK4 and adaptive RK45 (Dormand–Prince).
+//!
+//! RK4 mirrors the L2 `rk4_rollout` (the ODE-loss path); RK45 substitutes
+//! for Matlab's `ODE45`, which the paper uses to generate ground-truth
+//! trajectories for the simulation case studies (§6.1).
+
+/// Right-hand side of an ODE: dy/dt = f(t, y, u).
+pub trait Rhs {
+    /// State dimension.
+    fn dim(&self) -> usize;
+    /// Evaluate into `out` (len = dim).
+    fn eval(&self, t: f64, y: &[f64], u: &[f64], out: &mut [f64]);
+}
+
+/// Closure adapter for ad-hoc systems.
+pub struct FnRhs<F: Fn(f64, &[f64], &[f64], &mut [f64])> {
+    pub dim: usize,
+    pub f: F,
+}
+
+impl<F: Fn(f64, &[f64], &[f64], &mut [f64])> Rhs for FnRhs<F> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval(&self, t: f64, y: &[f64], u: &[f64], out: &mut [f64]) {
+        (self.f)(t, y, u, out)
+    }
+}
+
+/// One forward-Euler step.
+pub fn euler_step(rhs: &dyn Rhs, t: f64, y: &mut [f64], u: &[f64], dt: f64) {
+    let n = rhs.dim();
+    let mut k = vec![0.0; n];
+    rhs.eval(t, y, u, &mut k);
+    for i in 0..n {
+        y[i] += dt * k[i];
+    }
+}
+
+/// One classic RK4 step (matches `model.rk4_rollout` with ZOH input).
+pub fn rk4_step(rhs: &dyn Rhs, t: f64, y: &mut [f64], u: &[f64], dt: f64) {
+    let n = rhs.dim();
+    let mut k1 = vec![0.0; n];
+    let mut k2 = vec![0.0; n];
+    let mut k3 = vec![0.0; n];
+    let mut k4 = vec![0.0; n];
+    let mut tmp = vec![0.0; n];
+
+    rhs.eval(t, y, u, &mut k1);
+    for i in 0..n {
+        tmp[i] = y[i] + 0.5 * dt * k1[i];
+    }
+    rhs.eval(t + 0.5 * dt, &tmp, u, &mut k2);
+    for i in 0..n {
+        tmp[i] = y[i] + 0.5 * dt * k2[i];
+    }
+    rhs.eval(t + 0.5 * dt, &tmp, u, &mut k3);
+    for i in 0..n {
+        tmp[i] = y[i] + dt * k3[i];
+    }
+    rhs.eval(t + dt, &tmp, u, &mut k4);
+    for i in 0..n {
+        y[i] += dt / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+    }
+}
+
+/// Integrate with fixed-step RK4, sampling at every step.
+///
+/// `us` is (steps, udim) row-major (zero-order hold per step, may be empty
+/// for autonomous systems). Returns (steps+1, n) including y0.
+pub fn rk4_trajectory(
+    rhs: &dyn Rhs,
+    y0: &[f64],
+    us: &[f64],
+    udim: usize,
+    dt: f64,
+    steps: usize,
+) -> Vec<f64> {
+    let n = rhs.dim();
+    let mut y = y0.to_vec();
+    let mut out = Vec::with_capacity((steps + 1) * n);
+    out.extend_from_slice(&y);
+    let zero_u = vec![0.0; udim.max(1)];
+    for s in 0..steps {
+        let u = if udim > 0 && !us.is_empty() {
+            &us[s * udim..(s + 1) * udim]
+        } else {
+            &zero_u[..]
+        };
+        rk4_step(rhs, s as f64 * dt, &mut y, u, dt);
+        out.extend_from_slice(&y);
+    }
+    out
+}
+
+/// Adaptive RK45 (Dormand–Prince 5(4)) options.
+#[derive(Clone, Copy, Debug)]
+pub struct Rk45Opts {
+    pub rtol: f64,
+    pub atol: f64,
+    pub h_init: f64,
+    pub h_min: f64,
+    pub h_max: f64,
+    pub max_steps: usize,
+}
+
+impl Default for Rk45Opts {
+    fn default() -> Self {
+        Rk45Opts {
+            rtol: 1e-6,
+            atol: 1e-9,
+            h_init: 1e-3,
+            h_min: 1e-10,
+            h_max: 1.0,
+            max_steps: 2_000_000,
+        }
+    }
+}
+
+// Dormand–Prince coefficients.
+const A: [[f64; 6]; 6] = [
+    [1.0 / 5.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+    [3.0 / 40.0, 9.0 / 40.0, 0.0, 0.0, 0.0, 0.0],
+    [44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0, 0.0, 0.0, 0.0],
+    [
+        19372.0 / 6561.0,
+        -25360.0 / 2187.0,
+        64448.0 / 6561.0,
+        -212.0 / 729.0,
+        0.0,
+        0.0,
+    ],
+    [
+        9017.0 / 3168.0,
+        -355.0 / 33.0,
+        46732.0 / 5247.0,
+        49.0 / 176.0,
+        -5103.0 / 18656.0,
+        0.0,
+    ],
+    [
+        35.0 / 384.0,
+        0.0,
+        500.0 / 1113.0,
+        125.0 / 192.0,
+        -2187.0 / 6784.0,
+        11.0 / 84.0,
+    ],
+];
+const B5: [f64; 7] = [
+    35.0 / 384.0,
+    0.0,
+    500.0 / 1113.0,
+    125.0 / 192.0,
+    -2187.0 / 6784.0,
+    11.0 / 84.0,
+    0.0,
+];
+const B4: [f64; 7] = [
+    5179.0 / 57600.0,
+    0.0,
+    7571.0 / 16695.0,
+    393.0 / 640.0,
+    -92097.0 / 339200.0,
+    187.0 / 2100.0,
+    1.0 / 40.0,
+];
+const C: [f64; 6] = [1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0];
+
+/// Integrate from `t0` to `t1` sampling the solution at `samples` evenly
+/// spaced times (ODE45 substitute). Input is held at zero (the simulation
+/// case studies are autonomous or have U folded into the RHS).
+///
+/// Returns (samples, n) row-major, or an error description on failure.
+pub fn rk45_sample(
+    rhs: &dyn Rhs,
+    y0: &[f64],
+    t0: f64,
+    t1: f64,
+    samples: usize,
+    opts: Rk45Opts,
+) -> Result<Vec<f64>, String> {
+    assert!(samples >= 2 && t1 > t0);
+    let n = rhs.dim();
+    let zero_u: Vec<f64> = vec![];
+    let mut y = y0.to_vec();
+    let mut t = t0;
+    let mut h = opts.h_init;
+    let mut out = Vec::with_capacity(samples * n);
+    out.extend_from_slice(&y);
+    let sample_dt = (t1 - t0) / (samples - 1) as f64;
+    let mut next_sample = 1usize;
+
+    let mut k = vec![vec![0.0; n]; 7];
+    let mut tmp = vec![0.0; n];
+    rhs.eval(t, &y, &zero_u, &mut k[0]);
+
+    for _step in 0..opts.max_steps {
+        if next_sample >= samples {
+            return Ok(out);
+        }
+        // Don't overshoot the next sample point (dense output by step
+        // splitting — simple and adequate at our tolerances).
+        let t_target = t0 + next_sample as f64 * sample_dt;
+        let h_eff = h.min(t_target - t).min(opts.h_max).max(opts.h_min);
+
+        // Stage evaluations.
+        for s in 0..6 {
+            for i in 0..n {
+                let mut acc = 0.0;
+                for (j, kj) in k.iter().enumerate().take(s + 1) {
+                    acc += A[s][j] * kj[i];
+                }
+                tmp[i] = y[i] + h_eff * acc;
+            }
+            rhs.eval(t + C[s] * h_eff, &tmp, &zero_u, &mut k[s + 1]);
+        }
+
+        // 5th and 4th order solutions + error estimate.
+        let mut err: f64 = 0.0;
+        let mut y5 = vec![0.0; n];
+        for i in 0..n {
+            let mut acc5 = 0.0;
+            let mut acc4 = 0.0;
+            for j in 0..7 {
+                acc5 += B5[j] * k[j][i];
+                acc4 += B4[j] * k[j][i];
+            }
+            y5[i] = y[i] + h_eff * acc5;
+            let y4 = y[i] + h_eff * acc4;
+            let sc = opts.atol + opts.rtol * y5[i].abs().max(y[i].abs());
+            err += ((y5[i] - y4) / sc).powi(2);
+        }
+        err = (err / n as f64).sqrt();
+
+        if err <= 1.0 || h_eff <= opts.h_min * 1.0001 {
+            // Accept.
+            t += h_eff;
+            y = y5;
+            k[0] = k[6].clone(); // FSAL
+            if (t - t_target).abs() < 1e-12 {
+                out.extend_from_slice(&y);
+                next_sample += 1;
+            }
+            if !y.iter().all(|v| v.is_finite()) {
+                return Err(format!("diverged at t={t}"));
+            }
+        } else {
+            rhs.eval(t, &y, &zero_u, &mut k[0]);
+        }
+        // PI-style step adaptation.
+        let fac = (0.9 * err.powf(-0.2)).clamp(0.2, 5.0);
+        h = (h_eff * fac).clamp(opts.h_min, opts.h_max);
+    }
+    Err("max_steps exceeded".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp_decay() -> FnRhs<impl Fn(f64, &[f64], &[f64], &mut [f64])> {
+        FnRhs {
+            dim: 1,
+            f: |_t, y: &[f64], _u: &[f64], out: &mut [f64]| out[0] = -y[0],
+        }
+    }
+
+    #[test]
+    fn rk4_exp_decay_accuracy() {
+        let rhs = exp_decay();
+        let mut y = vec![1.0];
+        let dt = 0.01;
+        for s in 0..100 {
+            rk4_step(&rhs, s as f64 * dt, &mut y, &[], dt);
+        }
+        assert!((y[0] - (-1.0f64).exp()).abs() < 1e-8, "y={}", y[0]);
+    }
+
+    #[test]
+    fn euler_less_accurate_than_rk4() {
+        let rhs = exp_decay();
+        let dt = 0.05;
+        let mut ye = vec![1.0];
+        let mut yr = vec![1.0];
+        for s in 0..20 {
+            euler_step(&rhs, s as f64 * dt, &mut ye, &[], dt);
+            rk4_step(&rhs, s as f64 * dt, &mut yr, &[], dt);
+        }
+        let exact = (-1.0f64).exp();
+        assert!((yr[0] - exact).abs() < (ye[0] - exact).abs());
+    }
+
+    #[test]
+    fn rk45_matches_exact_harmonic_oscillator() {
+        // y'' = -y → (y, v): energy-conserving circle.
+        let rhs = FnRhs {
+            dim: 2,
+            f: |_t, y: &[f64], _u: &[f64], out: &mut [f64]| {
+                out[0] = y[1];
+                out[1] = -y[0];
+            },
+        };
+        let sol = rk45_sample(&rhs, &[1.0, 0.0], 0.0, 10.0, 101, Rk45Opts::default()).unwrap();
+        for (i, chunk) in sol.chunks(2).enumerate() {
+            let t = i as f64 * 0.1;
+            assert!((chunk[0] - t.cos()).abs() < 1e-4, "t={t} y={}", chunk[0]);
+        }
+    }
+
+    #[test]
+    fn rk45_reports_divergence() {
+        // y' = y² from y0=1 blows up at t=1.
+        let rhs = FnRhs {
+            dim: 1,
+            f: |_t, y: &[f64], _u: &[f64], out: &mut [f64]| out[0] = y[0] * y[0],
+        };
+        let r = rk45_sample(&rhs, &[1.0], 0.0, 2.0, 21, Rk45Opts::default());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn trajectory_includes_initial_state() {
+        let rhs = exp_decay();
+        let traj = rk4_trajectory(&rhs, &[2.0], &[], 0, 0.1, 10);
+        assert_eq!(traj.len(), 11);
+        assert_eq!(traj[0], 2.0);
+        assert!(traj[10] < traj[0]);
+    }
+
+    #[test]
+    fn zoh_input_is_applied() {
+        // y' = u: with u=1 for 5 steps then u=0, y ends at 5·dt.
+        let rhs = FnRhs {
+            dim: 1,
+            f: |_t, _y: &[f64], u: &[f64], out: &mut [f64]| out[0] = u[0],
+        };
+        let us: Vec<f64> = (0..10).map(|i| if i < 5 { 1.0 } else { 0.0 }).collect();
+        let traj = rk4_trajectory(&rhs, &[0.0], &us, 1, 0.1, 10);
+        assert!((traj[10] - 0.5).abs() < 1e-12);
+    }
+}

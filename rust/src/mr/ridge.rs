@@ -1,0 +1,195 @@
+//! Ridge regression via normal equations + Cholesky.
+//!
+//! §3.1: "Ridge regression identifies matrix A". Used by the SINDy/STLSQ
+//! baseline and the dense-head equation selection. Solves
+//! `argmin ‖Xw − y‖² + λ‖w‖²` through `(XᵀX + λI) w = Xᵀy`.
+
+use crate::util::{Error, Result};
+
+/// Dense column-major symmetric positive-definite solve via Cholesky.
+///
+/// `a` is (n, n) row-major (symmetric), `b` is (n,). Returns x with
+/// `a x = b`, or an error if the matrix is not SPD.
+pub fn cholesky_solve(a: &[f64], b: &[f64], n: usize) -> Result<Vec<f64>> {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    // Factor A = L Lᵀ (in-place lower triangle).
+    let mut l = a.to_vec();
+    for j in 0..n {
+        let mut diag = l[j * n + j];
+        for k in 0..j {
+            diag -= l[j * n + k] * l[j * n + k];
+        }
+        if diag <= 0.0 || !diag.is_finite() {
+            return Err(Error::numeric(format!(
+                "cholesky failed at pivot {j}: {diag}"
+            )));
+        }
+        let d = diag.sqrt();
+        l[j * n + j] = d;
+        for i in (j + 1)..n {
+            let mut v = l[i * n + j];
+            for k in 0..j {
+                v -= l[i * n + k] * l[j * n + k];
+            }
+            l[i * n + j] = v / d;
+        }
+    }
+    // Solve L z = b.
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut v = b[i];
+        for k in 0..i {
+            v -= l[i * n + k] * z[k];
+        }
+        z[i] = v / l[i * n + i];
+    }
+    // Solve Lᵀ x = z.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut v = z[i];
+        for k in (i + 1)..n {
+            v -= l[k * n + i] * x[k];
+        }
+        x[i] = v / l[i * n + i];
+    }
+    Ok(x)
+}
+
+/// Ridge regression: `x` (rows, cols) row-major design matrix, `y` (rows,)
+/// targets, `lambda ≥ 0`. Returns the (cols,) weight vector.
+pub fn ridge(x: &[f64], y: &[f64], rows: usize, cols: usize, lambda: f64) -> Result<Vec<f64>> {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(y.len(), rows);
+    // Normal equations: G = XᵀX + λI, c = Xᵀy.
+    let mut g = vec![0.0; cols * cols];
+    let mut c = vec![0.0; cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        for i in 0..cols {
+            c[i] += row[i] * y[r];
+            for j in i..cols {
+                g[i * cols + j] += row[i] * row[j];
+            }
+        }
+    }
+    // Symmetrize + regularize.
+    for i in 0..cols {
+        for j in 0..i {
+            g[i * cols + j] = g[j * cols + i];
+        }
+        g[i * cols + i] += lambda.max(1e-12);
+    }
+    cholesky_solve(&g, &c, cols)
+}
+
+/// Ridge with a support mask: only columns with `mask[i] = true`
+/// participate; others get weight 0 (the STLSQ inner solve).
+pub fn ridge_masked(
+    x: &[f64],
+    y: &[f64],
+    rows: usize,
+    cols: usize,
+    lambda: f64,
+    mask: &[bool],
+) -> Result<Vec<f64>> {
+    let active: Vec<usize> = (0..cols).filter(|&i| mask[i]).collect();
+    if active.is_empty() {
+        return Ok(vec![0.0; cols]);
+    }
+    let k = active.len();
+    let mut xa = vec![0.0; rows * k];
+    for r in 0..rows {
+        for (ai, &c) in active.iter().enumerate() {
+            xa[r * k + ai] = x[r * cols + c];
+        }
+    }
+    let wa = ridge(&xa, y, rows, k, lambda)?;
+    let mut w = vec![0.0; cols];
+    for (ai, &c) in active.iter().enumerate() {
+        w[c] = wa[ai];
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn cholesky_identity() {
+        let a = [1.0, 0.0, 0.0, 1.0];
+        let x = cholesky_solve(&a, &[3.0, -2.0], 2).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky_solve(&a, &[1.0, 1.0], 2).is_err());
+    }
+
+    #[test]
+    fn ridge_recovers_exact_weights_lambda_zero() {
+        let mut rng = Prng::new(4);
+        let (rows, cols) = (200, 5);
+        let w_true: Vec<f64> = (0..cols).map(|i| i as f64 - 2.0).collect();
+        let mut x = vec![0.0; rows * cols];
+        let mut y = vec![0.0; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                x[r * cols + c] = rng.normal();
+            }
+            y[r] = (0..cols).map(|c| x[r * cols + c] * w_true[c]).sum();
+        }
+        let w = ridge(&x, &y, rows, cols, 0.0).unwrap();
+        for (a, b) in w.iter().zip(&w_true) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lambda_shrinks_weights() {
+        let mut rng = Prng::new(9);
+        let (rows, cols) = (50, 3);
+        let mut x = vec![0.0; rows * cols];
+        let mut y = vec![0.0; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                x[r * cols + c] = rng.normal();
+            }
+            y[r] = 2.0 * x[r * cols] + rng.normal_with(0.0, 0.01);
+        }
+        let w0 = ridge(&x, &y, rows, cols, 1e-9).unwrap();
+        let w1 = ridge(&x, &y, rows, cols, 100.0).unwrap();
+        let n0: f64 = w0.iter().map(|v| v * v).sum();
+        let n1: f64 = w1.iter().map(|v| v * v).sum();
+        assert!(n1 < n0);
+    }
+
+    #[test]
+    fn masked_ridge_zeroes_inactive() {
+        let mut rng = Prng::new(11);
+        let (rows, cols) = (60, 4);
+        let mut x = vec![0.0; rows * cols];
+        let mut y = vec![0.0; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                x[r * cols + c] = rng.normal();
+            }
+            y[r] = 1.5 * x[r * cols + 1];
+        }
+        let mask = [false, true, false, true];
+        let w = ridge_masked(&x, &y, rows, cols, 1e-9, &mask).unwrap();
+        assert_eq!(w[0], 0.0);
+        assert_eq!(w[2], 0.0);
+        assert!((w[1] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_masked_returns_zero() {
+        let w = ridge_masked(&[1.0, 2.0], &[1.0], 1, 2, 0.1, &[false, false]).unwrap();
+        assert_eq!(w, vec![0.0, 0.0]);
+    }
+}

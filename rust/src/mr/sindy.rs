@@ -1,0 +1,269 @@
+//! SINDy: sparse identification of nonlinear dynamics via STLSQ.
+//!
+//! The paper's comparison baseline (Tables 4/5, [12, 18]). Given sampled
+//! trajectories X(t) and inputs U(t), estimate derivatives numerically,
+//! build the polynomial design matrix Θ(X, U), and run sequentially
+//! thresholded least squares: ridge-solve, zero out coefficients below
+//! the threshold, repeat on the surviving support until stable.
+
+use super::library::PolyLibrary;
+use super::ridge::ridge_masked;
+use crate::util::Result;
+
+/// STLSQ hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SindyOpts {
+    /// Hard threshold on coefficient magnitude.
+    pub threshold: f64,
+    /// Ridge regularization inside each solve.
+    pub lambda: f64,
+    /// Maximum STLSQ sweeps.
+    pub max_iters: usize,
+}
+
+impl Default for SindyOpts {
+    fn default() -> Self {
+        SindyOpts {
+            threshold: 0.05,
+            lambda: 1e-6,
+            max_iters: 20,
+        }
+    }
+}
+
+/// A recovered sparse model: coefficient matrix (xdim, terms) row-major.
+#[derive(Clone, Debug)]
+pub struct SparseModel {
+    pub xdim: usize,
+    pub coeffs: Vec<f64>,
+    pub library: PolyLibrary,
+    /// STLSQ iterations actually used per state equation.
+    pub iters: Vec<usize>,
+}
+
+impl SparseModel {
+    /// Evaluate dX/dt at (x, u).
+    pub fn dyn_eval(&self, x: &[f64], u: &[f64], out: &mut [f64]) {
+        let p = self.library.len();
+        let feats = self.library.eval(x, u);
+        for d in 0..self.xdim {
+            let row = &self.coeffs[d * p..(d + 1) * p];
+            out[d] = row.iter().zip(&feats).map(|(c, f)| c * f).sum();
+        }
+    }
+
+    /// Number of nonzero coefficients.
+    pub fn nnz(&self) -> usize {
+        self.coeffs.iter().filter(|c| **c != 0.0).count()
+    }
+
+    /// Coefficient for a named term of a state equation (tests).
+    pub fn coeff(&self, eq: usize, term_name: &str) -> f64 {
+        let names = self.library.names();
+        let idx = names
+            .iter()
+            .position(|n| n == term_name)
+            .unwrap_or_else(|| panic!("no term {term_name}"));
+        self.coeffs[eq * self.library.len() + idx]
+    }
+}
+
+/// Central-difference derivative estimate along axis 0.
+/// `xs`: (samples, dim) row-major → (samples, dim) with one-sided ends.
+pub fn finite_difference(xs: &[f64], samples: usize, dim: usize, dt: f64) -> Vec<f64> {
+    assert!(samples >= 3);
+    let mut dx = vec![0.0; samples * dim];
+    for d in 0..dim {
+        dx[d] = (xs[dim + d] - xs[d]) / dt;
+        for s in 1..samples - 1 {
+            dx[s * dim + d] = (xs[(s + 1) * dim + d] - xs[(s - 1) * dim + d]) / (2.0 * dt);
+        }
+        dx[(samples - 1) * dim + d] =
+            (xs[(samples - 1) * dim + d] - xs[(samples - 2) * dim + d]) / dt;
+    }
+    dx
+}
+
+/// Run SINDy/STLSQ on sampled data.
+///
+/// `xs`: (samples, xdim), `us`: (samples, udim) row-major, `dt` sample
+/// spacing. Returns the recovered sparse model.
+pub fn sindy(
+    xs: &[f64],
+    us: &[f64],
+    samples: usize,
+    library: PolyLibrary,
+    dt: f64,
+    opts: SindyOpts,
+) -> Result<SparseModel> {
+    let xdim = library.xdim;
+    let p = library.len();
+    let dx = finite_difference(xs, samples, xdim, dt);
+    let theta = library.design_matrix(xs, us, samples);
+
+    let mut coeffs = vec![0.0; xdim * p];
+    let mut iters = vec![0usize; xdim];
+    for d in 0..xdim {
+        let y: Vec<f64> = (0..samples).map(|s| dx[s * xdim + d]).collect();
+        let mut mask = vec![true; p];
+        let mut w = ridge_masked(&theta, &y, samples, p, opts.lambda, &mask)?;
+        for it in 0..opts.max_iters {
+            iters[d] = it + 1;
+            let mut changed = false;
+            for (i, m) in mask.iter_mut().enumerate() {
+                if *m && w[i].abs() < opts.threshold {
+                    *m = false;
+                    changed = true;
+                }
+            }
+            w = ridge_masked(&theta, &y, samples, p, opts.lambda, &mask)?;
+            if !changed {
+                break;
+            }
+        }
+        coeffs[d * p..(d + 1) * p].copy_from_slice(&w);
+    }
+    Ok(SparseModel {
+        xdim,
+        coeffs,
+        library,
+        iters,
+    })
+}
+
+/// Reconstruction MSE of a recovered model against held-out data: integrate
+/// from the first sample with RK4 and compare trajectories.
+pub fn reconstruction_mse(
+    model: &SparseModel,
+    xs: &[f64],
+    us: &[f64],
+    samples: usize,
+    dt: f64,
+) -> f64 {
+    use super::ode::{rk4_step, FnRhs};
+    let xdim = model.xdim;
+    let udim = model.library.udim;
+    let rhs = FnRhs {
+        dim: xdim,
+        f: |_t, y: &[f64], u: &[f64], out: &mut [f64]| model.dyn_eval(y, u, out),
+    };
+    let mut y = xs[0..xdim].to_vec();
+    let mut se = 0.0;
+    let zero_u: Vec<f64> = vec![0.0; udim.max(1)];
+    for s in 1..samples {
+        let u = if udim > 0 {
+            &us[(s - 1) * udim..s * udim]
+        } else {
+            &zero_u[..udim.max(0)]
+        };
+        rk4_step(&rhs, (s - 1) as f64 * dt, &mut y, u, dt);
+        // Clamp to keep a bad model from poisoning the metric with inf.
+        for v in y.iter_mut() {
+            *v = v.clamp(-1e6, 1e6);
+        }
+        for d in 0..xdim {
+            let e = y[d] - xs[s * xdim + d];
+            se += e * e;
+        }
+    }
+    se / ((samples - 1) * xdim) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mr::ode::{rk4_trajectory, FnRhs};
+
+    /// Generate clean Lotka–Volterra data and recover it.
+    fn lv_data(samples: usize, dt: f64) -> Vec<f64> {
+        let rhs = FnRhs {
+            dim: 2,
+            f: |_t, y: &[f64], _u: &[f64], out: &mut [f64]| {
+                out[0] = 1.0 * y[0] - 0.5 * y[0] * y[1];
+                out[1] = -1.0 * y[1] + 0.25 * y[0] * y[1];
+            },
+        };
+        rk4_trajectory(&rhs, &[2.0, 1.0], &[], 0, dt, samples - 1)
+    }
+
+    #[test]
+    fn recovers_lotka_volterra_structure() {
+        let dt = 0.01;
+        let samples = 2000;
+        let xs = lv_data(samples, dt);
+        let lib = PolyLibrary::new(2, 0, 2);
+        let model = sindy(&xs, &[], samples, lib, dt, SindyOpts::default()).unwrap();
+        // True terms: dx0 = x0 − 0.5 x0x1, dx1 = −x1 + 0.25 x0x1.
+        assert!((model.coeff(0, "x0") - 1.0).abs() < 0.05);
+        assert!((model.coeff(0, "x0*x1") + 0.5).abs() < 0.05);
+        assert!((model.coeff(1, "x1") + 1.0).abs() < 0.05);
+        assert!((model.coeff(1, "x0*x1") - 0.25).abs() < 0.05);
+        // Sparsity: exactly 4 nonzeros.
+        assert_eq!(model.nnz(), 4, "coeffs: {:?}", model.coeffs);
+    }
+
+    #[test]
+    fn reconstruction_error_small_for_good_model() {
+        let dt = 0.01;
+        let samples = 1500;
+        let xs = lv_data(samples, dt);
+        let lib = PolyLibrary::new(2, 0, 2);
+        let model = sindy(&xs, &[], samples, lib, dt, SindyOpts::default()).unwrap();
+        let mse = reconstruction_mse(&model, &xs, &[], samples, dt);
+        assert!(mse < 1e-3, "mse={mse}");
+    }
+
+    #[test]
+    fn finite_difference_on_linear_fn() {
+        // x(t) = 3t → dx = 3 everywhere.
+        let dt = 0.1;
+        let xs: Vec<f64> = (0..10).map(|i| 3.0 * i as f64 * dt).collect();
+        let dx = finite_difference(&xs, 10, 1, dt);
+        for v in dx {
+            assert!((v - 3.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn threshold_prunes_noise_terms() {
+        let dt = 0.01;
+        let samples = 1000;
+        let xs = lv_data(samples, dt);
+        let lib = PolyLibrary::new(2, 0, 2);
+        let tight = sindy(
+            &xs,
+            &[],
+            samples,
+            lib.clone(),
+            dt,
+            SindyOpts {
+                threshold: 0.05,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let loose = sindy(
+            &xs,
+            &[],
+            samples,
+            lib,
+            dt,
+            SindyOpts {
+                threshold: 0.0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(tight.nnz() <= loose.nnz());
+    }
+
+    #[test]
+    fn iterations_recorded() {
+        let dt = 0.01;
+        let samples = 500;
+        let xs = lv_data(samples, dt);
+        let lib = PolyLibrary::new(2, 0, 2);
+        let m = sindy(&xs, &[], samples, lib, dt, SindyOpts::default()).unwrap();
+        assert!(m.iters.iter().all(|&i| i >= 1));
+    }
+}

@@ -1,0 +1,324 @@
+//! MERINDA training driver.
+//!
+//! Training runs entirely from Rust: the fused Adam train step
+//! (`merinda_train_step`) was AOT-lowered from L2 and executes via PJRT;
+//! this module owns parameter/optimizer state, batches windows out of
+//! recorded traces, and loops. Python is never invoked.
+
+use std::sync::Arc;
+
+use crate::runtime::{Executable, ModelDims, Runtime};
+use crate::util::{Error, Prng, Result};
+
+/// The seven MERINDA parameter arrays, in manifest order.
+pub const PARAM_NAMES: [&str; 7] = [
+    "gru_w", "gru_u", "gru_b", "dense_w1", "dense_b1", "dense_w2", "dense_b2",
+];
+
+/// Parameter shapes for the canonical dims.
+pub fn param_shapes(d: &ModelDims) -> Vec<(String, Vec<usize>)> {
+    let io = d.xdim + d.udim;
+    vec![
+        ("gru_w".into(), vec![io, 3 * d.hid]),
+        ("gru_u".into(), vec![d.hid, 3 * d.hid]),
+        ("gru_b".into(), vec![3 * d.hid]),
+        ("dense_w1".into(), vec![d.hid, d.dense]),
+        ("dense_b1".into(), vec![d.dense]),
+        ("dense_w2".into(), vec![d.dense, d.xdim * d.plib]),
+        ("dense_b2".into(), vec![d.xdim * d.plib]),
+    ]
+}
+
+/// MERINDA parameters + Adam state.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub dims: ModelDims,
+    /// 7 parameter arrays.
+    pub params: Vec<Vec<f32>>,
+    /// Adam first moments.
+    pub m: Vec<Vec<f32>>,
+    /// Adam second moments.
+    pub v: Vec<Vec<f32>>,
+    /// Step counter (pre-increment, as the lowered step expects).
+    pub step: f32,
+}
+
+impl TrainState {
+    /// Glorot-ish init matching `model.init_params`.
+    pub fn init(dims: &ModelDims, rng: &mut Prng) -> TrainState {
+        let mut params = Vec::new();
+        for (name, shape) in param_shapes(dims) {
+            let n: usize = shape.iter().product();
+            if name.contains('b') {
+                params.push(vec![0.0f32; n]);
+            } else {
+                let std = 1.0 / (shape[0] as f64).sqrt();
+                params.push(rng.normal_vec_f32(n, std));
+            }
+        }
+        let m = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let v = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        TrainState {
+            dims: dims.clone(),
+            params,
+            m,
+            v,
+            step: 0.0,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// One training batch of windows: y (B, K, X), u (B, K, U), flattened.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub y: Vec<f32>,
+    pub u: Vec<f32>,
+}
+
+/// Cut random windows out of a trace to form a batch.
+///
+/// `trace_y`: (N, xdim) row-major; `trace_u`: (N, udim). Windows start at
+/// uniform offsets; each batch row is a contiguous (seq, dim) slice.
+pub fn sample_batch(
+    dims: &ModelDims,
+    trace_y: &[f32],
+    trace_u: &[f32],
+    rng: &mut Prng,
+) -> Result<Batch> {
+    let n = trace_y.len() / dims.xdim;
+    if n < dims.seq {
+        return Err(Error::config(format!(
+            "trace too short: {n} < seq {}",
+            dims.seq
+        )));
+    }
+    let mut y = Vec::with_capacity(dims.batch * dims.seq * dims.xdim);
+    let mut u = Vec::with_capacity(dims.batch * dims.seq * dims.udim);
+    for _ in 0..dims.batch {
+        let s0 = rng.below(n - dims.seq + 1);
+        y.extend_from_slice(&trace_y[s0 * dims.xdim..(s0 + dims.seq) * dims.xdim]);
+        u.extend_from_slice(&trace_u[s0 * dims.udim..(s0 + dims.seq) * dims.udim]);
+    }
+    Ok(Batch { y, u })
+}
+
+/// Hyperparameters for a training run.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub lr: f32,
+    pub dt: f32,
+    pub lambda: f32,
+    pub seed: u64,
+    /// Log the loss every `log_every` steps into the returned curve.
+    pub log_every: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            steps: 200,
+            lr: 3e-3,
+            dt: 0.1,
+            lambda: 1e-3,
+            seed: 42,
+            log_every: 10,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub steps: usize,
+    pub wall_s: f64,
+}
+
+/// PJRT-backed trainer: executes the fused train step artifact.
+pub struct PjrtTrainer {
+    pub state: TrainState,
+    train_exe: Arc<Executable>,
+    forward_exe: Arc<Executable>,
+}
+
+impl PjrtTrainer {
+    pub fn new(rt: &Runtime, seed: u64) -> Result<PjrtTrainer> {
+        let dims = rt.manifest.dims.clone();
+        let mut rng = Prng::new(seed);
+        Ok(PjrtTrainer {
+            state: TrainState::init(&dims, &mut rng),
+            train_exe: rt.load("merinda_train_step")?,
+            forward_exe: rt.load("merinda_forward")?,
+        })
+    }
+
+    /// One fused Adam step; returns the loss.
+    pub fn train_step(&mut self, batch: &Batch, dt: f32, lr: f32, lambda: f32) -> Result<f32> {
+        let s = &self.state;
+        let step_in = [s.step];
+        let dt_in = [dt];
+        let lr_in = [lr];
+        let lam_in = [lambda];
+        let mut args: Vec<&[f32]> = Vec::with_capacity(27);
+        for p in &s.params {
+            args.push(p);
+        }
+        for m in &s.m {
+            args.push(m);
+        }
+        for v in &s.v {
+            args.push(v);
+        }
+        args.push(&step_in);
+        args.push(&batch.y);
+        args.push(&batch.u);
+        args.push(&dt_in);
+        args.push(&lr_in);
+        args.push(&lam_in);
+
+        let out = self.train_exe.run_f32(&args)?;
+        debug_assert_eq!(out.len(), 23);
+        let st = &mut self.state;
+        for i in 0..7 {
+            st.params[i] = out[i].clone();
+            st.m[i] = out[7 + i].clone();
+            st.v[i] = out[14 + i].clone();
+        }
+        st.step = out[21][0];
+        let loss = out[22][0];
+        if !loss.is_finite() {
+            return Err(Error::numeric(format!("loss diverged: {loss}")));
+        }
+        Ok(loss)
+    }
+
+    /// Full training loop over a trace.
+    pub fn train(
+        &mut self,
+        trace_y: &[f32],
+        trace_u: &[f32],
+        opts: TrainOpts,
+    ) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let dims = self.state.dims.clone();
+        let mut rng = Prng::new(opts.seed);
+        let mut losses = Vec::new();
+        let mut last = f32::NAN;
+        for s in 0..opts.steps {
+            let batch = sample_batch(&dims, trace_y, trace_u, &mut rng)?;
+            last = self.train_step(&batch, opts.dt, opts.lr, opts.lambda)?;
+            if s % opts.log_every.max(1) == 0 || s + 1 == opts.steps {
+                losses.push((s, last));
+            }
+        }
+        Ok(TrainReport {
+            losses,
+            final_loss: last,
+            steps: opts.steps,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Inference: average the per-window Θ estimates over a batch →
+    /// (xdim, plib) coefficient matrix.
+    pub fn estimate_theta(&self, batch: &Batch) -> Result<Vec<f64>> {
+        let s = &self.state;
+        let mut args: Vec<&[f32]> = s.params.iter().map(|p| p.as_slice()).collect();
+        args.push(&batch.y);
+        args.push(&batch.u);
+        let out = self.forward_exe.run_f32(&args)?;
+        let d = &s.dims;
+        let per = d.xdim * d.plib;
+        let mut theta = vec![0.0f64; per];
+        for b in 0..d.batch {
+            for i in 0..per {
+                theta[i] += out[0][b * per + i] as f64;
+            }
+        }
+        for t in theta.iter_mut() {
+            *t /= d.batch as f64;
+        }
+        Ok(theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            xdim: 3,
+            udim: 1,
+            plib: 15,
+            hid: 32,
+            dense: 48,
+            batch: 8,
+            seq: 64,
+            ltc_unfold: 6,
+        }
+    }
+
+    #[test]
+    fn init_shapes_consistent() {
+        let d = dims();
+        let st = TrainState::init(&d, &mut Prng::new(1));
+        assert_eq!(st.params.len(), 7);
+        assert_eq!(st.params[0].len(), 4 * 96);
+        assert_eq!(st.params[6].len(), 45);
+        assert_eq!(st.m.len(), 7);
+        assert!(st.param_count() > 5000);
+    }
+
+    #[test]
+    fn biases_start_zero() {
+        let st = TrainState::init(&dims(), &mut Prng::new(2));
+        assert!(st.params[2].iter().all(|&v| v == 0.0)); // gru_b
+        assert!(st.params[4].iter().all(|&v| v == 0.0)); // dense_b1
+    }
+
+    #[test]
+    fn sample_batch_shapes() {
+        let d = dims();
+        let n = 500;
+        let trace_y = vec![0.5f32; n * d.xdim];
+        let trace_u = vec![0.0f32; n * d.udim];
+        let b = sample_batch(&d, &trace_y, &trace_u, &mut Prng::new(3)).unwrap();
+        assert_eq!(b.y.len(), d.batch * d.seq * d.xdim);
+        assert_eq!(b.u.len(), d.batch * d.seq * d.udim);
+    }
+
+    #[test]
+    fn sample_batch_rejects_short_trace() {
+        let d = dims();
+        let trace_y = vec![0.0f32; 10 * d.xdim];
+        let trace_u = vec![0.0f32; 10 * d.udim];
+        assert!(sample_batch(&d, &trace_y, &trace_u, &mut Prng::new(4)).is_err());
+    }
+
+    #[test]
+    fn windows_are_contiguous_slices() {
+        let d = ModelDims {
+            batch: 2,
+            seq: 3,
+            xdim: 1,
+            udim: 1,
+            ..dims()
+        };
+        // trace_y[i] = i so windows must be consecutive runs.
+        let trace_y: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let trace_u = vec![0.0f32; 50];
+        let b = sample_batch(&d, &trace_y, &trace_u, &mut Prng::new(5)).unwrap();
+        for w in 0..2 {
+            let win = &b.y[w * 3..(w + 1) * 3];
+            assert_eq!(win[1] - win[0], 1.0);
+            assert_eq!(win[2] - win[1], 1.0);
+        }
+    }
+}

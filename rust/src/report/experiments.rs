@@ -1,0 +1,492 @@
+//! Experiment generators: one function per paper table/figure.
+//!
+//! Shared by the CLI (`merinda table N`) and the bench harness
+//! (`cargo bench`). Each returns a [`Table`] (or chart string) whose rows
+//! contain our measured values with the paper's values alongside, so the
+//! reproduction "shape" is auditable at a glance. See DESIGN.md §5 for the
+//! experiment index and EXPERIMENTS.md for recorded runs.
+
+use crate::fpga::gru_accel::{all_stage_maps, stage_map_name, GruAccel, GruAccelConfig};
+use crate::fpga::interconnect::DramFootprint;
+use crate::fpga::ltc_accel::{LtcAccel, LtcAccelConfig};
+use crate::fpga::resources::Device;
+use crate::mr::ltc::{LtcCell, LtcParams};
+use crate::mr::recover::{self, MerindaOpts};
+use crate::mr::train::TrainOpts;
+use crate::platform::{evaluate, workloads, PlatformModel};
+use crate::runtime::Runtime;
+use crate::systems::{table6_systems, Aid, Apc, AvLateral, CaseStudy};
+use crate::util::{Prng, Result};
+
+use super::{bar_chart, fmt, sci, Table};
+
+/// Table 1: overall forward pass split (sensory vs ODE solver).
+pub fn table1() -> Table {
+    let mut rng = Prng::new(11);
+    let cell = LtcCell::new(LtcParams::random(4, 16, &mut rng, 0.3), 6);
+    let xs = rng.normal_vec_f32(64 * 4, 1.0);
+    // Warm up, then measure.
+    let _ = cell.profile(&xs, 64, 0.1);
+    let p = cell.profile(&xs, 64, 0.1);
+    let total = p.sensory_s + p.solver_s;
+    let ms = |s: f64| fmt(s * 1e3, 6);
+    let pct = |s: f64| fmt(100.0 * s / total, 1);
+
+    let mut t = Table::new(
+        "Table 1: Overall Forward Pass (LTC, 64 steps x 6 solver sub-steps)",
+        &["Operation", "Time (ms)", "Share (%)", "Paper share"],
+    );
+    t.row(vec![
+        "Sensory Processing".into(),
+        ms(p.sensory_s),
+        pct(p.sensory_s),
+        "12.3%".into(),
+    ]);
+    t.row(vec![
+        "ODE Solver (6 steps)".into(),
+        ms(p.solver_s),
+        pct(p.solver_s),
+        "87.7%".into(),
+    ]);
+    t.row(vec![
+        "Total Forward Pass".into(),
+        ms(total),
+        "100.0".into(),
+        "100.0%".into(),
+    ]);
+    t
+}
+
+/// Table 2: per-ODE-step component breakdown.
+pub fn table2() -> Table {
+    let mut rng = Prng::new(13);
+    let cell = LtcCell::new(LtcParams::random(4, 16, &mut rng, 0.3), 6);
+    let xs = rng.normal_vec_f32(256 * 4, 1.0);
+    let _ = cell.profile(&xs, 256, 0.1);
+    let p = cell.profile(&xs, 256, 0.1);
+    let per_step = |s: f64| s / p.steps as f64;
+    let step_total = per_step(
+        p.recurrent_sigmoid_s
+            + p.weight_activation_s
+            + p.reversal_activation_s
+            + p.sum_ops_s
+            + p.euler_update_s,
+    );
+    let ms = |s: f64| fmt(per_step(s) * 1e3, 6);
+    let pct = |s: f64| fmt(100.0 * per_step(s) / step_total, 1);
+
+    let mut t = Table::new(
+        "Table 2: ODE Step Breakdown (per solver sub-step)",
+        &["Operation", "Time (ms)", "Share (%)", "Paper share"],
+    );
+    for (name, secs, paper) in [
+        ("Recurrent Sigmoid", p.recurrent_sigmoid_s, "46.7%"),
+        ("Weight Activation", p.weight_activation_s, "2.4%"),
+        ("Reversal Activation", p.reversal_activation_s, "2.5%"),
+        ("Sum Operations", p.sum_ops_s, "34.4%"),
+        ("Euler Update", p.euler_update_s, "14.0%"),
+    ] {
+        t.row(vec![name.into(), ms(secs), pct(secs), paper.into()]);
+    }
+    t.row(vec![
+        "Single ODE Step Total".into(),
+        fmt(step_total * 1e3, 6),
+        "100.0".into(),
+        "100.0%".into(),
+    ]);
+    t
+}
+
+/// Table 4: SINDy-MR on AID / Autonomous Car / APC through the FPGA model.
+pub fn table4() -> Result<Table> {
+    let device = Device::pynq_z2();
+    let mut t = Table::new(
+        "Table 4: FPGA execution time, energy, DRAM (SINDy MR per system)",
+        &[
+            "System",
+            "Time (s)",
+            "Energy (J)",
+            "DRAM (MB)",
+            "Paper (s / J / MB)",
+        ],
+    );
+    let mut rng = Prng::new(17);
+    let systems: Vec<(Box<dyn CaseStudy>, usize, f64, &str)> = vec![
+        (Box::new(Aid::default()), 200, 5.0, "56.63 / 107.88 / 192.36"),
+        (
+            Box::new(AvLateral::default()),
+            2000,
+            0.01,
+            "21.23 / 40.44 / 213.00",
+        ),
+        (Box::new(Apc::default()), 2000, 0.05, "20.74 / 39.43 / 289.18"),
+    ];
+    for (sys, samples, dt, paper) in systems {
+        let tr = sys.generate(samples, dt, &mut rng);
+        // Host-measured SINDy wall time (the algorithm itself)...
+        let t0 = std::time::Instant::now();
+        let rec = recover::recover_sindy(&tr)?;
+        let host_s = t0.elapsed().as_secs_f64();
+        let _ = rec;
+        // ...scaled onto the PYNQ's ARM A9 (≈120× slower than this host
+        // for dense f64 loops — calibrated once, DESIGN.md §7), plus the
+        // library-evaluation offload modeled on the fabric.
+        let arm_scale = 120.0;
+        let fpga_s = host_s * arm_scale;
+        let accel = GruAccel::new(GruAccelConfig::gru_baseline());
+        let rep = accel.report();
+        let power = rep.power_w;
+        let energy = power * fpga_s * 0.45; // duty-cycled fabric
+        let params = 4 * 45u64;
+        let trace_bytes = (samples * (sys.xdim() + sys.udim()) * 8) as u64;
+        let dram = DramFootprint::fpga(params, trace_bytes).total_mb()
+            + (samples as f64 * 0.12); // regression workspace
+        t.row(vec![
+            sys.name().into(),
+            fmt(fpga_s, 2),
+            fmt(energy, 2),
+            fmt(dram, 2),
+            paper.into(),
+        ]);
+    }
+    let _ = device;
+    Ok(t)
+}
+
+/// Table 5: workloads × platforms on the AID dataset.
+pub fn table5(rt: Option<&Runtime>) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 5: Cross-platform comparison, AID workload",
+        &[
+            "Workload",
+            "Platform",
+            "Runtime (s)",
+            "Power (W)",
+            "DRAM (MB)",
+            "Freq (MHz)",
+        ],
+    );
+    let steps = 500u64;
+    let dev = Device::pynq_z2();
+    for w in workloads() {
+        // GPU + mobile GPU from the calibrated platform models.
+        for p in [PlatformModel::gpu(), PlatformModel::mobile_gpu()] {
+            let row = evaluate(&p, &w, steps);
+            t.row(vec![
+                w.name.into(),
+                row.platform.into(),
+                fmt(row.runtime_s, 2),
+                fmt(row.power_w, 2),
+                fmt(row.dram_mb, 0),
+                fmt(row.freq_mhz, 0),
+            ]);
+        }
+        // FPGA column from the cycle simulator.
+        let (cycles_per_step, power_w) = match w.name {
+            "LTC" => {
+                let r = LtcAccel::new(LtcAccelConfig::base()).report();
+                (r.interval * 64, r.power_w)
+            }
+            "SINDY" => {
+                let r = GruAccel::new(GruAccelConfig::gru_baseline()).report();
+                (r.interval * 8, r.power_w * 0.95)
+            }
+            "PINN+SR" => {
+                let r = GruAccel::new(GruAccelConfig::gru_baseline()).report();
+                (r.interval * 48, r.power_w)
+            }
+            _ => {
+                let r = GruAccel::new(GruAccelConfig::concurrent()).report();
+                (r.interval * 64, r.power_w + 1.4) // + DMA/PS load
+            }
+        };
+        let runtime_s = dev.cycles_to_seconds(cycles_per_step * steps);
+        let params = w.param_bytes;
+        let dram = DramFootprint::fpga(params, w.trace_bytes).total_mb();
+        t.row(vec![
+            w.name.into(),
+            "FPGA (PYNQ-Z2)".into(),
+            fmt(runtime_s, 2),
+            fmt(power_w, 2),
+            fmt(dram, 0),
+            fmt(dev.clock_mhz, 0),
+        ]);
+    }
+    let _ = rt;
+    Ok(t)
+}
+
+/// Table 6 options (training budget for MERINDA).
+#[derive(Clone, Copy, Debug)]
+pub struct Table6Opts {
+    pub samples: usize,
+    pub merinda_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for Table6Opts {
+    fn default() -> Self {
+        Table6Opts {
+            samples: 1200,
+            merinda_steps: 120,
+            seed: 23,
+        }
+    }
+}
+
+/// Table 6: reconstruction MSE, EMILY vs PINN+SR vs MERINDA, 4 systems.
+pub fn table6(rt: &Runtime, opts: Table6Opts) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 6: Recovery accuracy (trajectory reconstruction MSE)",
+        &[
+            "Application",
+            "EMILY",
+            "PINN+SR",
+            "MERINDA",
+            "Paper (EMILY/PINN+SR/MERINDA)",
+        ],
+    );
+    let papers = [
+        "0.03 / 0.05 / 0.03",
+        "1.7 / 2.11 / 1.68",
+        "4.2 / 6.9 / 5.1",
+        "14.3 / 12.1 / 15.1",
+    ];
+    let mut rng = Prng::new(opts.seed);
+    for (sys, paper) in table6_systems().iter().zip(papers) {
+        // Per-system dt tuned for identifiability.
+        let dt = match sys.name() {
+            "Chaotic Lorenz" => 0.004,
+            "F8 Cruiser" => 0.01,
+            _ => 0.01,
+        };
+        let tr = sys
+            .generate(opts.samples, dt, &mut rng)
+            .with_noise(0.002, &mut rng);
+        let e = recover::recover_emily(&tr)?;
+        let p = recover::recover_pinn_sr(&tr)?;
+        let m = recover::recover_merinda(
+            rt,
+            &tr,
+            MerindaOpts {
+                train: TrainOpts {
+                    steps: opts.merinda_steps,
+                    dt: dt as f32 * 10.0, // normalized-time step
+                    seed: opts.seed,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )?;
+        t.row(vec![
+            sys.name().into(),
+            sci(e.recon_mse),
+            sci(p.recon_mse),
+            sci(m.recon_mse),
+            paper.into(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table 7: the 16-way stage-mapping sweep.
+pub fn table7() -> Table {
+    let mut t = Table::new(
+        "Table 7: Stage-wise compute mapping (D=DSP, L=LUT/carry)",
+        &["Config", "Cycles", "LUT", "FF", "DSP", "BRAM", "fits 7020"],
+    );
+    for m in all_stage_maps() {
+        let cfg = GruAccelConfig::concurrent().with_stage_map(m);
+        let r = GruAccel::new(cfg).report();
+        t.row(vec![
+            stage_map_name(&m),
+            r.cycles.to_string(),
+            r.resources.lut.to_string(),
+            r.resources.ff.to_string(),
+            r.resources.dsp.to_string(),
+            r.resources.bram18.to_string(),
+            if r.fits_pynq { "yes" } else { "NO" }.into(),
+        ]);
+    }
+    t
+}
+
+/// The four Table 8 configurations with their paper rows.
+pub fn table8_rows() -> Vec<(String, u64, u64, crate::fpga::resources::Resources, f64, f64)> {
+    let ltc = LtcAccel::new(LtcAccelConfig::base()).report();
+    let mut rows = vec![(
+        "LTC".to_string(),
+        ltc.cycles,
+        ltc.interval,
+        ltc.resources,
+        ltc.power_w,
+        ltc.energy_per_output_j,
+    )];
+    for (name, cfg) in [
+        ("GRU Baseline", GruAccelConfig::gru_baseline()),
+        ("Concurrent GRU", GruAccelConfig::concurrent()),
+        ("BRAM optimal GRU", GruAccelConfig::bram_optimal()),
+    ] {
+        let r = GruAccel::new(cfg).report();
+        rows.push((
+            name.to_string(),
+            r.cycles,
+            r.interval,
+            r.resources,
+            r.power_w,
+            r.energy_per_output_j,
+        ));
+    }
+    rows
+}
+
+/// Table 8: cycles/resources/interval/power across the four configs.
+pub fn table8() -> Table {
+    let mut t = Table::new(
+        "Table 8: Accelerator configurations",
+        &[
+            "Configuration",
+            "Cycles",
+            "Interval",
+            "LUT",
+            "FF",
+            "DSP",
+            "BRAM",
+            "Power (W)",
+            "Paper (cyc/intv/W)",
+        ],
+    );
+    let paper = [
+        "1201 / 12014 / 5.11",
+        "1045 / 271 / 4.736",
+        "380 / 145 / 3.013",
+        "190 / 107 / 4.15",
+    ];
+    for ((name, cycles, interval, res, power, _e), p) in table8_rows().into_iter().zip(paper) {
+        t.row(vec![
+            name,
+            cycles.to_string(),
+            interval.to_string(),
+            res.lut.to_string(),
+            res.ff.to_string(),
+            res.dsp.to_string(),
+            res.bram18.to_string(),
+            fmt(power, 3),
+            p.into(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8: power (linear) and energy (log) across the four configs.
+pub fn fig8() -> String {
+    let rows = table8_rows();
+    let power: Vec<(String, f64)> = rows.iter().map(|r| (r.0.clone(), r.4)).collect();
+    let energy: Vec<(String, f64)> = rows.iter().map(|r| (r.0.clone(), r.5)).collect();
+    let mut out = String::new();
+    out.push_str(&bar_chart("Fig 8a: Power (W, linear)", &power, 40, false));
+    out.push_str(&bar_chart(
+        "Fig 8b: Energy per output (J, log scale)",
+        &energy,
+        40,
+        true,
+    ));
+    out
+}
+
+/// Sanity metric reused by tests: MERINDA-vs-paper Table 8 speedup shape.
+pub fn table8_speedups() -> (f64, f64, f64) {
+    let rows = table8_rows();
+    let ltc = rows[0].2 as f64;
+    let base = rows[1].2 as f64;
+    let conc = rows[2].2 as f64;
+    let bank = rows[3].2 as f64;
+    (ltc / base, base / conc, conc / bank)
+}
+
+/// End-to-end AID demo metric for EXPERIMENTS.md: final loss after a
+/// PJRT training run.
+pub fn aid_train_demo(rt: &Runtime, steps: usize, seed: u64) -> Result<crate::mr::train::TrainReport> {
+    use crate::mr::train::PjrtTrainer;
+    let mut rng = Prng::new(seed);
+    let tr = Aid::default().generate(200, 5.0, &mut rng);
+    let (y, u) = tr.padded_f32(3, 1);
+    let scale: f32 = y.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+    let y: Vec<f32> = y.iter().map(|v| v / scale).collect();
+    let mut trainer = PjrtTrainer::new(rt, seed)?;
+    trainer.train(
+        &y,
+        &u,
+        TrainOpts {
+            steps,
+            seed,
+            ..Default::default()
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_solver_dominates() {
+        let t = table1();
+        // Row 1 is the solver; its share column must exceed 60%.
+        let share: f64 = t.rows[1][2].parse().unwrap();
+        assert!(share > 60.0, "solver share {share}");
+    }
+
+    #[test]
+    fn table2_sigmoid_and_sums_lead() {
+        let t = table2();
+        let get = |i: usize| -> f64 { t.rows[i][2].parse().unwrap() };
+        let sigmoid = get(0);
+        let sums = get(3);
+        let weight = get(1);
+        let reversal = get(2);
+        assert!(sigmoid > weight && sigmoid > reversal);
+        assert!(sigmoid + sums > 50.0, "sigmoid+sums = {}", sigmoid + sums);
+    }
+
+    #[test]
+    fn table7_best_config_is_mixed_mapping() {
+        let t = table7();
+        // The minimum-cycle config should not be one of the all-LUT rows
+        // (paper: s1D_s2L_s3L_s4D wins).
+        let best = t
+            .rows
+            .iter()
+            .min_by_key(|r| r[1].parse::<u64>().unwrap())
+            .unwrap();
+        assert!(best[0].starts_with("s1D"), "best={}", best[0]);
+    }
+
+    #[test]
+    fn table8_speedup_shape() {
+        let (s1, s2, s3) = table8_speedups();
+        // Paper: 44.3x (LTC→GRU), 1.87x (→DATAFLOW), 1.36x (→banking).
+        assert!(s1 > 3.0, "LTC→GRU {s1}");
+        assert!(s2 > 1.2, "GRU→DATAFLOW {s2}");
+        assert!(s3 > 1.05, "DATAFLOW→banking {s3}");
+    }
+
+    #[test]
+    fn fig8_chart_renders() {
+        let s = fig8();
+        assert!(s.contains("Fig 8a") && s.contains("Fig 8b"));
+        assert!(s.contains("LTC"));
+    }
+
+    #[test]
+    fn table4_generates_three_rows() {
+        let t = table4().unwrap();
+        assert_eq!(t.rows.len(), 3);
+    }
+
+    #[test]
+    fn table5_has_twelve_rows() {
+        let t = table5(None).unwrap();
+        assert_eq!(t.rows.len(), 12); // 4 workloads × 3 platforms
+    }
+}

@@ -1,0 +1,157 @@
+//! Report rendering: paper-style tables, markdown emitters and ASCII
+//! charts for the bench harness and EXPERIMENTS.md.
+
+pub mod experiments;
+
+use std::fmt::Write as _;
+
+/// A generic experiment table with paper-vs-measured annotation support.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Plain-text rendering (bench stdout).
+    pub fn to_text(&self) -> String {
+        crate::util::bench::render_table(
+            &self.title,
+            &self.headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            &self.rows,
+        )
+    }
+
+    /// GitHub-markdown rendering (EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "\n### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+}
+
+/// Format a float with `d` decimals.
+pub fn fmt(v: f64, d: usize) -> String {
+    format!("{v:.d$}")
+}
+
+/// Format in scientific notation.
+pub fn sci(v: f64) -> String {
+    format!("{v:.3e}")
+}
+
+/// A simple horizontal ASCII bar chart (Fig. 8 substitute): one row per
+/// label, bar scaled to the max value; `log` plots log10 magnitudes.
+pub fn bar_chart(title: &str, items: &[(String, f64)], width: usize, log: bool) -> String {
+    let mut out = format!("\n== {title} ==\n");
+    let tf = |v: f64| if log { v.max(1e-12).log10() } else { v };
+    let vals: Vec<f64> = items.iter().map(|(_, v)| tf(*v)).collect();
+    let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min).min(0.0);
+    let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for ((label, raw), v) in items.iter().zip(&vals) {
+        let filled = (((v - lo) / span) * width as f64).round() as usize;
+        let _ = writeln!(
+            out,
+            "{label:<label_w$} | {} {}",
+            "#".repeat(filled.min(width)),
+            if log {
+                format!("{raw:.3e}")
+            } else {
+                format!("{raw:.3}")
+            }
+        );
+    }
+    out
+}
+
+/// Ratio annotation helper: "ours 190 (paper 107, 1.78×)".
+pub fn vs_paper(ours: f64, paper: f64, decimals: usize) -> String {
+    if paper == 0.0 {
+        return fmt(ours, decimals);
+    }
+    format!(
+        "{} (paper {}, {:.2}x)",
+        fmt(ours, decimals),
+        fmt(paper, decimals),
+        ours / paper
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_text_and_markdown() {
+        let mut t = Table::new("Table X", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let text = t.to_text();
+        assert!(text.contains("Table X"));
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let c = bar_chart(
+            "P",
+            &[("x".into(), 1.0), ("y".into(), 2.0)],
+            10,
+            false,
+        );
+        let x_bars = c.lines().find(|l| l.starts_with('x')).unwrap().matches('#').count();
+        let y_bars = c.lines().find(|l| l.starts_with('y')).unwrap().matches('#').count();
+        assert!(y_bars > x_bars);
+    }
+
+    #[test]
+    fn log_chart_compresses() {
+        let c = bar_chart(
+            "E",
+            &[("a".into(), 1e-6), ("b".into(), 1e-2)],
+            20,
+            true,
+        );
+        assert!(c.contains("e-6") || c.contains("e-06"));
+    }
+
+    #[test]
+    fn vs_paper_format() {
+        let s = vs_paper(190.0, 107.0, 0);
+        assert!(s.contains("190") && s.contains("107") && s.contains("1.78"));
+    }
+}

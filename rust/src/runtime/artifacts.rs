@@ -1,0 +1,186 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.json` is written by `python/compile/aot.py` and
+//! records, for every lowered entry point, the argument order, shapes and
+//! output arity. The Rust side validates every call against this before
+//! touching PJRT, so shape bugs surface as typed errors instead of XLA
+//! aborts.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+/// Model dimensions baked into the artifacts (must match `model.py`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelDims {
+    pub xdim: usize,
+    pub udim: usize,
+    pub plib: usize,
+    pub hid: usize,
+    pub dense: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub ltc_unfold: usize,
+}
+
+/// One argument of an entry point.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub outputs: usize,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub entries: Vec<EntrySpec>,
+    pub dir: PathBuf,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| Error::Artifact(format!("manifest missing numeric key {key:?}")))
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(Error::Artifact)?;
+        let d = j
+            .get("dims")
+            .ok_or_else(|| Error::Artifact("manifest missing dims".into()))?;
+        let dims = ModelDims {
+            xdim: req_usize(d, "xdim")?,
+            udim: req_usize(d, "udim")?,
+            plib: req_usize(d, "plib")?,
+            hid: req_usize(d, "hid")?,
+            dense: req_usize(d, "dense")?,
+            batch: req_usize(d, "batch")?,
+            seq: req_usize(d, "seq")?,
+            ltc_unfold: req_usize(d, "ltc_unfold")?,
+        };
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Artifact("manifest missing entries".into()))?
+        {
+            let name = e
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Artifact("entry missing name".into()))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Artifact("entry missing file".into()))?;
+            let outputs = req_usize(e, "outputs")?;
+            let mut args = Vec::new();
+            for a in e
+                .get("args")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| Error::Artifact("entry missing args".into()))?
+            {
+                let aname = a
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("<anon>")
+                    .to_string();
+                let shape: Vec<usize> = a
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| Error::Artifact("arg missing shape".into()))?
+                    .iter()
+                    .filter_map(|x| x.as_usize())
+                    .collect();
+                args.push(ArgSpec { name: aname, shape });
+            }
+            entries.push(EntrySpec {
+                name,
+                file: dir.join(file),
+                outputs,
+                args,
+            });
+        }
+        Ok(Manifest { dims, entries, dir })
+    }
+
+    /// Find an entry by name.
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact entry {name:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "dims": {"xdim":3,"udim":1,"plib":15,"hid":32,"dense":48,"batch":8,"seq":64,"ltc_unfold":6},
+      "entries": [
+        {"name":"gru_cell","file":"gru_cell.hlo.txt","outputs":1,
+         "args":[{"name":"x","shape":[8,4],"dtype":"f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.dims.hid, 32);
+        assert_eq!(m.entries.len(), 1);
+        let e = m.entry("gru_cell").unwrap();
+        assert_eq!(e.args[0].shape, vec![8, 4]);
+        assert_eq!(e.args[0].elements(), 32);
+        assert!(e.file.ends_with("gru_cell.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_entry_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn scalar_arg_has_one_element() {
+        let a = ArgSpec {
+            name: "dt".into(),
+            shape: vec![],
+        };
+        assert_eq!(a.elements(), 1);
+    }
+}

@@ -1,0 +1,119 @@
+//! PJRT CPU client wrapper: compile-once, execute-many.
+//!
+//! Pattern follows /opt/xla-example/src/bin/load_hlo.rs: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Entry points are lowered with
+//! `return_tuple=True`, so results are unpacked from a single tuple
+//! literal.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::util::{Error, Result};
+
+use super::artifacts::{EntrySpec, Manifest};
+
+/// A compiled entry point plus its manifest spec.
+pub struct Executable {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 buffers in manifest argument order.
+    ///
+    /// Each `args[i]` must have exactly `spec.args[i].elements()` values;
+    /// shapes are imposed via literal reshape. Returns the flattened f32
+    /// contents of each tuple element.
+    pub fn run_f32(&self, args: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.spec.args.len() {
+            return Err(Error::Shape {
+                expected: format!("{} args", self.spec.args.len()),
+                got: format!("{} args", args.len()),
+            });
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (a, spec) in args.iter().zip(&self.spec.args) {
+            if a.len() != spec.elements() {
+                return Err(Error::Shape {
+                    expected: format!("{} elems for {}", spec.elements(), spec.name),
+                    got: format!("{} elems", a.len()),
+                });
+            }
+            let lit = xla::Literal::vec1(a);
+            let lit = if spec.shape.is_empty() {
+                // Scalars: reshape to rank-0.
+                lit.reshape(&[])?
+            } else {
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        if tuple.len() != self.spec.outputs {
+            return Err(Error::Shape {
+                expected: format!("{} outputs", self.spec.outputs),
+                got: format!("{} outputs", tuple.len()),
+            });
+        }
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Compile-once registry of all artifact entry points.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: std::sync::Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest (no compilation yet;
+    /// entries compile lazily on first use and are then cached).
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Platform string (always "cpu" in this environment).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling if needed) an executable by entry name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let path = spec.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let exec = Arc::new(Executable { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Eagerly compile a list of entries (startup warm-up).
+    pub fn warm_up(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts and execute them from the Rust hot path.
+//!
+//! `make artifacts` (build time, Python) lowers every L2 entry point to
+//! `artifacts/<name>.hlo.txt` + `artifacts/manifest.json`. At startup the
+//! coordinator constructs one [`Runtime`], which compiles each module once
+//! on the PJRT CPU client; per-request execution is then pure Rust + XLA —
+//! Python is never on the request path.
+
+mod artifacts;
+mod client;
+
+pub use artifacts::{ArgSpec, EntrySpec, Manifest, ModelDims};
+pub use client::{Executable, Runtime};

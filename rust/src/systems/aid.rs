@@ -1,0 +1,235 @@
+//! Automated Insulin Delivery case study — Bergman minimal model.
+//!
+//! The paper evaluates on 14 OhioT1DM time series (16 h 40 min each, 200
+//! CGM samples at 5-minute cadence). OhioT1DM is license-gated, so we
+//! substitute the standard Bergman minimal model of glucose–insulin
+//! dynamics with randomized meal disturbances and CGM sensor noise —
+//! the same dims, rate, duration and signal structure (DESIGN.md §2).
+//!
+//! States: G (glucose above basal, mg/dL), X (remote insulin action,
+//! 1/min), I (plasma insulin above basal, µU/mL). Input: insulin infusion
+//! u (µU/mL/min). Meals enter as a glucose rate disturbance folded into
+//! the generator.
+
+use crate::mr::ode::{FnRhs, Rhs};
+use crate::util::Prng;
+
+use super::{CaseStudy, Trace};
+
+/// Bergman minimal model with paper-consistent sampling (5 min, 200 pts).
+#[derive(Clone, Debug)]
+pub struct Aid {
+    /// Glucose effectiveness p1 (1/min).
+    pub p1: f64,
+    /// Remote insulin decay p2 (1/min).
+    pub p2: f64,
+    /// Insulin sensitivity gain p3.
+    pub p3: f64,
+    /// Plasma insulin clearance n (1/min).
+    pub n: f64,
+    /// CGM noise std (mg/dL).
+    pub cgm_noise: f64,
+    /// Meals in the window (3 = paper-style day; 0 = fasting test, the
+    /// clinically standard identification protocol without disturbance
+    /// impulses).
+    pub meals: usize,
+    pub y0: [f64; 3],
+}
+
+impl Default for Aid {
+    fn default() -> Self {
+        Aid {
+            p1: 0.028,
+            p2: 0.025,
+            p3: 1.3e-4,
+            n: 0.09,
+            cgm_noise: 2.0,
+            meals: 3,
+            y0: [10.0, 0.0, 10.0],
+        }
+    }
+}
+
+/// Number of series / samples matching the OhioT1DM subset in the paper.
+pub const AID_SERIES: usize = 14;
+pub const AID_SAMPLES: usize = 200;
+/// 5-minute CGM cadence, in minutes.
+pub const AID_DT_MIN: f64 = 5.0;
+
+impl CaseStudy for Aid {
+    fn name(&self) -> &'static str {
+        "AID"
+    }
+
+    fn xdim(&self) -> usize {
+        3
+    }
+
+    fn udim(&self) -> usize {
+        1
+    }
+
+    fn rhs(&self) -> Box<dyn Rhs + '_> {
+        let (p1, p2, p3, n) = (self.p1, self.p2, self.p3, self.n);
+        Box::new(FnRhs {
+            dim: 3,
+            f: move |_t, y: &[f64], u: &[f64], out: &mut [f64]| {
+                let (g, x, i) = (y[0], y[1], y[2]);
+                let infusion = u.first().copied().unwrap_or(0.0);
+                out[0] = -p1 * g - x * g;
+                out[1] = -p2 * x + p3 * i;
+                out[2] = -n * i + infusion;
+            },
+        })
+    }
+
+    fn true_coeffs(&self) -> Option<Vec<f64>> {
+        // Library over [x0..x2, u0] order 2 (15 terms):
+        // [1, x0, x1, x2, u, x0², x0x1, x0x2, x0u, x1², x1x2, x1u,
+        //  x2², x2u, u²].
+        let p = 15;
+        let mut c = vec![0.0; 3 * p];
+        c[1] = -self.p1; // x0
+        c[6] = -1.0; // x0*x1
+        c[p + 2] = -self.p2; // x1
+        c[p + 3] = self.p3; // x2
+        c[2 * p + 3] = -self.n; // x2
+        c[2 * p + 4] = 1.0; // u
+        Some(c)
+    }
+
+    fn generate(&self, samples: usize, dt: f64, rng: &mut Prng) -> Trace {
+        use crate::mr::ode::rk4_step;
+        let rhs = self.rhs();
+        let mut y = self.y0;
+        // Perturb the initial condition per series.
+        y[0] += rng.normal_with(0.0, 5.0);
+        y[2] += rng.normal_with(0.0, 2.0);
+
+        let mut xs = Vec::with_capacity(samples * 3);
+        let mut us = Vec::with_capacity(samples);
+
+        // Insulin boluses excite the input channel on a fixed schedule
+        // (identifiability needs a non-constant u even in fasting tests);
+        // meals additionally inject glucose impulses when enabled.
+        let bolus_times: Vec<f64> = (0..3)
+            .map(|m| (m as f64 + 0.5) * samples as f64 * dt / 3.0 + rng.normal_with(0.0, 10.0))
+            .collect();
+        let meal_times: Vec<f64> = bolus_times.iter().take(self.meals).copied().collect();
+        // Subcutaneous insulin absorbs over ~30-60 min, so a bolus reaches
+        // plasma as a smooth hump, not an impulse (also what keeps the
+        // finite-difference derivative estimates well-posed at the 5-min
+        // CGM cadence).
+        let bolus_profile = |t: f64| -> f64 {
+            let sigma = 30.0; // minutes
+            bolus_times
+                .iter()
+                .map(|bt| 5.0 * (-((t - bt) * (t - bt)) / (2.0 * sigma * sigma)).exp())
+                .sum::<f64>()
+        };
+        xs.extend_from_slice(&y);
+        us.push(0.9 + bolus_profile(0.0)); // basal + absorption tails
+        for s in 1..samples {
+            let t = s as f64 * dt;
+            let u = 0.9 + bolus_profile(t);
+            for &mt in &meal_times {
+                if (t - mt).abs() < dt {
+                    // Meal: glucose impulse.
+                    y[0] += rng.uniform_in(30.0, 60.0);
+                }
+            }
+            rk4_step(rhs.as_ref(), t, &mut y, &[u], dt);
+            y[0] = y[0].max(-60.0); // glucose floor (hypoglycemia clamp)
+            let mut sample = y;
+            sample[0] += rng.normal_with(0.0, self.cgm_noise);
+            xs.extend_from_slice(&sample);
+            us.push(u);
+        }
+        Trace {
+            xdim: 3,
+            udim: 1,
+            dt,
+            xs,
+            us,
+        }
+    }
+}
+
+impl Aid {
+    /// The paper's full dataset shape: 14 series × 200 samples at 5 min.
+    pub fn dataset(&self, rng: &mut Prng) -> Vec<Trace> {
+        (0..AID_SERIES)
+            .map(|_| self.generate(AID_SAMPLES, AID_DT_MIN, rng))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glucose_rises_at_meals_and_recovers() {
+        let mut rng = Prng::new(42);
+        let tr = Aid::default().generate(AID_SAMPLES, AID_DT_MIN, &mut rng);
+        let g: Vec<f64> = (0..tr.samples()).map(|s| tr.xs[s * 3]).collect();
+        let gmax = g.iter().cloned().fold(f64::MIN, f64::max);
+        let gend = g[g.len() - 1];
+        assert!(gmax > g[0] + 20.0, "no meal excursion: max={gmax}");
+        assert!(gend < gmax, "no recovery: end={gend} max={gmax}");
+    }
+
+    #[test]
+    fn dataset_matches_paper_shape() {
+        let mut rng = Prng::new(7);
+        let ds = Aid::default().dataset(&mut rng);
+        assert_eq!(ds.len(), AID_SERIES);
+        for tr in &ds {
+            assert_eq!(tr.samples(), AID_SAMPLES);
+            assert_eq!(tr.us.len(), AID_SAMPLES);
+        }
+        // Series differ (randomized ICs/meals).
+        assert_ne!(ds[0].xs, ds[1].xs);
+    }
+
+    #[test]
+    fn insulin_dynamics_track_infusion() {
+        let mut rng = Prng::new(9);
+        let tr = Aid {
+            cgm_noise: 0.0,
+            ..Default::default()
+        }
+        .generate(100, 5.0, &mut rng);
+        // Plasma insulin stays positive and bounded with basal+boluses.
+        for s in 0..tr.samples() {
+            let i = tr.xs[s * 3 + 2];
+            assert!(i > 0.0 && i < 200.0, "I={i}");
+        }
+    }
+
+    #[test]
+    fn true_coeffs_reproduce_rhs() {
+        use crate::mr::library::PolyLibrary;
+        let sys = Aid::default();
+        let coeffs = sys.true_coeffs().unwrap();
+        let lib = PolyLibrary::new(3, 1, 2);
+        assert_eq!(lib.len(), 15);
+        let y = [80.0, 0.01, 12.0];
+        let u = [1.5];
+        let feats = lib.eval(&y, &u);
+        let mut want = [0.0; 3];
+        sys.rhs().eval(0.0, &y, &u, &mut want);
+        for d in 0..3 {
+            let got: f64 = coeffs[d * 15..(d + 1) * 15]
+                .iter()
+                .zip(&feats)
+                .map(|(c, f)| c * f)
+                .sum();
+            assert!(
+                (got - want[d]).abs() < 1e-9,
+                "eq {d}: {got} vs {}",
+                want[d]
+            );
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Autonomous-vehicle and APC workloads (Table 4).
+//!
+//! The paper's Table 4 measures SINDy-MR cost on three deployed systems:
+//! AID, an autonomous car, and an "APC" system. We model the car as the
+//! standard linear bicycle (lateral) model with a steering input, and APC
+//! as adaptive cruise/platoon control (gap, ego speed, lead speed) — both
+//! identifiable linear systems with realistic sampling rates, sized to
+//! produce the workload-scale differences the table reports.
+
+use crate::mr::ode::{rk4_trajectory, FnRhs, Rhs};
+use crate::util::Prng;
+
+use super::{CaseStudy, Trace};
+
+/// Linear bicycle model: lateral velocity v, yaw rate r; steering input δ.
+#[derive(Clone, Debug)]
+pub struct AvLateral {
+    /// Front/rear cornering stiffness over mass terms (lumped).
+    pub a11: f64,
+    pub a12: f64,
+    pub a21: f64,
+    pub a22: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub y0: [f64; 2],
+}
+
+impl Default for AvLateral {
+    fn default() -> Self {
+        // Compact-car values at 20 m/s, lumped.
+        AvLateral {
+            a11: -4.0,
+            a12: -0.7,
+            a21: -8.0,
+            a22: -4.5,
+            b1: 3.0,
+            b2: 25.0,
+            y0: [0.0, 0.0],
+        }
+    }
+}
+
+impl CaseStudy for AvLateral {
+    fn name(&self) -> &'static str {
+        "Autonomous Car"
+    }
+
+    fn xdim(&self) -> usize {
+        2
+    }
+
+    fn udim(&self) -> usize {
+        1
+    }
+
+    fn rhs(&self) -> Box<dyn Rhs + '_> {
+        let (a11, a12, a21, a22, b1, b2) =
+            (self.a11, self.a12, self.a21, self.a22, self.b1, self.b2);
+        Box::new(FnRhs {
+            dim: 2,
+            f: move |_t, y: &[f64], u: &[f64], out: &mut [f64]| {
+                let d = u.first().copied().unwrap_or(0.0);
+                out[0] = a11 * y[0] + a12 * y[1] + b1 * d;
+                out[1] = a21 * y[0] + a22 * y[1] + b2 * d;
+            },
+        })
+    }
+
+    fn true_coeffs(&self) -> Option<Vec<f64>> {
+        // Library over [x0, x1, u] order 2 (10 terms):
+        // [1, x0, x1, u, x0², x0x1, x0u, x1², x1u, u²].
+        let p = 10;
+        let mut c = vec![0.0; 2 * p];
+        c[1] = self.a11;
+        c[2] = self.a12;
+        c[3] = self.b1;
+        c[p + 1] = self.a21;
+        c[p + 2] = self.a22;
+        c[p + 3] = self.b2;
+        Some(c)
+    }
+
+    fn generate(&self, samples: usize, dt: f64, rng: &mut Prng) -> Trace {
+        // Swept-sine steering excitation.
+        let us: Vec<f64> = (0..samples)
+            .map(|s| {
+                let t = s as f64 * dt;
+                0.05 * (0.5 * t + 0.05 * t * t).sin() + rng.normal_with(0.0, 0.002)
+            })
+            .collect();
+        let rhs = self.rhs();
+        let xs = rk4_trajectory(rhs.as_ref(), &self.y0, &us, 1, dt, samples - 1);
+        Trace {
+            xdim: 2,
+            udim: 1,
+            dt,
+            xs: xs[..samples * 2].to_vec(),
+            us,
+        }
+    }
+}
+
+/// Adaptive platoon/cruise control: gap g, ego speed v, lead speed w;
+/// throttle input u.
+#[derive(Clone, Debug)]
+pub struct Apc {
+    /// Ego vehicle lag.
+    pub tau: f64,
+    /// Lead-speed relaxation.
+    pub rho: f64,
+    pub y0: [f64; 3],
+}
+
+impl Default for Apc {
+    fn default() -> Self {
+        Apc {
+            tau: 0.6,
+            rho: 0.15,
+            y0: [30.0, 18.0, 20.0],
+        }
+    }
+}
+
+impl CaseStudy for Apc {
+    fn name(&self) -> &'static str {
+        "APC System"
+    }
+
+    fn xdim(&self) -> usize {
+        3
+    }
+
+    fn udim(&self) -> usize {
+        1
+    }
+
+    fn rhs(&self) -> Box<dyn Rhs + '_> {
+        let (tau, rho) = (self.tau, self.rho);
+        Box::new(FnRhs {
+            dim: 3,
+            f: move |_t, y: &[f64], u: &[f64], out: &mut [f64]| {
+                let throttle = u.first().copied().unwrap_or(0.0);
+                out[0] = y[2] - y[1]; // gap' = lead − ego
+                out[1] = (-y[1] + throttle) / tau; // ego speed lag
+                out[2] = -rho * (y[2] - 20.0); // lead relaxes to 20 m/s
+            },
+        })
+    }
+
+    fn true_coeffs(&self) -> Option<Vec<f64>> {
+        // Library over [x0..x2, u] order 2 (15 terms):
+        // [1, x0, x1, x2, u, ...quadratics].
+        let p = 15;
+        let mut c = vec![0.0; 3 * p];
+        c[2] = -1.0; // x1
+        c[3] = 1.0; // x2
+        c[p + 2] = -1.0 / self.tau;
+        c[p + 4] = 1.0 / self.tau; // u
+        c[2 * p] = 20.0 * self.rho; // constant
+        c[2 * p + 3] = -self.rho;
+        Some(c)
+    }
+
+    fn generate(&self, samples: usize, dt: f64, rng: &mut Prng) -> Trace {
+        // Throttle steps around a cruise setpoint.
+        let us: Vec<f64> = (0..samples)
+            .map(|s| {
+                let t = s as f64 * dt;
+                20.0 + 3.0 * ((t / 8.0).floor() % 2.0 - 0.5) * 2.0 + rng.normal_with(0.0, 0.05)
+            })
+            .collect();
+        let rhs = self.rhs();
+        let xs = rk4_trajectory(rhs.as_ref(), &self.y0, &us, 1, dt, samples - 1);
+        Trace {
+            xdim: 3,
+            udim: 1,
+            dt,
+            xs: xs[..samples * 3].to_vec(),
+            us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn av_lateral_is_stable() {
+        let mut rng = Prng::new(1);
+        let tr = AvLateral::default().generate(2000, 0.01, &mut rng);
+        assert!(tr.xs.iter().all(|v| v.is_finite() && v.abs() < 10.0));
+    }
+
+    #[test]
+    fn av_true_coeffs_reproduce_rhs() {
+        use crate::mr::library::PolyLibrary;
+        let sys = AvLateral::default();
+        let coeffs = sys.true_coeffs().unwrap();
+        let lib = PolyLibrary::new(2, 1, 2);
+        assert_eq!(lib.len(), 10);
+        let y = [0.3, -0.2];
+        let u = [0.04];
+        let feats = lib.eval(&y, &u);
+        let mut want = [0.0; 2];
+        sys.rhs().eval(0.0, &y, &u, &mut want);
+        for d in 0..2 {
+            let got: f64 = coeffs[d * 10..(d + 1) * 10]
+                .iter()
+                .zip(&feats)
+                .map(|(c, f)| c * f)
+                .sum();
+            assert!((got - want[d]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn apc_ego_tracks_throttle_setpoint() {
+        let mut rng = Prng::new(2);
+        let tr = Apc::default().generate(4000, 0.05, &mut rng);
+        // Late in the trace ego speed hovers near the ~20 m/s setpoint.
+        let late_v = tr.xs[3900 * 3 + 1];
+        assert!((late_v - 20.0).abs() < 6.0, "v={late_v}");
+    }
+
+    #[test]
+    fn apc_true_coeffs_reproduce_rhs() {
+        use crate::mr::library::PolyLibrary;
+        let sys = Apc::default();
+        let coeffs = sys.true_coeffs().unwrap();
+        let lib = PolyLibrary::new(3, 1, 2);
+        let y = [25.0, 17.0, 21.0];
+        let u = [19.0];
+        let feats = lib.eval(&y, &u);
+        let mut want = [0.0; 3];
+        sys.rhs().eval(0.0, &y, &u, &mut want);
+        for d in 0..3 {
+            let got: f64 = coeffs[d * 15..(d + 1) * 15]
+                .iter()
+                .zip(&feats)
+                .map(|(c, f)| c * f)
+                .sum();
+            assert!((got - want[d]).abs() < 1e-9, "eq {d}");
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! F8 Crusader longitudinal flight dynamics (simulation case study).
+//!
+//! The Garrard–Jordan F8 model as used in SINDY-MPC [18]: angle of attack
+//! x0, pitch angle x1, pitch rate x2, elevator input u. The dynamics are
+//! *cubic*, so an order-2 library cannot represent them exactly — which is
+//! why the paper's Table 6 reports larger errors for this system than for
+//! the quadratic ones. `true_coeffs` therefore returns `None` and the
+//! benchmark falls back to trajectory-reconstruction MSE.
+
+use crate::mr::ode::{rk4_trajectory, FnRhs, Rhs};
+use crate::util::Prng;
+
+use super::{CaseStudy, Trace};
+
+/// F8 Crusader with the standard literature coefficients.
+#[derive(Clone, Debug)]
+pub struct F8Crusader {
+    pub y0: [f64; 3],
+    /// Elevator doublet amplitude (rad).
+    pub input_amp: f64,
+}
+
+impl Default for F8Crusader {
+    fn default() -> Self {
+        F8Crusader {
+            y0: [0.1, 0.0, 0.0],
+            input_amp: 0.05,
+        }
+    }
+}
+
+fn f8_rhs(y: &[f64], u: f64, out: &mut [f64]) {
+    let (x0, x1, x2) = (y[0], y[1], y[2]);
+    // Garrard & Jordan (1977) F8 longitudinal model.
+    out[0] = -0.877 * x0 + x2 - 0.088 * x0 * x2 + 0.47 * x0 * x0 - 0.019 * x1 * x1
+        - x0 * x0 * x2
+        + 3.846 * x0 * x0 * x0
+        - 0.215 * u
+        + 0.28 * x0 * x0 * u
+        + 0.47 * x0 * u * u
+        + 0.63 * u * u * u;
+    out[1] = x2;
+    out[2] = -4.208 * x0 - 0.396 * x2 - 0.47 * x0 * x0 - 3.564 * x0 * x0 * x0 - 20.967 * u
+        + 6.265 * x0 * x0 * u
+        + 46.0 * x0 * u * u
+        + 61.4 * u * u * u;
+}
+
+impl CaseStudy for F8Crusader {
+    fn name(&self) -> &'static str {
+        "F8 Cruiser"
+    }
+
+    fn xdim(&self) -> usize {
+        3
+    }
+
+    fn udim(&self) -> usize {
+        1
+    }
+
+    fn rhs(&self) -> Box<dyn Rhs + '_> {
+        Box::new(FnRhs {
+            dim: 3,
+            f: move |_t, y: &[f64], u: &[f64], out: &mut [f64]| {
+                f8_rhs(y, u.first().copied().unwrap_or(0.0), out)
+            },
+        })
+    }
+
+    fn true_coeffs(&self) -> Option<Vec<f64>> {
+        None // cubic dynamics: not representable at order 2
+    }
+
+    fn generate(&self, samples: usize, dt: f64, _rng: &mut Prng) -> Trace {
+        // Elevator doublet excitation (standard system-ID input).
+        let us: Vec<f64> = (0..samples)
+            .map(|s| {
+                let t = s as f64 * dt;
+                if t < 1.0 {
+                    self.input_amp
+                } else if t < 2.0 {
+                    -self.input_amp
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let rhs = self.rhs();
+        let xs = rk4_trajectory(rhs.as_ref(), &self.y0, &us, 1, dt, samples - 1);
+        Trace {
+            xdim: 3,
+            udim: 1,
+            dt,
+            xs: xs[..samples * 3].to_vec(),
+            us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_period_mode_is_damped() {
+        let mut rng = Prng::new(1);
+        let tr = F8Crusader::default().generate(4000, 0.01, &mut rng);
+        // After the doublet the AoA oscillation decays toward trim.
+        let early = tr.xs[500 * 3].abs();
+        let late = tr.xs[3900 * 3].abs();
+        assert!(late < early.max(0.05), "early={early} late={late}");
+        assert!(tr.xs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn elevator_input_excites_pitch_rate() {
+        let mut rng = Prng::new(2);
+        let with_u = F8Crusader::default().generate(300, 0.01, &mut rng);
+        let without = F8Crusader {
+            input_amp: 0.0,
+            y0: [0.1, 0.0, 0.0],
+        }
+        .generate(300, 0.01, &mut rng);
+        let q_with: f64 = (0..300).map(|s| with_u.xs[s * 3 + 2].abs()).sum();
+        let q_without: f64 = (0..300).map(|s| without.xs[s * 3 + 2].abs()).sum();
+        assert!(q_with > q_without);
+    }
+
+    #[test]
+    fn cubic_system_has_no_order2_truth() {
+        assert!(F8Crusader::default().true_coeffs().is_none());
+    }
+}

@@ -1,0 +1,131 @@
+//! Chaotic Lorenz system (simulation case study, §6.1).
+
+use crate::mr::ode::{rk4_trajectory, FnRhs, Rhs};
+use crate::util::Prng;
+
+use super::{CaseStudy, Trace};
+
+/// Lorenz-63 with the classic chaotic parameters.
+#[derive(Clone, Debug)]
+pub struct Lorenz {
+    pub sigma: f64,
+    pub rho: f64,
+    pub beta: f64,
+    pub y0: [f64; 3],
+}
+
+impl Default for Lorenz {
+    fn default() -> Self {
+        Lorenz {
+            sigma: 10.0,
+            rho: 28.0,
+            beta: 8.0 / 3.0,
+            y0: [-8.0, 7.0, 27.0],
+        }
+    }
+}
+
+impl CaseStudy for Lorenz {
+    fn name(&self) -> &'static str {
+        "Chaotic Lorenz"
+    }
+
+    fn xdim(&self) -> usize {
+        3
+    }
+
+    fn udim(&self) -> usize {
+        0
+    }
+
+    fn rhs(&self) -> Box<dyn Rhs + '_> {
+        let (s, r, b) = (self.sigma, self.rho, self.beta);
+        Box::new(FnRhs {
+            dim: 3,
+            f: move |_t, y: &[f64], _u: &[f64], out: &mut [f64]| {
+                out[0] = s * (y[1] - y[0]);
+                out[1] = y[0] * (r - y[2]) - y[1];
+                out[2] = y[0] * y[1] - b * y[2];
+            },
+        })
+    }
+
+    fn true_coeffs(&self) -> Option<Vec<f64>> {
+        // Library over 3 vars order 2 (10 terms):
+        // [1, x0, x1, x2, x0², x0x1, x0x2, x1², x1x2, x2²].
+        let p = 10;
+        let mut c = vec![0.0; 3 * p];
+        c[1] = -self.sigma; // x0
+        c[2] = self.sigma; // x1
+        c[p + 1] = self.rho; // x0
+        c[p + 2] = -1.0; // x1
+        c[p + 6] = -1.0; // x0x2
+        c[2 * p + 3] = -self.beta; // x2
+        c[2 * p + 5] = 1.0; // x0x1
+        Some(c)
+    }
+
+    fn generate(&self, samples: usize, dt: f64, _rng: &mut Prng) -> Trace {
+        let rhs = self.rhs();
+        let xs = rk4_trajectory(rhs.as_ref(), &self.y0, &[], 0, dt, samples - 1);
+        Trace {
+            xdim: 3,
+            udim: 0,
+            dt,
+            xs,
+            us: vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_on_attractor() {
+        let mut rng = Prng::new(1);
+        let tr = Lorenz::default().generate(10_000, 0.005, &mut rng);
+        // Bounded by the attractor's envelope.
+        for s in 0..tr.samples() {
+            assert!(tr.xs[s * 3].abs() < 25.0);
+            assert!(tr.xs[s * 3 + 1].abs() < 35.0);
+            assert!(tr.xs[s * 3 + 2] > -1.0 && tr.xs[s * 3 + 2] < 60.0);
+        }
+    }
+
+    #[test]
+    fn sensitive_to_initial_conditions() {
+        let mut rng = Prng::new(2);
+        let a = Lorenz::default().generate(4000, 0.005, &mut rng);
+        let b = Lorenz {
+            y0: [-8.0 + 1e-6, 7.0, 27.0],
+            ..Default::default()
+        }
+        .generate(4000, 0.005, &mut rng);
+        let last = 3999 * 3;
+        let sep = (a.xs[last] - b.xs[last]).abs();
+        assert!(sep > 0.1, "chaos should amplify 1e-6 to O(1), sep={sep}");
+    }
+
+    #[test]
+    fn true_coeffs_reproduce_rhs() {
+        use crate::mr::library::PolyLibrary;
+        let sys = Lorenz::default();
+        let coeffs = sys.true_coeffs().unwrap();
+        let lib = PolyLibrary::new(3, 0, 2);
+        assert_eq!(lib.len(), 10);
+        let y = [1.3, -2.1, 17.0];
+        let feats = lib.eval(&y, &[]);
+        let mut want = [0.0; 3];
+        sys.rhs().eval(0.0, &y, &[], &mut want);
+        for d in 0..3 {
+            let got: f64 = coeffs[d * 10..(d + 1) * 10]
+                .iter()
+                .zip(&feats)
+                .map(|(c, f)| c * f)
+                .sum();
+            assert!((got - want[d]).abs() < 1e-10, "eq {d}: {got} vs {}", want[d]);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Lotka–Volterra predator–prey system + the Hudson Bay pelt record.
+//!
+//! The paper's first real-world case study uses the yearly lynx and hare
+//! pelt counts collected by the Hudson Bay Company (via [18]); the
+//! 1900–1920 table is public domain and embedded below (thousands of
+//! pelts). For controlled experiments we also provide the continuous
+//! ground-truth model ẋ = αx − βxy, ẏ = −γy + δxy.
+
+use crate::mr::ode::{rk4_trajectory, FnRhs, Rhs};
+use crate::util::Prng;
+
+use super::{CaseStudy, Trace};
+
+/// Hudson Bay Company pelt data 1900–1920: (year, hares, lynx) in
+/// thousands. Standard dataset as reprinted in Kaiser–Kutz–Brunton.
+pub fn hudson_bay_pelts() -> &'static [(u32, f64, f64)] {
+    &[
+        (1900, 30.0, 4.0),
+        (1901, 47.2, 6.1),
+        (1902, 70.2, 9.8),
+        (1903, 77.4, 35.2),
+        (1904, 36.3, 59.4),
+        (1905, 20.6, 41.7),
+        (1906, 18.1, 19.0),
+        (1907, 21.4, 13.0),
+        (1908, 22.0, 8.3),
+        (1909, 25.4, 9.1),
+        (1910, 27.1, 7.4),
+        (1911, 40.3, 8.0),
+        (1912, 57.0, 12.3),
+        (1913, 76.6, 19.5),
+        (1914, 52.3, 45.7),
+        (1915, 19.5, 51.1),
+        (1916, 11.2, 29.7),
+        (1917, 7.6, 15.8),
+        (1918, 14.6, 9.7),
+        (1919, 16.2, 10.1),
+        (1920, 24.7, 8.6),
+    ]
+}
+
+/// The LV ground-truth model with the canonical repro parameters.
+#[derive(Clone, Debug)]
+pub struct LotkaVolterra {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub delta: f64,
+    pub y0: [f64; 2],
+}
+
+impl Default for LotkaVolterra {
+    fn default() -> Self {
+        LotkaVolterra {
+            alpha: 1.0,
+            beta: 0.5,
+            gamma: 1.0,
+            delta: 0.25,
+            y0: [2.0, 1.0],
+        }
+    }
+}
+
+impl CaseStudy for LotkaVolterra {
+    fn name(&self) -> &'static str {
+        "Lotka Volterra"
+    }
+
+    fn xdim(&self) -> usize {
+        2
+    }
+
+    fn udim(&self) -> usize {
+        0
+    }
+
+    fn rhs(&self) -> Box<dyn Rhs + '_> {
+        let (a, b, g, d) = (self.alpha, self.beta, self.gamma, self.delta);
+        Box::new(FnRhs {
+            dim: 2,
+            f: move |_t, y: &[f64], _u: &[f64], out: &mut [f64]| {
+                out[0] = a * y[0] - b * y[0] * y[1];
+                out[1] = -g * y[1] + d * y[0] * y[1];
+            },
+        })
+    }
+
+    fn true_coeffs(&self) -> Option<Vec<f64>> {
+        // Library over 2 vars order 2: [1, x0, x1, x0², x0x1, x1²].
+        let mut c = vec![0.0; 2 * 6];
+        c[1] = self.alpha; // x0
+        c[4] = -self.beta; // x0*x1
+        c[6 + 2] = -self.gamma; // x1
+        c[6 + 4] = self.delta; // x0*x1
+        Some(c)
+    }
+
+    fn generate(&self, samples: usize, dt: f64, _rng: &mut Prng) -> Trace {
+        let rhs = self.rhs();
+        let xs = rk4_trajectory(rhs.as_ref(), &self.y0, &[], 0, dt, samples - 1);
+        Trace {
+            xdim: 2,
+            udim: 0,
+            dt,
+            xs,
+            us: vec![],
+        }
+    }
+}
+
+impl LotkaVolterra {
+    /// The Hudson Bay record as a Trace (years → dt=1.0, thousands).
+    pub fn hudson_bay_trace() -> Trace {
+        let data = hudson_bay_pelts();
+        let mut xs = Vec::with_capacity(data.len() * 2);
+        for &(_, hare, lynx) in data {
+            xs.push(hare);
+            xs.push(lynx);
+        }
+        Trace {
+            xdim: 2,
+            udim: 0,
+            dt: 1.0,
+            xs,
+            us: vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oscillates_without_extinction() {
+        let mut rng = Prng::new(1);
+        let tr = LotkaVolterra::default().generate(5000, 0.01, &mut rng);
+        // Populations stay positive and bounded.
+        assert!(tr.xs.iter().all(|&v| v > 0.0 && v < 100.0));
+        // Prey peaks more than once over 50 time units (period ~6).
+        let prey: Vec<f64> = (0..tr.samples()).map(|s| tr.xs[s * 2]).collect();
+        let peaks = prey
+            .windows(3)
+            .filter(|w| w[1] > w[0] && w[1] > w[2] && w[1] > 2.0)
+            .count();
+        assert!(peaks >= 2, "peaks={peaks}");
+    }
+
+    #[test]
+    fn true_coeffs_reproduce_rhs() {
+        use crate::mr::library::PolyLibrary;
+        let sys = LotkaVolterra::default();
+        let coeffs = sys.true_coeffs().unwrap();
+        let lib = PolyLibrary::new(2, 0, 2);
+        let y = [1.7, 0.9];
+        let feats = lib.eval(&y, &[]);
+        let mut want = [0.0; 2];
+        sys.rhs().eval(0.0, &y, &[], &mut want);
+        for d in 0..2 {
+            let got: f64 = coeffs[d * 6..(d + 1) * 6]
+                .iter()
+                .zip(&feats)
+                .map(|(c, f)| c * f)
+                .sum();
+            assert!((got - want[d]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hudson_bay_has_21_years() {
+        let tr = LotkaVolterra::hudson_bay_trace();
+        assert_eq!(tr.samples(), 21);
+        assert_eq!(tr.xs[0], 30.0);
+        assert_eq!(tr.xs[1], 4.0);
+    }
+}

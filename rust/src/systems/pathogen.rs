@@ -1,0 +1,148 @@
+//! Pathogenic-attack system (real-world case study, data per [18]).
+//!
+//! Within-host infection dynamics: pathogen load x0 grows logistically and
+//! is cleared by immune effectors x1; effectors are recruited
+//! proportionally to pathogen load and decay; inflammatory damage x2
+//! accumulates with pathogen load and heals. All interactions are
+//! quadratic, so the order-2 library contains the true model.
+
+use crate::mr::ode::{rk4_trajectory, FnRhs, Rhs};
+use crate::util::Prng;
+
+use super::{CaseStudy, Trace};
+
+/// Pathogen–immune–damage model.
+#[derive(Clone, Debug)]
+pub struct Pathogen {
+    /// Pathogen growth rate.
+    pub r: f64,
+    /// Immune kill rate.
+    pub k: f64,
+    /// Immune recruitment per pathogen.
+    pub a: f64,
+    /// Immune decay.
+    pub d: f64,
+    /// Damage accumulation rate.
+    pub p: f64,
+    /// Healing rate.
+    pub c: f64,
+    pub y0: [f64; 3],
+}
+
+impl Default for Pathogen {
+    fn default() -> Self {
+        Pathogen {
+            r: 1.2,
+            k: 0.9,
+            a: 0.8,
+            d: 0.5,
+            p: 0.6,
+            c: 0.4,
+            y0: [1.0, 0.2, 0.0],
+        }
+    }
+}
+
+impl CaseStudy for Pathogen {
+    fn name(&self) -> &'static str {
+        "Pathogenic Attack"
+    }
+
+    fn xdim(&self) -> usize {
+        3
+    }
+
+    fn udim(&self) -> usize {
+        0
+    }
+
+    fn rhs(&self) -> Box<dyn Rhs + '_> {
+        let (r, k, a, d, p, c) = (self.r, self.k, self.a, self.d, self.p, self.c);
+        Box::new(FnRhs {
+            dim: 3,
+            f: move |_t, y: &[f64], _u: &[f64], out: &mut [f64]| {
+                out[0] = r * y[0] - k * y[0] * y[1];
+                out[1] = a * y[0] - d * y[1];
+                out[2] = p * y[0] - c * y[2];
+            },
+        })
+    }
+
+    fn true_coeffs(&self) -> Option<Vec<f64>> {
+        // Library over 3 vars order 2 (10 terms):
+        // [1, x0, x1, x2, x0², x0x1, x0x2, x1², x1x2, x2²].
+        let p10 = 10;
+        let mut c = vec![0.0; 3 * p10];
+        c[1] = self.r;
+        c[5] = -self.k; // x0x1
+        c[p10 + 1] = self.a;
+        c[p10 + 2] = -self.d;
+        c[2 * p10 + 1] = self.p;
+        c[2 * p10 + 3] = -self.c;
+        Some(c)
+    }
+
+    fn generate(&self, samples: usize, dt: f64, _rng: &mut Prng) -> Trace {
+        let rhs = self.rhs();
+        let xs = rk4_trajectory(rhs.as_ref(), &self.y0, &[], 0, dt, samples - 1);
+        Trace {
+            xdim: 3,
+            udim: 0,
+            dt,
+            xs,
+            us: vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infection_is_controlled() {
+        let mut rng = Prng::new(1);
+        let tr = Pathogen::default().generate(4000, 0.01, &mut rng);
+        // Pathogen load stays bounded (immune response catches up).
+        for s in 0..tr.samples() {
+            assert!(tr.xs[s * 3] < 50.0 && tr.xs[s * 3] > -1e-6);
+        }
+    }
+
+    #[test]
+    fn immune_response_follows_pathogen() {
+        let mut rng = Prng::new(2);
+        let tr = Pathogen::default().generate(2000, 0.01, &mut rng);
+        // Peak immune level happens after peak pathogen level.
+        let argmax = |d: usize| {
+            (0..tr.samples())
+                .max_by(|&a, &b| {
+                    tr.xs[a * 3 + d]
+                        .partial_cmp(&tr.xs[b * 3 + d])
+                        .unwrap()
+                })
+                .unwrap()
+        };
+        assert!(argmax(1) > argmax(0));
+    }
+
+    #[test]
+    fn true_coeffs_reproduce_rhs() {
+        use crate::mr::library::PolyLibrary;
+        let sys = Pathogen::default();
+        let coeffs = sys.true_coeffs().unwrap();
+        let lib = PolyLibrary::new(3, 0, 2);
+        let y = [0.7, 0.4, 0.2];
+        let feats = lib.eval(&y, &[]);
+        let mut want = [0.0; 3];
+        sys.rhs().eval(0.0, &y, &[], &mut want);
+        for d in 0..3 {
+            let got: f64 = coeffs[d * 10..(d + 1) * 10]
+                .iter()
+                .zip(&feats)
+                .map(|(c, f)| c * f)
+                .sum();
+            assert!((got - want[d]).abs() < 1e-12);
+        }
+    }
+}

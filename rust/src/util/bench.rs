@@ -1,0 +1,148 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a plain `fn main()` that uses [`Bench`] to
+//! time closures with warm-up, repetition, and simple statistics, printing
+//! rows in the same format as the paper's tables. `cargo bench` runs them.
+
+use std::hint::black_box as bb;
+use std::time::Instant;
+
+use super::stats;
+
+/// One timed measurement series.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s() * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s() * 1e6
+    }
+
+    pub fn std_ms(&self) -> f64 {
+        stats::std_dev(&self.samples) * 1e3
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        stats::median(&self.samples) * 1e3
+    }
+}
+
+/// Simple timing harness with warm-up.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            iters: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Bench {
+            warmup_iters,
+            iters,
+        }
+    }
+
+    /// Time `f`, returning per-iteration samples. The closure's return value
+    /// is passed through `black_box` so work is not optimized away.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            bb(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            bb(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Measurement {
+            name: name.to_string(),
+            samples,
+        }
+    }
+}
+
+/// Render a plain-text table with aligned columns (paper-table style).
+pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} ==\n"));
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        s.push('\n');
+        s
+    };
+    let hdr: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    out.push_str(&line(&hdr, &widths));
+    let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+    out.push_str(&"-".repeat(total));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row, &widths));
+    }
+    out
+}
+
+/// Format helper: fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let b = Bench::new(1, 5);
+        let m = b.run("noop", || 1 + 1);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let t = render_table(
+            "T",
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("== T =="));
+        assert!(t.contains("333"));
+        assert_eq!(t.matches('|').count(), 9);
+    }
+
+    #[test]
+    fn fmt_decimals() {
+        assert_eq!(f(1.23456, 2), "1.23");
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Subcommand dispatch lives in `main.rs`; this module only tokenizes.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order (subcommand is `positional[0]`).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+/// Option keys that take a value; anything else starting with `--` is a flag.
+pub fn parse(argv: &[String], value_keys: &[&str]) -> Args {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(rest) = a.strip_prefix("--") {
+            if let Some((k, v)) = rest.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if value_keys.contains(&rest) && i + 1 < argv.len() {
+                args.options.insert(rest.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                args.flags.push(rest.to_string());
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    args
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(
+            &sv(&["train", "--steps", "100", "--verbose", "--lr=0.01", "extra"]),
+            &["steps"],
+        );
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!(a.flag("verbose"));
+        assert!((a.get_f64("lr", 0.0) - 0.01).abs() < 1e-12);
+        assert_eq!(a.positional[1], "extra");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&sv(&["x"]), &[]);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("m", "d"), "d");
+    }
+
+    #[test]
+    fn value_key_without_value_is_flag() {
+        let a = parse(&sv(&["--steps"]), &["steps"]);
+        assert!(a.flag("steps"));
+    }
+}

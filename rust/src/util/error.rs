@@ -1,0 +1,100 @@
+//! Unified error type for the merinda crate.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error enum.
+///
+/// Kept deliberately small: most subsystems are infallible simulators; the
+/// fallible surfaces are artifact I/O, PJRT execution, and shape/config
+/// validation.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O failure (artifact files, trace dumps, reports).
+    Io(std::io::Error),
+    /// PJRT / XLA failure (compile, transfer, execute).
+    Xla(String),
+    /// A shape or dimension mismatch between host data and an artifact.
+    Shape { expected: String, got: String },
+    /// Invalid configuration (CLI flags, accelerator configs, bank factors).
+    Config(String),
+    /// A numeric failure (divergence, NaN loss, singular matrix).
+    Numeric(String),
+    /// Artifact missing or malformed.
+    Artifact(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Shape { expected, got } => {
+                write!(f, "shape mismatch: expected {expected}, got {got}")
+            }
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Numeric(m) => write!(f, "numeric error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Helper for config validation failures.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+
+    /// Helper for numeric failures.
+    pub fn numeric(msg: impl Into<String>) -> Self {
+        Error::Numeric(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_io() {
+        let e = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "x"));
+        assert!(e.to_string().contains("io error"));
+    }
+
+    #[test]
+    fn display_shape() {
+        let e = Error::Shape {
+            expected: "[2,2]".into(),
+            got: "[3]".into(),
+        };
+        assert!(e.to_string().contains("expected [2,2]"));
+    }
+
+    #[test]
+    fn config_helper() {
+        assert!(Error::config("bad").to_string().contains("config"));
+    }
+}

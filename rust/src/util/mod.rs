@@ -1,0 +1,16 @@
+//! In-tree utility layer.
+//!
+//! The offline build environment only vendors the `xla` crate's dependency
+//! closure, so the conveniences a networked project would pull from
+//! crates.io (CLI parser, PRNG, JSON writer, bench harness, property-test
+//! runner) are implemented here instead.
+
+pub mod bench;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod prng;
+pub mod stats;
+
+pub use error::{Error, Result};
+pub use prng::Prng;

@@ -1,0 +1,163 @@
+//! Integration tests over the FPGA simulator: the paper's hardware claims
+//! as executable assertions (Tables 7/8, Fig. 8, §5.3).
+
+use merinda::fpga::gru_accel::{all_stage_maps, GruAccel, GruAccelConfig};
+use merinda::fpga::hls::Binding;
+use merinda::fpga::ltc_accel::{LtcAccel, LtcAccelConfig};
+use merinda::fpga::resources::Device;
+use merinda::report::experiments;
+
+/// Table 8 ordering: LTC ≫ baseline > concurrent > banked on interval.
+#[test]
+fn table8_interval_ordering() {
+    let rows = experiments::table8_rows();
+    let intervals: Vec<u64> = rows.iter().map(|r| r.2).collect();
+    assert!(intervals[0] > intervals[1], "LTC vs baseline: {intervals:?}");
+    assert!(intervals[1] > intervals[2], "baseline vs concurrent");
+    assert!(intervals[2] > intervals[3], "concurrent vs banked");
+    // Paper headline: ≥ 6.3× fewer cycles than the LTC baseline.
+    let cycles: Vec<u64> = rows.iter().map(|r| r.1).collect();
+    assert!(
+        cycles[0] as f64 / cycles[3] as f64 > 6.0,
+        "headline speedup: {cycles:?}"
+    );
+}
+
+/// Table 8 power shape: dip at concurrent, rise with banking, LTC highest
+/// energy per output by a wide margin.
+#[test]
+fn table8_power_and_energy_shape() {
+    let rows = experiments::table8_rows();
+    let power: Vec<f64> = rows.iter().map(|r| r.4).collect();
+    assert!(power[2] < power[1], "concurrent should dip below baseline");
+    assert!(power[3] > power[2], "banking should raise power again");
+    let energy: Vec<f64> = rows.iter().map(|r| r.5).collect();
+    // Paper: GRU ≈ 97.9% lower energy/output than LTC.
+    assert!(energy[0] / energy[1] > 5.0);
+    assert!(energy[2] < energy[1] && energy[3] < energy[1]);
+}
+
+/// Table 7: DSP count is monotone in the number of D-mapped stages, and
+/// the LUT count anti-correlates.
+#[test]
+fn table7_dsp_lut_tradeoff() {
+    let reports: Vec<_> = all_stage_maps()
+        .into_iter()
+        .map(|m| {
+            let d_count = m.iter().filter(|b| **b == Binding::Dsp).count();
+            let r = GruAccel::new(GruAccelConfig::concurrent().with_stage_map(m)).report();
+            (d_count, r.resources.dsp, r.resources.lut)
+        })
+        .collect();
+    let all_d = reports.iter().find(|(d, _, _)| *d == 4).unwrap();
+    let all_l = reports.iter().find(|(d, _, _)| *d == 0).unwrap();
+    assert!(all_d.1 > all_l.1, "all-D must use more DSP");
+    assert!(all_d.2 < all_l.2, "all-D must use fewer LUT");
+    // Every D→L swap of a MAC stage reduces DSPs.
+    for (d_count, dsp, _) in &reports {
+        if *d_count == 0 {
+            assert_eq!(*dsp, 0, "all-LUT design must use zero DSPs");
+        }
+    }
+}
+
+/// Cycle spread across the 16 stage maps is small (paper: 380..393, ~3%),
+/// because the mapping changes *where* work runs, not how much there is.
+#[test]
+fn table7_cycle_spread_is_small() {
+    let cycles: Vec<u64> = all_stage_maps()
+        .into_iter()
+        .map(|m| {
+            GruAccel::new(GruAccelConfig::concurrent().with_stage_map(m))
+                .report()
+                .cycles
+        })
+        .collect();
+    let lo = *cycles.iter().min().unwrap() as f64;
+    let hi = *cycles.iter().max().unwrap() as f64;
+    assert!(hi / lo < 1.15, "spread {lo}..{hi}");
+}
+
+/// The banking knee: once 2B ≥ R, more banks buy BRAM, not speed
+/// (paper: "Limitations of Excessive Banking").
+#[test]
+fn excessive_banking_wastes_bram() {
+    let mk = |banks: u32| {
+        GruAccel::new(GruAccelConfig {
+            unroll: 16,
+            banks,
+            dataflow: true,
+            ddr_spill: false,
+            ..GruAccelConfig::base()
+        })
+        .report()
+    };
+    let at_knee = mk(8); // 2B = 16 = R
+    let beyond = mk(64);
+    assert_eq!(at_knee.worst_stage_ii, 1);
+    assert_eq!(beyond.worst_stage_ii, 1);
+    assert!(beyond.interval >= at_knee.interval.saturating_sub(2));
+    assert!(
+        beyond.resources.bram18 > 2 * at_knee.resources.bram18,
+        "bram {} vs {}",
+        beyond.resources.bram18,
+        at_knee.resources.bram18
+    );
+}
+
+/// LTC solver-depth sensitivity: interval grows linearly with unfold depth
+/// (the cost MERINDA removes is proportional to N).
+#[test]
+fn ltc_interval_linear_in_solver_depth() {
+    let mk = |steps: u32| {
+        let mut c = LtcAccelConfig::base();
+        c.solver_steps = steps;
+        LtcAccel::new(c).report().interval
+    };
+    let i2 = mk(2);
+    let i4 = mk(4);
+    let i8 = mk(8);
+    let r1 = i4 as f64 / i2 as f64;
+    let r2 = i8 as f64 / i4 as f64;
+    assert!((r1 - 2.0).abs() < 0.15, "r1={r1}");
+    assert!((r2 - 2.0).abs() < 0.15, "r2={r2}");
+}
+
+/// Device fit: the shipping configs obey the PYNQ-Z2 capacity story —
+/// concurrent fits, BRAM-optimal exceeds it (as in the paper, where the
+/// 276k-LUT row is a synthesis estimate beyond the 7020).
+#[test]
+fn device_capacity_story() {
+    let dev = Device::pynq_z2();
+    let conc = GruAccel::new(GruAccelConfig::concurrent()).report();
+    assert!(dev.fits(&conc.resources), "{}", conc.resources);
+    let bank = GruAccel::new(GruAccelConfig::bram_optimal()).report();
+    assert!(
+        !dev.fits(&bank.resources) || dev.utilization(&bank.resources) > 0.8,
+        "banked design should stress the device: {}",
+        bank.resources
+    );
+}
+
+/// Functional equivalence across the whole simulator path: quantized
+/// accelerator ≈ f32 reference ≈ (via integration.rs) the lowered HLO.
+#[test]
+fn functional_consistency_fixed_vs_float() {
+    use merinda::mr::gru::{GruCell, GruParams};
+    use merinda::util::Prng;
+    let mut rng = Prng::new(1234);
+    let cfg = GruAccelConfig::concurrent();
+    let params = GruParams::random(cfg.input, cfg.hidden, &mut rng, 0.3);
+    let accel = GruAccel::new(cfg);
+    for seq in [1usize, 8, 64] {
+        let xs = rng.normal_vec_f32(seq * accel.cfg.input, 0.8);
+        let fixed = accel.forward_fixed(&params, &xs, seq);
+        let float = GruCell::new(params.clone()).run(&xs, seq);
+        let err = fixed
+            .iter()
+            .zip(&float)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 0.12, "seq={seq} err={err}");
+    }
+}

@@ -1,0 +1,92 @@
+//! Integration tests over the AOT bridge: artifacts must exist
+//! (`make artifacts`) — these tests verify that the jax-lowered HLO and the
+//! native Rust implementations agree, which is the cross-layer correctness
+//! signal for the whole stack.
+
+use merinda::mr::gru::{GruCell, GruParams};
+use merinda::runtime::Runtime;
+use merinda::util::stats::max_abs_diff_f32;
+use merinda::util::Prng;
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::new(artifact_dir()).expect("artifacts missing — run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_lists_entries() {
+    let rt = runtime();
+    for name in [
+        "gru_cell",
+        "quantize_q8_16",
+        "merinda_forward",
+        "merinda_loss",
+        "merinda_train_step",
+        "ltc_forward",
+        "rk4_rollout",
+    ] {
+        assert!(rt.manifest.entry(name).is_ok(), "missing entry {name}");
+    }
+    assert_eq!(rt.manifest.dims.xdim, 3);
+    assert_eq!(rt.manifest.dims.plib, 15);
+}
+
+#[test]
+fn gru_cell_hlo_matches_native_rust() {
+    let rt = runtime();
+    let exe = rt.load("gru_cell").unwrap();
+    let dims = &rt.manifest.dims;
+    let (b, i, h) = (dims.batch, dims.xdim + dims.udim, dims.hid);
+
+    let mut rng = Prng::new(1234);
+    let x = rng.normal_vec_f32(b * i, 1.0);
+    let hs = rng.normal_vec_f32(b * h, 1.0);
+    let params = GruParams::random(i, h, &mut rng, 0.3);
+
+    let out = exe
+        .run_f32(&[&x, &hs, &params.w, &params.u, &params.b])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), b * h);
+
+    // Native Rust GRU on the same data.
+    let cell = GruCell::new(params);
+    let mut native = vec![0.0f32; b * h];
+    for bi in 0..b {
+        let hn = cell.step(&x[bi * i..(bi + 1) * i], &hs[bi * h..(bi + 1) * h]);
+        native[bi * h..(bi + 1) * h].copy_from_slice(&hn);
+    }
+    let diff = max_abs_diff_f32(&out[0], &native);
+    assert!(diff < 1e-4, "HLO vs native GRU diff {diff}");
+}
+
+#[test]
+fn quantize_hlo_matches_fixedpoint_model() {
+    let rt = runtime();
+    let exe = rt.load("quantize_q8_16").unwrap();
+    let spec = &exe.spec.args[0];
+    let n = spec.elements();
+    let mut rng = Prng::new(7);
+    let x: Vec<f32> = (0..n).map(|_| rng.uniform_f32(-200.0, 200.0)).collect();
+    let out = exe.run_f32(&[&x]).unwrap();
+
+    let fmt = merinda::fpga::fixedpoint::FixedFormat::new(16, 8);
+    let native: Vec<f32> = x.iter().map(|&v| fmt.quantize_f32(v)).collect();
+    let diff = max_abs_diff_f32(&out[0], &native);
+    assert!(diff == 0.0, "quantize mismatch: {diff}");
+}
+
+#[test]
+fn run_f32_rejects_bad_shapes() {
+    let rt = runtime();
+    let exe = rt.load("gru_cell").unwrap();
+    let bad = vec![0.0f32; 3];
+    assert!(exe.run_f32(&[&bad]).is_err()); // wrong arg count
+    let args: Vec<Vec<f32>> = exe.spec.args.iter().map(|a| vec![0.0; a.elements()]).collect();
+    let mut refs: Vec<&[f32]> = args.iter().map(|v| v.as_slice()).collect();
+    refs[0] = &bad; // wrong element count
+    assert!(exe.run_f32(&refs).is_err());
+}

@@ -1,0 +1,296 @@
+//! Property-based tests (in-tree driver; proptest is unavailable offline).
+//!
+//! Each property runs against `CASES` randomized instances from a seeded
+//! generator; on failure the panic message carries the case seed so the
+//! instance can be replayed deterministically.
+
+use merinda::fpga::bram::{BankedArray, Partition};
+use merinda::fpga::fixedpoint::FixedFormat;
+use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use merinda::fpga::pipeline::{Pipeline, Stage};
+use merinda::mr::gru::{GruCell, GruParams};
+use merinda::mr::library::{library_size, PolyLibrary};
+use merinda::mr::ridge::ridge;
+use merinda::util::Prng;
+
+const CASES: u64 = 64;
+
+/// Paper §5.3.1: II == ⌈R / 2B⌉ for any reads/banks, and banking never
+/// hurts.
+#[test]
+fn prop_ii_law_exact_and_monotone() {
+    let mut rng = Prng::new(0xA11);
+    for case in 0..CASES {
+        let reads = 1 + rng.below(64) as u32;
+        let banks = 1 + rng.below(16) as u32;
+        let arr = BankedArray::new("w", 4096, 16).partitioned(Partition::Cyclic(banks));
+        let ii = arr.ii_for_reads(reads);
+        assert_eq!(ii, reads.div_ceil(2 * banks).max(1), "case {case}");
+        let arr2 = BankedArray::new("w", 4096, 16).partitioned(Partition::Cyclic(banks * 2));
+        assert!(arr2.ii_for_reads(reads) <= ii, "case {case}: banking hurt");
+    }
+}
+
+/// II == 1 ⟺ 2B ≥ R (the paper's port-matching condition).
+#[test]
+fn prop_ii_one_iff_ports_match() {
+    let mut rng = Prng::new(0xA12);
+    for case in 0..CASES {
+        let reads = 1 + rng.below(64) as u32;
+        let banks = 1 + rng.below(16) as u32;
+        let arr = BankedArray::new("w", 4096, 16).partitioned(Partition::Cyclic(banks));
+        let ii = arr.ii_for_reads(reads);
+        assert_eq!(ii == 1, 2 * banks >= reads, "case {case}: R={reads} B={banks}");
+    }
+}
+
+/// Cycle-accurate arbitration never reports fewer cycles than the II law
+/// predicts for the same accesses.
+#[test]
+fn prop_arbitration_lower_bounded_by_law() {
+    let mut rng = Prng::new(0xA13);
+    for case in 0..CASES {
+        let banks = 1 + rng.below(8) as u32;
+        let n = 1 + rng.below(32);
+        let arr = BankedArray::new("w", 1024, 16).partitioned(Partition::Cyclic(banks));
+        let idx: Vec<u64> = (0..n).map(|_| rng.below(1024) as u64).collect();
+        let unique: std::collections::BTreeSet<u64> = idx.iter().copied().collect();
+        let cycles = arr.cycles_for_accesses(&idx);
+        let law = (unique.len() as u32).div_ceil(2 * banks);
+        assert!(cycles >= law, "case {case}: cycles={cycles} law={law}");
+    }
+}
+
+/// Fixed-point round trip: |q(x) − x| ≤ ½ LSB inside range; q idempotent.
+#[test]
+fn prop_fixedpoint_roundtrip_and_idempotence() {
+    let mut rng = Prng::new(0xB22);
+    for case in 0..CASES {
+        let word = 8 + rng.below(9) as u32; // 8..16
+        let frac = rng.below(word as usize - 1) as u32;
+        let fmt = FixedFormat::new(word, frac);
+        for _ in 0..50 {
+            let x = rng.uniform_in(fmt.min_value(), fmt.max_value());
+            let q = fmt.quantize(x);
+            assert!(
+                (q - x).abs() <= fmt.resolution() / 2.0 + 1e-12,
+                "case {case}: fmt={fmt:?} x={x} q={q}"
+            );
+            assert_eq!(fmt.quantize(q), q, "case {case}: not idempotent");
+        }
+        // Saturation outside range.
+        assert_eq!(fmt.quantize(fmt.max_value() * 3.0), fmt.max_value());
+    }
+}
+
+/// GRU state started from 0 is bounded by 1 in max-norm forever
+/// (convex blend of tanh output and previous state).
+#[test]
+fn prop_gru_state_bounded() {
+    let mut rng = Prng::new(0xC33);
+    for case in 0..24 {
+        let i = 1 + rng.below(6);
+        let h = 1 + rng.below(24);
+        let cell = GruCell::new(GruParams::random(i, h, &mut rng, 1.0));
+        let mut state = vec![0.0f32; h];
+        for _ in 0..64 {
+            let x = rng.normal_vec_f32(i, 3.0);
+            state = cell.step(&x, &state);
+            assert!(
+                state.iter().all(|v| v.abs() <= 1.0 && v.is_finite()),
+                "case {case}: {state:?}"
+            );
+        }
+    }
+}
+
+/// Library size always matches the binomial formula, and every term
+/// evaluates to a finite product of its inputs.
+#[test]
+fn prop_library_size_and_eval() {
+    let mut rng = Prng::new(0xD44);
+    for case in 0..32 {
+        let x = 1 + rng.below(4);
+        let u = rng.below(3);
+        let m = 1 + rng.below(3) as u32;
+        let lib = PolyLibrary::new(x, u, m);
+        assert_eq!(lib.len(), library_size(x + u, m), "case {case}");
+        let xs: Vec<f64> = (0..x).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let us: Vec<f64> = (0..u).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let f = lib.eval(&xs, &us);
+        assert!(f.iter().all(|v| v.is_finite()));
+        assert_eq!(f[0], 1.0, "leading term must be the constant");
+    }
+}
+
+/// Ridge regression residual is orthogonal-ish: increasing λ never
+/// increases the weight norm.
+#[test]
+fn prop_ridge_weight_norm_monotone_in_lambda() {
+    let mut rng = Prng::new(0xE55);
+    for case in 0..24 {
+        let rows = 30 + rng.below(50);
+        let cols = 2 + rng.below(6);
+        let mut x = vec![0.0; rows * cols];
+        let mut y = vec![0.0; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                x[r * cols + c] = rng.normal();
+            }
+            y[r] = rng.normal();
+        }
+        let norm = |l: f64| -> f64 {
+            ridge(&x, &y, rows, cols, l)
+                .unwrap()
+                .iter()
+                .map(|w| w * w)
+                .sum()
+        };
+        let n0 = norm(1e-6);
+        let n1 = norm(1.0);
+        let n2 = norm(100.0);
+        assert!(n1 <= n0 * (1.0 + 1e-9), "case {case}");
+        assert!(n2 <= n1 * (1.0 + 1e-9), "case {case}");
+    }
+}
+
+/// DATAFLOW pipeline: simulated total cycles within a small constant of
+/// the closed form for random stage graphs with deep FIFOs; interval
+/// equals max II.
+#[test]
+fn prop_pipeline_sim_matches_closed_form() {
+    let mut rng = Prng::new(0xF66);
+    for case in 0..32 {
+        let n_stages = 2 + rng.below(5);
+        let stages: Vec<Stage> = (0..n_stages)
+            .map(|i| {
+                Stage::new(
+                    format!("s{i}"),
+                    1 + rng.below(6) as u32,
+                    1 + rng.below(20) as u32,
+                )
+            })
+            .collect();
+        let p = Pipeline::new(stages);
+        let items = 1 + rng.below(40) as u64;
+        let a = p.analyze(items);
+        let s = p.simulate(items);
+        let skew = 2 * n_stages as i64 + 4;
+        assert!(
+            (s.total_cycles as i64 - a.total_cycles as i64).abs() <= skew,
+            "case {case}: sim={s:?} ana={a:?}"
+        );
+    }
+}
+
+/// Dataflow is never slower than sequential execution of the same stages.
+#[test]
+fn prop_dataflow_dominates_sequential() {
+    let mut rng = Prng::new(0x177);
+    for case in 0..CASES {
+        let stages: Vec<Stage> = (0..2 + rng.below(4))
+            .map(|i| {
+                Stage::new(
+                    format!("s{i}"),
+                    1 + rng.below(8) as u32,
+                    1 + rng.below(30) as u32,
+                )
+            })
+            .collect();
+        let p = Pipeline::new(stages);
+        let items = 2 + rng.below(50) as u64;
+        assert!(
+            p.analyze(items).total_cycles <= p.analyze_sequential(items).total_cycles,
+            "case {case}"
+        );
+    }
+}
+
+/// Accelerator monotonicity: more unroll (with matched banking) never
+/// increases the interval; more banking never increases the worst II.
+#[test]
+fn prop_accel_monotone_in_parallelism() {
+    let mut rng = Prng::new(0x288);
+    for case in 0..24 {
+        let u = [4u32, 8, 16, 32][rng.below(4)];
+        let cfg_small = GruAccelConfig {
+            unroll: u,
+            banks: u / 2,
+            dataflow: true,
+            ddr_spill: false,
+            ..GruAccelConfig::base()
+        };
+        let cfg_big = GruAccelConfig {
+            unroll: u * 2,
+            banks: u,
+            ..cfg_small.clone()
+        };
+        let small = GruAccel::new(cfg_small).report();
+        let big = GruAccel::new(cfg_big).report();
+        assert!(
+            big.interval <= small.interval,
+            "case {case}: unroll {u}->{} interval {}->{}",
+            u * 2,
+            small.interval,
+            big.interval
+        );
+        assert!(big.resources.dsp >= small.resources.dsp, "case {case}");
+    }
+}
+
+/// Quantized GRU tracks the f32 GRU within a format-dependent bound that
+/// shrinks as fractional bits grow.
+#[test]
+fn prop_quantized_gru_error_scales_with_format() {
+    let mut rng = Prng::new(0x399);
+    for case in 0..8 {
+        let params = GruParams::random(4, 16, &mut rng, 0.3);
+        let xs = rng.normal_vec_f32(24 * 4, 0.8);
+        let float = GruCell::new(params.clone()).run(&xs, 24);
+        let err_for = |frac: u32| -> f32 {
+            let mut cfg = GruAccelConfig::concurrent();
+            cfg.act_fmt = FixedFormat::new(16, frac);
+            cfg.weight_fmt = FixedFormat::new(16, frac);
+            GruAccel::new(cfg)
+                .forward_fixed(&params, &xs, 24)
+                .iter()
+                .zip(&float)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max)
+        };
+        let coarse = err_for(4);
+        let fine = err_for(12);
+        assert!(
+            fine <= coarse + 1e-6,
+            "case {case}: fine {fine} > coarse {coarse}"
+        );
+        assert!(fine < 0.05, "case {case}: fine format too lossy: {fine}");
+    }
+}
+
+/// The batcher's padding is always shape-exact and preserves real rows.
+#[test]
+fn prop_pad_rows_preserves_prefix() {
+    use merinda::coordinator::PendingBatch;
+    use merinda::coordinator::BatcherConfig;
+    let mut rng = Prng::new(0x4AA);
+    for case in 0..CASES {
+        let row = 1 + rng.below(16);
+        let batch = 1 + rng.below(8);
+        let rows = 1 + rng.below(batch);
+        let data: Vec<f32> = (0..rows * row).map(|i| i as f32).collect();
+        let (padded, real) = merinda::coordinator::pad_rows_for_tests(data.clone(), row, batch);
+        assert_eq!(real, rows, "case {case}");
+        assert_eq!(padded.len(), batch * row, "case {case}");
+        assert_eq!(&padded[..rows * row], &data[..], "case {case}");
+        // Also sanity-check PendingBatch FIFO behaviour.
+        let mut pb = PendingBatch::new(BatcherConfig {
+            batch,
+            max_wait: std::time::Duration::from_secs(1),
+        });
+        for i in 0..rows {
+            pb.push(i);
+        }
+        assert_eq!(pb.take(), (0..rows).collect::<Vec<_>>());
+    }
+}

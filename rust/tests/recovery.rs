@@ -1,0 +1,124 @@
+//! End-to-end recovery integration tests (need `make artifacts`).
+//!
+//! These exercise the full three-layer path: synthetic system → PJRT
+//! neural-flow training → sparse polish → recovered equations, plus the
+//! classical baselines on every Table 6 system.
+
+use merinda::mr::recover::{
+    recover_emily, recover_merinda, recover_pinn_sr, recover_sindy, MerindaOpts,
+};
+use merinda::mr::train::TrainOpts;
+use merinda::runtime::Runtime;
+use merinda::systems::{table6_systems, CaseStudy, LotkaVolterra, Pathogen};
+use merinda::util::Prng;
+
+fn runtime() -> Runtime {
+    Runtime::new(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn merinda_recovers_lotka_volterra_exactly() {
+    let rt = runtime();
+    let tr = LotkaVolterra::default().generate(1500, 0.01, &mut Prng::new(42));
+    let rec = recover_merinda(
+        &rt,
+        &tr,
+        MerindaOpts {
+            train: TrainOpts {
+                steps: 60,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let truth = LotkaVolterra::default().true_coeffs().unwrap();
+    let cmse = merinda::mr::loss::coefficient_mse(&rec.model.coeffs, &truth);
+    assert!(cmse < 1e-2, "coefficient mse {cmse}");
+    assert_eq!(rec.model.nnz(), 4, "wrong sparsity: {:?}", rec.model.coeffs);
+}
+
+#[test]
+fn merinda_recovers_pathogen_structure() {
+    let rt = runtime();
+    let tr = Pathogen::default().generate(1500, 0.01, &mut Prng::new(9));
+    let rec = recover_merinda(
+        &rt,
+        &tr,
+        MerindaOpts {
+            train: TrainOpts {
+                steps: 60,
+                seed: 9,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(rec.recon_mse < 0.5, "reconstruction mse {}", rec.recon_mse);
+}
+
+#[test]
+fn all_methods_finite_on_all_table6_systems() {
+    // Every (method × system) pair must terminate with a finite error.
+    let mut rng = Prng::new(3);
+    for sys in table6_systems() {
+        let dt = if sys.name() == "Chaotic Lorenz" { 0.004 } else { 0.01 };
+        let tr = sys.generate(800, dt, &mut rng);
+        for rec in [
+            recover_sindy(&tr).unwrap(),
+            recover_pinn_sr(&tr).unwrap(),
+            recover_emily(&tr).unwrap(),
+        ] {
+            assert!(
+                rec.recon_mse.is_finite(),
+                "{} on {} diverged",
+                rec.method,
+                sys.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn training_loss_decreases_on_aid() {
+    let rt = runtime();
+    let rep = merinda::report::experiments::aid_train_demo(&rt, 40, 5).unwrap();
+    let first = rep.losses.first().unwrap().1;
+    let last = rep.final_loss;
+    assert!(
+        last < first,
+        "loss did not decrease: {first} -> {last} ({:?})",
+        rep.losses
+    );
+}
+
+#[test]
+fn pjrt_backend_service_round_trip() {
+    use merinda::coordinator::{PjrtBackend, RecoveryRequest, Service, ServiceConfig};
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let svc = Service::start(ServiceConfig::default(), move || {
+        PjrtBackend::new(dir, None, 1).unwrap()
+    });
+    let mut rng = Prng::new(5);
+    let rxs: Vec<_> = (0..9) // more than one batch
+        .map(|i| {
+            svc.submit(RecoveryRequest {
+                id: i,
+                y: rng.normal_vec_f32(64 * 3, 0.5),
+                u: rng.normal_vec_f32(64, 0.5),
+            })
+            .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.theta.len(), 45);
+        assert!(r.theta.iter().all(|v| v.is_finite()));
+    }
+    let s = svc.metrics.snapshot();
+    assert_eq!(s.completed, 9);
+    assert!(s.batches >= 2);
+}

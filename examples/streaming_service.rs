@@ -37,6 +37,7 @@ fn main() {
                     max_wait: Duration::from_millis(4),
                 },
                 queue_depth: 128,
+                workers: 2,
             },
             || PjrtBackend::new("artifacts", None, 1).expect("run `make artifacts` first"),
         ));

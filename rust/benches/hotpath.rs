@@ -1,56 +1,203 @@
 //! Bench: hot-path microbenchmarks for the §Perf optimization pass.
 //!
-//! Measures the three layers' Rust-side hot loops:
-//!   L3a  FPGA simulator structural evaluation (report generation)
-//!   L3b  fixed-point functional GRU forward (datapath emulation)
-//!   L3c  native f32 GRU step / sequence
-//!   L3d  polynomial library design-matrix build (SINDy hot loop)
-//!   L3e  PJRT train step + forward (whole-stack request path)
-//!   L3f  coordinator round trip with mock backend (routing overhead)
+//! Every tracked hot loop is measured twice — the scalar/naive reference
+//! (the pre-optimization implementation, kept as the numerical oracle) and
+//! the batched/tiled path built on `mr::linalg` — and the pair is recorded
+//! with its speedup in `BENCH_hotpath.json` so the perf trajectory is
+//! tracked across PRs. Rows:
+//!
+//!   fpga report              structural evaluation (report generation)
+//!   fixed-point GRU forward  datapath emulation (shared linalg kernels)
+//!   native f32 GRU forward   scalar per-window loop vs batch-major GEMMs
+//!   native BPTT step         allocating reference vs scratch + packed
+//!   poly design matrix       Term::eval exponent walk vs incremental chain
+//!   coordinator round trip   1 executor worker vs 4 sharded workers
+//!   PJRT rows                whole-stack request path (needs artifacts)
 
-use merinda::coordinator::{MockBackend, RecoveryRequest, Service, ServiceConfig};
+use std::time::Duration;
+
+use merinda::coordinator::{
+    BatcherConfig, MockBackend, RecoveryRequest, Service, ServiceConfig,
+};
 use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use merinda::mr::backprop::GruBptt;
 use merinda::mr::gru::{GruCell, GruParams};
 use merinda::mr::library::PolyLibrary;
-use merinda::util::bench::Bench;
+use merinda::mr::linalg::{gru_forward_batch, PackedGru};
+use merinda::util::bench::{Bench, BenchJson, Measurement};
 use merinda::util::Prng;
+
+fn print_us(m: &Measurement) {
+    println!("{:<52} {:>10.3} µs", m.name, m.mean_us());
+}
 
 fn main() {
     let b = Bench::new(3, 20);
     let mut rng = Prng::new(1);
+    let mut report = BenchJson::new("hotpath");
 
-    // L3a: structural report.
+    // FPGA structural report.
     let m = b.run("fpga report (concurrent cfg)", || {
         GruAccel::new(GruAccelConfig::concurrent()).report()
     });
-    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
+    print_us(&m);
+    report.record(&m);
 
-    // L3b: fixed-point functional forward, 64 steps.
+    // Fixed-point functional forward, 64 steps.
     let cfg = GruAccelConfig::concurrent();
-    let params = GruParams::random(cfg.input, cfg.hidden, &mut rng, 0.3);
-    let xs = rng.normal_vec_f32(64 * cfg.input, 0.8);
+    let fx_params = GruParams::random(cfg.input, cfg.hidden, &mut rng, 0.3);
+    let fx_xs = rng.normal_vec_f32(64 * cfg.input, 0.8);
     let accel = GruAccel::new(cfg);
     let m = b.run("fixed-point GRU forward (64 steps)", || {
-        accel.forward_fixed(&params, &xs, 64)
+        accel.forward_fixed(&fx_params, &fx_xs, 64)
     });
-    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
+    print_us(&m);
+    report.record(&m);
 
-    // L3c: native f32 GRU sequence (the runtime reference).
+    // Native f32 GRU forward: 8 windows × 64 steps at serving dims
+    // (I=4, H=32) — scalar per-window chain vs one batch-major pass.
+    let (batch, seq, i_sz, hid) = (8usize, 64usize, 4usize, 32usize);
+    let params = GruParams::random(i_sz, hid, &mut rng, 0.3);
+    let xs = rng.normal_vec_f32(batch * seq * i_sz, 0.8);
     let cell = GruCell::new(params.clone());
-    let m = b.run("native f32 GRU forward (64 steps)", || cell.run(&xs, 64));
-    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
-
-    // L3d: library design matrix, 2000 samples x 15 terms.
-    let lib = PolyLibrary::new(3, 1, 2);
-    let n = 2000;
-    let xsd: Vec<f64> = (0..n * 3).map(|i| (i as f64 * 0.01).sin()).collect();
-    let usd: Vec<f64> = (0..n).map(|i| (i as f64 * 0.02).cos()).collect();
-    let m = b.run("poly design matrix (2000x15)", || {
-        lib.design_matrix(&xsd, &usd, n)
+    let base = b.run("native f32 GRU forward (8x64, scalar loop)", || {
+        let mut out = Vec::with_capacity(batch * hid);
+        for w in 0..batch {
+            out.extend(cell.run(&xs[w * seq * i_sz..(w + 1) * seq * i_sz], seq));
+        }
+        out
     });
-    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
+    let packed = PackedGru::new(&params);
+    let opt = b.run("native f32 GRU forward (8x64, batched GEMM)", || {
+        gru_forward_batch(&packed, &xs, seq, batch)
+    });
+    print_us(&base);
+    print_us(&opt);
+    report.record(&base);
+    report.record(&opt);
+    let s = report.record_speedup("native_gru_forward", &base, &opt);
+    println!("{:<52} {:>9.2}x", "  -> batched speedup", s);
 
-    // L3e: PJRT train step + forward (needs artifacts).
+    // Native BPTT step (the FPGA-side training path, paper §6.2).
+    {
+        let mut rng2 = Prng::new(9);
+        let params = GruParams::random(4, 32, &mut rng2, 0.3);
+        let net = GruBptt::new(params, 3, &mut rng2);
+        let seq = 64;
+        let xs = rng2.normal_vec_f32(seq * 4, 0.8);
+        let target = rng2.normal_vec_f32(3, 0.5);
+        let base = b.run("native BPTT step (seq 64, H=32, reference)", || {
+            net.loss_and_grads_reference(&xs, seq, &target)
+        });
+        let opt = b.run("native BPTT step (seq 64, H=32, optimized)", || {
+            net.loss_and_grads(&xs, seq, &target)
+        });
+        print_us(&base);
+        print_us(&opt);
+        report.record(&base);
+        report.record(&opt);
+        let s = report.record_speedup("native_bptt_step", &base, &opt);
+        println!("{:<52} {:>9.2}x", "  -> optimized speedup", s);
+        let t = GruAccel::new(GruAccelConfig::concurrent()).training_report();
+        println!(
+            "{:<52} {:>10} cycles (interval)",
+            "fpga training step (concurrent cfg)", t.interval
+        );
+    }
+
+    // Library design matrix: 2000 samples, order-3 over (3 states, 1
+    // input) = 35 terms. Baseline walks every exponent per term
+    // (Term::eval); optimized reuses lower-degree products (one multiply
+    // per term).
+    {
+        let lib = PolyLibrary::new(3, 1, 3);
+        let n = 2000;
+        let p = lib.len();
+        let xsd: Vec<f64> = (0..n * 3).map(|i| (i as f64 * 0.01).sin()).collect();
+        let usd: Vec<f64> = (0..n).map(|i| (i as f64 * 0.02).cos()).collect();
+        let base = b.run("poly design matrix (2000x35, Term::eval)", || {
+            let mut m = vec![0.0f64; n * p];
+            for s in 0..n {
+                lib.eval_into(
+                    &xsd[s * 3..(s + 1) * 3],
+                    &usd[s..s + 1],
+                    &mut m[s * p..(s + 1) * p],
+                );
+            }
+            m
+        });
+        let opt = b.run("poly design matrix (2000x35, incremental)", || {
+            lib.design_matrix(&xsd, &usd, n)
+        });
+        print_us(&base);
+        print_us(&opt);
+        report.record(&base);
+        report.record(&opt);
+        let s = report.record_speedup("poly_design_matrix", &base, &opt);
+        println!("{:<52} {:>9.2}x", "  -> incremental speedup", s);
+
+        // Order-2 continuity row (the Table-6 shape).
+        let lib2 = PolyLibrary::new(3, 1, 2);
+        let m = b.run("poly design matrix (2000x15, incremental)", || {
+            lib2.design_matrix(&xsd, &usd, n)
+        });
+        print_us(&m);
+        report.record(&m);
+    }
+
+    // Coordinator: routing overhead (zero-cost backend) and sharded
+    // throughput under a service-time-bound backend.
+    {
+        let svc = Service::start(ServiceConfig::default(), MockBackend::default);
+        let mk = |i: u64| RecoveryRequest {
+            id: i,
+            y: vec![0.1; 64 * 3],
+            u: vec![0.0; 64],
+        };
+        let m = b.run("coordinator round trip (batch of 8, mock)", || {
+            let rxs: Vec<_> = (0..8).map(|i| svc.submit(mk(i)).unwrap()).collect();
+            for rx in rxs {
+                rx.recv().unwrap();
+            }
+        });
+        print_us(&m);
+        report.record(&m);
+        drop(svc);
+
+        // Sharded executors: 64 requests against a 2 ms/batch backend.
+        let slow = Bench::new(2, 10);
+        let run_load = |workers: usize, label: &str| -> Measurement {
+            let cfg = ServiceConfig {
+                workers,
+                batcher: BatcherConfig {
+                    batch: 8,
+                    max_wait: Duration::from_millis(2),
+                },
+                queue_depth: 256,
+            };
+            let svc = Service::start(cfg, || MockBackend {
+                delay: Duration::from_millis(2),
+                ..Default::default()
+            });
+            let m = slow.run(label, || {
+                let rxs: Vec<_> = (0..64).map(|i| svc.submit(mk(i)).unwrap()).collect();
+                for rx in rxs {
+                    rx.recv().unwrap();
+                }
+            });
+            m
+        };
+        let base = run_load(1, "coordinator 64 reqs, 2ms batches, 1 worker");
+        let opt = run_load(4, "coordinator 64 reqs, 2ms batches, 4 workers");
+        print_us(&base);
+        print_us(&opt);
+        report.record(&base);
+        report.record(&opt);
+        let s = report.record_speedup("coordinator_round_trip", &base, &opt);
+        println!("{:<52} {:>9.2}x", "  -> sharded speedup", s);
+    }
+
+    // PJRT train step + forward (needs artifacts).
     if let Ok(rt) = merinda::runtime::Runtime::new("artifacts") {
         use merinda::mr::train::{sample_batch, PjrtTrainer};
         let dims = rt.manifest.dims.clone();
@@ -61,7 +208,8 @@ fn main() {
         let m = b.run("PJRT merinda_train_step", || {
             trainer.train_step(&batch, 0.1, 1e-3, 1e-3).unwrap()
         });
-        println!("{:<44} {:>10.3} ms", m.name, m.mean_ms());
+        println!("{:<52} {:>10.3} ms", m.name, m.mean_ms());
+        report.record(&m);
 
         let exe = rt.load("merinda_forward").unwrap();
         let tr = PjrtTrainer::new(&rt, 6).unwrap();
@@ -71,43 +219,14 @@ fn main() {
         let m = b.run("PJRT merinda_forward (batch 8)", || {
             exe.run_f32(&args).unwrap()
         });
-        println!("{:<44} {:>10.3} ms", m.name, m.mean_ms());
+        println!("{:<52} {:>10.3} ms", m.name, m.mean_ms());
+        report.record(&m);
     } else {
         println!("(artifacts not built; PJRT rows skipped)");
     }
 
-    // L3g: native BPTT step (the FPGA-side training path, paper §6.2).
-    {
-        use merinda::mr::backprop::GruBptt;
-        let mut rng2 = Prng::new(9);
-        let params = GruParams::random(4, 16, &mut rng2, 0.3);
-        let mut net = GruBptt::new(params, 3, &mut rng2);
-        let seq = 64;
-        let xs = rng2.normal_vec_f32(seq * 4, 0.8);
-        let target = rng2.normal_vec_f32(3, 0.5);
-        let m = b.run("native BPTT step (seq 64, H=16)", || {
-            net.sgd_step(&[(&xs[..], &target[..])], seq, 0.01)
-        });
-        println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
-        let t = GruAccel::new(GruAccelConfig::concurrent()).training_report();
-        println!(
-            "{:<44} {:>10} cycles (interval)",
-            "fpga training step (concurrent cfg)", t.interval
-        );
+    match report.write("BENCH_hotpath.json") {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
     }
-
-    // L3f: coordinator routing overhead with a zero-cost backend.
-    let svc = Service::start(ServiceConfig::default(), MockBackend::default);
-    let mk = |i: u64| RecoveryRequest {
-        id: i,
-        y: vec![0.1; 64 * 3],
-        u: vec![0.0; 64],
-    };
-    let m = b.run("coordinator round trip (batch of 8, mock)", || {
-        let rxs: Vec<_> = (0..8).map(|i| svc.submit(mk(i)).unwrap()).collect();
-        for rx in rxs {
-            rx.recv().unwrap();
-        }
-    });
-    println!("{:<44} {:>10.3} µs", m.name, m.mean_us());
 }

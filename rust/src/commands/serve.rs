@@ -1,8 +1,13 @@
 //! `merinda serve --requests N` — streaming recovery service demo.
+//!
+//! `--backend pjrt|native|auto` picks the executor: the PJRT artifact
+//! path, the artifact-free native batched-GRU backend, or (default)
+//! PJRT with automatic fallback to native when artifacts are missing.
+//! `--workers N` shards the executor across N backend-owning threads.
 
 use std::time::Instant;
 
-use merinda::coordinator::{PjrtBackend, RecoveryRequest, Service, ServiceConfig};
+use merinda::coordinator::{NativeBackend, PjrtBackend, RecoveryRequest, Service, ServiceConfig};
 use merinda::systems::{Aid, CaseStudy};
 use merinda::util::cli::Args;
 use merinda::util::{Prng, Result};
@@ -10,7 +15,9 @@ use merinda::util::{Prng, Result};
 pub fn run(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 64);
     let seed = args.get_u64("seed", 42);
+    let workers = args.get_usize("workers", 1);
     let dir = args.get_or("artifacts", "artifacts");
+    let backend = args.get_or("backend", "auto");
 
     // Pre-generate request windows from AID traces.
     let mut rng = Prng::new(seed);
@@ -32,10 +39,29 @@ pub fn run(args: &Args) -> Result<()> {
         })
         .collect();
 
-    println!("starting service (PJRT backend, artifacts={dir})...");
-    let svc = Service::start(ServiceConfig::default(), move || {
-        PjrtBackend::new(dir, None, seed).expect("backend init (run `make artifacts`)")
-    });
+    // Auto mode probes Runtime::new rather than just checking for
+    // artifacts/: it must also detect a PJRT-less build (the stub `xla`
+    // dependency), where the manifest loads fine but no client can be
+    // created. Costs one throwaway client init at startup; compilation is
+    // lazy, so no modules are compiled by the probe.
+    let use_native = match backend.as_str() {
+        "native" => true,
+        "pjrt" => false,
+        _ => merinda::runtime::Runtime::new(&dir).is_err(),
+    };
+    let cfg = ServiceConfig {
+        workers,
+        ..Default::default()
+    };
+    let svc = if use_native {
+        println!("starting service (native backend, {workers} worker(s), no artifacts needed)...");
+        Service::start(cfg, move || NativeBackend::new(8, seed))
+    } else {
+        println!("starting service (PJRT backend, {workers} worker(s), artifacts={dir})...");
+        Service::start(cfg, move || {
+            PjrtBackend::new(&dir, None, seed).expect("backend init (run `make artifacts`)")
+        })
+    };
 
     let t0 = Instant::now();
     let rxs: Vec<_> = windows

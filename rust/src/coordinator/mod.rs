@@ -1,19 +1,22 @@
 //! L3 streaming coordinator.
 //!
 //! The serving side of MERINDA: clients submit (Y, U) windows; a dynamic
-//! batcher groups them into the fixed-batch artifacts the AOT model was
-//! lowered with (padding partial batches), a single engine thread owns the
-//! PJRT runtime and executes, and results fan back out to callers.
-//! Backpressure is a bounded submission queue. Python never runs here.
+//! batcher groups them into fixed-size model batches (padding partial
+//! batches), N sharded executor workers each own a backend instance
+//! (PJRT runtime or the artifact-free native batched-GRU backend) and
+//! execute, and results fan back out to callers. Backpressure is a
+//! bounded submission queue. Python never runs here.
 //!
 //! The design is deliberately the vLLM-router shape scaled to this paper:
 //! request router → batcher → executor → response demux, with metrics.
 
 mod batcher;
 mod metrics;
+mod native;
 mod service;
 
 pub use batcher::{BatcherConfig, PendingBatch};
+pub use native::NativeBackend;
 
 /// Re-export of the padding helper for out-of-crate property tests.
 pub fn pad_rows_for_tests(data: Vec<f32>, row_len: usize, batch: usize) -> (Vec<f32>, usize) {

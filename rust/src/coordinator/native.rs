@@ -1,0 +1,202 @@
+//! Native in-process inference backend: batched GRU + dense head.
+//!
+//! Serves recovery requests through the batch-major native GRU forward
+//! (`mr::linalg::gru_forward_batch`) and the batched ReLU dense head —
+//! the same math as the AOT `merinda_forward` artifact (L2
+//! `python/compile/model.py`: GRU over `[Y | U]`, final hidden state,
+//! two-layer ReLU MLP to the Θ estimates), but with **no PJRT runtime and
+//! no `artifacts/` directory required**. This is the serving path for
+//! environments where only the Rust binary ships.
+
+use crate::mr::dense::DenseHead;
+use crate::mr::gru::{GruCell, GruParams};
+use crate::mr::linalg::{dense_head_batch, gru_forward_batch, PackedGru};
+use crate::util::{Error, Prng, Result};
+
+use super::service::InferenceBackend;
+
+/// Canonical model dimensions (mirrors `python/compile/model.py`).
+pub const NATIVE_XDIM: usize = 3;
+pub const NATIVE_UDIM: usize = 1;
+pub const NATIVE_PLIB: usize = 15;
+pub const NATIVE_HID: usize = 32;
+pub const NATIVE_DENSE: usize = 48;
+pub const NATIVE_SEQ: usize = 64;
+
+/// A self-contained native serving backend (clonable: each service worker
+/// can hold its own copy).
+#[derive(Clone, Debug)]
+pub struct NativeBackend {
+    batch: usize,
+    seq: usize,
+    xdim: usize,
+    udim: usize,
+    /// Scalar-layout GRU parameters (the reference weights).
+    pub gru: GruParams,
+    /// Serving-layout packed weights.
+    packed: PackedGru,
+    /// Θ head (hidden → dense → xdim·plib).
+    pub head: DenseHead,
+}
+
+impl NativeBackend {
+    /// Random-weight backend at the canonical dims (useful for serving
+    /// smoke tests and benches; real deployments use `from_parts` with
+    /// trained weights).
+    pub fn new(batch: usize, seed: u64) -> NativeBackend {
+        let mut rng = Prng::new(seed);
+        let io = NATIVE_XDIM + NATIVE_UDIM;
+        let gru = GruParams::random(io, NATIVE_HID, &mut rng, 0.3);
+        let head = DenseHead::random(
+            NATIVE_HID,
+            NATIVE_DENSE,
+            NATIVE_XDIM * NATIVE_PLIB,
+            &mut rng,
+        );
+        NativeBackend::from_parts(gru, head, batch, NATIVE_SEQ, NATIVE_XDIM, NATIVE_UDIM)
+            .expect("canonical dims are consistent")
+    }
+
+    /// Build from explicit weights (e.g. converted from a trained
+    /// `TrainState`).
+    pub fn from_parts(
+        gru: GruParams,
+        head: DenseHead,
+        batch: usize,
+        seq: usize,
+        xdim: usize,
+        udim: usize,
+    ) -> Result<NativeBackend> {
+        if gru.input != xdim + udim {
+            return Err(Error::Shape {
+                expected: format!("gru input {}", xdim + udim),
+                got: format!("{}", gru.input),
+            });
+        }
+        if head.input != gru.hidden {
+            return Err(Error::Shape {
+                expected: format!("head input {}", gru.hidden),
+                got: format!("{}", head.input),
+            });
+        }
+        if batch == 0 || seq == 0 {
+            return Err(Error::config("batch and seq must be nonzero"));
+        }
+        let packed = PackedGru::new(&gru);
+        Ok(NativeBackend {
+            batch,
+            seq,
+            xdim,
+            udim,
+            gru,
+            packed,
+            head,
+        })
+    }
+
+    /// Scalar reference for a single window (the test oracle): one-sample
+    /// GRU chain + scalar dense head on the interleaved `[y_t | u_t]` rows.
+    pub fn forward_window_scalar(&self, y: &[f32], u: &[f32]) -> Vec<f32> {
+        assert_eq!(y.len(), self.seq * self.xdim);
+        assert_eq!(u.len(), self.seq * self.udim);
+        let i_sz = self.xdim + self.udim;
+        let mut yu = vec![0.0f32; self.seq * i_sz];
+        for t in 0..self.seq {
+            yu[t * i_sz..t * i_sz + self.xdim]
+                .copy_from_slice(&y[t * self.xdim..(t + 1) * self.xdim]);
+            yu[t * i_sz + self.xdim..(t + 1) * i_sz]
+                .copy_from_slice(&u[t * self.udim..(t + 1) * self.udim]);
+        }
+        let h = GruCell::new(self.gru.clone()).run(&yu, self.seq);
+        self.head.forward(&h)
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn theta_len(&self) -> usize {
+        self.head.output
+    }
+
+    fn window_y_len(&self) -> usize {
+        self.seq * self.xdim
+    }
+
+    fn window_u_len(&self) -> usize {
+        self.seq * self.udim
+    }
+
+    fn forward_batch(&self, y: &[f32], u: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch;
+        if y.len() != b * self.window_y_len() {
+            return Err(Error::Shape {
+                expected: format!("{} y values", b * self.window_y_len()),
+                got: format!("{}", y.len()),
+            });
+        }
+        if u.len() != b * self.window_u_len() {
+            return Err(Error::Shape {
+                expected: format!("{} u values", b * self.window_u_len()),
+                got: format!("{}", u.len()),
+            });
+        }
+        // Interleave to batch-major (B, K, XDIM+UDIM).
+        let i_sz = self.xdim + self.udim;
+        let mut yu = vec![0.0f32; b * self.seq * i_sz];
+        for w in 0..b {
+            for t in 0..self.seq {
+                let dst = (w * self.seq + t) * i_sz;
+                let sy = (w * self.seq + t) * self.xdim;
+                let su = (w * self.seq + t) * self.udim;
+                yu[dst..dst + self.xdim].copy_from_slice(&y[sy..sy + self.xdim]);
+                yu[dst + self.xdim..dst + i_sz].copy_from_slice(&u[su..su + self.udim]);
+            }
+        }
+        let h = gru_forward_batch(&self.packed, &yu, self.seq, b);
+        Ok(dense_head_batch(&self.head, &h, b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batched_forward_matches_scalar_oracle() {
+        let be = NativeBackend::new(3, 42);
+        let mut rng = Prng::new(7);
+        let y = rng.normal_vec_f32(3 * 64 * 3, 0.5);
+        let u = rng.normal_vec_f32(3 * 64, 0.5);
+        let out = be.forward_batch(&y, &u).unwrap();
+        assert_eq!(out.len(), 3 * 45);
+        for w in 0..3 {
+            let want = be.forward_window_scalar(
+                &y[w * 64 * 3..(w + 1) * 64 * 3],
+                &u[w * 64..(w + 1) * 64],
+            );
+            for (a, b) in out[w * 45..(w + 1) * 45].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-6, "window {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let be = NativeBackend::new(2, 1);
+        assert!(be.forward_batch(&[0.0; 3], &[0.0; 128]).is_err());
+        assert_eq!(be.theta_len(), 45);
+        assert_eq!(be.window_y_len(), 192);
+        assert_eq!(be.window_u_len(), 64);
+    }
+
+    #[test]
+    fn from_parts_rejects_mismatched_dims() {
+        let mut rng = Prng::new(2);
+        let gru = GruParams::random(4, 8, &mut rng, 0.3);
+        let head = DenseHead::random(9, 4, 6, &mut rng); // wrong input
+        assert!(NativeBackend::from_parts(gru, head, 2, 16, 3, 1).is_err());
+    }
+}

@@ -1,12 +1,18 @@
-//! The recovery service: request router → dynamic batcher → executor.
+//! The recovery service: request router → shared queue → N sharded
+//! executor workers.
 //!
-//! One executor thread owns the inference backend (the PJRT client is not
-//! Send, so it is constructed *inside* the thread); clients talk over
-//! bounded channels. `MockBackend` lets the full pipeline be tested
-//! without artifacts.
+//! Each worker thread owns its own inference backend instance (the PJRT
+//! client is not Send, so backends are constructed *inside* the worker
+//! threads by a shared factory); clients submit into one bounded queue and
+//! workers drain it into per-worker dynamic batches. Throughput scales
+//! with `ServiceConfig::workers` while FIFO pop order keeps per-stream
+//! latency fair. `MockBackend` lets the full pipeline be tested without
+//! artifacts; `NativeBackend` (see `coordinator::native`) serves real
+//! recovery traffic with no artifacts at all.
 
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::{Error, Result};
@@ -158,6 +164,10 @@ pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     /// Bounded submission queue depth (backpressure).
     pub queue_depth: usize,
+    /// Number of sharded executor workers, each owning one backend
+    /// instance. Throughput scales with workers as long as the backend is
+    /// the bottleneck.
+    pub workers: usize,
 }
 
 impl Default for ServiceConfig {
@@ -165,6 +175,7 @@ impl Default for ServiceConfig {
         ServiceConfig {
             batcher: BatcherConfig::default(),
             queue_depth: 256,
+            workers: 1,
         }
     }
 }
@@ -175,34 +186,55 @@ struct InFlight {
     resp: SyncSender<RecoveryResponse>,
 }
 
-enum Msg {
-    Request(InFlight),
-    Shutdown,
+/// Shared submission queue: bounded FIFO + shutdown flag.
+struct QueueState {
+    items: VecDeque<InFlight>,
+    open: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
 }
 
 /// A running recovery service.
 pub struct Service {
-    tx: SyncSender<Msg>,
+    shared: Arc<Shared>,
+    queue_depth: usize,
     pub metrics: Arc<Metrics>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Service {
-    /// Start the service with a backend factory. The factory runs on the
-    /// executor thread, so non-Send backends (PJRT) are fine.
+    /// Start the service with a backend factory. The factory runs on each
+    /// executor thread, so non-Send backends (PJRT) are fine; it must be
+    /// callable once per worker.
     pub fn start<B, F>(cfg: ServiceConfig, make_backend: F) -> Service
     where
-        B: InferenceBackend,
-        F: FnOnce() -> B + Send + 'static,
+        B: InferenceBackend + 'static,
+        F: Fn() -> B + Send + Sync + 'static,
     {
-        let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                open: true,
+            }),
+            cv: Condvar::new(),
+        });
         let metrics = Arc::new(Metrics::new());
-        let m = metrics.clone();
-        let worker = std::thread::spawn(move || executor_loop(rx, cfg, make_backend(), m));
+        let factory = Arc::new(make_backend);
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let sh = shared.clone();
+            let m = metrics.clone();
+            let f = factory.clone();
+            workers.push(std::thread::spawn(move || worker_loop(sh, cfg, f(), m)));
+        }
         Service {
-            tx,
+            shared,
+            queue_depth: cfg.queue_depth,
             metrics,
-            worker: Some(worker),
+            workers,
         }
     }
 
@@ -211,16 +243,20 @@ impl Service {
     pub fn submit(&self, req: RecoveryRequest) -> Result<Receiver<RecoveryResponse>> {
         let (rtx, rrx) = sync_channel(1);
         self.metrics.on_submit();
-        self.tx
-            .try_send(Msg::Request(InFlight {
+        {
+            let mut q = self.shared.state.lock().unwrap();
+            if !q.open || q.items.len() >= self.queue_depth {
+                drop(q);
+                self.metrics.on_reject();
+                return Err(Error::config("service queue full (backpressure)"));
+            }
+            q.items.push_back(InFlight {
                 req,
                 t0: Instant::now(),
                 resp: rtx,
-            }))
-            .map_err(|_| {
-                self.metrics.on_reject();
-                Error::config("service queue full (backpressure)")
-            })?;
+            });
+        }
+        self.shared.cv.notify_one();
         Ok(rrx)
     }
 
@@ -234,52 +270,75 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
+        {
+            let mut q = self.shared.state.lock().unwrap();
+            q.open = false;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn executor_loop<B: InferenceBackend>(
-    rx: Receiver<Msg>,
+fn worker_loop<B: InferenceBackend>(
+    shared: Arc<Shared>,
     cfg: ServiceConfig,
     backend: B,
     metrics: Arc<Metrics>,
 ) {
+    let cap = backend.batch().max(1);
     let mut pending: PendingBatch<InFlight> = PendingBatch::new(BatcherConfig {
-        batch: backend.batch(),
+        batch: cap,
         ..cfg.batcher
     });
     loop {
-        let now = Instant::now();
-        let timeout = pending
-            .time_to_deadline(now)
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Request(inflight)) => {
-                let full = pending.push(inflight);
-                if full {
-                    flush(&backend, &mut pending, &metrics);
+        let mut flush_now = false;
+        let mut exit = false;
+        {
+            let mut q = shared.state.lock().unwrap();
+            loop {
+                // Drain queued requests into the local batch.
+                while pending.len() < cap {
+                    match q.items.pop_front() {
+                        Some(it) => {
+                            pending.push(it);
+                        }
+                        None => break,
+                    }
+                }
+                if pending.len() >= cap {
+                    flush_now = true;
+                    break;
+                }
+                if !q.open {
+                    // Shutting down: flush what we hold, exit once drained.
+                    exit = q.items.is_empty();
+                    flush_now = !pending.is_empty();
+                    if exit || flush_now {
+                        break;
+                    }
+                }
+                let now = Instant::now();
+                if pending.is_empty() {
+                    q = shared.cv.wait(q).unwrap();
+                } else if pending.should_flush(now) {
+                    flush_now = true;
+                    break;
+                } else {
+                    let timeout = pending
+                        .time_to_deadline(now)
+                        .unwrap_or(Duration::from_millis(50));
+                    let (guard, _) = shared.cv.wait_timeout(q, timeout).unwrap();
+                    q = guard;
                 }
             }
-            Ok(Msg::Shutdown) => {
-                if !pending.is_empty() {
-                    flush(&backend, &mut pending, &metrics);
-                }
-                return;
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                if pending.should_flush(Instant::now()) {
-                    flush(&backend, &mut pending, &metrics);
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                if !pending.is_empty() {
-                    flush(&backend, &mut pending, &metrics);
-                }
-                return;
-            }
+        }
+        if flush_now {
+            flush(&backend, &mut pending, &metrics);
+        }
+        if exit && pending.is_empty() {
+            return;
         }
     }
 }
@@ -398,6 +457,7 @@ mod tests {
                 batch: 1,
                 max_wait: Duration::from_millis(1),
             },
+            workers: 1,
         };
         let svc = Service::start(cfg, || MockBackend {
             batch: 1,
@@ -448,5 +508,61 @@ mod tests {
         assert_eq!(s.completed, 100);
         assert!(s.batches >= 13); // ≥ ceil(100/8)
         assert!(s.latency.p50_ms <= s.latency.p99_ms);
+    }
+
+    #[test]
+    fn multi_worker_completes_all_requests() {
+        let cfg = ServiceConfig {
+            workers: 4,
+            ..Default::default()
+        };
+        let svc = Service::start(cfg, MockBackend::default);
+        let rxs: Vec<_> = (0..64)
+            .map(|i| svc.submit(mk_req(i, i as f32)).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.id, i as u64, "response routed to wrong caller");
+            assert!((r.theta[0] - i as f32).abs() < 1e-6);
+        }
+        let s = svc.metrics.snapshot();
+        assert_eq!(s.completed, 64);
+        assert!(s.batches >= 8);
+    }
+
+    #[test]
+    fn multi_worker_overlaps_slow_batches() {
+        // With a sleep-bound backend, 4 workers should overlap batches.
+        // The assertion is deliberately weak (strictly faster, not ≥2×)
+        // to stay robust on loaded CI machines; the quantitative speedup
+        // is tracked by benches/hotpath.rs (`coordinator_round_trip`).
+        let run = |workers: usize| -> Duration {
+            let cfg = ServiceConfig {
+                workers,
+                batcher: BatcherConfig {
+                    batch: 8,
+                    max_wait: Duration::from_millis(2),
+                },
+                ..Default::default()
+            };
+            let svc = Service::start(cfg, || MockBackend {
+                delay: Duration::from_millis(10),
+                ..Default::default()
+            });
+            let t0 = Instant::now();
+            let rxs: Vec<_> = (0..32)
+                .map(|i| svc.submit(mk_req(i, 0.0)).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap();
+            }
+            t0.elapsed()
+        };
+        let serial = run(1);
+        let sharded = run(4);
+        assert!(
+            sharded < serial,
+            "sharded {sharded:?} not faster than serial {serial:?}"
+        );
     }
 }

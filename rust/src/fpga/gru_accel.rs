@@ -23,6 +23,7 @@ use super::lut::{Activation, ActivationTable};
 use super::power::{Activity, PowerModel};
 use super::resources::{Device, Resources};
 use crate::mr::gru::GruParams;
+use crate::mr::linalg;
 
 /// Stage-to-fabric mapping, Table 7's configuration axis.
 pub type StageMap = [Binding; 4];
@@ -428,21 +429,12 @@ impl GruAccel {
                 *xd = af.quantize_f32(xv);
             }
 
-            // Stage 1: gate affines with quantized accumulate.
+            // Stage 1: gate affines with quantized accumulate (shared
+            // linalg kernels; same ascending-k order as the f32 reference).
             gx.copy_from_slice(&qb);
-            for (ii, &xv) in x.iter().enumerate() {
-                let row = &qw[ii * th..(ii + 1) * th];
-                for (g, &w) in gx.iter_mut().zip(row) {
-                    *g += xv * w;
-                }
-            }
+            linalg::matvec_acc(i_sz, th, &x, &qw, th, &mut gx);
             gh.fill(0.0);
-            for (hi, &hv) in h.iter().enumerate() {
-                let row = &qu[hi * th..hi * th + 2 * hid];
-                for (g, &u) in gh.iter_mut().zip(row) {
-                    *g += hv * u;
-                }
-            }
+            linalg::matvec_acc(hid, 2 * hid, &h, &qu, th, &mut gh);
             for v in gx.iter_mut() {
                 *v = af.quantize_f32(*v);
             }
@@ -461,10 +453,7 @@ impl GruAccel {
             for hi in 0..hid {
                 let rh = af.quantize_f32(r[hi] * h[hi]);
                 if rh != 0.0 {
-                    let row = &qu[hi * th + 2 * hid..(hi + 1) * th];
-                    for (c, &u) in cand.iter_mut().zip(row) {
-                        *c += rh * u;
-                    }
+                    linalg::axpy(&mut cand, rh, &qu[hi * th + 2 * hid..(hi + 1) * th]);
                 }
             }
             for j in 0..hid {

@@ -26,7 +26,7 @@ fn main() {
         &argv,
         &[
             "system", "method", "steps", "config", "requests", "seed", "samples", "dt", "lr",
-            "artifacts", "out",
+            "artifacts", "out", "workers", "backend",
         ],
     );
     let result = match args.subcommand() {

@@ -7,10 +7,21 @@
 //! packed-gate GRU plus a linear head, gradient-checked against finite
 //! differences and used by `GruAccel::training_report` to cost the
 //! backward dataflow.
+//!
+//! Two implementations live here (EXPERIMENTS.md §Perf):
+//! * [`GruBptt::loss_and_grads`] — the optimized path: one reusable
+//!   [`BpttScratch`] holds all per-step activations in flat seq-major
+//!   buffers, weights stream through the [`linalg::PackedGru`] layout and
+//!   every inner loop is a `linalg` slice kernel. No per-step allocation.
+//! * [`GruBptt::loss_and_grads_reference`] — the original allocation-heavy
+//!   per-step implementation, kept verbatim as the numerical oracle for
+//!   `rust/tests/batched_equivalence.rs` and as the bench baseline in
+//!   `benches/hotpath.rs`.
 
 use crate::util::Prng;
 
 use super::gru::{sigmoid, GruParams};
+use super::linalg::{self, PackedGru};
 
 /// Gradients w.r.t. the GRU parameters (same packing as `GruParams`).
 #[derive(Clone, Debug)]
@@ -40,7 +51,7 @@ impl GruGrads {
     }
 }
 
-/// Per-step cached activations for the backward pass.
+/// Per-step cached activations for the reference backward pass.
 struct StepCache {
     x: Vec<f32>,
     h_prev: Vec<f32>,
@@ -49,6 +60,67 @@ struct StepCache {
     n: Vec<f32>,
     /// pre-activation of the candidate gate (needed for tanh').
     rh: Vec<f32>,
+}
+
+/// Flat seq-major scratch for the optimized BPTT path; allocate once and
+/// reuse across calls (`sgd_step` reuses it across the whole batch).
+#[derive(Clone, Debug)]
+pub struct BpttScratch {
+    hidden: usize,
+    seq_cap: usize,
+    /// (seq+1, H) hidden states including h0 = 0.
+    h: Vec<f32>,
+    /// (seq, H) cached gate activations.
+    r: Vec<f32>,
+    z: Vec<f32>,
+    n: Vec<f32>,
+    rh: Vec<f32>,
+    /// (3H) / (2H) / (H) per-step temporaries.
+    gx: Vec<f32>,
+    gh: Vec<f32>,
+    cand: Vec<f32>,
+    /// (H) backward temporaries.
+    dh: Vec<f32>,
+    dh_prev: Vec<f32>,
+    dn: Vec<f32>,
+    dz: Vec<f32>,
+    dr: Vec<f32>,
+    dan: Vec<f32>,
+    dar: Vec<f32>,
+    daz: Vec<f32>,
+    drh: Vec<f32>,
+}
+
+impl BpttScratch {
+    pub fn new(hidden: usize, seq: usize) -> BpttScratch {
+        BpttScratch {
+            hidden,
+            seq_cap: seq,
+            h: vec![0.0; (seq + 1) * hidden],
+            r: vec![0.0; seq * hidden],
+            z: vec![0.0; seq * hidden],
+            n: vec![0.0; seq * hidden],
+            rh: vec![0.0; seq * hidden],
+            gx: vec![0.0; 3 * hidden],
+            gh: vec![0.0; 2 * hidden],
+            cand: vec![0.0; hidden],
+            dh: vec![0.0; hidden],
+            dh_prev: vec![0.0; hidden],
+            dn: vec![0.0; hidden],
+            dz: vec![0.0; hidden],
+            dr: vec![0.0; hidden],
+            dan: vec![0.0; hidden],
+            dar: vec![0.0; hidden],
+            daz: vec![0.0; hidden],
+            drh: vec![0.0; hidden],
+        }
+    }
+
+    fn ensure(&mut self, hidden: usize, seq: usize) {
+        if self.hidden != hidden || self.seq_cap < seq {
+            *self = BpttScratch::new(hidden, seq.max(self.seq_cap));
+        }
+    }
 }
 
 /// BPTT engine for one GRU cell + linear head `y = h_K · Wo + bo`.
@@ -71,7 +143,7 @@ impl GruBptt {
         }
     }
 
-    /// Forward through the sequence, caching activations.
+    /// Forward through the sequence, caching activations (reference path).
     fn forward_cached(&self, xs: &[f32], seq: usize) -> (Vec<f32>, Vec<StepCache>) {
         let p = &self.params;
         let (i_sz, hid) = (p.input, p.hidden);
@@ -141,8 +213,167 @@ impl GruBptt {
 
     /// MSE loss + full gradients via BPTT for one (xs, target) sequence.
     ///
-    /// Returns (loss, param grads, head grads (wo, bo)).
+    /// Optimized path: zero per-step allocation, packed weights, slice
+    /// kernels. Returns (loss, param grads, head grads (wo, bo)).
     pub fn loss_and_grads(
+        &self,
+        xs: &[f32],
+        seq: usize,
+        target: &[f32],
+    ) -> (f64, GruGrads, Vec<f32>, Vec<f32>) {
+        let packed = PackedGru::new(&self.params);
+        let mut scratch = BpttScratch::new(self.params.hidden, seq);
+        let mut g = GruGrads::zeros(&self.params);
+        let mut dwo = vec![0.0f32; self.wo.len()];
+        let mut dbo = vec![0.0f32; self.bo.len()];
+        let loss = self.accumulate_loss_and_grads(
+            xs,
+            seq,
+            target,
+            &packed,
+            &mut scratch,
+            &mut g,
+            &mut dwo,
+            &mut dbo,
+        );
+        (loss, g, dwo, dbo)
+    }
+
+    /// One (xs, target) BPTT pass that *adds* its gradients into the given
+    /// accumulators; returns the sample loss. `sgd_step` calls this in a
+    /// loop with one shared scratch so batch gradient accumulation costs
+    /// no extra buffers at all.
+    #[allow(clippy::too_many_arguments)]
+    pub fn accumulate_loss_and_grads(
+        &self,
+        xs: &[f32],
+        seq: usize,
+        target: &[f32],
+        packed: &PackedGru,
+        s: &mut BpttScratch,
+        g: &mut GruGrads,
+        dwo: &mut [f32],
+        dbo: &mut [f32],
+    ) -> f64 {
+        let p = &self.params;
+        let (i_sz, hid, th, od) = (p.input, p.hidden, 3 * p.hidden, self.out_dim);
+        debug_assert_eq!(xs.len(), seq * i_sz);
+        debug_assert_eq!(target.len(), od);
+        s.ensure(hid, seq);
+
+        // ---- Forward, caching r/z/n/rh and every hidden state. ----
+        s.h[..hid].fill(0.0);
+        for t in 0..seq {
+            let x = &xs[t * i_sz..(t + 1) * i_sz];
+            let gx = &mut s.gx;
+            gx.copy_from_slice(&packed.b);
+            linalg::matvec_acc(i_sz, th, x, &packed.w, th, gx);
+            let gh = &mut s.gh;
+            gh.fill(0.0);
+            linalg::matvec_acc(hid, 2 * hid, &s.h[t * hid..(t + 1) * hid], &packed.u_rz, 2 * hid, gh);
+            for j in 0..hid {
+                let r = sigmoid(gx[j] + gh[j]);
+                s.r[t * hid + j] = r;
+                s.z[t * hid + j] = sigmoid(gx[hid + j] + gh[hid + j]);
+                s.rh[t * hid + j] = r * s.h[t * hid + j];
+            }
+            let cand = &mut s.cand;
+            cand.fill(0.0);
+            for hi in 0..hid {
+                let v = s.rh[t * hid + hi];
+                if v != 0.0 {
+                    linalg::axpy(cand, v, &packed.u_n[hi * hid..(hi + 1) * hid]);
+                }
+            }
+            for j in 0..hid {
+                let n = (gx[2 * hid + j] + cand[j]).tanh();
+                s.n[t * hid + j] = n;
+                let z = s.z[t * hid + j];
+                let hp = s.h[t * hid + j];
+                s.h[(t + 1) * hid + j] = (1.0 - z) * n + z * hp;
+            }
+        }
+
+        // ---- Loss + head gradients. ----
+        let h_final = &s.h[seq * hid..(seq + 1) * hid];
+        let y = self.head(h_final);
+        let mut loss = 0.0f64;
+        let mut dy = vec![0.0f32; od];
+        for k in 0..od {
+            let e = y[k] - target[k];
+            loss += (e as f64) * (e as f64);
+            dy[k] = 2.0 * e / od as f32;
+        }
+        loss /= od as f64;
+
+        s.dh.fill(0.0);
+        for j in 0..hid {
+            for k in 0..od {
+                dwo[j * od + k] += h_final[j] * dy[k];
+                s.dh[j] += self.wo[j * od + k] * dy[k];
+            }
+        }
+        for (b, &d) in dbo.iter_mut().zip(&dy) {
+            *b += d;
+        }
+
+        // ---- BPTT. ----
+        for t in (0..seq).rev() {
+            let h_prev = &s.h[t * hid..(t + 1) * hid];
+            let r_t = &s.r[t * hid..(t + 1) * hid];
+            let z_t = &s.z[t * hid..(t + 1) * hid];
+            let n_t = &s.n[t * hid..(t + 1) * hid];
+            let rh_t = &s.rh[t * hid..(t + 1) * hid];
+
+            // h = (1-z) n + z h_prev; n = tanh(an).
+            for j in 0..hid {
+                let dh = s.dh[j];
+                s.dn[j] = dh * (1.0 - z_t[j]);
+                s.dz[j] = dh * (h_prev[j] - n_t[j]);
+                s.dh_prev[j] = dh * z_t[j];
+                s.dan[j] = s.dn[j] * (1.0 - n_t[j] * n_t[j]);
+            }
+            // Candidate recurrent term: weight grads + drh.
+            for hi in 0..hid {
+                let rv = rh_t[hi];
+                linalg::axpy(&mut g.u[hi * th + 2 * hid..(hi + 1) * th], rv, &s.dan);
+                s.drh[hi] = linalg::dot(&packed.u_n[hi * hid..(hi + 1) * hid], &s.dan);
+            }
+            // rh = r ∘ h_prev; gate pre-activations.
+            for j in 0..hid {
+                s.dr[j] = s.drh[j] * h_prev[j];
+                s.dh_prev[j] += s.drh[j] * r_t[j];
+                s.dar[j] = s.dr[j] * r_t[j] * (1.0 - r_t[j]);
+                s.daz[j] = s.dz[j] * z_t[j] * (1.0 - z_t[j]);
+            }
+            // Bias gradients.
+            linalg::axpy(&mut g.b[..hid], 1.0, &s.dar);
+            linalg::axpy(&mut g.b[hid..2 * hid], 1.0, &s.daz);
+            linalg::axpy(&mut g.b[2 * hid..], 1.0, &s.dan);
+            // Input weight gradients.
+            let x = &xs[t * i_sz..(t + 1) * i_sz];
+            for (ii, &xv) in x.iter().enumerate() {
+                linalg::axpy(&mut g.w[ii * th..ii * th + hid], xv, &s.dar);
+                linalg::axpy(&mut g.w[ii * th + hid..ii * th + 2 * hid], xv, &s.daz);
+                linalg::axpy(&mut g.w[ii * th + 2 * hid..(ii + 1) * th], xv, &s.dan);
+            }
+            // Recurrent r/z weight gradients + dh_prev backflow.
+            for hi in 0..hid {
+                let hv = h_prev[hi];
+                linalg::axpy(&mut g.u[hi * th..hi * th + hid], hv, &s.dar);
+                linalg::axpy(&mut g.u[hi * th + hid..hi * th + 2 * hid], hv, &s.daz);
+                let urow = &packed.u_rz[hi * 2 * hid..(hi + 1) * 2 * hid];
+                s.dh_prev[hi] +=
+                    linalg::dot(&urow[..hid], &s.dar) + linalg::dot(&urow[hid..], &s.daz);
+            }
+            std::mem::swap(&mut s.dh, &mut s.dh_prev);
+        }
+        loss
+    }
+
+    /// The original per-step allocating implementation, kept verbatim as
+    /// the numerical oracle for equivalence tests and the bench baseline.
+    pub fn loss_and_grads_reference(
         &self,
         xs: &[f32],
         seq: usize,
@@ -240,31 +471,26 @@ impl GruBptt {
     }
 
     /// One SGD step on a batch of (sequence, target) pairs; returns the
-    /// mean loss before the update.
+    /// mean loss before the update. Packs the weights and allocates the
+    /// scratch once for the whole batch.
     pub fn sgd_step(&mut self, batch: &[(&[f32], &[f32])], seq: usize, lr: f32) -> f64 {
-        let p = self.params.clone();
-        let mut g_acc = GruGrads::zeros(&p);
+        let packed = PackedGru::new(&self.params);
+        let mut scratch = BpttScratch::new(self.params.hidden, seq);
+        let mut g_acc = GruGrads::zeros(&self.params);
         let mut dwo_acc = vec![0.0f32; self.wo.len()];
         let mut dbo_acc = vec![0.0f32; self.bo.len()];
         let mut loss_acc = 0.0f64;
         for (xs, target) in batch {
-            let (loss, g, dwo, dbo) = self.loss_and_grads(xs, seq, target);
-            loss_acc += loss;
-            for (a, b) in g_acc.w.iter_mut().zip(&g.w) {
-                *a += b;
-            }
-            for (a, b) in g_acc.u.iter_mut().zip(&g.u) {
-                *a += b;
-            }
-            for (a, b) in g_acc.b.iter_mut().zip(&g.b) {
-                *a += b;
-            }
-            for (a, b) in dwo_acc.iter_mut().zip(&dwo) {
-                *a += b;
-            }
-            for (a, b) in dbo_acc.iter_mut().zip(&dbo) {
-                *a += b;
-            }
+            loss_acc += self.accumulate_loss_and_grads(
+                xs,
+                seq,
+                target,
+                &packed,
+                &mut scratch,
+                &mut g_acc,
+                &mut dwo_acc,
+                &mut dbo_acc,
+            );
         }
         let scale = lr / batch.len() as f32;
         for (w, g) in self.params.w.iter_mut().zip(&g_acc.w) {
@@ -360,6 +586,32 @@ mod tests {
         let minus = loss_with(&|n| n.bo[1] -= eps);
         let fd = (plus - minus) / (2.0 * eps as f64);
         assert!((fd - dbo[1] as f64).abs() < 2e-3 * (1.0 + fd.abs()));
+    }
+
+    /// The optimized path must agree with the reference oracle.
+    #[test]
+    fn optimized_matches_reference() {
+        let mut rng = Prng::new(21);
+        let params = GruParams::random(3, 10, &mut rng, 0.4);
+        let net = GruBptt::new(params, 3, &mut rng);
+        let xs = rng.normal_vec_f32(12 * 3, 0.8);
+        let target = rng.normal_vec_f32(3, 0.5);
+        let (l_opt, g_opt, dwo_opt, dbo_opt) = net.loss_and_grads(&xs, 12, &target);
+        let (l_ref, g_ref, dwo_ref, dbo_ref) = net.loss_and_grads_reference(&xs, 12, &target);
+        assert!((l_opt - l_ref).abs() <= 1e-6 * (1.0 + l_ref.abs()));
+        let close = |a: &[f32], b: &[f32], what: &str| {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-6 * (1.0 + y.abs()),
+                    "{what}[{i}]: {x} vs {y}"
+                );
+            }
+        };
+        close(&g_opt.w, &g_ref.w, "dW");
+        close(&g_opt.u, &g_ref.u, "dU");
+        close(&g_opt.b, &g_ref.b, "db");
+        close(&dwo_opt, &dwo_ref, "dWo");
+        close(&dbo_opt, &dbo_ref, "dbo");
     }
 
     /// SGD on a learnable toy task: predict the mean of the inputs.

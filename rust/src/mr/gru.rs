@@ -8,6 +8,8 @@
 
 use crate::util::Prng;
 
+use super::linalg;
+
 /// Packed GRU parameters.
 #[derive(Clone, Debug)]
 pub struct GruParams {
@@ -118,21 +120,11 @@ impl GruCell {
         // gx = x W + b over the packed 3H axis.
         let gx = &mut s.gx;
         gx.copy_from_slice(&p.b);
-        for (ii, &xv) in x.iter().enumerate() {
-            let row = &p.w[ii * th..(ii + 1) * th];
-            for (g, &wv) in gx.iter_mut().zip(row) {
-                *g += xv * wv;
-            }
-        }
-        // gh = h U over the r/z columns only (first 2H).
+        linalg::matvec_acc(i_sz, th, x, &p.w, th, gx);
+        // gh = h U over the r/z columns only (first 2H of each packed row).
         let gh = &mut s.gh;
         gh.fill(0.0);
-        for (hi, &hv) in h.iter().enumerate() {
-            let row = &p.u[hi * th..hi * th + 2 * hid];
-            for (g, &uv) in gh.iter_mut().zip(row) {
-                *g += hv * uv;
-            }
-        }
+        linalg::matvec_acc(hid, 2 * hid, h, &p.u, th, gh);
 
         let (r, z) = (&mut s.r, &mut s.z);
         for j in 0..hid {
@@ -146,10 +138,7 @@ impl GruCell {
         for hi in 0..hid {
             let rh = r[hi] * h[hi];
             if rh != 0.0 {
-                let row = &p.u[hi * th + 2 * hid..(hi + 1) * th];
-                for (c, &uv) in cand.iter_mut().zip(row) {
-                    *c += rh * uv;
-                }
+                linalg::axpy(cand, rh, &p.u[hi * th + 2 * hid..(hi + 1) * th]);
             }
         }
         for j in 0..hid {
@@ -174,13 +163,21 @@ impl GruCell {
     }
 
     /// Run a sequence returning every hidden state (K, H).
+    ///
+    /// Uses [`GruCell::step_into`] with one reused scratch like `run` does
+    /// (§Perf: the old per-step `step` wrapper re-allocated the scratch
+    /// buffers and an extra output vector on every time step).
     pub fn run_all(&self, xs: &[f32], seq: usize) -> Vec<Vec<f32>> {
         let i_sz = self.params.input;
-        let mut h = vec![0.0f32; self.params.hidden];
+        let hid = self.params.hidden;
+        let mut scratch = GruScratch::new(hid);
+        let mut h = vec![0.0f32; hid];
         let mut out = Vec::with_capacity(seq);
         for t in 0..seq {
-            h = self.step(&xs[t * i_sz..(t + 1) * i_sz], &h);
-            out.push(h.clone());
+            let mut next = vec![0.0f32; hid];
+            self.step_into(&xs[t * i_sz..(t + 1) * i_sz], &h, &mut next, &mut scratch);
+            h.copy_from_slice(&next);
+            out.push(next);
         }
         out
     }

@@ -56,6 +56,11 @@ pub struct PolyLibrary {
     pub udim: usize,
     pub order: u32,
     pub terms: Vec<Term>,
+    /// Incremental-evaluation chain: `chain[k] = (parent, var)` so that
+    /// `value[k] = value[parent] * v[var]` — every monomial is one multiply
+    /// on top of a lower-degree monomial already computed (graded order
+    /// guarantees `parent < k`). `chain[0]` is unused (the constant 1).
+    chain: Vec<(usize, usize)>,
 }
 
 /// Number of monomials in d variables up to degree M: C(M+d, d).
@@ -106,11 +111,33 @@ impl PolyLibrary {
             let mut exps = vec![0u32; dims];
             rec_exact(dims, deg, 0, &mut exps, &mut terms);
         }
+        // Build the incremental chain: drop one power of the first active
+        // variable; the remaining monomial has degree-1 less and therefore
+        // appears earlier in the graded enumeration.
+        let index: std::collections::HashMap<Vec<u32>, usize> = terms
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.exponents.clone(), i))
+            .collect();
+        let mut chain = vec![(0usize, 0usize); terms.len()];
+        for (k, t) in terms.iter().enumerate().skip(1) {
+            let var = t
+                .exponents
+                .iter()
+                .position(|&e| e > 0)
+                .expect("non-constant term has an active variable");
+            let mut pe = t.exponents.clone();
+            pe[var] -= 1;
+            let parent = *index.get(&pe).expect("graded order provides the parent");
+            debug_assert!(parent < k);
+            chain[k] = (parent, var);
+        }
         PolyLibrary {
             xdim,
             udim,
             order,
             terms,
+            chain,
         }
     }
 
@@ -142,47 +169,39 @@ impl PolyLibrary {
         out
     }
 
+    /// Evaluate all terms for one concatenated `[x | u]` sample through the
+    /// incremental chain: one multiply per monomial, reusing the
+    /// lower-degree product already in the row (EXPERIMENTS.md §Perf).
+    /// `Term::eval` walks every variable's exponent per term (~`dims`×
+    /// the work) and is kept as the reference oracle.
+    pub fn eval_chain_into(&self, v: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(v.len(), self.xdim + self.udim);
+        debug_assert_eq!(out.len(), self.terms.len());
+        out[0] = 1.0;
+        for k in 1..self.terms.len() {
+            let (parent, var) = self.chain[k];
+            out[k] = out[parent] * v[var];
+        }
+    }
+
     /// Build the (samples, terms) design matrix from trajectories.
     /// `xs`: (samples, xdim), `us`: (samples, udim) row-major.
     ///
-    /// Perf note (EXPERIMENTS.md §Perf): order-2 libraries (every system in
-    /// the paper) take a direct-product fast path — 1, v_i, v_i·v_j written
-    /// straight into the row — instead of the generic exponent-walk in
-    /// `Term::eval`, which costs ~3× more in this hot loop.
+    /// Perf note (EXPERIMENTS.md §Perf): rows are filled through
+    /// [`PolyLibrary::eval_chain_into`] — one multiply per term at any
+    /// order — instead of the generic exponent-walk in `Term::eval`, which
+    /// costs ~3× more in this hot loop (and more at higher orders).
     pub fn design_matrix(&self, xs: &[f64], us: &[f64], samples: usize) -> Vec<f64> {
         let p = self.terms.len();
         let mut m = vec![0.0; samples * p];
         let d = self.xdim + self.udim;
-        if self.order == 2 && p == 1 + d + d * (d + 1) / 2 {
-            let mut v = vec![0.0f64; d];
-            for s in 0..samples {
-                v[..self.xdim].copy_from_slice(&xs[s * self.xdim..(s + 1) * self.xdim]);
-                if self.udim > 0 {
-                    v[self.xdim..].copy_from_slice(&us[s * self.udim..(s + 1) * self.udim]);
-                }
-                let row = &mut m[s * p..(s + 1) * p];
-                row[0] = 1.0;
-                row[1..1 + d].copy_from_slice(&v);
-                let mut k = 1 + d;
-                for i in 0..d {
-                    let vi = v[i];
-                    for &vj in v.iter().skip(i) {
-                        row[k] = vi * vj;
-                        k += 1;
-                    }
-                }
-            }
-            return m;
-        }
-        let empty: [f64; 0] = [];
+        let mut v = vec![0.0f64; d];
         for s in 0..samples {
-            let x = &xs[s * self.xdim..(s + 1) * self.xdim];
-            let u = if self.udim > 0 {
-                &us[s * self.udim..(s + 1) * self.udim]
-            } else {
-                &empty[..]
-            };
-            self.eval_into(x, u, &mut m[s * p..(s + 1) * p]);
+            v[..self.xdim].copy_from_slice(&xs[s * self.xdim..(s + 1) * self.xdim]);
+            if self.udim > 0 {
+                v[self.xdim..].copy_from_slice(&us[s * self.udim..(s + 1) * self.udim]);
+            }
+            self.eval_chain_into(&v, &mut m[s * p..(s + 1) * p]);
         }
         m
     }
@@ -244,6 +263,40 @@ mod tests {
         assert_eq!(m.len(), 2 * p);
         assert_eq!(&m[0..p], lib.eval(&[1.0], &[0.5]).as_slice());
         assert_eq!(&m[p..2 * p], lib.eval(&[2.0], &[-1.0]).as_slice());
+    }
+
+    #[test]
+    fn chain_is_well_formed() {
+        for (x, u, m) in [(3, 1, 2), (2, 0, 3), (4, 1, 3), (1, 0, 5)] {
+            let lib = PolyLibrary::new(x, u, m);
+            for (k, t) in lib.terms.iter().enumerate().skip(1) {
+                let (parent, var) = lib.chain[k];
+                assert!(parent < k, "x={x} u={u} m={m} k={k}");
+                assert!(t.exponents[var] > 0);
+                let mut pe = t.exponents.clone();
+                pe[var] -= 1;
+                assert_eq!(lib.terms[parent].exponents, pe);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_eval_matches_term_eval_higher_orders() {
+        for (x, u, m) in [(3, 1, 3), (2, 1, 4), (4, 0, 3)] {
+            let lib = PolyLibrary::new(x, u, m);
+            let d = x + u;
+            let v: Vec<f64> = (0..d).map(|i| 0.3 + 0.7 * i as f64).collect();
+            let mut fast = vec![0.0; lib.len()];
+            lib.eval_chain_into(&v, &mut fast);
+            for (k, t) in lib.terms.iter().enumerate() {
+                let naive = t.eval(&v);
+                assert!(
+                    (fast[k] - naive).abs() <= 1e-12 * (1.0 + naive.abs()),
+                    "x={x} u={u} m={m} term {k}: {} vs {naive}",
+                    fast[k]
+                );
+            }
+        }
     }
 
     #[test]

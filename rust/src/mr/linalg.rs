@@ -1,0 +1,469 @@
+//! Shared batched/tiled compute kernels for the MR hot path.
+//!
+//! Every hot loop in the native MR stack — the GRU forward (`mr::gru`),
+//! BPTT (`mr::backprop`), the LTC solver (`mr::ltc`), the fixed-point
+//! datapath emulation (`fpga::gru_accel`) and the native serving backend
+//! (`coordinator::NativeBackend`) — bottoms out in the primitives here:
+//!
+//! * [`axpy`] / [`dot`] / [`matvec_acc`] — contiguous-slice kernels whose
+//!   inner loops rustc autovectorizes (no index arithmetic, no bounds
+//!   checks in the hot loop).
+//! * [`gemm`] — a blocked row-major `C += A·B` with explicit leading
+//!   dimensions and a fixed-width ([`LANES`]) accumulator micro-kernel, so
+//!   the j-loop maps onto SIMD lanes while the k-loop stays in ascending
+//!   order (bitwise-identical accumulation to the scalar axpy form).
+//! * [`PackedGru`] — the transposed-packed GRU weight layout: `W (I, 3H)`
+//!   stays as lowered, `U (H, 3H)` is split into contiguous `U_rz (H, 2H)`
+//!   and `U_n (H, H)` blocks so the two recurrent matvecs/GEMMs stream
+//!   dense rows instead of strided slices of the packed `3H` axis.
+//! * [`gru_step_batch`] / [`gru_forward_batch`] — the batch-major GRU:
+//!   B concurrent windows advance one time step as three GEMMs
+//!   (`(B,I)·(I,3H)`, `(B,H)·(H,2H)`, `(B,H)·(H,H)`) instead of B scalar
+//!   matvec chains. Tensors are batch-major row-major: `x (B, I)`,
+//!   `h (B, H)`, sequences `(B, K, I)` flattened.
+//!
+//! Accumulation-order contract: [`axpy`], [`matvec_acc`] and [`gemm`]
+//! add contributions in ascending-k order, matching the scalar reference
+//! implementations, so forward paths built on them agree bitwise with the
+//! scalar code (up to `±0.0` normalization). [`dot`] is exempt — its
+//! 4-lane accumulators reassociate the sum, so paths using it (the
+//! optimized BPTT backward) agree with the reference only to ~1e-6
+//! relative tolerance. `rust/tests/batched_equivalence.rs` pins both.
+
+use super::dense::DenseHead;
+use super::gru::{sigmoid, GruParams};
+
+/// SIMD-friendly accumulator width of the [`gemm`] micro-kernel.
+pub const LANES: usize = 8;
+
+/// `y += a · x` over equal-length slices.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// Dot product with 4 accumulator lanes (reassociates the sum; use only
+/// where tolerance-level agreement with the scalar order is acceptable).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let av = &a[c * 4..c * 4 + 4];
+        let bv = &b[c * 4..c * 4 + 4];
+        for l in 0..4 {
+            lanes[l] += av[l] * bv[l];
+        }
+    }
+    let mut acc = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for i in chunks * 4..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// `y (n) += x (k) · B (k×n)` where `B` is row-major with leading
+/// dimension `ldb` (so packed sub-blocks of wider matrices work too).
+/// Row-streaming axpy form: ascending-k accumulation.
+#[inline]
+pub fn matvec_acc(k: usize, n: usize, x: &[f32], b: &[f32], ldb: usize, y: &mut [f32]) {
+    debug_assert!(x.len() >= k);
+    debug_assert!(y.len() >= n);
+    debug_assert!(ldb >= n);
+    for (l, &xv) in x.iter().take(k).enumerate() {
+        axpy(&mut y[..n], xv, &b[l * ldb..l * ldb + n]);
+    }
+}
+
+/// Blocked row-major GEMM: `C (m×n) += A (m×k) · B (k×n)` with leading
+/// dimensions `lda`/`ldb`/`ldc`.
+///
+/// The micro-kernel holds a [`LANES`]-wide slice of the C row in a local
+/// fixed-size accumulator array across the whole k sweep, so rustc keeps
+/// it in vector registers; k stays ascending, preserving the scalar
+/// accumulation order bitwise.
+pub fn gemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert!(lda >= k && ldb >= n && ldc >= n);
+    debug_assert!(a.len() >= m.saturating_sub(1) * lda + k || m == 0);
+    debug_assert!(c.len() >= m.saturating_sub(1) * ldc + n || m == 0);
+    for i in 0..m {
+        let arow = &a[i * lda..i * lda + k];
+        let crow = &mut c[i * ldc..i * ldc + n];
+        let mut j = 0;
+        while j + LANES <= n {
+            let mut acc = [0.0f32; LANES];
+            acc.copy_from_slice(&crow[j..j + LANES]);
+            for (l, &av) in arow.iter().enumerate() {
+                let brow = &b[l * ldb + j..l * ldb + j + LANES];
+                for (accv, &bv) in acc.iter_mut().zip(brow) {
+                    *accv += av * bv;
+                }
+            }
+            crow[j..j + LANES].copy_from_slice(&acc);
+            j += LANES;
+        }
+        if j < n {
+            for (l, &av) in arow.iter().enumerate() {
+                let brow = &b[l * ldb..l * ldb + n];
+                for (cv, &bv) in crow[j..].iter_mut().zip(&brow[j..]) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// GRU weights in the transposed-packed serving layout.
+///
+/// `w`/`b` keep the lowered `(I, 3H)` / `(3H,)` packing (`[Wr | Wz | Wn]`);
+/// the recurrent matrix is re-packed once into contiguous `u_rz (H, 2H)`
+/// and `u_n (H, H)` blocks so the hot loops never stride across the packed
+/// `3H` axis.
+#[derive(Clone, Debug)]
+pub struct PackedGru {
+    pub input: usize,
+    pub hidden: usize,
+    /// (I, 3H) row-major input weights (as in [`GruParams`]).
+    pub w: Vec<f32>,
+    /// (3H,) biases.
+    pub b: Vec<f32>,
+    /// (H, 2H) row-major: the `[Ur | Uz]` columns of U, packed contiguous.
+    pub u_rz: Vec<f32>,
+    /// (H, H) row-major: the `Un` columns of U, packed contiguous.
+    pub u_n: Vec<f32>,
+}
+
+impl PackedGru {
+    pub fn new(p: &GruParams) -> PackedGru {
+        let (i_sz, hid) = (p.input, p.hidden);
+        let th = 3 * hid;
+        let mut u_rz = vec![0.0f32; hid * 2 * hid];
+        let mut u_n = vec![0.0f32; hid * hid];
+        for hi in 0..hid {
+            u_rz[hi * 2 * hid..(hi + 1) * 2 * hid]
+                .copy_from_slice(&p.u[hi * th..hi * th + 2 * hid]);
+            u_n[hi * hid..(hi + 1) * hid]
+                .copy_from_slice(&p.u[hi * th + 2 * hid..(hi + 1) * th]);
+        }
+        PackedGru {
+            input: i_sz,
+            hidden: hid,
+            w: p.w.clone(),
+            b: p.b.clone(),
+            u_rz,
+            u_n,
+        }
+    }
+}
+
+/// Reusable batch-major scratch for [`gru_step_batch`].
+#[derive(Clone, Debug)]
+pub struct GruBatchScratch {
+    /// (B, 3H) gate pre-activations `x·W + b`.
+    gx: Vec<f32>,
+    /// (B, 2H) recurrent pre-activations `h·U_rz`.
+    gh: Vec<f32>,
+    /// (B, H) update gate.
+    z: Vec<f32>,
+    /// (B, H) reset-modulated state `r ∘ h`.
+    rh: Vec<f32>,
+    /// (B, H) candidate recurrent term `(r∘h)·U_n`.
+    cand: Vec<f32>,
+}
+
+impl GruBatchScratch {
+    pub fn new(hidden: usize, batch: usize) -> GruBatchScratch {
+        GruBatchScratch {
+            gx: vec![0.0; batch * 3 * hidden],
+            gh: vec![0.0; batch * 2 * hidden],
+            z: vec![0.0; batch * hidden],
+            rh: vec![0.0; batch * hidden],
+            cand: vec![0.0; batch * hidden],
+        }
+    }
+}
+
+/// One batch-major GRU step: `x (B, I)`, `h (B, H)` → `out (B, H)`.
+///
+/// Identical math to [`crate::mr::gru::GruCell::step_into`] per row, but B
+/// rows advance together through three GEMMs instead of B matvec chains.
+pub fn gru_step_batch(
+    p: &PackedGru,
+    x: &[f32],
+    h: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    s: &mut GruBatchScratch,
+) {
+    let (i_sz, hid) = (p.input, p.hidden);
+    let th = 3 * hid;
+    debug_assert_eq!(x.len(), batch * i_sz);
+    debug_assert_eq!(h.len(), batch * hid);
+    debug_assert_eq!(out.len(), batch * hid);
+    debug_assert!(s.gx.len() >= batch * th);
+
+    // gx = b (broadcast) + X · W over the packed 3H axis.
+    for w in 0..batch {
+        s.gx[w * th..(w + 1) * th].copy_from_slice(&p.b);
+    }
+    gemm(batch, i_sz, th, x, i_sz, &p.w, th, &mut s.gx, th);
+
+    // gh = H · U_rz over the r/z columns.
+    s.gh[..batch * 2 * hid].fill(0.0);
+    gemm(batch, hid, 2 * hid, h, hid, &p.u_rz, 2 * hid, &mut s.gh, 2 * hid);
+
+    // Gates + reset modulation.
+    for w in 0..batch {
+        let gx = &s.gx[w * th..(w + 1) * th];
+        let gh = &s.gh[w * 2 * hid..(w + 1) * 2 * hid];
+        let hrow = &h[w * hid..(w + 1) * hid];
+        let zrow = &mut s.z[w * hid..(w + 1) * hid];
+        let rhrow = &mut s.rh[w * hid..(w + 1) * hid];
+        for j in 0..hid {
+            let r = sigmoid(gx[j] + gh[j]);
+            zrow[j] = sigmoid(gx[hid + j] + gh[hid + j]);
+            rhrow[j] = r * hrow[j];
+        }
+    }
+
+    // Candidate: cand = (r∘h) · U_n.
+    s.cand[..batch * hid].fill(0.0);
+    gemm(batch, hid, hid, &s.rh, hid, &p.u_n, hid, &mut s.cand, hid);
+
+    // Interpolation: h' = (1−z)∘tanh(gx_n + cand) + z∘h.
+    for w in 0..batch {
+        let gx = &s.gx[w * th..(w + 1) * th];
+        let cand = &s.cand[w * hid..(w + 1) * hid];
+        let zrow = &s.z[w * hid..(w + 1) * hid];
+        let hrow = &h[w * hid..(w + 1) * hid];
+        let orow = &mut out[w * hid..(w + 1) * hid];
+        for j in 0..hid {
+            let n = (gx[2 * hid + j] + cand[j]).tanh();
+            orow[j] = (1.0 - zrow[j]) * n + zrow[j] * hrow[j];
+        }
+    }
+}
+
+/// Batch-major GRU sequence forward: `xs (B, K, I)` flattened → final
+/// hidden states `(B, H)`. Handles any B ≥ 1 (ragged final batches are the
+/// caller padding to their service batch, or simply a smaller B here).
+pub fn gru_forward_batch(p: &PackedGru, xs: &[f32], seq: usize, batch: usize) -> Vec<f32> {
+    let (i_sz, hid) = (p.input, p.hidden);
+    debug_assert_eq!(xs.len(), batch * seq * i_sz);
+    let mut s = GruBatchScratch::new(hid, batch);
+    let mut xt = vec![0.0f32; batch * i_sz];
+    let mut h = vec![0.0f32; batch * hid];
+    let mut next = vec![0.0f32; batch * hid];
+    for t in 0..seq {
+        // Gather the time-t rows of each window into a contiguous (B, I).
+        for w in 0..batch {
+            let src = (w * seq + t) * i_sz;
+            xt[w * i_sz..(w + 1) * i_sz].copy_from_slice(&xs[src..src + i_sz]);
+        }
+        gru_step_batch(p, &xt, &h, &mut next, batch, &mut s);
+        std::mem::swap(&mut h, &mut next);
+    }
+    h
+}
+
+/// Batched dense head: `h (B, H)` → `theta (B, O)` through the two-layer
+/// ReLU MLP, matching [`DenseHead::forward`] per row (mask included).
+pub fn dense_head_batch(head: &DenseHead, h: &[f32], batch: usize) -> Vec<f32> {
+    let (i_sz, hid, out_sz) = (head.input, head.hidden, head.output);
+    debug_assert_eq!(h.len(), batch * i_sz);
+    let mut z = vec![0.0f32; batch * hid];
+    for w in 0..batch {
+        z[w * hid..(w + 1) * hid].copy_from_slice(&head.b1);
+    }
+    gemm(batch, i_sz, hid, h, i_sz, &head.w1, hid, &mut z, hid);
+    for v in z.iter_mut() {
+        *v = v.max(0.0);
+    }
+    let mut out = vec![0.0f32; batch * out_sz];
+    for w in 0..batch {
+        out[w * out_sz..(w + 1) * out_sz].copy_from_slice(&head.b2);
+    }
+    gemm(batch, hid, out_sz, &z, hid, &head.w2, out_sz, &mut out, out_sz);
+    if let Some(mask) = &head.mask {
+        for w in 0..batch {
+            for (o, &keep) in out[w * out_sz..(w + 1) * out_sz].iter_mut().zip(mask) {
+                if !keep {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mr::gru::GruCell;
+    use crate::util::Prng;
+
+    fn naive_gemm(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        for i in 0..m {
+            for l in 0..k {
+                for j in 0..n {
+                    c[i * ldc + j] += a[i * lda + l] * b[l * ldb + j];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_all_shapes() {
+        let mut rng = Prng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (8, 4, 96), (2, 16, 9), (5, 3, 8)] {
+            let a = rng.normal_vec_f32(m * k, 1.0);
+            let b = rng.normal_vec_f32(k * n, 1.0);
+            let mut c1 = rng.normal_vec_f32(m * n, 0.5);
+            let mut c2 = c1.clone();
+            gemm(m, k, n, &a, k, &b, n, &mut c1, n);
+            naive_gemm(m, k, n, &a, k, &b, n, &mut c2, n);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() < 1e-5, "({m},{k},{n}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_respects_leading_dimensions() {
+        // Operate on a 2x2 sub-block of padded matrices.
+        let a = vec![1.0, 2.0, 9.0, 3.0, 4.0, 9.0]; // (2,2) in lda=3
+        let b = vec![1.0, 0.0, 9.0, 0.0, 1.0, 9.0]; // identity in ldb=3
+        let mut c = vec![0.0; 8]; // (2,2) in ldc=4
+        gemm(2, 2, 2, &a, 3, &b, 3, &mut c, 4);
+        assert_eq!(&c[0..2], &[1.0, 2.0]);
+        assert_eq!(&c[4..6], &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_matches_scalar_sum() {
+        let mut rng = Prng::new(2);
+        for n in [0usize, 1, 3, 4, 7, 8, 33] {
+            let a = rng.normal_vec_f32(n, 1.0);
+            let b = rng.normal_vec_f32(n, 1.0);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn matvec_acc_equals_gemm_row() {
+        let mut rng = Prng::new(3);
+        let (k, n, ldb) = (6, 10, 12);
+        let x = rng.normal_vec_f32(k, 1.0);
+        let b = rng.normal_vec_f32(k * ldb, 1.0);
+        let mut y1 = vec![0.5f32; n];
+        let mut y2 = y1.clone();
+        matvec_acc(k, n, &x, &b, ldb, &mut y1);
+        gemm(1, k, n, &x, k, &b, ldb, &mut y2, n);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn packed_layout_preserves_weights() {
+        let mut rng = Prng::new(4);
+        let p = GruParams::random(3, 5, &mut rng, 0.5);
+        let packed = PackedGru::new(&p);
+        let th = 15;
+        for hi in 0..5 {
+            assert_eq!(&packed.u_rz[hi * 10..hi * 10 + 10], &p.u[hi * th..hi * th + 10]);
+            assert_eq!(&packed.u_n[hi * 5..hi * 5 + 5], &p.u[hi * th + 10..hi * th + 15]);
+        }
+        assert_eq!(packed.w, p.w);
+        assert_eq!(packed.b, p.b);
+    }
+
+    #[test]
+    fn batched_step_matches_scalar_cell() {
+        let mut rng = Prng::new(5);
+        for &batch in &[1usize, 3, 8] {
+            let params = GruParams::random(4, 16, &mut rng, 0.4);
+            let cell = GruCell::new(params.clone());
+            let packed = PackedGru::new(&params);
+            let x = rng.normal_vec_f32(batch * 4, 1.0);
+            let h = rng.normal_vec_f32(batch * 16, 0.5);
+            let mut out = vec![0.0f32; batch * 16];
+            let mut s = GruBatchScratch::new(16, batch);
+            gru_step_batch(&packed, &x, &h, &mut out, batch, &mut s);
+            for w in 0..batch {
+                let want = cell.step(&x[w * 4..(w + 1) * 4], &h[w * 16..(w + 1) * 16]);
+                for (a, b) in out[w * 16..(w + 1) * 16].iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-6, "batch {batch} window {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_forward_matches_scalar_run() {
+        let mut rng = Prng::new(6);
+        let params = GruParams::random(3, 12, &mut rng, 0.3);
+        let cell = GruCell::new(params.clone());
+        let packed = PackedGru::new(&params);
+        let (batch, seq) = (5, 17);
+        let xs = rng.normal_vec_f32(batch * seq * 3, 0.8);
+        let h = gru_forward_batch(&packed, &xs, seq, batch);
+        for w in 0..batch {
+            let want = cell.run(&xs[w * seq * 3..(w + 1) * seq * 3], seq);
+            for (a, b) in h[w * 12..(w + 1) * 12].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-6, "window {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_head_batch_matches_scalar_forward() {
+        let mut rng = Prng::new(7);
+        let mut head = DenseHead::random(6, 10, 9, &mut rng);
+        let batch = 4;
+        let h = rng.normal_vec_f32(batch * 6, 1.0);
+        // Unmasked.
+        let out = dense_head_batch(&head, &h, batch);
+        for w in 0..batch {
+            let want = head.forward(&h[w * 6..(w + 1) * 6]);
+            for (a, b) in out[w * 9..(w + 1) * 9].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+        // Masked.
+        let calib = vec![head.forward(&h[0..6])];
+        head.prune_to_top(&calib, 3);
+        let out = dense_head_batch(&head, &h, batch);
+        for w in 0..batch {
+            let want = head.forward(&h[w * 6..(w + 1) * 6]);
+            for (a, b) in out[w * 9..(w + 1) * 9].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+}

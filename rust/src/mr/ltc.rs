@@ -12,6 +12,7 @@
 use crate::util::Prng;
 
 use super::gru::sigmoid;
+use super::linalg;
 
 /// LTC parameters (row-major matrices).
 #[derive(Clone, Debug)]
@@ -62,6 +63,20 @@ pub struct LtcProfile {
     pub steps: u64,
 }
 
+/// Reusable scratch for [`LtcCell::sub_step_into`].
+#[derive(Clone, Debug)]
+pub struct LtcScratch {
+    pre: Vec<f32>,
+}
+
+impl LtcScratch {
+    pub fn new(hidden: usize) -> LtcScratch {
+        LtcScratch {
+            pre: vec![0.0; hidden],
+        }
+    }
+}
+
 /// An LTC cell with a fixed solver unfolding depth.
 #[derive(Clone, Debug)]
 pub struct LtcCell {
@@ -76,43 +91,56 @@ impl LtcCell {
 
     /// One time step (all solver sub-steps).
     pub fn step(&self, x: &[f32], h: &[f32], dt: f32) -> Vec<f32> {
+        let hid = self.params.hidden;
+        let mut s = LtcScratch::new(hid);
         let mut h = h.to_vec();
+        let mut next = vec![0.0f32; hid];
         for _ in 0..self.unfold {
-            h = self.sub_step(x, &h, dt);
+            self.sub_step_into(x, &h, dt, &mut next, &mut s);
+            std::mem::swap(&mut h, &mut next);
         }
         h
     }
 
-    /// One fused-solver sub-step.
+    /// One fused-solver sub-step (allocating wrapper).
     pub fn sub_step(&self, x: &[f32], h: &[f32], dt: f32) -> Vec<f32> {
+        let mut s = LtcScratch::new(self.params.hidden);
+        let mut out = vec![0.0f32; self.params.hidden];
+        self.sub_step_into(x, h, dt, &mut out, &mut s);
+        out
+    }
+
+    /// One fused-solver sub-step into a caller-provided buffer with reused
+    /// scratch (§Perf: the per-sub-step allocations dominated `run` on
+    /// long traces; matvecs go through the shared `linalg` kernels).
+    pub fn sub_step_into(&self, x: &[f32], h: &[f32], dt: f32, out: &mut [f32], s: &mut LtcScratch) {
         let p = &self.params;
         let hid = p.hidden;
-        let mut pre = p.bf.clone();
-        for (i, &xv) in x.iter().enumerate() {
-            let row = &p.wf[i * hid..(i + 1) * hid];
-            for (s, &w) in pre.iter_mut().zip(row) {
-                *s += xv * w;
-            }
-        }
-        for (i, &hv) in h.iter().enumerate() {
-            let row = &p.uf[i * hid..(i + 1) * hid];
-            for (s, &u) in pre.iter_mut().zip(row) {
-                *s += hv * u;
-            }
-        }
-        let mut out = vec![0.0f32; hid];
+        debug_assert_eq!(h.len(), hid);
+        debug_assert_eq!(out.len(), hid);
+        let pre = &mut s.pre;
+        pre.copy_from_slice(&p.bf);
+        linalg::matvec_acc(x.len(), hid, x, &p.wf, hid, pre);
+        linalg::matvec_acc(hid, hid, h, &p.uf, hid, pre);
         for j in 0..hid {
             let f = sigmoid(pre[j]);
             out[j] = (h[j] + dt * f * p.a[j]) / (1.0 + dt * (1.0 / p.tau[j] + f));
         }
-        out
     }
 
     /// Run a sequence (K, I) returning the final hidden state.
     pub fn run(&self, xs: &[f32], seq: usize, dt: f32) -> Vec<f32> {
-        let mut h = vec![0.0f32; self.params.hidden];
+        let hid = self.params.hidden;
+        let i_sz = self.params.input;
+        let mut s = LtcScratch::new(hid);
+        let mut h = vec![0.0f32; hid];
+        let mut next = vec![0.0f32; hid];
         for t in 0..seq {
-            h = self.step(&xs[t * self.params.input..(t + 1) * self.params.input], &h, dt);
+            let x = &xs[t * i_sz..(t + 1) * i_sz];
+            for _ in 0..self.unfold {
+                self.sub_step_into(x, &h, dt, &mut next, &mut s);
+                std::mem::swap(&mut h, &mut next);
+            }
         }
         h
     }

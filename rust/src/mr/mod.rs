@@ -11,6 +11,7 @@ pub mod backprop;
 pub mod dense;
 pub mod gru;
 pub mod library;
+pub mod linalg;
 pub mod loss;
 pub mod recover;
 pub mod ltc;

@@ -7,6 +7,7 @@
 use std::hint::black_box as bb;
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats;
 
 /// One timed measurement series.
@@ -36,6 +37,17 @@ impl Measurement {
 
     pub fn median_ms(&self) -> f64 {
         stats::median(&self.samples) * 1e3
+    }
+
+    /// Machine-readable row: name + µs statistics + sample count.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("mean_us", Json::num(self.mean_us())),
+            ("median_us", Json::num(self.median_ms() * 1e3)),
+            ("std_us", Json::num(self.std_ms() * 1e3)),
+            ("iters", Json::num(self.samples.len() as f64)),
+        ])
     }
 }
 
@@ -78,6 +90,73 @@ impl Bench {
             name: name.to_string(),
             samples,
         }
+    }
+}
+
+/// Machine-readable bench report: measurement rows plus named
+/// baseline-vs-optimized speedups, written as `BENCH_<name>.json` so the
+/// perf trajectory is tracked across PRs.
+pub struct BenchJson {
+    bench: String,
+    rows: Vec<Json>,
+    speedups: Vec<(String, Json)>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> BenchJson {
+        BenchJson {
+            bench: bench.to_string(),
+            rows: Vec::new(),
+            speedups: Vec::new(),
+        }
+    }
+
+    /// Record one measurement row.
+    pub fn record(&mut self, m: &Measurement) {
+        self.rows.push(m.to_json());
+    }
+
+    /// Record a baseline-vs-optimized pair under `key`; returns the
+    /// mean-time speedup (baseline / optimized).
+    pub fn record_speedup(
+        &mut self,
+        key: &str,
+        baseline: &Measurement,
+        optimized: &Measurement,
+    ) -> f64 {
+        let speedup = baseline.mean_s() / optimized.mean_s().max(1e-12);
+        self.speedups.push((
+            key.to_string(),
+            Json::obj(vec![
+                ("baseline", Json::str(baseline.name.clone())),
+                ("baseline_mean_us", Json::num(baseline.mean_us())),
+                ("optimized", Json::str(optimized.name.clone())),
+                ("optimized_mean_us", Json::num(optimized.mean_us())),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ));
+        speedup
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(self.bench.clone())),
+            ("rows", Json::Arr(self.rows.clone())),
+            (
+                "speedups",
+                Json::Obj(
+                    self.speedups
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the report as pretty-printed JSON.
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
     }
 }
 
@@ -144,5 +223,54 @@ mod tests {
     #[test]
     fn fmt_decimals() {
         assert_eq!(f(1.23456, 2), "1.23");
+    }
+
+    #[test]
+    fn measurement_json_roundtrips() {
+        let m = Measurement {
+            name: "row".into(),
+            samples: vec![1e-6, 2e-6, 3e-6],
+        };
+        let j = m.to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str().unwrap(), "row");
+        assert_eq!(back.get("iters").unwrap().as_usize().unwrap(), 3);
+        assert!((back.get("mean_us").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_records_speedups() {
+        let base = Measurement {
+            name: "slow".into(),
+            samples: vec![4e-3; 5],
+        };
+        let opt = Measurement {
+            name: "fast".into(),
+            samples: vec![1e-3; 5],
+        };
+        let mut r = BenchJson::new("unit");
+        r.record(&base);
+        r.record(&opt);
+        let s = r.record_speedup("kernel", &base, &opt);
+        assert!((s - 4.0).abs() < 1e-9);
+        let j = Json::parse(&r.to_json().to_pretty()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        let sp = j.get("speedups").unwrap().get("kernel").unwrap();
+        assert!((sp.get("speedup").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_writes_file() {
+        let mut r = BenchJson::new("filetest");
+        r.record(&Measurement {
+            name: "x".into(),
+            samples: vec![1e-6],
+        });
+        let path = std::env::temp_dir().join("merinda_bench_json_test.json");
+        r.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(&path);
     }
 }

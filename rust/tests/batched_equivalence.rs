@@ -1,0 +1,169 @@
+//! Batched-vs-scalar equivalence tests for the `mr::linalg` kernel layer.
+//!
+//! The batch-major GRU step/forward, the optimized BPTT gradients and the
+//! incremental design-matrix build must match their scalar reference
+//! implementations bitwise or within 1e-6, including the B=1 edge case and
+//! ragged final batches. Also proves the coordinator `Service` runs
+//! end-to-end on `NativeBackend` with no `artifacts/` directory present.
+
+use std::time::Duration;
+
+use merinda::coordinator::{
+    BatcherConfig, NativeBackend, RecoveryRequest, Service, ServiceConfig,
+};
+use merinda::mr::backprop::GruBptt;
+use merinda::mr::gru::{GruCell, GruParams};
+use merinda::mr::library::PolyLibrary;
+use merinda::mr::linalg::{gru_forward_batch, gru_step_batch, GruBatchScratch, PackedGru};
+use merinda::util::Prng;
+
+#[test]
+fn batched_gru_step_matches_scalar_including_b1() {
+    let mut rng = Prng::new(101);
+    for &batch in &[1usize, 2, 5, 8, 13] {
+        let params = GruParams::random(4, 24, &mut rng, 0.4);
+        let cell = GruCell::new(params.clone());
+        let packed = PackedGru::new(&params);
+        let x = rng.normal_vec_f32(batch * 4, 1.2);
+        let h = rng.normal_vec_f32(batch * 24, 0.6);
+        let mut out = vec![0.0f32; batch * 24];
+        let mut s = GruBatchScratch::new(24, batch);
+        gru_step_batch(&packed, &x, &h, &mut out, batch, &mut s);
+        for w in 0..batch {
+            let want = cell.step(&x[w * 4..(w + 1) * 4], &h[w * 24..(w + 1) * 24]);
+            for (j, (a, b)) in out[w * 24..(w + 1) * 24].iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-6,
+                    "B={batch} window {w} unit {j}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_gru_forward_matches_scalar_over_sequences() {
+    let mut rng = Prng::new(202);
+    for &(batch, seq) in &[(1usize, 64usize), (3, 33), (8, 64), (5, 7)] {
+        let params = GruParams::random(4, 32, &mut rng, 0.3);
+        let cell = GruCell::new(params.clone());
+        let packed = PackedGru::new(&params);
+        let xs = rng.normal_vec_f32(batch * seq * 4, 0.8);
+        let h = gru_forward_batch(&packed, &xs, seq, batch);
+        for w in 0..batch {
+            let want = cell.run(&xs[w * seq * 4..(w + 1) * seq * 4], seq);
+            for (j, (a, b)) in h[w * 32..(w + 1) * 32].iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-6,
+                    "B={batch} K={seq} window {w} unit {j}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn optimized_bptt_matches_reference_gradients() {
+    let mut rng = Prng::new(303);
+    for &(hid, seq) in &[(6usize, 5usize), (16, 16), (32, 24)] {
+        let params = GruParams::random(3, hid, &mut rng, 0.4);
+        let net = GruBptt::new(params, 2, &mut rng);
+        let xs = rng.normal_vec_f32(seq * 3, 0.8);
+        let target = rng.normal_vec_f32(2, 0.5);
+        let (l_opt, g_opt, dwo_opt, dbo_opt) = net.loss_and_grads(&xs, seq, &target);
+        let (l_ref, g_ref, dwo_ref, dbo_ref) = net.loss_and_grads_reference(&xs, seq, &target);
+        assert!(
+            (l_opt - l_ref).abs() <= 1e-6 * (1.0 + l_ref.abs()),
+            "H={hid} K={seq}: loss {l_opt} vs {l_ref}"
+        );
+        let close = |a: &[f32], b: &[f32], what: &str| {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-6 * (1.0 + y.abs()),
+                    "H={hid} K={seq} {what}[{i}]: {x} vs {y}"
+                );
+            }
+        };
+        close(&g_opt.w, &g_ref.w, "dW");
+        close(&g_opt.u, &g_ref.u, "dU");
+        close(&g_opt.b, &g_ref.b, "db");
+        close(&dwo_opt, &dwo_ref, "dWo");
+        close(&dbo_opt, &dbo_ref, "dbo");
+    }
+}
+
+#[test]
+fn design_matrix_matches_term_eval_all_orders() {
+    let mut rng = Prng::new(404);
+    for &(x, u, order) in &[(3usize, 1usize, 2u32), (3, 1, 3), (2, 0, 4), (4, 1, 3)] {
+        let lib = PolyLibrary::new(x, u, order);
+        let p = lib.len();
+        let n = 50;
+        let xs: Vec<f64> = (0..n * x).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let us: Vec<f64> = (0..n * u).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let m = lib.design_matrix(&xs, &us, n);
+        let empty: [f64; 0] = [];
+        for s in 0..n {
+            let xrow = &xs[s * x..(s + 1) * x];
+            let urow = if u > 0 { &us[s * u..(s + 1) * u] } else { &empty[..] };
+            let want = lib.eval(xrow, urow);
+            for (k, (a, b)) in m[s * p..(s + 1) * p].iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-12 * (1.0 + b.abs()),
+                    "x={x} u={u} M={order} sample {s} term {k}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+/// The serving acceptance test: a `Service` on `NativeBackend` answers a
+/// batch of requests with no `artifacts/` directory, and every response
+/// matches the scalar per-window reference. 11 requests against batch 8
+/// exercises the ragged (padded) final batch.
+#[test]
+fn native_service_end_to_end_without_artifacts() {
+    let backend = NativeBackend::new(8, 77);
+    let oracle = backend.clone();
+    let cfg = ServiceConfig {
+        workers: 2,
+        batcher: BatcherConfig {
+            batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        queue_depth: 64,
+    };
+    let svc = Service::start(cfg, move || backend.clone());
+
+    let mut rng = Prng::new(5);
+    let reqs: Vec<RecoveryRequest> = (0..11)
+        .map(|i| RecoveryRequest {
+            id: i,
+            y: rng.normal_vec_f32(64 * 3, 0.5),
+            u: rng.normal_vec_f32(64, 0.5),
+        })
+        .collect();
+    let expected: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|r| oracle.forward_window_scalar(&r.y, &r.u))
+        .collect();
+
+    let rxs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| svc.submit(r).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.theta.len(), 45);
+        for (j, (a, b)) in resp.theta.iter().zip(&expected[i]).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-6,
+                "request {i} theta[{j}]: {a} vs {b}"
+            );
+        }
+    }
+    let s = svc.metrics.snapshot();
+    assert_eq!(s.completed, 11);
+    assert!(s.batches >= 2, "11 requests over batch 8 needs ≥2 batches");
+}

@@ -1,0 +1,106 @@
+//! Bench: dataflow-vs-sequential cycle comparison (paper §6, Table 8
+//! trend) emitted as `BENCH_cycles.json` at the repo root.
+//!
+//! Unlike `hotpath`, every number here comes from the deterministic cycle
+//! model (`fpga::{gru_accel,ltc_accel,pipeline}`), so the committed
+//! baseline is exactly reproducible on any machine. The headline row is
+//! the paper's §6 claim: the DATAFLOW GRU needs several times fewer
+//! cycles per streamed window than the sequential LTC baseline (they
+//! report up to 6.3×; the model lands far above the 4× floor asserted in
+//! CI). `MERINDA_BENCH_SEQ` overrides the window length — the CI smoke
+//! step runs a tiny workload and validates the JSON schema.
+
+use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use merinda::fpga::ltc_accel::{LtcAccel, LtcAccelConfig};
+use merinda::util::bench::{artifact_path, BenchJson};
+use merinda::util::json::Json;
+
+fn design_json(cycles_per_step: u64, interval: u64, window_cycles: u64) -> Json {
+    Json::obj(vec![
+        ("cycles_per_step", Json::num(cycles_per_step as f64)),
+        ("interval", Json::num(interval as f64)),
+        ("window_cycles", Json::num(window_cycles as f64)),
+    ])
+}
+
+fn main() {
+    let seq: u64 = std::env::var("MERINDA_BENCH_SEQ")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+
+    let df_accel = GruAccel::new(GruAccelConfig::concurrent());
+    let df = df_accel.report();
+    let sq = GruAccel::new(GruAccelConfig::gru_baseline()).report();
+    let ltc = LtcAccel::new(LtcAccelConfig::base()).report();
+
+    // Stage-level DATAFLOW pipeline over the scheduled per-stage service
+    // times; the exact event simulation must agree with the closed form.
+    let pipe = df_accel.stage_pipeline();
+    let analyzed = pipe.analyze(seq);
+    assert_eq!(
+        pipe.simulate(seq),
+        analyzed,
+        "event simulation drifted from the closed form"
+    );
+    let sequential = pipe.analyze_sequential(seq);
+
+    let w_df = df.window_cycles(seq);
+    let w_sq = sq.window_cycles(seq);
+    let w_ltc = ltc.window_cycles(seq);
+    let r_ltc = w_ltc as f64 / w_df as f64;
+    let r_seq = w_sq as f64 / w_df as f64;
+    let r_iv = ltc.interval as f64 / df.interval as f64;
+
+    let mut report = BenchJson::new("cycles");
+    report.section(
+        "workload",
+        Json::obj(vec![
+            ("hidden", Json::num(df_accel.cfg.hidden as f64)),
+            ("input", Json::num(df_accel.cfg.input as f64)),
+            ("seq", Json::num(seq as f64)),
+        ]),
+    );
+    report.section("gru_dataflow", design_json(df.cycles, df.interval, w_df));
+    report.section("gru_sequential", design_json(sq.cycles, sq.interval, w_sq));
+    report.section("ltc_sequential", design_json(ltc.cycles, ltc.interval, w_ltc));
+    report.section(
+        "pipeline",
+        Json::obj(vec![
+            ("dataflow_total", Json::num(analyzed.total_cycles as f64)),
+            ("fill_latency", Json::num(analyzed.fill_latency as f64)),
+            ("interval", Json::num(analyzed.interval as f64)),
+            ("sequential_total", Json::num(sequential.total_cycles as f64)),
+        ]),
+    );
+    report.section(
+        "ratios",
+        Json::obj(vec![
+            ("dataflow_vs_sequential_ltc", Json::num(r_ltc)),
+            ("gru_dataflow_vs_gru_sequential", Json::num(r_seq)),
+            ("ltc_vs_gru_dataflow_interval", Json::num(r_iv)),
+        ]),
+    );
+
+    println!("window length (steps)                    {seq}");
+    println!(
+        "GRU dataflow    cycles/step {:>6}  interval {:>6}  window {:>8}",
+        df.cycles, df.interval, w_df
+    );
+    println!(
+        "GRU sequential  cycles/step {:>6}  interval {:>6}  window {:>8}",
+        sq.cycles, sq.interval, w_sq
+    );
+    println!(
+        "LTC sequential  cycles/step {:>6}  interval {:>6}  window {:>8}",
+        ltc.cycles, ltc.interval, w_ltc
+    );
+    println!("LTC / dataflow-GRU window ratio          {r_ltc:.1}x (paper trend: 6.3x+)");
+    println!("sequential-GRU / dataflow-GRU ratio      {r_seq:.1}x");
+
+    let path = artifact_path("BENCH_cycles.json");
+    match report.write(&path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}

@@ -3,8 +3,8 @@
 //! Every tracked hot loop is measured twice — the scalar/naive reference
 //! (the pre-optimization implementation, kept as the numerical oracle) and
 //! the batched/tiled path built on `mr::linalg` — and the pair is recorded
-//! with its speedup in `BENCH_hotpath.json` so the perf trajectory is
-//! tracked across PRs. Rows:
+//! with its speedup in `BENCH_hotpath.json` at the repo root so the perf
+//! trajectory is tracked across PRs. Rows:
 //!
 //!   fpga report              structural evaluation (report generation)
 //!   fixed-point GRU forward  datapath emulation (shared linalg kernels)
@@ -24,7 +24,7 @@ use merinda::mr::backprop::GruBptt;
 use merinda::mr::gru::{GruCell, GruParams};
 use merinda::mr::library::PolyLibrary;
 use merinda::mr::linalg::{gru_forward_batch, PackedGru};
-use merinda::util::bench::{Bench, BenchJson, Measurement};
+use merinda::util::bench::{artifact_path, Bench, BenchJson, Measurement};
 use merinda::util::Prng;
 
 fn print_us(m: &Measurement) {
@@ -225,8 +225,9 @@ fn main() {
         println!("(artifacts not built; PJRT rows skipped)");
     }
 
-    match report.write("BENCH_hotpath.json") {
-        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
-        Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
+    let path = artifact_path("BENCH_hotpath.json");
+    match report.write(&path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
     }
 }

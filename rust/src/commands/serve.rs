@@ -1,13 +1,18 @@
 //! `merinda serve --requests N` — streaming recovery service demo.
 //!
-//! `--backend pjrt|native|auto` picks the executor: the PJRT artifact
-//! path, the artifact-free native batched-GRU backend, or (default)
-//! PJRT with automatic fallback to native when artifacts are missing.
-//! `--workers N` shards the executor across N backend-owning threads.
+//! `--backend pjrt|native|fixed|auto` picks the executor: the PJRT
+//! artifact path, the artifact-free native batched-GRU backend, the
+//! quantized fixed-point backend (`--fmt q8.8|q4.8|8bit`, with an
+//! accelerator cycle report), or (default) PJRT with automatic fallback
+//! to native when artifacts are missing. `--workers N` shards the
+//! executor across N backend-owning threads.
 
 use std::time::Instant;
 
-use merinda::coordinator::{NativeBackend, PjrtBackend, RecoveryRequest, Service, ServiceConfig};
+use merinda::coordinator::{
+    FixedPointBackend, FixedPointConfig, NativeBackend, PjrtBackend, RecoveryRequest, Service,
+    ServiceConfig,
+};
 use merinda::systems::{Aid, CaseStudy};
 use merinda::util::cli::Args;
 use merinda::util::{Prng, Result};
@@ -46,14 +51,28 @@ pub fn run(args: &Args) -> Result<()> {
     // lazy, so no modules are compiled by the probe.
     let use_native = match backend.as_str() {
         "native" => true,
-        "pjrt" => false,
+        "pjrt" | "fixed" => false,
         _ => merinda::runtime::Runtime::new(&dir).is_err(),
     };
     let cfg = ServiceConfig {
         workers,
         ..Default::default()
     };
-    let svc = if use_native {
+    // Kept outside the factory so the shared cycle counters stay readable
+    // after the workers take their clones.
+    let mut fixed_probe: Option<FixedPointBackend> = None;
+    let svc = if backend == "fixed" {
+        let fmt = args.get_or("fmt", "q8.8");
+        let fp = FixedPointConfig::from_name(&fmt)?;
+        let be = FixedPointBackend::new(8, seed, fp);
+        println!(
+            "starting service (fixed-point backend {fmt}, {workers} worker(s), \
+             act {}b/weight {}b)...",
+            fp.act_fmt.word_bits, fp.weight_fmt.word_bits
+        );
+        fixed_probe = Some(be.clone());
+        Service::start(cfg, move || be.clone())
+    } else if use_native {
         println!("starting service (native backend, {workers} worker(s), no artifacts needed)...");
         Service::start(cfg, move || NativeBackend::new(8, seed))
     } else {
@@ -64,20 +83,13 @@ pub fn run(args: &Args) -> Result<()> {
     };
 
     let t0 = Instant::now();
-    let rxs: Vec<_> = windows
-        .into_iter()
-        .filter_map(|w| svc.submit(w).ok())
-        .collect();
-    let accepted = rxs.len();
-    let mut done = 0;
-    for rx in rxs {
-        if rx.recv().is_ok() {
-            done += 1;
-        }
-    }
+    let done = svc.recover_many(windows).len();
     let wall = t0.elapsed().as_secs_f64();
 
     let s = svc.metrics.snapshot();
+    // Accepted = submits that cleared backpressure (rejects are counted
+    // separately by the metrics sink).
+    let accepted = s.submitted - s.rejected;
     println!("\nserved {done}/{accepted} requests in {wall:.3}s ({:.1} req/s)", done as f64 / wall);
     println!("batches executed     {}", s.batches);
     println!("mean batch occupancy {:.2} / 8", s.mean_batch_occupancy);
@@ -85,5 +97,23 @@ pub fn run(args: &Args) -> Result<()> {
         "latency mean/p50/p99 {:.2} / {:.2} / {:.2} ms",
         s.latency.mean_ms, s.latency.p50_ms, s.latency.p99_ms
     );
+    if let Some(be) = &fixed_probe {
+        let r = be.cycle_report();
+        println!(
+            "\nfixed-point cycle model ({} windows, {} batches served):",
+            r.windows_served, r.batches
+        );
+        println!(
+            "  per-step cycles/interval   {} / {} (incl. DDR remainder)",
+            r.step_cycles, r.step_interval
+        );
+        println!(
+            "  per-window stage cycles    {} dataflow vs {} sequential ({:.1}x overlap speedup)",
+            r.window_cycles,
+            r.window_cycles_sequential,
+            r.dataflow_speedup()
+        );
+        println!("  modeled accelerator cycles {}", r.modeled_cycles);
+    }
     Ok(())
 }

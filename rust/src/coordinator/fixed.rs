@@ -1,0 +1,393 @@
+//! Fixed-point (quantized) in-process inference backend.
+//!
+//! The end-to-end quantized recovery path of the paper (§5, §6.4): GRU
+//! weights and activations stored in 8–16-bit fixed-point formats, the
+//! batched GRU forward running through the saturating-accumulator
+//! datapath (`mr::linalg::gru_forward_batch_fixed`), and a per-window
+//! cycle/interval report derived from the HLS stage schedule
+//! (`fpga::gru_accel`) plus the DATAFLOW pipeline model
+//! (`fpga::pipeline`). Plugs into [`InferenceBackend`], so the sharded
+//! `Service` workers serve quantized traffic exactly like the f32
+//! [`NativeBackend`] — clones share one set of cycle counters, so a
+//! sharded deployment still aggregates into a single report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::fpga::fixedpoint::{DatapathFormats, FixedFormat};
+use crate::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use crate::fpga::pipeline::Pipeline;
+use crate::mr::dense::DenseHead;
+use crate::mr::gru::GruParams;
+use crate::mr::linalg::{dense_head_batch_fixed, gru_forward_batch_fixed, PackedGru};
+use crate::util::{Error, Result};
+
+use super::native::NativeBackend;
+use super::service::InferenceBackend;
+
+/// Quantization configuration of the fixed-point serving datapath.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedPointConfig {
+    /// Activation/state storage format.
+    pub act_fmt: FixedFormat,
+    /// Weight storage format (applied once at construction).
+    pub weight_fmt: FixedFormat,
+    /// Wide saturating accumulator (DSP48 post-adder model).
+    pub acc_fmt: FixedFormat,
+}
+
+impl FixedPointConfig {
+    /// Explicit activation/weight formats; the accumulator is derived via
+    /// [`FixedFormat::accumulator_for`].
+    pub fn with_formats(act: FixedFormat, weight: FixedFormat) -> FixedPointConfig {
+        FixedPointConfig {
+            act_fmt: act,
+            weight_fmt: weight,
+            acc_fmt: FixedFormat::accumulator_for(act, weight),
+        }
+    }
+
+    /// The paper's sweet spot: Q8.8 activations and weights.
+    pub fn q8_8() -> FixedPointConfig {
+        FixedPointConfig::with_formats(FixedFormat::q8_8(), FixedFormat::q8_8())
+    }
+
+    /// The paper's 12-bit weight format (Q4.8) end to end.
+    pub fn q4_8() -> FixedPointConfig {
+        FixedPointConfig::with_formats(FixedFormat::q4_8(), FixedFormat::q4_8())
+    }
+
+    /// Aggressive 8-bit end-to-end format (4 fractional bits).
+    pub fn int8() -> FixedPointConfig {
+        FixedPointConfig::with_formats(FixedFormat::new(8, 4), FixedFormat::new(8, 4))
+    }
+
+    /// Parse a CLI format name (`merinda serve --backend fixed --fmt X`).
+    pub fn from_name(name: &str) -> Result<FixedPointConfig> {
+        match name {
+            "q8.8" | "q8_8" => Ok(FixedPointConfig::q8_8()),
+            "q4.8" | "q4_8" => Ok(FixedPointConfig::q4_8()),
+            "8bit" | "int8" => Ok(FixedPointConfig::int8()),
+            other => Err(Error::config(format!(
+                "unknown fixed-point format {other:?} (expected q8.8, q4.8 or 8bit)"
+            ))),
+        }
+    }
+
+    /// The operand/accumulator pair handed to the batched kernels.
+    pub fn datapath(&self) -> DatapathFormats {
+        DatapathFormats {
+            act: self.act_fmt,
+            acc: self.acc_fmt,
+        }
+    }
+}
+
+/// Cumulative modeled-cycle counters, shared across backend clones so a
+/// sharded service aggregates into one report.
+#[derive(Debug, Default)]
+struct CycleCounters {
+    batches: AtomicU64,
+    windows: AtomicU64,
+    cycles: AtomicU64,
+}
+
+/// Per-window cycle/interval report of the quantized datapath.
+///
+/// Two clearly-scoped sub-models: the `step_*` numbers come from the
+/// structural accelerator report and include the non-overlapped DDR
+/// remainder, while the `window_*` pair streams the scheduled stages
+/// through the DATAFLOW pipeline model *without* DDR (which overlaps
+/// with compute under DATAFLOW) — so `window_cycles` vs
+/// `window_cycles_sequential` isolates exactly what stage overlap buys.
+/// At the canonical serving dims the streaming burst hides entirely
+/// under the slowest stage, so the two models' intervals coincide.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedCycleReport {
+    /// End-to-end latency of one GRU step (pipeline fill + DDR
+    /// remainder, structural report).
+    pub step_cycles: u64,
+    /// Steady-state cycles between GRU steps (incl. DDR remainder).
+    pub step_interval: u64,
+    /// One full window (`seq` steps) streamed through the stage
+    /// pipeline (stage compute cycles, DATAFLOW overlap).
+    pub window_cycles: u64,
+    /// The same stages executed with no DATAFLOW overlap.
+    pub window_cycles_sequential: u64,
+    /// Windows served so far, across all clones of this backend
+    /// (includes batch-padding replicas).
+    pub windows_served: u64,
+    /// Batches executed so far.
+    pub batches: u64,
+    /// Modeled accelerator cycles accumulated over all served batches.
+    pub modeled_cycles: u64,
+}
+
+impl FixedCycleReport {
+    /// DATAFLOW speedup of a window vs sequential stage execution.
+    pub fn dataflow_speedup(&self) -> f64 {
+        self.window_cycles_sequential as f64 / self.window_cycles.max(1) as f64
+    }
+}
+
+/// A self-contained quantized serving backend (clonable: each service
+/// worker holds its own copy; cycle counters stay shared).
+#[derive(Clone, Debug)]
+pub struct FixedPointBackend {
+    cfg: FixedPointConfig,
+    batch: usize,
+    seq: usize,
+    xdim: usize,
+    udim: usize,
+    /// Serving-layout GRU weights, quantized to `cfg.weight_fmt`.
+    packed: PackedGru,
+    /// Θ head, weights quantized to `cfg.weight_fmt`.
+    head: DenseHead,
+    /// Stage-level DATAFLOW pipeline (per-item = one GRU step).
+    pipeline: Pipeline,
+    /// Structural per-step numbers from the HLS schedule.
+    step_cycles: u64,
+    step_interval: u64,
+    counters: Arc<CycleCounters>,
+}
+
+impl FixedPointBackend {
+    /// Random-weight backend at the canonical serving dims, bit-matched
+    /// to [`NativeBackend::new`] with the same seed (useful for accuracy
+    /// comparisons, smoke tests and benches).
+    pub fn new(batch: usize, seed: u64, cfg: FixedPointConfig) -> FixedPointBackend {
+        FixedPointBackend::from_native(&NativeBackend::new(batch, seed), cfg)
+            .expect("canonical dims are consistent")
+    }
+
+    /// Quantize an existing f32 native backend's weights.
+    pub fn from_native(native: &NativeBackend, cfg: FixedPointConfig) -> Result<FixedPointBackend> {
+        FixedPointBackend::from_parts(
+            native.gru.clone(),
+            native.head.clone(),
+            cfg,
+            native.batch(),
+            native.seq(),
+            native.xdim(),
+            native.udim(),
+        )
+    }
+
+    /// Build from explicit f32 weights; quantizes them once to
+    /// `cfg.weight_fmt` (weights live in BRAM at that width).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        gru: GruParams,
+        head: DenseHead,
+        cfg: FixedPointConfig,
+        batch: usize,
+        seq: usize,
+        xdim: usize,
+        udim: usize,
+    ) -> Result<FixedPointBackend> {
+        if gru.input != xdim + udim {
+            return Err(Error::Shape {
+                expected: format!("gru input {}", xdim + udim),
+                got: format!("{}", gru.input),
+            });
+        }
+        if head.input != gru.hidden {
+            return Err(Error::Shape {
+                expected: format!("head input {}", gru.hidden),
+                got: format!("{}", head.input),
+            });
+        }
+        if batch == 0 || seq == 0 {
+            return Err(Error::config("batch and seq must be nonzero"));
+        }
+        let mut qgru = gru;
+        cfg.weight_fmt.quantize_slice(&mut qgru.w);
+        cfg.weight_fmt.quantize_slice(&mut qgru.u);
+        cfg.weight_fmt.quantize_slice(&mut qgru.b);
+        let mut qhead = head;
+        cfg.weight_fmt.quantize_slice(&mut qhead.w1);
+        cfg.weight_fmt.quantize_slice(&mut qhead.b1);
+        cfg.weight_fmt.quantize_slice(&mut qhead.w2);
+        cfg.weight_fmt.quantize_slice(&mut qhead.b2);
+        let packed = PackedGru::new(&qgru);
+
+        // Cycle model: the concurrent DATAFLOW accelerator at serving
+        // dims and the configured formats. Each pipeline item is one GRU
+        // step whose per-stage service time comes from the HLS schedule.
+        let accel = GruAccel::new(GruAccelConfig::serving(
+            xdim + udim,
+            qgru.hidden,
+            cfg.act_fmt,
+            cfg.weight_fmt,
+        ));
+        let report = accel.report();
+        let pipeline = accel.stage_pipeline();
+
+        Ok(FixedPointBackend {
+            cfg,
+            batch,
+            seq,
+            xdim,
+            udim,
+            packed,
+            head: qhead,
+            pipeline,
+            step_cycles: report.cycles,
+            step_interval: report.interval,
+            counters: Arc::new(CycleCounters::default()),
+        })
+    }
+
+    /// The quantization configuration this backend serves with.
+    pub fn config(&self) -> FixedPointConfig {
+        self.cfg
+    }
+
+    /// Per-window cycle/interval report plus cumulative served-traffic
+    /// counters (shared across clones).
+    pub fn cycle_report(&self) -> FixedCycleReport {
+        let seq = self.seq as u64;
+        let window = self.pipeline.analyze(seq);
+        let sequential = self.pipeline.analyze_sequential(seq);
+        FixedCycleReport {
+            step_cycles: self.step_cycles,
+            step_interval: self.step_interval,
+            window_cycles: window.total_cycles,
+            window_cycles_sequential: sequential.total_cycles,
+            windows_served: self.counters.windows.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            modeled_cycles: self.counters.cycles.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl InferenceBackend for FixedPointBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn theta_len(&self) -> usize {
+        self.head.output
+    }
+
+    fn window_y_len(&self) -> usize {
+        self.seq * self.xdim
+    }
+
+    fn window_u_len(&self) -> usize {
+        self.seq * self.udim
+    }
+
+    fn forward_batch(&self, y: &[f32], u: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch;
+        if y.len() != b * self.window_y_len() {
+            return Err(Error::Shape {
+                expected: format!("{} y values", b * self.window_y_len()),
+                got: format!("{}", y.len()),
+            });
+        }
+        if u.len() != b * self.window_u_len() {
+            return Err(Error::Shape {
+                expected: format!("{} u values", b * self.window_u_len()),
+                got: format!("{}", u.len()),
+            });
+        }
+        // Interleave to batch-major (B, K, XDIM+UDIM) and quantize the
+        // stream to the activation format (the DMA word width).
+        let i_sz = self.xdim + self.udim;
+        let mut yu = vec![0.0f32; b * self.seq * i_sz];
+        for w in 0..b {
+            for t in 0..self.seq {
+                let dst = (w * self.seq + t) * i_sz;
+                let sy = (w * self.seq + t) * self.xdim;
+                let su = (w * self.seq + t) * self.udim;
+                yu[dst..dst + self.xdim].copy_from_slice(&y[sy..sy + self.xdim]);
+                yu[dst + self.xdim..dst + i_sz].copy_from_slice(&u[su..su + self.udim]);
+            }
+        }
+        self.cfg.act_fmt.quantize_slice(&mut yu);
+        let fmts = self.cfg.datapath();
+        let h = gru_forward_batch_fixed(&self.packed, &yu, self.seq, b, fmts);
+        let theta = dense_head_batch_fixed(&self.head, &h, b, fmts);
+
+        self.counters.batches.fetch_add(1, Ordering::Relaxed);
+        self.counters.windows.fetch_add(b as u64, Ordering::Relaxed);
+        let streamed = self.pipeline.analyze((b * self.seq) as u64).total_cycles;
+        self.counters.cycles.fetch_add(streamed, Ordering::Relaxed);
+        Ok(theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn q8_8_tracks_native_backend() {
+        let native = NativeBackend::new(3, 42);
+        let fixed = FixedPointBackend::from_native(&native, FixedPointConfig::q8_8()).unwrap();
+        let mut rng = Prng::new(7);
+        let y = rng.normal_vec_f32(3 * 64 * 3, 0.5);
+        let u = rng.normal_vec_f32(3 * 64, 0.5);
+        let want = native.forward_batch(&y, &u).unwrap();
+        let got = fixed.forward_batch(&y, &u).unwrap();
+        assert_eq!(got.len(), want.len());
+        let worst = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst < 0.05, "Q8.8 drift vs native: {worst}");
+    }
+
+    #[test]
+    fn clones_share_cycle_counters() {
+        let be = FixedPointBackend::new(2, 1, FixedPointConfig::q8_8());
+        let clone = be.clone();
+        let y = vec![0.1f32; 2 * clone.window_y_len()];
+        let u = vec![0.0f32; 2 * clone.window_u_len()];
+        clone.forward_batch(&y, &u).unwrap();
+        let rep = be.cycle_report();
+        assert_eq!(rep.batches, 1);
+        assert_eq!(rep.windows_served, 2);
+        assert!(rep.modeled_cycles > 0);
+    }
+
+    #[test]
+    fn cycle_report_dataflow_beats_sequential() {
+        let be = FixedPointBackend::new(2, 3, FixedPointConfig::q8_8());
+        let rep = be.cycle_report();
+        assert!(rep.window_cycles < rep.window_cycles_sequential);
+        assert!(rep.dataflow_speedup() > 1.0);
+        assert!(rep.step_interval > 0 && rep.step_cycles >= rep.step_interval);
+    }
+
+    #[test]
+    fn from_parts_rejects_mismatched_dims() {
+        let mut rng = Prng::new(2);
+        let gru = GruParams::random(4, 8, &mut rng, 0.3);
+        let head = DenseHead::random(9, 4, 6, &mut rng); // wrong input
+        assert!(
+            FixedPointBackend::from_parts(gru, head, FixedPointConfig::q8_8(), 2, 16, 3, 1)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn format_names_parse() {
+        assert!(FixedPointConfig::from_name("q8.8").is_ok());
+        assert!(FixedPointConfig::from_name("q4_8").is_ok());
+        assert!(FixedPointConfig::from_name("8bit").is_ok());
+        assert!(FixedPointConfig::from_name("fp32").is_err());
+    }
+
+    #[test]
+    fn shape_validation() {
+        let be = FixedPointBackend::new(2, 1, FixedPointConfig::q8_8());
+        assert!(be.forward_batch(&[0.0; 3], &[0.0; 128]).is_err());
+        assert_eq!(be.theta_len(), 45);
+        assert_eq!(be.window_y_len(), 192);
+        assert_eq!(be.window_u_len(), 64);
+    }
+}

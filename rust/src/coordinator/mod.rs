@@ -3,7 +3,8 @@
 //! The serving side of MERINDA: clients submit (Y, U) windows; a dynamic
 //! batcher groups them into fixed-size model batches (padding partial
 //! batches), N sharded executor workers each own a backend instance
-//! (PJRT runtime or the artifact-free native batched-GRU backend) and
+//! (PJRT runtime, the artifact-free native batched-GRU backend, or the
+//! quantized fixed-point backend with its accelerator cycle model) and
 //! execute, and results fan back out to callers. Backpressure is a
 //! bounded submission queue. Python never runs here.
 //!
@@ -11,11 +12,13 @@
 //! request router → batcher → executor → response demux, with metrics.
 
 mod batcher;
+mod fixed;
 mod metrics;
 mod native;
 mod service;
 
 pub use batcher::{BatcherConfig, PendingBatch};
+pub use fixed::{FixedCycleReport, FixedPointBackend, FixedPointConfig};
 pub use native::NativeBackend;
 
 /// Re-export of the padding helper for out-of-crate property tests.

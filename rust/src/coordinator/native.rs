@@ -94,6 +94,21 @@ impl NativeBackend {
         })
     }
 
+    /// Window length (time steps per request).
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// State dimension of each observation row.
+    pub fn xdim(&self) -> usize {
+        self.xdim
+    }
+
+    /// Control-input dimension.
+    pub fn udim(&self) -> usize {
+        self.udim
+    }
+
     /// Scalar reference for a single window (the test oracle): one-sample
     /// GRU chain + scalar dense head on the interleaved `[y_t | u_t]` rows.
     pub fn forward_window_scalar(&self, y: &[f32], u: &[f32]) -> Vec<f32> {

@@ -266,6 +266,19 @@ impl Service {
         rx.recv()
             .map_err(|_| Error::config("service shut down mid-request"))
     }
+
+    /// Submit many requests up front (so batches fill) and wait for all
+    /// accepted ones, preserving submission order. Requests rejected by
+    /// backpressure — or dropped by a failing backend — are simply absent
+    /// from the result; callers needing per-request rejection handling
+    /// use [`Service::submit`].
+    pub fn recover_many(&self, reqs: Vec<RecoveryRequest>) -> Vec<RecoveryResponse> {
+        let rxs: Vec<_> = reqs
+            .into_iter()
+            .filter_map(|req| self.submit(req).ok())
+            .collect();
+        rxs.into_iter().filter_map(|rx| rx.recv().ok()).collect()
+    }
 }
 
 impl Drop for Service {
@@ -493,6 +506,18 @@ mod tests {
         let rg = rx_good.recv().unwrap();
         assert!((rb.theta[0] - 0.0).abs() < 1e-6);
         assert!((rg.theta[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn recover_many_preserves_submission_order() {
+        let svc = Service::start(ServiceConfig::default(), MockBackend::default);
+        let reqs: Vec<_> = (0..24).map(|i| mk_req(i, i as f32)).collect();
+        let resps = svc.recover_many(reqs);
+        assert_eq!(resps.len(), 24);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!((r.theta[0] - i as f32).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! (`ARRAY_PARTITION`), giving 2B ports and II ≥ ⌈R/(2B)⌉. `ARRAY_RESHAPE`
 //! instead widens the word so one access fetches `factor` elements.
 
+use super::fixedpoint::FixedFormat;
 use super::resources::Resources;
 
 /// How an array is split across banks (HLS `ARRAY_PARTITION` modes).
@@ -160,6 +161,12 @@ impl BramFifo {
         }
     }
 
+    /// FIFO whose element width is a fixed-point format's word width —
+    /// the common case for the DATAFLOW stream channels between stages.
+    pub fn for_format(name: impl Into<String>, depth: u64, fmt: FixedFormat) -> BramFifo {
+        BramFifo::new(name, depth, fmt.word_bits)
+    }
+
     pub fn resources(&self) -> Resources {
         let bits = self.depth * self.elem_bits as u64;
         Resources {
@@ -251,6 +258,13 @@ mod tests {
     #[test]
     fn fifo_resources() {
         let f = BramFifo::new("r_pre", 256, 16);
+        assert_eq!(f.resources().bram18, 1);
+    }
+
+    #[test]
+    fn fifo_for_format_uses_word_width() {
+        let f = BramFifo::for_format("z_pre", 256, FixedFormat::q8_8());
+        assert_eq!(f.elem_bits, 16);
         assert_eq!(f.resources().bram18, 1);
     }
 }

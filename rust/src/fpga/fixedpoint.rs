@@ -100,6 +100,50 @@ impl FixedFormat {
             *x = self.quantize_f32(*x);
         }
     }
+
+    /// Pass each value through the saturating [`Fixed`] representation in
+    /// this format (round + clamp on the raw integer code) — models an
+    /// accumulator writeback with `AP_SAT`. Semantically this is
+    /// [`FixedFormat::quantize`] per element; it differs from
+    /// [`FixedFormat::quantize_slice`] in rounding through the f64/i64
+    /// raw path, which wide (≥24 frac bit) accumulator formats need —
+    /// `quantize_f32` would lose LSBs to f32 mantissa rounding.
+    pub fn saturate_slice(&self, xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = Fixed::from_f64(*x as f64, *self).to_f64() as f32;
+        }
+    }
+
+    /// Accumulator format used by the quantized serving datapath: a
+    /// 32-bit word keeping the fractional bits of both operand formats
+    /// combined, capped so at least 8 integer bits (±128 range) remain
+    /// for the accumulated sum before saturation — the DSP48 wide
+    /// post-adder with `AP_SAT` on writeback.
+    pub fn accumulator_for(act: FixedFormat, weight: FixedFormat) -> FixedFormat {
+        FixedFormat::new(32, (act.frac_bits + weight.frac_bits).min(24))
+    }
+}
+
+/// Operand/accumulator format pair threading a quantized datapath through
+/// the batched kernels (`mr::linalg::gru_forward_batch_fixed`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DatapathFormats {
+    /// Activation/state format: values are re-quantized to this at every
+    /// stage boundary.
+    pub act: FixedFormat,
+    /// Saturating accumulator format for pre-activation sums.
+    pub acc: FixedFormat,
+}
+
+impl DatapathFormats {
+    /// Datapath for the given activation and weight storage formats, with
+    /// the accumulator derived via [`FixedFormat::accumulator_for`].
+    pub fn for_ops(act: FixedFormat, weight: FixedFormat) -> DatapathFormats {
+        DatapathFormats {
+            act,
+            acc: FixedFormat::accumulator_for(act, weight),
+        }
+    }
 }
 
 /// A fixed-point number with its format (for accumulator modeling).
@@ -138,7 +182,10 @@ impl Fixed {
         assert_eq!(self.fmt, other.fmt);
         let prod = self.raw as i128 * other.raw as i128;
         let shift = self.fmt.frac_bits;
-        let half = 1i128 << (shift - 1).min(126);
+        // Rounding half is 2^(shift-1) — except 0 when shift == 0: the
+        // product is already at the target scale, nothing to round (and
+        // `shift - 1` would underflow u32).
+        let half = if shift == 0 { 0 } else { 1i128 << (shift - 1) };
         let rounded = if prod >= 0 {
             (prod + half) >> shift
         } else {
@@ -215,6 +262,44 @@ mod tests {
         let a = Fixed::from_f64(100.0, fmt);
         let b = Fixed::from_f64(100.0, fmt);
         assert_eq!(a.add(&b).to_f64(), 127.0);
+    }
+
+    #[test]
+    fn mul_with_zero_frac_bits_is_exact_integer_product() {
+        // Regression: `shift - 1` underflowed u32 when frac_bits == 0.
+        let fmt = FixedFormat::new(8, 0); // integers in [-128, 127]
+        let a = Fixed::from_f64(7.0, fmt);
+        let b = Fixed::from_f64(-9.0, fmt);
+        assert_eq!(a.mul(&b).to_f64(), -63.0);
+        // Out-of-range products saturate instead of wrapping.
+        let big = Fixed::from_f64(100.0, fmt);
+        assert_eq!(big.mul(&big).to_f64(), fmt.max_value());
+        let neg = Fixed::from_f64(-100.0, fmt);
+        assert_eq!(big.mul(&neg).to_f64(), fmt.min_value());
+    }
+
+    #[test]
+    fn saturate_slice_rounds_and_clamps() {
+        let fmt = FixedFormat::new(8, 4); // range [-8, 7.9375], step 1/16
+        let mut xs = vec![0.26f32, 100.0, -100.0];
+        fmt.saturate_slice(&mut xs);
+        assert!((xs[0] - 0.25).abs() < 1e-6);
+        assert_eq!(xs[1], fmt.max_value() as f32);
+        assert_eq!(xs[2], fmt.min_value() as f32);
+    }
+
+    #[test]
+    fn accumulator_format_is_wide_and_bounded() {
+        let acc = FixedFormat::accumulator_for(FixedFormat::q8_8(), FixedFormat::q8_8());
+        assert_eq!((acc.word_bits, acc.frac_bits), (32, 16));
+        // Very fine operand formats cap the accumulator's fractional bits
+        // so at least 8 integer bits remain.
+        let fine = FixedFormat::new(30, 20);
+        let acc = FixedFormat::accumulator_for(fine, fine);
+        assert_eq!((acc.word_bits, acc.frac_bits), (32, 24));
+        let dp = DatapathFormats::for_ops(fine, fine);
+        assert_eq!(dp.acc, acc);
+        assert_eq!(dp.act, fine);
     }
 
     #[test]

@@ -20,6 +20,7 @@ use super::fixedpoint::FixedFormat;
 use super::hls::{schedule, Binding, LoopNest, ScheduledLoop};
 use super::interconnect::DdrModel;
 use super::lut::{Activation, ActivationTable};
+use super::pipeline::{Pipeline, Stage};
 use super::power::{Activity, PowerModel};
 use super::resources::{Device, Resources};
 use crate::mr::gru::GruParams;
@@ -138,6 +139,24 @@ impl GruAccelConfig {
         self
     }
 
+    /// The concurrent (DATAFLOW) configuration at arbitrary model dims
+    /// with explicit numeric formats — the cycle model behind the
+    /// quantized serving backend (`coordinator::FixedPointBackend`).
+    pub fn serving(
+        input: usize,
+        hidden: usize,
+        act_fmt: FixedFormat,
+        weight_fmt: FixedFormat,
+    ) -> GruAccelConfig {
+        GruAccelConfig {
+            input,
+            hidden,
+            act_fmt,
+            weight_fmt,
+            ..GruAccelConfig::concurrent()
+        }
+    }
+
     /// MACs in stage 1 (gate affines: W·x for 3 gates + U·h for r,z).
     pub fn stage1_macs(&self) -> u64 {
         (self.input * 3 * self.hidden + self.hidden * 2 * self.hidden) as u64
@@ -164,6 +183,20 @@ pub struct AccelReport {
     /// Achieved II of the binding stage.
     pub worst_stage_ii: u32,
     pub fits_pynq: bool,
+}
+
+impl AccelReport {
+    /// Cycles to stream a `seq`-step window: the first step pays the
+    /// pipeline fill (`cycles`), subsequent steps the steady-state
+    /// `interval`. For non-DATAFLOW configurations `cycles == interval`,
+    /// so this reduces to `seq · interval`.
+    pub fn window_cycles(&self, seq: u64) -> u64 {
+        if seq == 0 {
+            0
+        } else {
+            self.cycles + (seq - 1) * self.interval
+        }
+    }
 }
 
 /// The assembled accelerator.
@@ -249,6 +282,20 @@ impl GruAccel {
         vec![s1, s2, s3, s4]
     }
 
+    /// The four scheduled stages as a DATAFLOW stage pipeline, one item
+    /// per GRU step: each stage's service time (its internal loop drain)
+    /// is both its per-item initiation interval and its latency. Shared
+    /// by the quantized serving backend's cycle report and the `cycles`
+    /// bench so the two can never diverge.
+    pub fn stage_pipeline(&self) -> Pipeline {
+        let stages: Vec<Stage> = self
+            .stages()
+            .iter()
+            .map(|s| Stage::new(s.name.clone(), s.cycles as u32, s.cycles as u32))
+            .collect();
+        Pipeline::new(stages)
+    }
+
     /// Per-item DDR traffic in bytes (input + output always; intermediates
     /// too when `ddr_spill`).
     fn ddr_bytes_per_item(&self) -> u64 {
@@ -307,7 +354,7 @@ impl GruAccel {
         }
         if c.dataflow {
             for name in ["r_pre", "z_pre", "h_pre"] {
-                res += BramFifo::new(name, c.fifo_depth as u64, c.act_fmt.word_bits).resources();
+                res += BramFifo::for_format(name, c.fifo_depth as u64, c.act_fmt).resources();
             }
         }
         // DMA + AXI crossbar + control.
@@ -591,6 +638,37 @@ mod tests {
             assert!(t.resources.ff > f.resources.ff);
             assert!(t.power_w > f.power_w);
         }
+    }
+
+    #[test]
+    fn window_cycles_fill_plus_steady_state() {
+        let conc = GruAccel::new(GruAccelConfig::concurrent()).report();
+        assert_eq!(conc.window_cycles(0), 0);
+        assert_eq!(conc.window_cycles(1), conc.cycles);
+        assert_eq!(conc.window_cycles(64), conc.cycles + 63 * conc.interval);
+        // Sequential configs: cycles == interval, so the window is linear.
+        let base = GruAccel::new(GruAccelConfig::gru_baseline()).report();
+        assert_eq!(base.cycles, base.interval);
+        assert_eq!(base.window_cycles(64), 64 * base.interval);
+    }
+
+    #[test]
+    fn stage_pipeline_matches_scheduled_services() {
+        let a = GruAccel::new(GruAccelConfig::concurrent());
+        let p = a.stage_pipeline();
+        let services: Vec<u64> = a.stages().iter().map(|s| s.cycles).collect();
+        assert_eq!(p.analyze(1).fill_latency, services.iter().sum::<u64>());
+        assert_eq!(p.analyze(100).interval, *services.iter().max().unwrap());
+        assert_eq!(p.simulate(17), p.analyze(17));
+    }
+
+    #[test]
+    fn serving_config_scales_with_hidden_size() {
+        let fmt = FixedFormat::q8_8();
+        let small = GruAccel::new(GruAccelConfig::serving(4, 16, fmt, fmt)).report();
+        let big = GruAccel::new(GruAccelConfig::serving(4, 32, fmt, fmt)).report();
+        assert!(big.interval > small.interval);
+        assert!(big.cycles > small.cycles);
     }
 
     #[test]

@@ -54,6 +54,15 @@ pub struct LtcReport {
     pub energy_per_output_j: f64,
 }
 
+impl LtcReport {
+    /// Cycles to process a `seq`-step window: the iterative solver cannot
+    /// overlap time steps, so every step pays the full interval (compute
+    /// plus the per-sub-step DDR round trips and PS sync).
+    pub fn window_cycles(&self, seq: u64) -> u64 {
+        seq * self.interval
+    }
+}
+
 pub struct LtcAccel {
     pub cfg: LtcAccelConfig,
     pub ddr: DdrModel,
@@ -234,6 +243,18 @@ mod tests {
         let gru = GruAccel::new(GruAccelConfig::concurrent()).report();
         // Paper: GRU configs are ~98-99% lower energy/output than LTC.
         assert!(ltc.energy_per_output_j > 10.0 * gru.energy_per_output_j);
+    }
+
+    #[test]
+    fn ltc_window_at_least_4x_dataflow_gru_window() {
+        // The paper's §6 headline trend: the dataflow GRU needs ≥ 4×
+        // (they report 6.3×+) fewer cycles than the sequential LTC on a
+        // streaming window. `BENCH_cycles.json` records the exact ratio.
+        let ltc = LtcAccel::new(LtcAccelConfig::base()).report();
+        let gru = GruAccel::new(GruAccelConfig::concurrent()).report();
+        let ratio = ltc.window_cycles(64) as f64 / gru.window_cycles(64) as f64;
+        assert!(ratio >= 4.0, "ltc/gru window cycle ratio {ratio}");
+        assert_eq!(ltc.window_cycles(64), 64 * ltc.interval);
     }
 
     #[test]

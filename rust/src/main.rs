@@ -26,7 +26,7 @@ fn main() {
         &argv,
         &[
             "system", "method", "steps", "config", "requests", "seed", "samples", "dt", "lr",
-            "artifacts", "out", "workers", "backend",
+            "artifacts", "out", "workers", "backend", "fmt",
         ],
     );
     let result = match args.subcommand() {
@@ -43,6 +43,7 @@ fn main() {
                  \x20 merinda recover --system lotka --method merinda\n\
                  \x20 merinda train --system aid --steps 300\n\
                  \x20 merinda simulate --config concurrent\n\
+                 \x20 merinda serve --requests 256 --backend fixed --fmt q8.8\n\
                  \x20 merinda table 8"
             );
             std::process::exit(2);

@@ -32,6 +32,7 @@
 
 use super::dense::DenseHead;
 use super::gru::{sigmoid, GruParams};
+use crate::fpga::fixedpoint::DatapathFormats;
 
 /// SIMD-friendly accumulator width of the [`gemm`] micro-kernel.
 pub const LANES: usize = 8;
@@ -86,6 +87,7 @@ pub fn matvec_acc(k: usize, n: usize, x: &[f32], b: &[f32], ldb: usize, y: &mut 
 /// fixed-size accumulator array across the whole k sweep, so rustc keeps
 /// it in vector registers; k stays ascending, preserving the scalar
 /// accumulation order bitwise.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm(
     m: usize,
     k: usize,
@@ -280,6 +282,152 @@ pub fn gru_forward_batch(p: &PackedGru, xs: &[f32], seq: usize, batch: usize) ->
     h
 }
 
+/// One batch-major GRU step through the quantized datapath: the same
+/// three GEMMs as [`gru_step_batch`], but every pre-activation sum passes
+/// through the saturating accumulator format and every stage output is
+/// re-quantized to the activation format — the batched counterpart of
+/// `fpga::gru_accel::GruAccel::forward_fixed`, minus the LUT activation
+/// tables (serving keeps exact sigmoid/tanh so Q8.8 stays within serving
+/// tolerance of the f32 backend).
+///
+/// The caller is expected to hand in weights already quantized to the
+/// weight storage format (see `coordinator::FixedPointBackend`) and
+/// inputs quantized to `fmts.act`.
+pub fn gru_step_batch_fixed(
+    p: &PackedGru,
+    x: &[f32],
+    h: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    s: &mut GruBatchScratch,
+    fmts: DatapathFormats,
+) {
+    let (i_sz, hid) = (p.input, p.hidden);
+    let th = 3 * hid;
+    let (act, acc) = (fmts.act, fmts.acc);
+    debug_assert_eq!(x.len(), batch * i_sz);
+    debug_assert_eq!(h.len(), batch * hid);
+    debug_assert_eq!(out.len(), batch * hid);
+    debug_assert!(s.gx.len() >= batch * th);
+
+    // Stage 1: gate affines with saturating accumulate.
+    for w in 0..batch {
+        s.gx[w * th..(w + 1) * th].copy_from_slice(&p.b);
+    }
+    gemm(batch, i_sz, th, x, i_sz, &p.w, th, &mut s.gx, th);
+    acc.saturate_slice(&mut s.gx[..batch * th]);
+    act.quantize_slice(&mut s.gx[..batch * th]);
+
+    s.gh[..batch * 2 * hid].fill(0.0);
+    gemm(batch, hid, 2 * hid, h, hid, &p.u_rz, 2 * hid, &mut s.gh, 2 * hid);
+    acc.saturate_slice(&mut s.gh[..batch * 2 * hid]);
+    act.quantize_slice(&mut s.gh[..batch * 2 * hid]);
+
+    // Stage 2: gates + reset modulation, quantized at each boundary.
+    for w in 0..batch {
+        let gx = &s.gx[w * th..(w + 1) * th];
+        let gh = &s.gh[w * 2 * hid..(w + 1) * 2 * hid];
+        let hrow = &h[w * hid..(w + 1) * hid];
+        let zrow = &mut s.z[w * hid..(w + 1) * hid];
+        let rhrow = &mut s.rh[w * hid..(w + 1) * hid];
+        for j in 0..hid {
+            let r = act.quantize_f32(sigmoid(gx[j] + gh[j]));
+            zrow[j] = act.quantize_f32(sigmoid(gx[hid + j] + gh[hid + j]));
+            rhrow[j] = act.quantize_f32(r * hrow[j]);
+        }
+    }
+
+    // Stage 3: candidate recurrent term through the accumulator.
+    s.cand[..batch * hid].fill(0.0);
+    gemm(batch, hid, hid, &s.rh, hid, &p.u_n, hid, &mut s.cand, hid);
+    acc.saturate_slice(&mut s.cand[..batch * hid]);
+
+    // Stage 4: tanh + interpolation, quantized on writeback.
+    for w in 0..batch {
+        let gx = &s.gx[w * th..(w + 1) * th];
+        let cand = &s.cand[w * hid..(w + 1) * hid];
+        let zrow = &s.z[w * hid..(w + 1) * hid];
+        let hrow = &h[w * hid..(w + 1) * hid];
+        let orow = &mut out[w * hid..(w + 1) * hid];
+        for j in 0..hid {
+            let n = act.quantize_f32((gx[2 * hid + j] + act.quantize_f32(cand[j])).tanh());
+            orow[j] = act.quantize_f32((1.0 - zrow[j]) * n + zrow[j] * hrow[j]);
+        }
+    }
+}
+
+/// Quantized batch-major GRU sequence forward: [`gru_forward_batch`] with
+/// inputs re-quantized to the activation format each step and every stage
+/// running through [`gru_step_batch_fixed`]. Returns final hidden states
+/// `(B, H)`, already quantized to `fmts.act`.
+pub fn gru_forward_batch_fixed(
+    p: &PackedGru,
+    xs: &[f32],
+    seq: usize,
+    batch: usize,
+    fmts: DatapathFormats,
+) -> Vec<f32> {
+    let (i_sz, hid) = (p.input, p.hidden);
+    debug_assert_eq!(xs.len(), batch * seq * i_sz);
+    let mut s = GruBatchScratch::new(hid, batch);
+    let mut xt = vec![0.0f32; batch * i_sz];
+    let mut h = vec![0.0f32; batch * hid];
+    let mut next = vec![0.0f32; batch * hid];
+    for t in 0..seq {
+        for w in 0..batch {
+            let src = (w * seq + t) * i_sz;
+            xt[w * i_sz..(w + 1) * i_sz].copy_from_slice(&xs[src..src + i_sz]);
+        }
+        fmts.act.quantize_slice(&mut xt);
+        gru_step_batch_fixed(p, &xt, &h, &mut next, batch, &mut s, fmts);
+        std::mem::swap(&mut h, &mut next);
+    }
+    h
+}
+
+/// Quantized batched dense head: [`dense_head_batch`] with the hidden
+/// layer and outputs passed through the saturating accumulator and
+/// re-quantized to the activation format. Weights are expected
+/// pre-quantized by the caller; the pruning mask still forces exact
+/// zeros.
+pub fn dense_head_batch_fixed(
+    head: &DenseHead,
+    h: &[f32],
+    batch: usize,
+    fmts: DatapathFormats,
+) -> Vec<f32> {
+    let (i_sz, hid, out_sz) = (head.input, head.hidden, head.output);
+    let (act, acc) = (fmts.act, fmts.acc);
+    debug_assert_eq!(h.len(), batch * i_sz);
+    let mut z = vec![0.0f32; batch * hid];
+    for w in 0..batch {
+        z[w * hid..(w + 1) * hid].copy_from_slice(&head.b1);
+    }
+    gemm(batch, i_sz, hid, h, i_sz, &head.w1, hid, &mut z, hid);
+    acc.saturate_slice(&mut z);
+    for v in z.iter_mut() {
+        *v = v.max(0.0);
+    }
+    act.quantize_slice(&mut z);
+    let mut out = vec![0.0f32; batch * out_sz];
+    for w in 0..batch {
+        out[w * out_sz..(w + 1) * out_sz].copy_from_slice(&head.b2);
+    }
+    gemm(batch, hid, out_sz, &z, hid, &head.w2, out_sz, &mut out, out_sz);
+    acc.saturate_slice(&mut out);
+    act.quantize_slice(&mut out);
+    if let Some(mask) = &head.mask {
+        for w in 0..batch {
+            for (o, &keep) in out[w * out_sz..(w + 1) * out_sz].iter_mut().zip(mask) {
+                if !keep {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Batched dense head: `h (B, H)` → `theta (B, O)` through the two-layer
 /// ReLU MLP, matching [`DenseHead::forward`] per row (mask included).
 pub fn dense_head_batch(head: &DenseHead, h: &[f32], batch: usize) -> Vec<f32> {
@@ -437,6 +585,69 @@ mod tests {
             let want = cell.run(&xs[w * seq * 3..(w + 1) * seq * 3], seq);
             for (a, b) in h[w * 12..(w + 1) * 12].iter().zip(&want) {
                 assert!((a - b).abs() < 1e-6, "window {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_batch_forward_is_batch_invariant() {
+        use crate::fpga::fixedpoint::FixedFormat;
+        let mut rng = Prng::new(11);
+        let params = GruParams::random(3, 10, &mut rng, 0.3);
+        let packed = PackedGru::new(&params);
+        let fmts = DatapathFormats::for_ops(FixedFormat::q8_8(), FixedFormat::q8_8());
+        let (batch, seq) = (4usize, 9usize);
+        let xs = rng.normal_vec_f32(batch * seq * 3, 0.8);
+        let all = gru_forward_batch_fixed(&packed, &xs, seq, batch, fmts);
+        for w in 0..batch {
+            let one =
+                gru_forward_batch_fixed(&packed, &xs[w * seq * 3..(w + 1) * seq * 3], seq, 1, fmts);
+            assert_eq!(&all[w * 10..(w + 1) * 10], &one[..], "window {w}");
+        }
+    }
+
+    #[test]
+    fn fixed_forward_wide_format_tracks_float() {
+        use crate::fpga::fixedpoint::FixedFormat;
+        let mut rng = Prng::new(12);
+        let params = GruParams::random(4, 12, &mut rng, 0.3);
+        let packed = PackedGru::new(&params);
+        let wide = FixedFormat::new(24, 16);
+        let fmts = DatapathFormats::for_ops(wide, wide);
+        let (batch, seq) = (3usize, 16usize);
+        let xs = rng.normal_vec_f32(batch * seq * 4, 0.8);
+        let fixed = gru_forward_batch_fixed(&packed, &xs, seq, batch, fmts);
+        let float = gru_forward_batch(&packed, &xs, seq, batch);
+        for (a, b) in fixed.iter().zip(&float) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dense_head_batch_fixed_tracks_float_and_respects_mask() {
+        use crate::fpga::fixedpoint::FixedFormat;
+        let mut rng = Prng::new(13);
+        let mut head = DenseHead::random(6, 10, 9, &mut rng);
+        let batch = 3;
+        let h = rng.normal_vec_f32(batch * 6, 0.5);
+        let wide = FixedFormat::new(24, 16);
+        let fmts = DatapathFormats::for_ops(wide, wide);
+        let fixed = dense_head_batch_fixed(&head, &h, batch, fmts);
+        let float = dense_head_batch(&head, &h, batch);
+        for (a, b) in fixed.iter().zip(&float) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        // Pruned outputs are exact zeros even after quantization.
+        let calib = vec![head.forward(&h[0..6])];
+        head.prune_to_top(&calib, 3);
+        let q8 = DatapathFormats::for_ops(FixedFormat::q8_8(), FixedFormat::q8_8());
+        let masked = dense_head_batch_fixed(&head, &h, batch, q8);
+        let mask = head.mask.as_ref().unwrap();
+        for w in 0..batch {
+            for (o, &keep) in masked[w * 9..(w + 1) * 9].iter().zip(mask) {
+                if !keep {
+                    assert_eq!(*o, 0.0);
+                }
             }
         }
     }

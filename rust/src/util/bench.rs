@@ -93,13 +93,25 @@ impl Bench {
     }
 }
 
+/// Resolve a tracked bench artifact path at the repository root (one
+/// level above the crate manifest): cargo runs benches with the package
+/// directory as CWD, but the `BENCH_*.json` trajectory files are tracked
+/// at the repo root.
+pub fn artifact_path(file: &str) -> std::path::PathBuf {
+    let manifest = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".to_string());
+    let dir = std::path::Path::new(&manifest);
+    dir.parent().unwrap_or(dir).join(file)
+}
+
 /// Machine-readable bench report: measurement rows plus named
 /// baseline-vs-optimized speedups, written as `BENCH_<name>.json` so the
-/// perf trajectory is tracked across PRs.
+/// perf trajectory is tracked across PRs. Deterministic (non-wall-clock)
+/// results attach as named top-level sections.
 pub struct BenchJson {
     bench: String,
     rows: Vec<Json>,
     speedups: Vec<(String, Json)>,
+    sections: Vec<(String, Json)>,
 }
 
 impl BenchJson {
@@ -108,7 +120,24 @@ impl BenchJson {
             bench: bench.to_string(),
             rows: Vec::new(),
             speedups: Vec::new(),
+            sections: Vec::new(),
         }
+    }
+
+    /// Attach a named top-level section (e.g. deterministic cycle-model
+    /// results that are not timings). Keys must not collide with the
+    /// built-in `bench` / `rows` / `speedups` keys or an earlier section
+    /// (the serializer would silently last-wins otherwise).
+    pub fn section(&mut self, key: &str, value: Json) {
+        assert!(
+            !matches!(key, "bench" | "rows" | "speedups"),
+            "section key {key:?} collides with a built-in report key"
+        );
+        assert!(
+            self.sections.iter().all(|(k, _)| k != key),
+            "duplicate section key {key:?}"
+        );
+        self.sections.push((key.to_string(), value));
     }
 
     /// Record one measurement row.
@@ -139,19 +168,22 @@ impl BenchJson {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("bench", Json::str(self.bench.clone())),
-            ("rows", Json::Arr(self.rows.clone())),
-            (
-                "speedups",
-                Json::Obj(
-                    self.speedups
-                        .iter()
-                        .map(|(k, v)| (k.clone(), v.clone()))
-                        .collect(),
-                ),
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("bench".to_string(), Json::str(self.bench.clone()));
+        map.insert("rows".to_string(), Json::Arr(self.rows.clone()));
+        map.insert(
+            "speedups".to_string(),
+            Json::Obj(
+                self.speedups
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect(),
             ),
-        ])
+        );
+        for (k, v) in &self.sections {
+            map.insert(k.clone(), v.clone());
+        }
+        Json::Obj(map)
     }
 
     /// Write the report as pretty-printed JSON.
@@ -258,6 +290,37 @@ mod tests {
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
         let sp = j.get("speedups").unwrap().get("kernel").unwrap();
         assert!((sp.get("speedup").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_sections_appear_at_top_level() {
+        let mut r = BenchJson::new("cycles");
+        r.section(
+            "ratios",
+            Json::obj(vec![("dataflow_vs_sequential_ltc", Json::num(6.3))]),
+        );
+        let j = Json::parse(&r.to_json().to_pretty()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "cycles");
+        let ratio = j
+            .get("ratios")
+            .unwrap()
+            .get("dataflow_vs_sequential_ltc")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((ratio - 6.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn artifact_path_points_at_repo_root() {
+        // Under cargo, CARGO_MANIFEST_DIR is the `rust/` package dir; the
+        // artifact must land one level up.
+        let p = artifact_path("BENCH_test.json");
+        assert!(p.ends_with("BENCH_test.json"));
+        if let Ok(manifest) = std::env::var("CARGO_MANIFEST_DIR") {
+            let root = std::path::Path::new(&manifest).parent().unwrap();
+            assert_eq!(p.parent().unwrap(), root);
+        }
     }
 
     #[test]

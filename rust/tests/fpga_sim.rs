@@ -139,6 +139,99 @@ fn device_capacity_story() {
     );
 }
 
+fn rms(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let sq: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum();
+    (sq / a.len() as f64).sqrt()
+}
+
+/// Quantized serving accuracy sweep (paper §6.4): theta error grows
+/// monotonically as the activation format loses bits, and Q8.8 stays
+/// within serving tolerance of the f32 native backend.
+#[test]
+fn fixed_backend_format_sweep_degrades_monotonically() {
+    use merinda::coordinator::{
+        FixedPointBackend, FixedPointConfig, InferenceBackend, NativeBackend,
+    };
+    use merinda::util::Prng;
+    let native = NativeBackend::new(4, 99);
+    let mut rng = Prng::new(17);
+    let y = rng.normal_vec_f32(4 * native.window_y_len(), 0.5);
+    let u = rng.normal_vec_f32(4 * native.window_u_len(), 0.5);
+    let want = native.forward_batch(&y, &u).unwrap();
+    let rms_for = |cfg: FixedPointConfig| -> f64 {
+        let be = FixedPointBackend::from_native(&native, cfg).unwrap();
+        rms(&be.forward_batch(&y, &u).unwrap(), &want)
+    };
+    let q8_8 = rms_for(FixedPointConfig::q8_8());
+    let q4_8 = rms_for(FixedPointConfig::q4_8());
+    let int8 = rms_for(FixedPointConfig::int8());
+    // Monotone degradation with fewer bits (Q8.8 and Q4.8 share the same
+    // resolution, so they may tie when nothing saturates at ±8).
+    assert!(q8_8 <= q4_8 + 1e-9, "Q8.8 {q8_8} vs Q4.8 {q4_8}");
+    assert!(q4_8 <= int8 + 1e-9, "Q4.8 {q4_8} vs 8-bit {int8}");
+    assert!(int8 > q8_8, "8-bit ({int8}) must be strictly worse than Q8.8 ({q8_8})");
+    // Acceptance bound: Q8.8 within 1e-2 RMS of the f32 backend.
+    assert!(q8_8 < 1e-2, "Q8.8 RMS vs native: {q8_8}");
+}
+
+/// The quantized backend serves through the sharded `Service` with theta
+/// within 1e-2 RMS of the native f32 backend, and the shared cycle
+/// counters record the modeled traffic.
+#[test]
+fn fixed_backend_serves_through_service_within_tolerance() {
+    use merinda::coordinator::{
+        FixedPointBackend, FixedPointConfig, NativeBackend, RecoveryRequest, Service,
+        ServiceConfig,
+    };
+    use merinda::util::Prng;
+    let native = NativeBackend::new(8, 4242);
+    let fixed = FixedPointBackend::from_native(&native, FixedPointConfig::q8_8()).unwrap();
+    let probe = fixed.clone();
+    let cfg = ServiceConfig {
+        workers: 2,
+        ..Default::default()
+    };
+    let svc = Service::start(cfg, move || fixed.clone());
+
+    let mut rng = Prng::new(5);
+    let reqs: Vec<RecoveryRequest> = (0..16)
+        .map(|i| RecoveryRequest {
+            id: i,
+            y: rng.normal_vec_f32(64 * 3, 0.5),
+            u: rng.normal_vec_f32(64, 0.5),
+        })
+        .collect();
+    let resps = svc.recover_many(reqs.clone());
+    assert_eq!(resps.len(), 16);
+
+    let mut got = Vec::new();
+    let mut want = Vec::new();
+    for r in &resps {
+        let req = &reqs[r.id as usize];
+        let reference = native.forward_window_scalar(&req.y, &req.u);
+        assert_eq!(r.theta.len(), reference.len());
+        got.extend_from_slice(&r.theta);
+        want.extend(reference);
+    }
+    let served_rms = rms(&got, &want);
+    assert!(served_rms < 1e-2, "served Q8.8 theta RMS vs native: {served_rms}");
+
+    drop(svc); // join workers so all counter updates are visible
+    let rep = probe.cycle_report();
+    assert!(rep.windows_served >= 16, "windows {}", rep.windows_served);
+    assert!(rep.batches >= 2);
+    assert!(rep.modeled_cycles > 0);
+    assert!(rep.window_cycles < rep.window_cycles_sequential);
+}
+
 /// Functional equivalence across the whole simulator path: quantized
 /// accelerator ≈ f32 reference ≈ (via integration.rs) the lowered HLO.
 #[test]

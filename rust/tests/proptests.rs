@@ -5,7 +5,7 @@
 //! instance can be replayed deterministically.
 
 use merinda::fpga::bram::{BankedArray, Partition};
-use merinda::fpga::fixedpoint::FixedFormat;
+use merinda::fpga::fixedpoint::{Fixed, FixedFormat};
 use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
 use merinda::fpga::pipeline::{Pipeline, Stage};
 use merinda::mr::gru::{GruCell, GruParams};
@@ -83,6 +83,46 @@ fn prop_fixedpoint_roundtrip_and_idempotence() {
     }
 }
 
+/// `Fixed::mul` is total over every format `FixedFormat::new` accepts —
+/// any word width in 2..=32 and any `frac_bits < word_bits`, including
+/// `frac_bits == 0` (which used to underflow `shift - 1`). The product
+/// saturates to the format range and rounds within half an LSB.
+#[test]
+fn prop_fixed_mul_total_saturating_and_rounded() {
+    let mut rng = Prng::new(0x5F1);
+    for case in 0..CASES {
+        let word = 2 + rng.below(31) as u32; // 2..=32
+        let frac = rng.below(word as usize) as u32; // 0..word (< word)
+        let fmt = FixedFormat::new(word, frac);
+        for _ in 0..16 {
+            let a = Fixed::from_f64(
+                rng.uniform_in(2.0 * fmt.min_value(), 2.0 * fmt.max_value()),
+                fmt,
+            );
+            let b = Fixed::from_f64(
+                rng.uniform_in(2.0 * fmt.min_value(), 2.0 * fmt.max_value()),
+                fmt,
+            );
+            let c = a.mul(&b);
+            assert!(
+                c.to_f64() >= fmt.min_value() - 1e-12 && c.to_f64() <= fmt.max_value() + 1e-12,
+                "case {case}: {fmt:?} product escaped the range: {}",
+                c.to_f64()
+            );
+            let exact = a.to_f64() * b.to_f64();
+            if exact >= fmt.min_value() && exact <= fmt.max_value() {
+                assert!(
+                    (c.to_f64() - exact).abs() <= fmt.resolution() / 2.0 + 1e-12,
+                    "case {case}: {fmt:?} {} · {} → {} (exact {exact})",
+                    a.to_f64(),
+                    b.to_f64(),
+                    c.to_f64()
+                );
+            }
+        }
+    }
+}
+
 /// GRU state started from 0 is bounded by 1 in max-norm forever
 /// (convex blend of tanh output and previous state).
 #[test]
@@ -154,9 +194,9 @@ fn prop_ridge_weight_norm_monotone_in_lambda() {
     }
 }
 
-/// DATAFLOW pipeline: simulated total cycles within a small constant of
-/// the closed form for random stage graphs with deep FIFOs; interval
-/// equals max II.
+/// DATAFLOW pipeline: with unbounded (deep-enough) FIFOs the event
+/// simulation equals the closed form *exactly* — total cycles, steady
+/// interval and fill latency — for random stage graphs.
 #[test]
 fn prop_pipeline_sim_matches_closed_form() {
     let mut rng = Prng::new(0xF66);
@@ -173,13 +213,39 @@ fn prop_pipeline_sim_matches_closed_form() {
             .collect();
         let p = Pipeline::new(stages);
         let items = 1 + rng.below(40) as u64;
-        let a = p.analyze(items);
-        let s = p.simulate(items);
-        let skew = 2 * n_stages as i64 + 4;
+        assert_eq!(p.simulate(items), p.analyze(items), "case {case}");
+    }
+}
+
+/// Bounded FIFOs only ever slow a pipeline down, and generously sized
+/// ones behave exactly like unbounded ones.
+#[test]
+fn prop_bounded_fifos_never_speed_up() {
+    let mut rng = Prng::new(0xF67);
+    for case in 0..32 {
+        let n_stages = 2 + rng.below(4);
+        let stages: Vec<Stage> = (0..n_stages)
+            .map(|i| {
+                Stage::new(
+                    format!("s{i}"),
+                    1 + rng.below(6) as u32,
+                    1 + rng.below(20) as u32,
+                )
+            })
+            .collect();
+        let items = 1 + rng.below(40) as u64;
+        let unbounded = Pipeline::new(stages.clone());
+        let tiny_depths: Vec<Option<u32>> = (0..n_stages - 1)
+            .map(|_| Some(1 + rng.below(3) as u32))
+            .collect();
+        let tiny = Pipeline::new(stages.clone()).with_fifos(tiny_depths);
+        let deep = Pipeline::new(stages).with_fifos(vec![Some(4096); n_stages - 1]);
+        let u = unbounded.simulate(items);
         assert!(
-            (s.total_cycles as i64 - a.total_cycles as i64).abs() <= skew,
-            "case {case}: sim={s:?} ana={a:?}"
+            tiny.simulate(items).total_cycles >= u.total_cycles,
+            "case {case}: tiny FIFO sped the pipeline up"
         );
+        assert_eq!(deep.simulate(items), u, "case {case}");
     }
 }
 

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Validate BENCH_stream.json (schema + deterministic throughput floor).
+
+Usage: check_bench_stream.py <expected-backend>
+
+Run after `merinda soak` with MERINDA_SOAK_TENANTS / MERINDA_SOAK_SAMPLES
+set; every gated value below is window-count or cycle-model based, so the
+gate is machine-independent (wall-clock numbers live in the ungated
+"wall" section).
+"""
+import json
+import os
+import sys
+
+expected_backend = sys.argv[1] if len(sys.argv) > 1 else "native"
+tenants = int(os.environ.get("MERINDA_SOAK_TENANTS", "6"))
+samples = int(os.environ.get("MERINDA_SOAK_SAMPLES", "400"))
+
+d = json.load(open("BENCH_stream.json"))
+
+# --- schema ---
+for key in ("bench", "workload", "totals", "fairness", "queue",
+            "cycle_model", "verify", "wall", "rows", "speedups"):
+    assert key in d, f"missing key: {key}"
+assert d["bench"] == "stream"
+for k in ("tenants", "samples_per_tenant", "window", "stride", "backend",
+          "workers", "scenarios"):
+    assert k in d["workload"], f"missing workload.{k}"
+for k in ("windows_emitted", "windows_completed", "windows_shed",
+          "windows_failed"):
+    assert k in d["totals"], f"missing totals.{k}"
+for k in ("min_tenant_completed", "max_tenant_completed"):
+    assert k in d["fairness"], f"missing fairness.{k}"
+for k in ("service_queue_depth_max", "tenant_queue_max", "in_flight_max",
+          "burst_backoffs", "burst_final"):
+    assert k in d["queue"], f"missing queue.{k}"
+for k in ("window_cycles", "interval", "modeled_cycles_streamed",
+          "windows_per_mcycle"):
+    assert k in d["cycle_model"], f"missing cycle_model.{k}"
+for k in ("checked", "compared", "max_abs_delta"):
+    assert k in d["verify"], f"missing verify.{k}"
+
+# --- workload matches the env knobs ---
+w = d["workload"]
+assert w["backend"] == expected_backend, \
+    f"backend {w['backend']!r} != expected {expected_backend!r}"
+assert w["tenants"] == tenants and w["samples_per_tenant"] == samples
+
+# --- deterministic completion gate: every planned window recovered ---
+t = d["totals"]
+window, stride = w["window"], w["stride"]
+per_tenant = (samples - window) // stride + 1 if samples >= window else 0
+# +1 tail window when the strided walk leaves trailing samples uncovered.
+if samples >= window and (per_tenant - 1) * stride + window < samples:
+    per_tenant += 1
+expected_windows = tenants * per_tenant
+assert t["windows_emitted"] == expected_windows, \
+    f"emitted {t['windows_emitted']} != planned {expected_windows}"
+assert t["windows_completed"] == t["windows_emitted"], \
+    "smoke workload must complete every window (no shed/fail)"
+assert t["windows_shed"] == 0 and t["windows_failed"] == 0
+
+# --- fairness: identical-length streams must complete identically ---
+f = d["fairness"]
+assert f["min_tenant_completed"] == f["max_tenant_completed"] == per_tenant
+
+# --- sustained-throughput floor from the accelerator cycle model ---
+wpm = d["cycle_model"]["windows_per_mcycle"]
+assert wpm >= 5.0, f"sustained throughput regressed: {wpm} windows/Mcycle"
+
+# --- streaming must equal the one-shot path bitwise ---
+v = d["verify"]
+assert v["checked"], "soak smoke must run with verification on"
+assert v["compared"] == expected_windows
+assert v["max_abs_delta"] == 0.0, \
+    f"streaming diverged from one-shot recovery: {v['max_abs_delta']}"
+
+print(f"BENCH_stream.json OK: {expected_windows} windows on "
+      f"{w['backend']}, {wpm:.1f} windows/Mcycle, bitwise-verified")

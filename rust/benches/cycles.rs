@@ -12,7 +12,7 @@
 
 use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
 use merinda::fpga::ltc_accel::{LtcAccel, LtcAccelConfig};
-use merinda::util::bench::{artifact_path, BenchJson};
+use merinda::util::bench::{artifact_path, env_usize, BenchJson};
 use merinda::util::json::Json;
 
 fn design_json(cycles_per_step: u64, interval: u64, window_cycles: u64) -> Json {
@@ -24,10 +24,7 @@ fn design_json(cycles_per_step: u64, interval: u64, window_cycles: u64) -> Json 
 }
 
 fn main() {
-    let seq: u64 = std::env::var("MERINDA_BENCH_SEQ")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(64);
+    let seq: u64 = env_usize("MERINDA_BENCH_SEQ", 64) as u64;
 
     let df_accel = GruAccel::new(GruAccelConfig::concurrent());
     let df = df_accel.report();

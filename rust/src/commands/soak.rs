@@ -1,0 +1,343 @@
+//! `merinda soak` — continuous multi-tenant streaming recovery workload.
+//!
+//! Replays trajectories from the six `systems/*` case studies (lorenz,
+//! lotka, f8, av, aid, pathogen) as concurrent tenant streams through
+//! `coordinator::stream`: samples arrive round-robin across tenants,
+//! windows are sliced/queued/shed per policy, and the adaptive batcher
+//! pumps them into the sharded executors. Reports throughput, p50/p99
+//! latency, queue depth and shed counts, and writes a deterministic
+//! `BENCH_stream.json` (window counts + accelerator cycle model, so the
+//! gated values are machine-independent).
+//!
+//! By default the run *verifies itself*: the same windows are replayed
+//! through the one-shot `Service::recover_many` path on an identically
+//! seeded backend and every recovered window must match bitwise
+//! (`--no-verify` skips). CI shrinks the workload via the
+//! `MERINDA_SOAK_TENANTS` / `MERINDA_SOAK_SAMPLES` env knobs (the same
+//! pattern as `MERINDA_BENCH_SEQ` for the cycles bench).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use merinda::coordinator::stream::{decode_id, encode_id};
+use merinda::coordinator::{
+    window_plan, FixedPointBackend, FixedPointConfig, NativeBackend, NATIVE_HID, NATIVE_SEQ,
+    NATIVE_UDIM, NATIVE_XDIM, RecoveredWindow, RecoveryRequest, Service, ServiceConfig,
+    ShedPolicy, StreamConfig, StreamCoordinator, WindowConfig,
+};
+use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use merinda::systems::streaming_systems;
+use merinda::util::bench::{artifact_path, env_usize};
+use merinda::util::cli::Args;
+use merinda::util::json::Json;
+use merinda::util::{Error, Prng, Result};
+
+/// Canonical padded per-sample dims the serving backends expect.
+const XD: usize = NATIVE_XDIM;
+const UD: usize = NATIVE_UDIM;
+
+struct TenantStream {
+    scenario: &'static str,
+    y: Vec<f32>,
+    u: Vec<f32>,
+}
+
+/// Generate one normalized, padded trajectory per tenant, cycling
+/// through the six-scenario roster.
+fn build_streams(tenants: usize, samples: usize, seed: u64) -> Vec<TenantStream> {
+    let mut rng = Prng::new(seed);
+    let roster = streaming_systems();
+    (0..tenants)
+        .map(|t| {
+            let (sys, dt) = &roster[t % roster.len()];
+            let tr = sys.generate(samples, *dt, &mut rng);
+            let (y, u) = tr.padded_f32(XD, UD);
+            let ys: f32 = y.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            let us: f32 = u.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            TenantStream {
+                scenario: sys.name(),
+                y: y.iter().map(|v| v / ys).collect(),
+                u: u.iter().map(|v| v / us).collect(),
+            }
+        })
+        .collect()
+}
+
+/// Start a service on the requested backend. Returns the service plus,
+/// for the fixed backend, a counter-sharing probe for the cycle report.
+fn make_service(
+    backend: &str,
+    fmt: &str,
+    workers: usize,
+    seed: u64,
+) -> Result<(Service, Option<FixedPointBackend>)> {
+    let cfg = ServiceConfig {
+        workers,
+        ..Default::default()
+    };
+    match backend {
+        "native" => Ok((Service::start(cfg, move || NativeBackend::new(8, seed)), None)),
+        "fixed" => {
+            let fp = FixedPointConfig::from_name(fmt)?;
+            let be = FixedPointBackend::new(8, seed, fp);
+            let probe = be.clone();
+            Ok((Service::start(cfg, move || be.clone()), Some(probe)))
+        }
+        other => Err(Error::config(format!(
+            "unknown soak backend {other:?} (expected native or fixed)"
+        ))),
+    }
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let tenants = args.get_usize("tenants", env_usize("MERINDA_SOAK_TENANTS", 6)).max(1);
+    let samples = args.get_usize("samples", env_usize("MERINDA_SOAK_SAMPLES", 400));
+    let window = args.get_usize("window", NATIVE_SEQ);
+    let stride = args.get_usize("stride", 16);
+    let workers = args.get_usize("workers", 2).max(1);
+    let queue = args.get_usize("queue", 64);
+    let shed = ShedPolicy::from_name(&args.get_or("shed", "oldest"))?;
+    let seed = args.get_u64("seed", 42);
+    let backend = args.get_or("backend", "native");
+    let fmt = args.get_or("fmt", "q8.8");
+    let verify = !args.flag("no-verify");
+
+    if window != NATIVE_SEQ {
+        return Err(Error::config(format!(
+            "the canonical serving model recovers {NATIVE_SEQ}-sample windows; \
+             got --window {window}"
+        )));
+    }
+
+    let wcfg = WindowConfig { window, stride }.normalized();
+    let streams = build_streams(tenants, samples, seed);
+    let scenarios: BTreeSet<&str> = streams.iter().map(|s| s.scenario).collect();
+    println!(
+        "soak: {tenants} tenant stream(s) over {} scenario(s), {samples} samples each, \
+         window {}/stride {}, backend {backend}, {workers} worker(s)",
+        scenarios.len(),
+        wcfg.window,
+        wcfg.stride
+    );
+
+    let (svc, probe) = make_service(&backend, &fmt, workers, seed)?;
+    let scfg = StreamConfig {
+        window: wcfg,
+        tenant_queue: queue,
+        shed,
+        ..Default::default()
+    };
+    let mut coord = StreamCoordinator::new(svc, scfg, XD, UD);
+
+    // Samples arrive interleaved round-robin across tenants — the
+    // concurrent-stream shape, not tenant-after-tenant replay.
+    let t0 = Instant::now();
+    for s in 0..samples {
+        for (t, st) in streams.iter().enumerate() {
+            coord.push(t as u32, &st.y[s * XD..(s + 1) * XD], &st.u[s * UD..(s + 1) * UD]);
+        }
+        coord.pump();
+        coord.poll();
+    }
+    coord.flush_tails();
+    coord.drain();
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut results = coord.take_results();
+    results.sort_by_key(|r| (r.tenant, r.seq_no));
+    let stats = coord.stats();
+    let m = coord.metrics().snapshot();
+    let completed = stats.windows_completed;
+
+    println!(
+        "\nstreamed {completed} windows ({} shed, {} failed) in {wall:.3}s ({:.1} windows/s)",
+        stats.windows_shed,
+        stats.windows_failed,
+        completed as f64 / wall
+    );
+    println!(
+        "latency mean/p50/p99     {:.2} / {:.2} / {:.2} ms",
+        m.latency.mean_ms, m.latency.p50_ms, m.latency.p99_ms
+    );
+    println!(
+        "queue depth (svc/tenant) {} / {}   in-flight max {}",
+        m.queue_depth_max, stats.tenant_queue_max, stats.in_flight_max
+    );
+    println!(
+        "batches {}  occupancy {:.2}/8  AIMD backoffs {} (final burst {})",
+        m.batches, m.mean_batch_occupancy, stats.burst_backoffs, stats.burst_final
+    );
+    for pt in &stats.per_tenant {
+        println!(
+            "  tenant {:>2} [{:<16}] emitted {:>4}  completed {:>4}  shed {:>3}",
+            pt.tenant,
+            streams[pt.tenant as usize].scenario,
+            pt.emitted,
+            pt.completed,
+            pt.shed
+        );
+    }
+
+    // Streaming-vs-one-shot equivalence: the same windows through
+    // `recover_many` on an identically seeded backend must recover the
+    // same coefficients bitwise (the pipeline adds routing, not math).
+    let (verify_compared, verify_delta) = if verify {
+        let (svc2, _) = make_service(&backend, &fmt, workers, seed)?;
+        let plan = window_plan(samples, wcfg.window, wcfg.stride);
+        let mut reqs = Vec::new();
+        for (t, st) in streams.iter().enumerate() {
+            for (k, &s0) in plan.iter().enumerate() {
+                reqs.push(RecoveryRequest {
+                    id: encode_id(t as u32, k as u32),
+                    y: st.y[s0 * XD..(s0 + wcfg.window) * XD].to_vec(),
+                    u: st.u[s0 * UD..(s0 + wcfg.window) * UD].to_vec(),
+                });
+            }
+        }
+        // Chunked below the service queue depth: `recover_many` silently
+        // drops backpressure rejections, which would under-compare.
+        let planned = reqs.len();
+        let mut oneshot = Vec::with_capacity(planned);
+        while !reqs.is_empty() {
+            let take = reqs.len().min(128);
+            let chunk: Vec<RecoveryRequest> = reqs.drain(..take).collect();
+            oneshot.extend(svc2.recover_many(chunk));
+        }
+        if oneshot.len() != planned {
+            return Err(Error::numeric(format!(
+                "one-shot verification lost windows: served {}/{planned}",
+                oneshot.len()
+            )));
+        }
+        let by_key: BTreeMap<(u32, u32), &RecoveredWindow> =
+            results.iter().map(|r| ((r.tenant, r.seq_no), r)).collect();
+        let mut compared = 0u64;
+        let mut max_delta = 0.0f64;
+        for resp in &oneshot {
+            if let Some(r) = by_key.get(&decode_id(resp.id)) {
+                compared += 1;
+                for (a, b) in r.theta.iter().zip(&resp.theta) {
+                    max_delta = max_delta.max((*a as f64 - *b as f64).abs());
+                }
+            }
+        }
+        println!("verify: {compared} windows vs one-shot, max |dtheta| = {max_delta:.3e}");
+        if compared != results.len() as u64 {
+            return Err(Error::numeric(format!(
+                "verification covered {compared} of {} streamed windows",
+                results.len()
+            )));
+        }
+        if max_delta > 0.0 {
+            return Err(Error::numeric(format!(
+                "streaming and one-shot recovery disagree: max |dtheta| = {max_delta:.3e}"
+            )));
+        }
+        (compared, max_delta)
+    } else {
+        (0, 0.0)
+    };
+
+    // Deterministic accelerator cycle model at the serving dims and the
+    // active fixed-point formats: what sustained window throughput the
+    // DATAFLOW pipeline provides if the completed windows stream
+    // back-to-back. Machine-independent, so CI can gate on it.
+    let fp_model = probe.as_ref().map(|p| p.config()).unwrap_or_else(FixedPointConfig::q8_8);
+    let accel = GruAccel::new(GruAccelConfig::serving(
+        XD + UD,
+        NATIVE_HID,
+        fp_model.act_fmt,
+        fp_model.weight_fmt,
+    ));
+    let pipe = accel.stage_pipeline();
+    let window_cycles = pipe.analyze(wcfg.window as u64).total_cycles;
+    let streamed = pipe.analyze(completed * wcfg.window as u64);
+    let wpm = if streamed.total_cycles > 0 {
+        completed as f64 * 1e6 / streamed.total_cycles as f64
+    } else {
+        0.0
+    };
+    println!("cycle model: {window_cycles} cycles/window, {wpm:.1} windows/Mcycle sustained");
+    if let Some(p) = &probe {
+        let r = p.cycle_report();
+        println!(
+            "fixed-point counters: {} windows in {} batches, {} modeled cycles",
+            r.windows_served, r.batches, r.modeled_cycles
+        );
+    }
+
+    let min_done = stats.per_tenant.iter().map(|t| t.completed).min().unwrap_or(0);
+    let max_done = stats.per_tenant.iter().map(|t| t.completed).max().unwrap_or(0);
+
+    let mut report = merinda::util::bench::BenchJson::new("stream");
+    report.section(
+        "workload",
+        Json::obj(vec![
+            ("tenants", Json::num(tenants as f64)),
+            ("samples_per_tenant", Json::num(samples as f64)),
+            ("window", Json::num(wcfg.window as f64)),
+            ("stride", Json::num(wcfg.stride as f64)),
+            ("backend", Json::str(backend.clone())),
+            ("workers", Json::num(workers as f64)),
+            ("scenarios", Json::num(scenarios.len() as f64)),
+        ]),
+    );
+    report.section(
+        "totals",
+        Json::obj(vec![
+            ("windows_emitted", Json::num(stats.windows_emitted as f64)),
+            ("windows_completed", Json::num(completed as f64)),
+            ("windows_shed", Json::num(stats.windows_shed as f64)),
+            ("windows_failed", Json::num(stats.windows_failed as f64)),
+        ]),
+    );
+    report.section(
+        "fairness",
+        Json::obj(vec![
+            ("min_tenant_completed", Json::num(min_done as f64)),
+            ("max_tenant_completed", Json::num(max_done as f64)),
+        ]),
+    );
+    report.section(
+        "queue",
+        Json::obj(vec![
+            ("service_queue_depth_max", Json::num(m.queue_depth_max as f64)),
+            ("tenant_queue_max", Json::num(stats.tenant_queue_max as f64)),
+            ("in_flight_max", Json::num(stats.in_flight_max as f64)),
+            ("burst_backoffs", Json::num(stats.burst_backoffs as f64)),
+            ("burst_final", Json::num(stats.burst_final as f64)),
+        ]),
+    );
+    report.section(
+        "cycle_model",
+        Json::obj(vec![
+            ("window_cycles", Json::num(window_cycles as f64)),
+            ("interval", Json::num(streamed.interval as f64)),
+            ("modeled_cycles_streamed", Json::num(streamed.total_cycles as f64)),
+            ("windows_per_mcycle", Json::num(wpm)),
+        ]),
+    );
+    report.section(
+        "verify",
+        Json::obj(vec![
+            ("checked", Json::Bool(verify)),
+            ("compared", Json::num(verify_compared as f64)),
+            ("max_abs_delta", Json::num(verify_delta)),
+        ]),
+    );
+    // Wall-clock numbers are informational only — machine-dependent, so
+    // CI gates on the window counts and cycle model above instead.
+    report.section(
+        "wall",
+        Json::obj(vec![
+            ("seconds", Json::num(wall)),
+            ("windows_per_s", Json::num(completed as f64 / wall)),
+            ("latency_p50_ms", Json::num(m.latency.p50_ms)),
+            ("latency_p99_ms", Json::num(m.latency.p99_ms)),
+        ]),
+    );
+    let path = artifact_path("BENCH_stream.json");
+    report.write(&path)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

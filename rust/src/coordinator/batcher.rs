@@ -6,6 +6,15 @@
 //! executable's shape is always satisfied — padded rows are dropped on the
 //! way out). Ordering within a stream is preserved: requests are drained
 //! FIFO.
+//!
+//! Two cooperating pieces live here:
+//! * [`PendingBatch`] — the executor-side accumulator (size- and
+//!   deadline-triggered flush).
+//! * [`AimdBurst`] — the submitter-side adaptive controller: how many
+//!   windows the streaming layer pushes per tenant per pump round,
+//!   grown additively while the service accepts and halved on typed
+//!   overload (TCP-style AIMD), so offered load converges onto whatever
+//!   the executor fleet sustains without hammering a full queue.
 
 use std::time::{Duration, Instant};
 
@@ -84,6 +93,60 @@ impl<T> PendingBatch<T> {
     pub fn take(&mut self) -> Vec<T> {
         self.oldest = None;
         std::mem::take(&mut self.items)
+    }
+}
+
+/// Additive-increase / multiplicative-decrease controller for the
+/// streaming submitter's per-tenant burst size.
+///
+/// `grow` is called after a pump round the service fully accepted,
+/// `backoff` when a submit came back [`crate::util::Error::Overloaded`].
+/// The burst stays in `1..=max`, so a saturated service degrades to
+/// one-window-at-a-time trickle rather than a reject storm.
+#[derive(Clone, Copy, Debug)]
+pub struct AimdBurst {
+    cur: usize,
+    max: usize,
+    backoffs: u64,
+}
+
+impl AimdBurst {
+    /// Start at `initial` (clamped into `1..=max`).
+    pub fn new(initial: usize, max: usize) -> AimdBurst {
+        let max = max.max(1);
+        AimdBurst {
+            cur: initial.clamp(1, max),
+            max,
+            backoffs: 0,
+        }
+    }
+
+    /// Windows the submitter may push per tenant this round.
+    pub fn current(&self) -> usize {
+        self.cur
+    }
+
+    /// Additive increase after a clean (fully accepted) round.
+    pub fn grow(&mut self) {
+        self.cur = (self.cur + 1).min(self.max);
+    }
+
+    /// Multiplicative decrease after an overload rejection.
+    pub fn backoff(&mut self) {
+        self.cur = (self.cur / 2).max(1);
+        self.backoffs += 1;
+    }
+
+    /// How many times the controller has backed off.
+    pub fn backoffs(&self) -> u64 {
+        self.backoffs
+    }
+}
+
+impl Default for AimdBurst {
+    /// Start conservatively at 1 and allow bursts up to one model batch.
+    fn default() -> Self {
+        AimdBurst::new(1, 8)
     }
 }
 
@@ -171,5 +234,35 @@ mod tests {
     #[should_panic]
     fn padding_rejects_overfull() {
         pad_rows(vec![1.0; 10], 2, 4);
+    }
+
+    #[test]
+    fn aimd_grows_additively_and_caps() {
+        let mut b = AimdBurst::new(1, 4);
+        assert_eq!(b.current(), 1);
+        for _ in 0..10 {
+            b.grow();
+        }
+        assert_eq!(b.current(), 4, "growth must cap at max");
+        assert_eq!(b.backoffs(), 0);
+    }
+
+    #[test]
+    fn aimd_halves_and_floors_at_one() {
+        let mut b = AimdBurst::new(8, 8);
+        b.backoff();
+        assert_eq!(b.current(), 4);
+        b.backoff();
+        b.backoff();
+        b.backoff();
+        assert_eq!(b.current(), 1, "burst must floor at 1, never 0");
+        assert_eq!(b.backoffs(), 4);
+    }
+
+    #[test]
+    fn aimd_clamps_initial() {
+        assert_eq!(AimdBurst::new(0, 4).current(), 1);
+        assert_eq!(AimdBurst::new(100, 4).current(), 4);
+        assert_eq!(AimdBurst::default().current(), 1);
     }
 }

@@ -20,8 +20,10 @@ pub struct Metrics {
     submitted: AtomicU64,
     completed: AtomicU64,
     rejected: AtomicU64,
+    shed: AtomicU64,
     batches: AtomicU64,
     batched_items: AtomicU64,
+    queue_depth_max: AtomicU64,
     latencies_ms: Mutex<Vec<f64>>,
 }
 
@@ -31,9 +33,14 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// Items deliberately dropped by a load-shedding policy (as opposed
+    /// to `rejected`, which counts refused submissions).
+    pub shed: u64,
     pub batches: u64,
     /// Mean items per executed batch (batching efficiency).
     pub mean_batch_occupancy: f64,
+    /// High-water mark of the submission queue depth.
+    pub queue_depth_max: u64,
     pub latency: LatencyStats,
 }
 
@@ -48,6 +55,16 @@ impl Metrics {
 
     pub fn on_reject(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a deliberate load-shed decision (streaming layer).
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the observed submission-queue depth (keeps the maximum).
+    pub fn on_queue_depth(&self, depth: usize) {
+        self.queue_depth_max.fetch_max(depth as u64, Ordering::Relaxed);
     }
 
     pub fn on_batch(&self, items: u64) {
@@ -71,7 +88,9 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             batches,
+            queue_depth_max: self.queue_depth_max.load(Ordering::Relaxed),
             mean_batch_occupancy: if batches > 0 {
                 items as f64 / batches as f64
             } else {
@@ -106,14 +125,21 @@ mod tests {
         m.on_submit();
         m.on_submit();
         m.on_reject();
+        m.on_shed();
+        m.on_shed();
         m.on_batch(6);
         m.on_batch(8);
+        m.on_queue_depth(3);
+        m.on_queue_depth(9);
+        m.on_queue_depth(5);
         m.on_complete(Duration::from_millis(10));
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.shed, 2);
         assert_eq!(s.completed, 1);
         assert_eq!(s.batches, 2);
+        assert_eq!(s.queue_depth_max, 9, "gauge must keep the high-water mark");
         assert!((s.mean_batch_occupancy - 7.0).abs() < 1e-12);
         assert!(s.latency.mean_ms >= 9.0);
     }

@@ -8,6 +8,13 @@
 //! execute, and results fan back out to callers. Backpressure is a
 //! bounded submission queue. Python never runs here.
 //!
+//! On top of the one-shot request path, [`stream`] turns the service
+//! into a continuous pipeline: per-tenant sample streams are sliced
+//! into overlapping recovery windows, held in bounded per-tenant queues
+//! with explicit shed policies, and pumped into the executors through
+//! an AIMD burst controller with round-robin tenant fairness
+//! (`merinda soak` drives it across all six case-study scenarios).
+//!
 //! The design is deliberately the vLLM-router shape scaled to this paper:
 //! request router → batcher → executor → response demux, with metrics.
 
@@ -16,10 +23,19 @@ mod fixed;
 mod metrics;
 mod native;
 mod service;
+pub mod stream;
 
-pub use batcher::{BatcherConfig, PendingBatch};
+pub use batcher::{AimdBurst, BatcherConfig, PendingBatch};
 pub use fixed::{FixedCycleReport, FixedPointBackend, FixedPointConfig};
-pub use native::NativeBackend;
+// Constant re-exports let CLI tools and out-of-crate tests reference the
+// canonical serving dims without reaching into the private module.
+pub use native::{
+    NativeBackend, NATIVE_DENSE, NATIVE_HID, NATIVE_PLIB, NATIVE_SEQ, NATIVE_UDIM, NATIVE_XDIM,
+};
+pub use stream::{
+    window_plan, RecoveredWindow, ShedPolicy, StreamConfig, StreamCoordinator, StreamStats,
+    TenantStats, WindowConfig, Windower,
+};
 
 /// Re-export of the padding helper for out-of-crate property tests.
 pub fn pad_rows_for_tests(data: Vec<f32>, row_len: usize, batch: usize) -> (Vec<f32>, usize) {

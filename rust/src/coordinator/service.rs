@@ -239,23 +239,46 @@ impl Service {
     }
 
     /// Submit a request; returns a receiver for the response. Fails fast
-    /// with backpressure if the queue is full.
+    /// with a typed [`Error::Overloaded`] if the queue is full, so
+    /// callers (the streaming layer in particular) can tell transient
+    /// backpressure apart from permanent failures and make an explicit
+    /// shed-vs-retry decision. A shut-down service reports a config
+    /// error instead — retrying that would never succeed.
     pub fn submit(&self, req: RecoveryRequest) -> Result<Receiver<RecoveryResponse>> {
+        self.try_submit(req).map_err(|(e, _)| e)
+    }
+
+    /// Like [`Service::submit`], but hands the request back on rejection
+    /// so retrying callers keep the payload without cloning it per
+    /// attempt (the streaming pump holds rejected windows this way).
+    #[allow(clippy::result_large_err)]
+    pub fn try_submit(
+        &self,
+        req: RecoveryRequest,
+    ) -> std::result::Result<Receiver<RecoveryResponse>, (Error, RecoveryRequest)> {
         let (rtx, rrx) = sync_channel(1);
         self.metrics.on_submit();
-        {
+        let depth = {
             let mut q = self.shared.state.lock().unwrap();
-            if !q.open || q.items.len() >= self.queue_depth {
+            if !q.open {
                 drop(q);
                 self.metrics.on_reject();
-                return Err(Error::config("service queue full (backpressure)"));
+                return Err((Error::config("service is shut down"), req));
+            }
+            if q.items.len() >= self.queue_depth {
+                let depth = q.items.len();
+                drop(q);
+                self.metrics.on_reject();
+                return Err((Error::Overloaded { depth }, req));
             }
             q.items.push_back(InFlight {
                 req,
                 t0: Instant::now(),
                 resp: rtx,
             });
-        }
+            q.items.len()
+        };
+        self.metrics.on_queue_depth(depth);
         self.shared.cv.notify_one();
         Ok(rrx)
     }
@@ -486,6 +509,84 @@ mod tests {
             }
         }
         assert!(rejected > 0, "expected backpressure rejections");
+        for rx in kept {
+            let _ = rx.recv();
+        }
+    }
+
+    #[test]
+    fn overload_error_is_typed_with_depth() {
+        // Regression: a full queue must surface as `Error::Overloaded`
+        // (shed-vs-fail decisions key on it), not a stringly config error.
+        let cfg = ServiceConfig {
+            queue_depth: 2,
+            batcher: BatcherConfig {
+                batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 1,
+        };
+        let svc = Service::start(cfg, || MockBackend {
+            batch: 1,
+            delay: Duration::from_millis(50),
+            ..Default::default()
+        });
+        let mut kept = Vec::new();
+        let mut saw_overload = false;
+        for i in 0..12 {
+            match svc.submit(mk_req(i, 0.0)) {
+                Ok(rx) => kept.push(rx),
+                Err(e) => {
+                    assert!(e.is_overload(), "expected Overloaded, got: {e}");
+                    match e {
+                        Error::Overloaded { depth } => assert!((1..=2).contains(&depth)),
+                        other => panic!("expected Overloaded variant, got {other:?}"),
+                    }
+                    saw_overload = true;
+                }
+            }
+        }
+        assert!(saw_overload, "queue of depth 2 should have overflowed");
+        for rx in kept {
+            let _ = rx.recv();
+        }
+        let s = svc.metrics.snapshot();
+        assert!(s.rejected > 0);
+        assert!((1..=2).contains(&s.queue_depth_max));
+    }
+
+    #[test]
+    fn try_submit_returns_payload_on_overload() {
+        let cfg = ServiceConfig {
+            queue_depth: 1,
+            batcher: BatcherConfig {
+                batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 1,
+        };
+        let svc = Service::start(cfg, || MockBackend {
+            batch: 1,
+            delay: Duration::from_millis(50),
+            ..Default::default()
+        });
+        let mut kept = Vec::new();
+        let mut recovered_payload = false;
+        for i in 0..12 {
+            match svc.try_submit(mk_req(i, 1.25)) {
+                Ok(rx) => kept.push(rx),
+                Err((e, back)) => {
+                    assert!(e.is_overload());
+                    // The rejected request must come back intact for a
+                    // clone-free retry.
+                    assert_eq!(back.id, i);
+                    assert_eq!(back.y.len(), 64 * 3);
+                    assert!((back.y[0] - 1.25).abs() < 1e-6);
+                    recovered_payload = true;
+                }
+            }
+        }
+        assert!(recovered_payload, "expected at least one rejection");
         for rx in kept {
             let _ = rx.recv();
         }

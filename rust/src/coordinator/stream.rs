@@ -1,0 +1,919 @@
+//! Streaming recovery pipeline: continuous per-tenant sample streams →
+//! overlapping recovery windows → the sharded executor fleet.
+//!
+//! MERINDA's serving claim is that model recovery should run as a
+//! *streaming dataflow*, not a batch of one-shot kernel launches. This
+//! module is the software half of that claim: each tenant (a deployed
+//! system emitting telemetry) pushes `(y, u)` samples one at a time; a
+//! per-tenant [`Windower`] slices the stream into overlapping recovery
+//! windows; the [`StreamCoordinator`] holds the ready windows in bounded
+//! per-tenant queues and pumps them into a [`Service`] with round-robin
+//! fairness and an AIMD burst controller
+//! ([`AimdBurst`](super::batcher::AimdBurst)).
+//!
+//! Overload handling is explicit and two-tiered:
+//! * the *service* queue rejecting with a typed
+//!   [`Overloaded`](crate::util::Error::Overloaded) error is treated as
+//!   transient backpressure — the window is held, the burst halves, and
+//!   the submit retries on a later pump;
+//! * a *tenant* queue overflowing sheds a window under a configured
+//!   [`ShedPolicy`] (drop the oldest for freshest-data semantics, or the
+//!   newest for complete-the-backlog semantics), counted per tenant and
+//!   in the shared [`Metrics`](super::metrics::Metrics) sink.
+//!
+//! The pipeline works against any [`InferenceBackend`]
+//! (native f32 or quantized fixed-point): recovered windows are bitwise
+//! identical to submitting the same windows through
+//! [`Service::recover_many`], which `merinda soak` verifies by default
+//! and `rust/tests/streaming.rs` asserts on both backends.
+//!
+//! [`InferenceBackend`]: super::service::InferenceBackend
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::batcher::AimdBurst;
+use super::metrics::Metrics;
+use super::service::{RecoveryRequest, RecoveryResponse, Service};
+
+/// How a continuous stream is sliced into recovery windows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowConfig {
+    /// Samples per recovery window (the model's `seq`).
+    pub window: usize,
+    /// Samples between consecutive window starts. Values above `window`
+    /// would drop samples, so configs are normalized to `1..=window` —
+    /// windowing is lossless by construction.
+    pub stride: usize,
+}
+
+impl Default for WindowConfig {
+    fn default() -> Self {
+        WindowConfig {
+            window: 64,
+            stride: 16,
+        }
+    }
+}
+
+impl WindowConfig {
+    /// Clamp into the lossless regime: `window ≥ 1`, `1 ≤ stride ≤ window`.
+    pub fn normalized(self) -> WindowConfig {
+        let window = self.window.max(1);
+        WindowConfig {
+            window,
+            stride: self.stride.clamp(1, window),
+        }
+    }
+}
+
+/// Window start indices for a finite stream of `len` samples.
+///
+/// The pure-function mirror of [`Windower`]: starts advance by `stride`
+/// (clamped into `1..=window`), and a final tail window anchored at
+/// `len - window` is appended when the strided walk would leave trailing
+/// samples uncovered. Guarantees, for any `len ≥ window`:
+/// * every sample index in `0..len` is inside at least one window
+///   (losslessness), and
+/// * starts are strictly increasing.
+///
+/// Streams shorter than one window yield no full window and return an
+/// empty plan.
+pub fn window_plan(len: usize, window: usize, stride: usize) -> Vec<usize> {
+    let cfg = WindowConfig { window, stride }.normalized();
+    let (window, stride) = (cfg.window, cfg.stride);
+    if len < window {
+        return Vec::new();
+    }
+    let mut starts = Vec::new();
+    let mut s = 0usize;
+    loop {
+        starts.push(s);
+        if s + window >= len {
+            break;
+        }
+        s += stride;
+        if s + window > len {
+            s = len - window;
+        }
+    }
+    starts
+}
+
+/// Incremental windower for one tenant stream.
+///
+/// Accepts one `(y_row, u_row)` sample at a time and emits each window
+/// as soon as its last sample arrives; [`Windower::finish`] flushes the
+/// tail window at end-of-stream. The emitted start sequence is exactly
+/// [`window_plan`] of the final stream length (asserted by the property
+/// tests in `rust/tests/proptests.rs`). Memory is bounded: only the
+/// samples still reachable by a future window are retained.
+#[derive(Debug)]
+pub struct Windower {
+    window: usize,
+    stride: usize,
+    xdim: usize,
+    udim: usize,
+    /// Retained sample rows, starting at absolute index `base`.
+    y: Vec<f32>,
+    u: Vec<f32>,
+    base: usize,
+    /// Absolute start index of the next strided window.
+    next_start: usize,
+    /// Total samples pushed so far.
+    pushed: usize,
+    emitted: u64,
+}
+
+/// One emitted window: `(start_index, y_payload, u_payload)`.
+pub type EmittedWindow = (usize, Vec<f32>, Vec<f32>);
+
+impl Windower {
+    pub fn new(cfg: WindowConfig, xdim: usize, udim: usize) -> Windower {
+        let cfg = cfg.normalized();
+        Windower {
+            window: cfg.window,
+            stride: cfg.stride,
+            xdim,
+            udim,
+            y: Vec::new(),
+            u: Vec::new(),
+            base: 0,
+            next_start: 0,
+            pushed: 0,
+            emitted: 0,
+        }
+    }
+
+    /// Samples pushed so far.
+    pub fn pushed(&self) -> usize {
+        self.pushed
+    }
+
+    /// Windows emitted so far (including tail flushes).
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Push one sample; returns the window it completed, if any.
+    pub fn push(&mut self, y_row: &[f32], u_row: &[f32]) -> Option<EmittedWindow> {
+        assert_eq!(y_row.len(), self.xdim, "y row width");
+        assert_eq!(u_row.len(), self.udim, "u row width");
+        self.y.extend_from_slice(y_row);
+        self.u.extend_from_slice(u_row);
+        self.pushed += 1;
+        let out = if self.pushed >= self.next_start + self.window {
+            let s = self.next_start;
+            let w = self.copy_window(s);
+            self.next_start = s + self.stride;
+            self.emitted += 1;
+            Some(w)
+        } else {
+            None
+        };
+        self.trim();
+        out
+    }
+
+    /// End-of-stream flush: emit the tail window at `len - window` when
+    /// the strided walk left trailing samples uncovered. Idempotent
+    /// until more samples arrive; streams shorter than one window have
+    /// no full window to emit.
+    pub fn finish(&mut self) -> Option<EmittedWindow> {
+        if self.pushed < self.window {
+            return None;
+        }
+        let covered = if self.emitted == 0 {
+            0
+        } else {
+            self.next_start - self.stride + self.window
+        };
+        if covered >= self.pushed {
+            return None;
+        }
+        let s = self.pushed - self.window;
+        let w = self.copy_window(s);
+        self.next_start = s + self.stride;
+        self.emitted += 1;
+        Some(w)
+    }
+
+    fn copy_window(&self, start: usize) -> EmittedWindow {
+        debug_assert!(start >= self.base, "window start trimmed away");
+        let off = start - self.base;
+        let y = self.y[off * self.xdim..(off + self.window) * self.xdim].to_vec();
+        let u = self.u[off * self.udim..(off + self.window) * self.udim].to_vec();
+        (start, y, u)
+    }
+
+    /// Drop rows no future window (strided or tail) can reach: everything
+    /// before `min(next_start, pushed - window)`.
+    fn trim(&mut self) {
+        let keep_from = self.next_start.min(self.pushed.saturating_sub(self.window));
+        if keep_from > self.base {
+            let rows = keep_from - self.base;
+            self.y.drain(..rows * self.xdim);
+            self.u.drain(..rows * self.udim);
+            self.base = keep_from;
+        }
+    }
+}
+
+/// What to drop when a bounded tenant queue overflows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Drop the oldest queued window: the stream always serves the
+    /// freshest telemetry (digital-twin semantics).
+    Oldest,
+    /// Drop the incoming window: finish the queued backlog first
+    /// (batch-completion semantics).
+    Newest,
+}
+
+impl ShedPolicy {
+    /// Parse a CLI name (`merinda soak --shed oldest|newest`).
+    pub fn from_name(name: &str) -> crate::util::Result<ShedPolicy> {
+        match name {
+            "oldest" => Ok(ShedPolicy::Oldest),
+            "newest" => Ok(ShedPolicy::Newest),
+            other => Err(crate::util::Error::config(format!(
+                "unknown shed policy {other:?} (expected oldest or newest)"
+            ))),
+        }
+    }
+}
+
+/// Streaming-pipeline configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    pub window: WindowConfig,
+    /// Bounded per-tenant queue of ready-but-unsubmitted windows.
+    pub tenant_queue: usize,
+    /// Shed decision when a tenant queue overflows.
+    pub shed: ShedPolicy,
+    /// Initial AIMD burst (windows per tenant per pump round).
+    pub burst_initial: usize,
+    /// Maximum AIMD burst.
+    pub burst_max: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            window: WindowConfig::default(),
+            tenant_queue: 64,
+            shed: ShedPolicy::Oldest,
+            burst_initial: 1,
+            burst_max: 8,
+        }
+    }
+}
+
+/// One recovered window, attributed back to its stream position.
+#[derive(Clone, Debug)]
+pub struct RecoveredWindow {
+    pub tenant: u32,
+    /// Per-tenant window sequence number (0-based emission order).
+    pub seq_no: u32,
+    /// Sample index of the window start within the tenant stream.
+    pub start: usize,
+    /// Estimated coefficients for the window.
+    pub theta: Vec<f32>,
+    /// Submit-to-response latency observed by the service.
+    pub latency: Duration,
+}
+
+/// Per-tenant streaming counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantStats {
+    pub tenant: u32,
+    pub samples: u64,
+    pub emitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub failed: u64,
+}
+
+/// Whole-pipeline streaming counters.
+#[derive(Clone, Debug, Default)]
+pub struct StreamStats {
+    pub samples_pushed: u64,
+    pub windows_emitted: u64,
+    pub windows_completed: u64,
+    pub windows_shed: u64,
+    pub windows_failed: u64,
+    /// High-water mark across all tenant queues.
+    pub tenant_queue_max: usize,
+    /// High-water mark of windows awaiting a service response.
+    pub in_flight_max: usize,
+    /// AIMD backoffs taken (service overload events observed).
+    pub burst_backoffs: u64,
+    /// Burst size the controller converged to.
+    pub burst_final: usize,
+    pub per_tenant: Vec<TenantStats>,
+}
+
+/// Encode a `(tenant, seq_no)` pair into a service request id.
+pub fn encode_id(tenant: u32, seq_no: u32) -> u64 {
+    ((tenant as u64) << 32) | seq_no as u64
+}
+
+/// Recover the `(tenant, seq_no)` pair from a service request id.
+pub fn decode_id(id: u64) -> (u32, u32) {
+    ((id >> 32) as u32, id as u32)
+}
+
+struct PendingWindow {
+    seq_no: u32,
+    start: usize,
+    y: Vec<f32>,
+    u: Vec<f32>,
+}
+
+struct TenantState {
+    windower: Windower,
+    queue: VecDeque<PendingWindow>,
+    queue_high: usize,
+    samples: u64,
+    emitted: u64,
+    completed: u64,
+    shed: u64,
+    failed: u64,
+    next_seq: u32,
+}
+
+struct InFlightWindow {
+    tenant: u32,
+    seq_no: u32,
+    start: usize,
+    rx: Receiver<RecoveryResponse>,
+}
+
+/// Bound a ready window into a tenant queue, shedding per policy on
+/// overflow.
+fn enqueue_window(
+    t: &mut TenantState,
+    w: PendingWindow,
+    cap: usize,
+    shed: ShedPolicy,
+    metrics: &Metrics,
+) {
+    let cap = cap.max(1);
+    if t.queue.len() >= cap {
+        t.shed += 1;
+        metrics.on_shed();
+        match shed {
+            // Drop the incoming window, keep the backlog.
+            ShedPolicy::Newest => return,
+            // Drop the stalest queued window, keep the fresh one.
+            ShedPolicy::Oldest => {
+                t.queue.pop_front();
+            }
+        }
+    }
+    t.queue.push_back(w);
+    t.queue_high = t.queue_high.max(t.queue.len());
+}
+
+/// The streaming recovery pipeline: per-tenant windowers and bounded
+/// queues in front of a sharded [`Service`].
+///
+/// Usage: [`push`](StreamCoordinator::push) samples as they arrive,
+/// calling [`pump`](StreamCoordinator::pump) /
+/// [`poll`](StreamCoordinator::poll) periodically to keep windows
+/// flowing; at end-of-stream, [`flush_tails`](StreamCoordinator::flush_tails)
+/// then [`drain`](StreamCoordinator::drain), and collect
+/// [`take_results`](StreamCoordinator::take_results).
+pub struct StreamCoordinator {
+    svc: Service,
+    cfg: StreamConfig,
+    xdim: usize,
+    udim: usize,
+    tenants: BTreeMap<u32, TenantState>,
+    in_flight: VecDeque<InFlightWindow>,
+    burst: AimdBurst,
+    results: Vec<RecoveredWindow>,
+    in_flight_max: usize,
+    /// Tenant id the next pump sweep starts from — set to the tenant the
+    /// service refused, so a freed slot goes to the starved tenant first
+    /// instead of restarting at the lowest id every time.
+    rr_resume: u32,
+}
+
+impl StreamCoordinator {
+    /// Wrap a running service. `xdim`/`udim` are the per-sample row
+    /// widths the backend expects (padded dims, e.g. 3/1 for the
+    /// canonical serving model).
+    pub fn new(svc: Service, cfg: StreamConfig, xdim: usize, udim: usize) -> StreamCoordinator {
+        let cfg = StreamConfig {
+            window: cfg.window.normalized(),
+            ..cfg
+        };
+        let burst = AimdBurst::new(cfg.burst_initial, cfg.burst_max);
+        StreamCoordinator {
+            svc,
+            cfg,
+            xdim,
+            udim,
+            tenants: BTreeMap::new(),
+            in_flight: VecDeque::new(),
+            burst,
+            results: Vec::new(),
+            in_flight_max: 0,
+            rr_resume: 0,
+        }
+    }
+
+    /// The shared service metrics sink (latency, batches, sheds).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.svc.metrics.clone()
+    }
+
+    /// Push one sample for `tenant`. If the sample completes a window it
+    /// is enqueued (possibly shedding per policy). Cheap; call `pump`
+    /// periodically to move enqueued windows into the service.
+    pub fn push(&mut self, tenant: u32, y_row: &[f32], u_row: &[f32]) {
+        let (wcfg, xdim, udim) = (self.cfg.window, self.xdim, self.udim);
+        let t = self.tenants.entry(tenant).or_insert_with(|| TenantState {
+            windower: Windower::new(wcfg, xdim, udim),
+            queue: VecDeque::new(),
+            queue_high: 0,
+            samples: 0,
+            emitted: 0,
+            completed: 0,
+            shed: 0,
+            failed: 0,
+            next_seq: 0,
+        });
+        t.samples += 1;
+        if let Some((start, y, u)) = t.windower.push(y_row, u_row) {
+            let w = PendingWindow {
+                seq_no: t.next_seq,
+                start,
+                y,
+                u,
+            };
+            t.next_seq += 1;
+            t.emitted += 1;
+            enqueue_window(t, w, self.cfg.tenant_queue, self.cfg.shed, &self.svc.metrics);
+        }
+    }
+
+    /// End-of-stream: flush every tenant's tail window into its queue.
+    pub fn flush_tails(&mut self) {
+        for t in self.tenants.values_mut() {
+            if let Some((start, y, u)) = t.windower.finish() {
+                let w = PendingWindow {
+                    seq_no: t.next_seq,
+                    start,
+                    y,
+                    u,
+                };
+                t.next_seq += 1;
+                t.emitted += 1;
+                enqueue_window(t, w, self.cfg.tenant_queue, self.cfg.shed, &self.svc.metrics);
+            }
+        }
+    }
+
+    /// Move queued windows into the service: round-robin over tenants,
+    /// up to the current AIMD burst per tenant per round, repeating
+    /// until the queues drain or the service pushes back. A typed
+    /// overload halves the burst and ends the pump; the refused window
+    /// goes back to the front of its queue (payload returned by
+    /// [`Service::try_submit`], no clone) and that tenant leads the next
+    /// sweep, so sustained saturation rotates freed slots across tenants
+    /// instead of starving high ids. A clean round with submissions
+    /// grows the burst. Returns the number of windows submitted.
+    pub fn pump(&mut self) -> usize {
+        let ids: Vec<u32> = self.tenants.keys().copied().collect();
+        if ids.is_empty() {
+            return 0;
+        }
+        let pivot = ids.iter().position(|&id| id >= self.rr_resume).unwrap_or(0);
+        let mut total = 0usize;
+        loop {
+            let burst = self.burst.current();
+            let mut submitted = 0usize;
+            let mut overloaded = false;
+            'tenants: for k in 0..ids.len() {
+                let tid = ids[(pivot + k) % ids.len()];
+                let t = self.tenants.get_mut(&tid).expect("tenant vanished mid-pump");
+                for _ in 0..burst {
+                    let Some(w) = t.queue.pop_front() else { break };
+                    let (seq_no, start) = (w.seq_no, w.start);
+                    let req = RecoveryRequest {
+                        id: encode_id(tid, seq_no),
+                        y: w.y,
+                        u: w.u,
+                    };
+                    match self.svc.try_submit(req) {
+                        Ok(rx) => {
+                            self.in_flight.push_back(InFlightWindow {
+                                tenant: tid,
+                                seq_no,
+                                start,
+                                rx,
+                            });
+                            self.in_flight_max = self.in_flight_max.max(self.in_flight.len());
+                            submitted += 1;
+                        }
+                        Err((e, back)) if e.is_overload() => {
+                            // Transient backpressure: hold the window
+                            // (payload moved back, not cloned), back
+                            // off, and let this tenant lead next pump.
+                            t.queue.push_front(PendingWindow {
+                                seq_no,
+                                start,
+                                y: back.y,
+                                u: back.u,
+                            });
+                            self.rr_resume = tid;
+                            overloaded = true;
+                            break 'tenants;
+                        }
+                        Err(_) => {
+                            // Permanent failure for this window.
+                            t.failed += 1;
+                        }
+                    }
+                }
+            }
+            total += submitted;
+            if overloaded {
+                self.burst.backoff();
+                break;
+            }
+            if submitted == 0 {
+                break;
+            }
+            self.burst.grow();
+        }
+        total
+    }
+
+    /// Non-blocking: record responses that are already available (in
+    /// submission order, stopping at the first still-pending one).
+    /// Returns the number of windows recorded.
+    pub fn poll(&mut self) -> usize {
+        let mut received = 0usize;
+        while let Some(front) = self.in_flight.front() {
+            match front.rx.try_recv() {
+                Ok(resp) => {
+                    let inf = self.in_flight.pop_front().expect("front in-flight vanished");
+                    self.record(inf.tenant, inf.seq_no, inf.start, resp);
+                    received += 1;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    let inf = self.in_flight.pop_front().expect("front in-flight vanished");
+                    if let Some(t) = self.tenants.get_mut(&inf.tenant) {
+                        t.failed += 1;
+                    }
+                }
+            }
+        }
+        received
+    }
+
+    /// Blocking: pump and receive until every queued window has been
+    /// submitted and every in-flight response has arrived. Returns the
+    /// number of windows recorded.
+    pub fn drain(&mut self) -> usize {
+        let mut received = 0usize;
+        loop {
+            let submitted = self.pump();
+            if let Some(inf) = self.in_flight.pop_front() {
+                match inf.rx.recv() {
+                    Ok(resp) => {
+                        self.record(inf.tenant, inf.seq_no, inf.start, resp);
+                        received += 1;
+                    }
+                    Err(_) => {
+                        if let Some(t) = self.tenants.get_mut(&inf.tenant) {
+                            t.failed += 1;
+                        }
+                    }
+                }
+            } else if self.queued_windows() == 0 {
+                break;
+            } else if submitted == 0 {
+                // Nothing in flight, nothing submittable (pathological
+                // config, e.g. a zero-depth service queue): shed the
+                // leftovers rather than spin forever.
+                for t in self.tenants.values_mut() {
+                    let n = t.queue.len() as u64;
+                    t.queue.clear();
+                    t.shed += n;
+                    for _ in 0..n {
+                        self.svc.metrics.on_shed();
+                    }
+                }
+                break;
+            }
+        }
+        received
+    }
+
+    /// Windows sitting in tenant queues, not yet submitted.
+    pub fn queued_windows(&self) -> usize {
+        self.tenants.values().map(|t| t.queue.len()).sum()
+    }
+
+    /// Windows submitted and awaiting a response.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Take the recovered windows accumulated so far (arrival order).
+    pub fn take_results(&mut self) -> Vec<RecoveredWindow> {
+        std::mem::take(&mut self.results)
+    }
+
+    /// Point-in-time streaming counters.
+    pub fn stats(&self) -> StreamStats {
+        let mut s = StreamStats {
+            burst_backoffs: self.burst.backoffs(),
+            burst_final: self.burst.current(),
+            in_flight_max: self.in_flight_max,
+            ..StreamStats::default()
+        };
+        for (&tid, t) in &self.tenants {
+            s.samples_pushed += t.samples;
+            s.windows_emitted += t.emitted;
+            s.windows_completed += t.completed;
+            s.windows_shed += t.shed;
+            s.windows_failed += t.failed;
+            s.tenant_queue_max = s.tenant_queue_max.max(t.queue_high);
+            s.per_tenant.push(TenantStats {
+                tenant: tid,
+                samples: t.samples,
+                emitted: t.emitted,
+                completed: t.completed,
+                shed: t.shed,
+                failed: t.failed,
+            });
+        }
+        s
+    }
+
+    fn record(&mut self, tenant: u32, seq_no: u32, start: usize, resp: RecoveryResponse) {
+        debug_assert_eq!(resp.id, encode_id(tenant, seq_no), "response demux mismatch");
+        if let Some(t) = self.tenants.get_mut(&tenant) {
+            t.completed += 1;
+        }
+        self.results.push(RecoveredWindow {
+            tenant,
+            seq_no,
+            start,
+            theta: resp.theta,
+            latency: resp.latency,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, MockBackend, Service, ServiceConfig};
+
+    #[test]
+    fn plan_covers_every_sample_and_is_increasing() {
+        let plan = window_plan(9, 4, 2);
+        assert_eq!(plan, vec![0, 2, 4, 5]);
+        let plan = window_plan(8, 4, 4);
+        assert_eq!(plan, vec![0, 4]);
+        assert_eq!(window_plan(4, 4, 1), vec![0]);
+        assert!(window_plan(3, 4, 1).is_empty());
+    }
+
+    #[test]
+    fn plan_clamps_lossy_strides() {
+        // stride > window would skip samples; the plan must clamp.
+        let plan = window_plan(10, 3, 100);
+        for i in 0..10usize {
+            assert!(plan.iter().any(|&s| s <= i && i < s + 3), "sample {i} uncovered");
+        }
+    }
+
+    #[test]
+    fn windower_matches_plan_including_tail() {
+        let cfg = WindowConfig {
+            window: 5,
+            stride: 3,
+        };
+        let len = 13usize;
+        let mut w = Windower::new(cfg, 2, 1);
+        let mut starts = Vec::new();
+        for i in 0..len {
+            let y = [i as f32, -(i as f32)];
+            let u = [0.5 * i as f32];
+            if let Some((s, wy, wu)) = w.push(&y, &u) {
+                assert_eq!(wy.len(), 5 * 2);
+                assert_eq!(wu.len(), 5);
+                // Payload rows must be the original samples.
+                assert_eq!(wy[0], s as f32);
+                assert_eq!(wu[4], 0.5 * (s + 4) as f32);
+                starts.push(s);
+            }
+        }
+        if let Some((s, _, _)) = w.finish() {
+            starts.push(s);
+        }
+        assert_eq!(starts, window_plan(len, 5, 3));
+        assert!(w.finish().is_none(), "finish must be idempotent");
+    }
+
+    #[test]
+    fn windower_tail_payload_survives_trimming() {
+        // Non-overlapping stride: the tail window reaches back before
+        // next_start, so trim() must have kept those rows.
+        let cfg = WindowConfig {
+            window: 4,
+            stride: 4,
+        };
+        let mut w = Windower::new(cfg, 1, 1);
+        for i in 0..6 {
+            w.push(&[i as f32], &[0.0]);
+        }
+        let (s, y, _) = w.finish().expect("tail window");
+        assert_eq!(s, 2);
+        assert_eq!(y, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn id_roundtrip() {
+        for (t, q) in [(0u32, 0u32), (3, 17), (u32::MAX, u32::MAX), (7, 0)] {
+            assert_eq!(decode_id(encode_id(t, q)), (t, q));
+        }
+    }
+
+    fn mock_service(workers: usize, queue_depth: usize) -> Service {
+        let cfg = ServiceConfig {
+            workers,
+            queue_depth,
+            batcher: BatcherConfig {
+                batch: 8,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+        };
+        Service::start(cfg, MockBackend::default)
+    }
+
+    fn push_stream(coord: &mut StreamCoordinator, tenant: u32, n: usize, fill: f32) {
+        for i in 0..n {
+            let y = vec![fill + i as f32 * 1e-3; 3];
+            let u = vec![0.0f32];
+            coord.push(tenant, &y, &u);
+        }
+    }
+
+    #[test]
+    fn streams_complete_and_attribute_to_tenants() {
+        let svc = mock_service(2, 256);
+        let cfg = StreamConfig {
+            window: WindowConfig {
+                window: 64,
+                stride: 16,
+            },
+            ..StreamConfig::default()
+        };
+        let mut coord = StreamCoordinator::new(svc, cfg, 3, 1);
+        for t in 0..4u32 {
+            push_stream(&mut coord, t, 130, t as f32);
+        }
+        coord.flush_tails();
+        coord.drain();
+        let stats = coord.stats();
+        let plan = window_plan(130, 64, 16);
+        assert_eq!(stats.windows_emitted, 4 * plan.len() as u64);
+        assert_eq!(stats.windows_completed, stats.windows_emitted);
+        assert_eq!(stats.windows_shed, 0);
+        assert_eq!(stats.windows_failed, 0);
+        let results = coord.take_results();
+        assert_eq!(results.len(), stats.windows_completed as usize);
+        for t in 0..4u32 {
+            let mut starts: Vec<usize> = results
+                .iter()
+                .filter(|r| r.tenant == t)
+                .map(|r| r.start)
+                .collect();
+            starts.sort_unstable();
+            assert_eq!(starts, plan, "tenant {t} window starts");
+        }
+        // Per-tenant fairness: identical streams → identical completions.
+        for pt in &stats.per_tenant {
+            assert_eq!(pt.completed, plan.len() as u64, "tenant {}", pt.tenant);
+        }
+    }
+
+    #[test]
+    fn tenant_queue_overflow_sheds_oldest() {
+        let svc = mock_service(1, 256);
+        let cfg = StreamConfig {
+            window: WindowConfig {
+                window: 64,
+                stride: 1,
+            },
+            tenant_queue: 2,
+            shed: ShedPolicy::Oldest,
+            ..StreamConfig::default()
+        };
+        let mut coord = StreamCoordinator::new(svc, cfg, 3, 1);
+        // 64 + 9 samples → 10 windows emitted, queue cap 2, no pumping
+        // in between → 8 shed, the 2 freshest survive.
+        push_stream(&mut coord, 0, 73, 0.0);
+        let stats = coord.stats();
+        assert_eq!(stats.windows_emitted, 10);
+        assert_eq!(stats.windows_shed, 8);
+        assert_eq!(coord.queued_windows(), 2);
+        coord.drain();
+        let results = coord.take_results();
+        let starts: Vec<usize> = results.iter().map(|r| r.start).collect();
+        assert_eq!(starts, vec![8, 9], "oldest-shed must keep the freshest");
+        assert_eq!(coord.metrics().snapshot().shed, 8);
+    }
+
+    #[test]
+    fn tenant_queue_overflow_sheds_newest() {
+        let svc = mock_service(1, 256);
+        let cfg = StreamConfig {
+            window: WindowConfig {
+                window: 64,
+                stride: 1,
+            },
+            tenant_queue: 2,
+            shed: ShedPolicy::Newest,
+            ..StreamConfig::default()
+        };
+        let mut coord = StreamCoordinator::new(svc, cfg, 3, 1);
+        push_stream(&mut coord, 0, 73, 0.0);
+        let stats = coord.stats();
+        assert_eq!(stats.windows_emitted, 10);
+        assert_eq!(stats.windows_shed, 8);
+        coord.drain();
+        let results = coord.take_results();
+        let starts: Vec<usize> = results.iter().map(|r| r.start).collect();
+        assert_eq!(starts, vec![0, 1], "newest-shed must keep the backlog");
+    }
+
+    #[test]
+    fn service_overload_backs_off_and_still_completes_everything() {
+        // Slow single-window backend + tiny service queue: pumping all
+        // windows at once must hit typed overload, back off, and retry —
+        // nothing may be shed or lost.
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_depth: 1,
+            batcher: BatcherConfig {
+                batch: 1,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+        };
+        let svc = Service::start(cfg, || MockBackend {
+            batch: 1,
+            delay: std::time::Duration::from_millis(5),
+            ..Default::default()
+        });
+        let scfg = StreamConfig {
+            window: WindowConfig {
+                window: 64,
+                stride: 8,
+            },
+            burst_initial: 8,
+            burst_max: 8,
+            ..StreamConfig::default()
+        };
+        let mut coord = StreamCoordinator::new(svc, scfg, 3, 1);
+        push_stream(&mut coord, 0, 128, 1.0);
+        push_stream(&mut coord, 1, 128, 2.0);
+        coord.flush_tails();
+        coord.drain();
+        let stats = coord.stats();
+        assert_eq!(stats.windows_completed, stats.windows_emitted);
+        assert_eq!(stats.windows_shed, 0);
+        assert!(stats.burst_backoffs > 0, "a depth-1 queue must trigger AIMD backoff");
+    }
+
+    #[test]
+    fn poll_is_nonblocking_and_partial() {
+        let svc = mock_service(1, 256);
+        let mut coord = StreamCoordinator::new(svc, StreamConfig::default(), 3, 1);
+        push_stream(&mut coord, 0, 64, 0.5);
+        coord.pump();
+        // Wait until the single full window has certainly been served.
+        let mut got = 0;
+        for _ in 0..200 {
+            got += coord.poll();
+            if got > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(got, 1);
+        assert_eq!(coord.in_flight(), 0);
+        assert_eq!(coord.take_results().len(), 1);
+    }
+}

@@ -6,6 +6,7 @@
 //!   train    --system S --steps N    — train the neural flow via PJRT
 //!   simulate --config C        — FPGA accelerator report (table-8 configs)
 //!   serve    --requests N      — run the streaming service demo
+//!   soak     --tenants N       — multi-tenant streaming pipeline workload
 //!   table <1|2|4|5|6|7|8|fig8> — regenerate a paper table/figure
 //!
 //! `cargo run --release -- <subcommand> [flags]`
@@ -16,6 +17,7 @@ mod commands {
     pub mod recover;
     pub mod serve;
     pub mod simulate;
+    pub mod soak;
     pub mod tables;
     pub mod train;
 }
@@ -26,7 +28,8 @@ fn main() {
         &argv,
         &[
             "system", "method", "steps", "config", "requests", "seed", "samples", "dt", "lr",
-            "artifacts", "out", "workers", "backend", "fmt",
+            "artifacts", "out", "workers", "backend", "fmt", "tenants", "window", "stride",
+            "queue", "shed",
         ],
     );
     let result = match args.subcommand() {
@@ -35,15 +38,17 @@ fn main() {
         Some("train") => commands::train::run(&args),
         Some("simulate") => commands::simulate::run(&args),
         Some("serve") => commands::serve::run(&args),
+        Some("soak") => commands::soak::run(&args),
         Some("table") => commands::tables::run(&args),
         _ => {
             eprintln!(
-                "usage: merinda <info|recover|train|simulate|serve|table> [--flags]\n\
+                "usage: merinda <info|recover|train|simulate|serve|soak|table> [--flags]\n\
                  examples:\n\
                  \x20 merinda recover --system lotka --method merinda\n\
                  \x20 merinda train --system aid --steps 300\n\
                  \x20 merinda simulate --config concurrent\n\
                  \x20 merinda serve --requests 256 --backend fixed --fmt q8.8\n\
+                 \x20 merinda soak --tenants 6 --samples 400 --backend native\n\
                  \x20 merinda table 8"
             );
             std::process::exit(2);

@@ -93,6 +93,20 @@ impl Bench {
     }
 }
 
+/// Read a `usize` workload knob from the environment (`MERINDA_*`
+/// variables used by the CI smoke steps to shrink bench/soak workloads),
+/// falling back to `default` when unset or unparsable.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    parse_usize_knob(std::env::var(name).ok().as_deref(), default)
+}
+
+/// The pure parsing half of [`env_usize`] (unit-testable without
+/// mutating the process environment, which is racy under the threaded
+/// test harness).
+fn parse_usize_knob(value: Option<&str>, default: usize) -> usize {
+    value.and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 /// Resolve a tracked bench artifact path at the repository root (one
 /// level above the crate manifest): cargo runs benches with the package
 /// directory as CWD, but the `BENCH_*.json` trajectory files are tracked
@@ -255,6 +269,17 @@ mod tests {
     #[test]
     fn fmt_decimals() {
         assert_eq!(f(1.23456, 2), "1.23");
+    }
+
+    #[test]
+    fn env_knob_defaults_and_parses() {
+        // Read-only env probe plus the pure parser; no set_var (racy
+        // against concurrent getenv in the threaded test harness).
+        assert_eq!(env_usize("MERINDA_TEST_KNOB_UNSET", 7), 7);
+        assert_eq!(parse_usize_knob(Some("12"), 7), 12);
+        assert_eq!(parse_usize_knob(Some("not-a-number"), 7), 7);
+        assert_eq!(parse_usize_knob(Some(""), 7), 7);
+        assert_eq!(parse_usize_knob(None, 7), 7);
     }
 
     #[test]

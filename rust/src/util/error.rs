@@ -24,6 +24,16 @@ pub enum Error {
     Numeric(String),
     /// Artifact missing or malformed.
     Artifact(String),
+    /// The serving layer is saturated: a bounded queue refused the item.
+    ///
+    /// Unlike [`Error::Config`], this is a *transient* condition — the
+    /// caller may retry later or shed the work. The streaming coordinator
+    /// keys its shed-vs-hold decision on this variant, so overload must
+    /// never be reported as a generic config/string error.
+    Overloaded {
+        /// Queue occupancy observed at rejection time.
+        depth: usize,
+    },
 }
 
 impl fmt::Display for Error {
@@ -37,6 +47,9 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Numeric(m) => write!(f, "numeric error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Overloaded { depth } => {
+                write!(f, "overloaded: queue full at depth {depth} (backpressure)")
+            }
         }
     }
 }
@@ -72,6 +85,12 @@ impl Error {
     pub fn numeric(msg: impl Into<String>) -> Self {
         Error::Numeric(msg.into())
     }
+
+    /// True when the error is transient backpressure (retry or shed),
+    /// as opposed to a permanent failure.
+    pub fn is_overload(&self) -> bool {
+        matches!(self, Error::Overloaded { .. })
+    }
 }
 
 #[cfg(test)]
@@ -96,5 +115,13 @@ mod tests {
     #[test]
     fn config_helper() {
         assert!(Error::config("bad").to_string().contains("config"));
+    }
+
+    #[test]
+    fn overload_is_typed_and_transient() {
+        let e = Error::Overloaded { depth: 7 };
+        assert!(e.is_overload());
+        assert!(e.to_string().contains("depth 7"));
+        assert!(!Error::config("full").is_overload());
     }
 }

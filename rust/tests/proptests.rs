@@ -334,6 +334,57 @@ fn prop_quantized_gru_error_scales_with_format() {
     }
 }
 
+/// Streaming windowing is lossless: for any stream length, stride and
+/// window size, every sample lands in at least one window, window starts
+/// are strictly increasing, and the incremental `Windower` emits exactly
+/// the same starts (with identical payload rows) as the pure plan.
+#[test]
+fn prop_windowing_lossless_and_strictly_increasing() {
+    use merinda::coordinator::{window_plan, WindowConfig, Windower};
+    let mut rng = Prng::new(0x5BB);
+    for case in 0..CASES {
+        let window = 1 + rng.below(32);
+        // Deliberately unclamped: strides above `window` must be made
+        // lossless by normalization, zero must clamp to one.
+        let stride = rng.below(2 * window + 2);
+        let len = window + rng.below(96);
+        let plan = window_plan(len, window, stride);
+        assert!(!plan.is_empty(), "case {case}: len ≥ window ⇒ ≥ 1 window");
+        for pair in plan.windows(2) {
+            assert!(pair[0] < pair[1], "case {case}: starts not increasing");
+        }
+        for i in 0..len {
+            assert!(
+                plan.iter().any(|&s| s <= i && i < s + window),
+                "case {case}: sample {i} uncovered (len={len} w={window} s={stride})"
+            );
+        }
+        for &s in &plan {
+            assert!(s + window <= len, "case {case}: window overruns stream");
+        }
+
+        // Incremental windower agreement, payloads included.
+        let cfg = WindowConfig { window, stride };
+        let mut wr = Windower::new(cfg, 1, 1);
+        let mut emitted = Vec::new();
+        for i in 0..len {
+            if let Some((s, y, _)) = wr.push(&[i as f32], &[0.0]) {
+                emitted.push((s, y));
+            }
+        }
+        if let Some((s, y, _)) = wr.finish() {
+            emitted.push((s, y));
+        }
+        let starts: Vec<usize> = emitted.iter().map(|(s, _)| *s).collect();
+        assert_eq!(starts, plan, "case {case}: windower diverged from plan");
+        for (s, y) in &emitted {
+            let want: Vec<f32> = (*s..*s + window).map(|i| i as f32).collect();
+            assert_eq!(y, &want, "case {case}: window payload corrupted");
+        }
+        assert!(wr.finish().is_none(), "case {case}: finish not idempotent");
+    }
+}
+
 /// The batcher's padding is always shape-exact and preserves real rows.
 #[test]
 fn prop_pad_rows_preserves_prefix() {

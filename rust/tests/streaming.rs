@@ -1,0 +1,220 @@
+//! Streaming-pipeline integration tests (the `soak` acceptance path).
+//!
+//! Four concurrent tenant streams drawn from four distinct `systems/*`
+//! scenarios run through `coordinator::stream` on both serving backends;
+//! the recovered windows must match the equivalent one-shot
+//! `Service::recover_many` path bitwise (the pipeline adds routing and
+//! scheduling, never math), and the quantized backend must stay within
+//! the established 1e-2 RMS bound of the native f32 backend.
+
+use merinda::coordinator::stream::{decode_id, encode_id};
+use merinda::coordinator::{
+    window_plan, FixedPointBackend, FixedPointConfig, NativeBackend, RecoveredWindow,
+    RecoveryRequest, Service, ServiceConfig, StreamConfig, StreamCoordinator, WindowConfig,
+};
+use merinda::systems::streaming_systems;
+use merinda::util::Prng;
+
+const XD: usize = 3;
+const UD: usize = 1;
+const W: usize = 64;
+const STRIDE: usize = 16;
+const SAMPLES: usize = 200;
+const TENANTS: usize = 4;
+const SEED: u64 = 42;
+
+/// Normalized, padded tenant trajectories from the scenario roster.
+fn tenant_streams() -> Vec<(Vec<f32>, Vec<f32>)> {
+    let mut rng = Prng::new(SEED);
+    let roster = streaming_systems();
+    (0..TENANTS)
+        .map(|t| {
+            let (sys, dt) = &roster[t % roster.len()];
+            let tr = sys.generate(SAMPLES, *dt, &mut rng);
+            let (y, u) = tr.padded_f32(XD, UD);
+            let ys = y.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            let us = u.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            (
+                y.iter().map(|v| v / ys).collect(),
+                u.iter().map(|v| v / us).collect(),
+            )
+        })
+        .collect()
+}
+
+fn service_config() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+/// Stream all tenants concurrently (round-robin sample arrival) and
+/// return the recovered windows sorted by (tenant, seq_no).
+fn run_streaming(svc: Service, streams: &[(Vec<f32>, Vec<f32>)]) -> Vec<RecoveredWindow> {
+    let cfg = StreamConfig {
+        window: WindowConfig {
+            window: W,
+            stride: STRIDE,
+        },
+        ..StreamConfig::default()
+    };
+    let mut coord = StreamCoordinator::new(svc, cfg, XD, UD);
+    for s in 0..SAMPLES {
+        for (t, (y, u)) in streams.iter().enumerate() {
+            coord.push(t as u32, &y[s * XD..(s + 1) * XD], &u[s * UD..(s + 1) * UD]);
+        }
+        coord.pump();
+        coord.poll();
+    }
+    coord.flush_tails();
+    coord.drain();
+    let stats = coord.stats();
+    assert_eq!(stats.windows_shed, 0, "deep queues must not shed");
+    assert_eq!(stats.windows_failed, 0);
+    assert_eq!(stats.windows_completed, stats.windows_emitted);
+    let plan = window_plan(SAMPLES, W, STRIDE);
+    assert_eq!(
+        stats.windows_completed,
+        (TENANTS * plan.len()) as u64,
+        "every planned window must complete"
+    );
+    let mut results = coord.take_results();
+    results.sort_by_key(|r| (r.tenant, r.seq_no));
+    results
+}
+
+/// The same windows through the one-shot path, sorted by (tenant, seq).
+fn run_oneshot(svc: Service, streams: &[(Vec<f32>, Vec<f32>)]) -> Vec<(u32, u32, Vec<f32>)> {
+    let plan = window_plan(SAMPLES, W, STRIDE);
+    let mut reqs = Vec::new();
+    for (t, (y, u)) in streams.iter().enumerate() {
+        for (k, &s0) in plan.iter().enumerate() {
+            reqs.push(RecoveryRequest {
+                id: encode_id(t as u32, k as u32),
+                y: y[s0 * XD..(s0 + W) * XD].to_vec(),
+                u: u[s0 * UD..(s0 + W) * UD].to_vec(),
+            });
+        }
+    }
+    let n = reqs.len();
+    let resps = svc.recover_many(reqs);
+    assert_eq!(resps.len(), n, "one-shot path must serve every window");
+    let mut out: Vec<(u32, u32, Vec<f32>)> = resps
+        .into_iter()
+        .map(|r| {
+            let (t, k) = decode_id(r.id);
+            (t, k, r.theta)
+        })
+        .collect();
+    out.sort_by_key(|r| (r.0, r.1));
+    out
+}
+
+fn rms(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let sq: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum();
+    (sq / a.len() as f64).sqrt()
+}
+
+#[test]
+fn scenario_roster_gives_distinct_tenants() {
+    let roster = streaming_systems();
+    let names: std::collections::BTreeSet<&str> =
+        roster.iter().take(TENANTS).map(|(s, _)| s.name()).collect();
+    assert!(names.len() >= 3, "acceptance needs >=3 distinct scenarios: {names:?}");
+}
+
+#[test]
+fn native_streaming_matches_oneshot_bitwise() {
+    let streams = tenant_streams();
+    let streamed = run_streaming(
+        Service::start(service_config(), || NativeBackend::new(8, SEED)),
+        &streams,
+    );
+    let oneshot = run_oneshot(
+        Service::start(service_config(), || NativeBackend::new(8, SEED)),
+        &streams,
+    );
+    assert_eq!(streamed.len(), oneshot.len());
+    for (r, (t, k, theta)) in streamed.iter().zip(&oneshot) {
+        assert_eq!((r.tenant, r.seq_no), (*t, *k));
+        assert_eq!(r.theta, *theta, "tenant {t} window {k}: must be bitwise identical");
+    }
+}
+
+#[test]
+fn fixed_streaming_matches_oneshot_and_tracks_native() {
+    let streams = tenant_streams();
+    let make_fixed = || FixedPointBackend::new(8, SEED, FixedPointConfig::q8_8());
+    let streamed = run_streaming(Service::start(service_config(), make_fixed), &streams);
+    let oneshot = run_oneshot(Service::start(service_config(), make_fixed), &streams);
+    assert_eq!(streamed.len(), oneshot.len());
+    for (r, (t, k, theta)) in streamed.iter().zip(&oneshot) {
+        assert_eq!((r.tenant, r.seq_no), (*t, *k));
+        assert_eq!(r.theta, *theta, "tenant {t} window {k}: must be bitwise identical");
+    }
+    // The established quantization bound: Q8.8 within 1e-2 RMS of the
+    // native f32 backend over the same recovered windows.
+    let native = run_oneshot(
+        Service::start(service_config(), || NativeBackend::new(8, SEED)),
+        &streams,
+    );
+    let fixed_flat: Vec<f32> = streamed.iter().flat_map(|r| r.theta.clone()).collect();
+    let native_flat: Vec<f32> = native.iter().flat_map(|(_, _, t)| t.clone()).collect();
+    let err = rms(&fixed_flat, &native_flat);
+    assert!(err < 1e-2, "Q8.8 streaming RMS vs native: {err}");
+}
+
+#[test]
+fn typed_overload_lets_streaming_distinguish_shed_from_fail() {
+    // A saturated service must surface `Error::Overloaded` so the stream
+    // layer holds-and-retries (backpressure) instead of dropping windows
+    // as failures: everything completes, nothing is marked failed.
+    use merinda::coordinator::MockBackend;
+    use std::time::Duration;
+    let cfg = ServiceConfig {
+        workers: 1,
+        queue_depth: 1,
+        batcher: merinda::coordinator::BatcherConfig {
+            batch: 1,
+            max_wait: Duration::from_millis(1),
+        },
+    };
+    let svc = Service::start(cfg, || MockBackend {
+        batch: 1,
+        delay: Duration::from_millis(4),
+        ..Default::default()
+    });
+    let scfg = StreamConfig {
+        window: WindowConfig {
+            window: W,
+            stride: 8,
+        },
+        burst_initial: 8,
+        burst_max: 8,
+        ..StreamConfig::default()
+    };
+    let mut coord = StreamCoordinator::new(svc, scfg, XD, UD);
+    let mut rng = Prng::new(7);
+    for _ in 0..128 {
+        let y = rng.normal_vec_f32(XD, 0.5);
+        let u = rng.normal_vec_f32(UD, 0.5);
+        coord.push(0, &y, &u);
+        coord.push(1, &y, &u);
+    }
+    coord.flush_tails();
+    coord.drain();
+    let stats = coord.stats();
+    assert_eq!(stats.windows_failed, 0, "overload must not look like failure");
+    assert_eq!(stats.windows_shed, 0, "deep tenant queues must not shed");
+    assert_eq!(stats.windows_completed, stats.windows_emitted);
+    assert!(stats.burst_backoffs > 0, "saturation must trigger backoff");
+}

@@ -20,7 +20,8 @@ d = json.load(open("BENCH_stream.json"))
 
 # --- schema ---
 for key in ("bench", "workload", "totals", "fairness", "queue",
-            "cycle_model", "verify", "wall", "rows", "speedups"):
+            "cycle_model", "verify", "placement", "warm_start", "wall",
+            "rows", "speedups"):
     assert key in d, f"missing key: {key}"
 assert d["bench"] == "stream"
 for k in ("tenants", "samples_per_tenant", "window", "stride", "backend",
@@ -39,6 +40,13 @@ for k in ("window_cycles", "interval", "modeled_cycles_streamed",
     assert k in d["cycle_model"], f"missing cycle_model.{k}"
 for k in ("checked", "compared", "max_abs_delta"):
     assert k in d["verify"], f"missing verify.{k}"
+for k in ("instances", "instances_used", "per_instance"):
+    assert k in d["placement"], f"missing placement.{k}"
+for k in ("enabled", "paired_windows", "warm_iters", "cold_iters",
+          "iter_ratio", "warm_cycles", "cold_cycles", "cycle_ratio",
+          "scenarios_measured", "scenarios_warm_below_cold",
+          "per_scenario"):
+    assert k in d["warm_start"], f"missing warm_start.{k}"
 
 # --- workload matches the env knobs ---
 w = d["workload"]
@@ -75,5 +83,44 @@ assert v["compared"] == expected_windows
 assert v["max_abs_delta"] == 0.0, \
     f"streaming diverged from one-shot recovery: {v['max_abs_delta']}"
 
+# --- resource-aware placement: budget-respecting, fully accounted ---
+p = d["placement"]
+per_inst = p["per_instance"]
+assert len(per_inst) == p["instances"] >= 1
+assert sum(i["placed"] for i in per_inst) == expected_windows, \
+    "every completed window must be attributed to an instance"
+assert sum(i["completed"] for i in per_inst) == expected_windows
+for i in per_inst:
+    assert i["completed"] <= i["placed"]
+    assert i["window_cycles"] > 0, f"{i['name']}: cycle model must be wired in"
+    assert i["modeled_cycles"] == i["completed"] * i["window_cycles"]
+assert p["instances_used"] == sum(1 for i in per_inst if i["placed"] > 0)
+if p["instances"] > 1 and expected_windows >= 2 * tenants:
+    assert p["instances_used"] >= 2, \
+        "a loaded multi-instance fleet must spread windows across siblings"
+
+# --- warm-start recovery: fewer iterations than cold, per scenario ---
+ws = d["warm_start"]
+assert ws["enabled"], "soak smoke must run with warm-start on"
+assert ws["paired_windows"] == tenants * max(per_tenant - 1, 0), \
+    "every non-first window must be measured warm AND cold"
+if ws["paired_windows"] > 0:
+    assert ws["warm_iters"] < ws["cold_iters"], \
+        f"warm-start must save iterations: {ws['warm_iters']} vs {ws['cold_iters']}"
+    assert 0.0 < ws["iter_ratio"] < 1.0 or ws["warm_iters"] == 0
+    assert ws["cycle_ratio"] < 1.0, \
+        f"modeled recovery cycles must shrink: ratio {ws['cycle_ratio']}"
+    assert ws["warm_cycles"] < ws["cold_cycles"]
+    # The acceptance bar: warm strictly below cold on all but at most
+    # one scenario (>= 5 of 6 on the full roster).
+    assert ws["scenarios_measured"] >= 1
+    assert ws["scenarios_warm_below_cold"] >= ws["scenarios_measured"] - 1, \
+        (f"warm-start regressed on too many scenarios: "
+         f"{ws['scenarios_warm_below_cold']}/{ws['scenarios_measured']} "
+         f"({ws['per_scenario']})")
+
 print(f"BENCH_stream.json OK: {expected_windows} windows on "
-      f"{w['backend']}, {wpm:.1f} windows/Mcycle, bitwise-verified")
+      f"{w['backend']}, {wpm:.1f} windows/Mcycle, "
+      f"{p['instances_used']}/{p['instances']} instances used, "
+      f"warm/cold iters {ws['warm_iters']}/{ws['cold_iters']}, "
+      f"bitwise-verified")

@@ -3,28 +3,41 @@
 //! Replays trajectories from the six `systems/*` case studies (lorenz,
 //! lotka, f8, av, aid, pathogen) as concurrent tenant streams through
 //! `coordinator::stream`: samples arrive round-robin across tenants,
-//! windows are sliced/queued/shed per policy, and the adaptive batcher
-//! pumps them into the sharded executors. Reports throughput, p50/p99
-//! latency, queue depth and shed counts, and writes a deterministic
-//! `BENCH_stream.json` (window counts + accelerator cycle model, so the
-//! gated values are machine-independent).
+//! windows are sliced/queued/shed per policy, and the coordinator
+//! places each window onto a heterogeneous accelerator fleet
+//! (`--fleet N`, default 3: DATAFLOW PYNQ, sequential PYNQ, ZU7EV) via
+//! the resource-aware cost function in `coordinator::placement`.
+//! Warm-start recovery is on by default (`--no-warm` disables): each
+//! window's Θ is polished seeded from the previous overlapping window,
+//! and the saved iterations are reported per scenario as the
+//! cold-vs-warm ratio. Reports throughput, p50/p99 latency, queue
+//! depth, shed counts and the per-instance placement breakdown, and
+//! writes a deterministic `BENCH_stream.json` (window counts +
+//! accelerator cycle model, so the gated values are
+//! machine-independent).
 //!
 //! By default the run *verifies itself*: the same windows are replayed
 //! through the one-shot `Service::recover_many` path on an identically
 //! seeded backend and every recovered window must match bitwise
-//! (`--no-verify` skips). CI shrinks the workload via the
-//! `MERINDA_SOAK_TENANTS` / `MERINDA_SOAK_SAMPLES` env knobs (the same
-//! pattern as `MERINDA_BENCH_SEQ` for the cycles bench).
+//! (`--no-verify` skips; warm-start refinement is reported alongside the
+//! raw Θ, never in place of it, so the bitwise check is unaffected).
+//! CI shrinks the workload via the `MERINDA_SOAK_TENANTS` /
+//! `MERINDA_SOAK_SAMPLES` env knobs (the same pattern as
+//! `MERINDA_BENCH_SEQ` for the cycles bench).
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::Instant;
 
+use merinda::coordinator::placement::refine_cycle_model;
 use merinda::coordinator::stream::{decode_id, encode_id};
 use merinda::coordinator::{
-    window_plan, FixedPointBackend, FixedPointConfig, NativeBackend, NATIVE_HID, NATIVE_SEQ,
-    NATIVE_UDIM, NATIVE_XDIM, RecoveredWindow, RecoveryRequest, Service, ServiceConfig,
-    ShedPolicy, StreamConfig, StreamCoordinator, WindowConfig,
+    window_plan, FixedPointBackend, FixedPointConfig, InstanceModel, InstanceSpec, Metrics,
+    NativeBackend, NATIVE_HID, NATIVE_PLIB, NATIVE_SEQ, NATIVE_UDIM, NATIVE_XDIM,
+    RecoveredWindow, RecoveryRequest, Service, ServiceConfig, ShedPolicy, StreamConfig,
+    StreamCoordinator, WarmStartConfig, WindowConfig,
 };
+use merinda::fpga::cluster::heterogeneous_fleet;
 use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
 use merinda::systems::streaming_systems;
 use merinda::util::bench::{artifact_path, env_usize};
@@ -63,30 +76,108 @@ fn build_streams(tenants: usize, samples: usize, seed: u64) -> Vec<TenantStream>
         .collect()
 }
 
-/// Start a service on the requested backend. Returns the service plus,
-/// for the fixed backend, a counter-sharing probe for the cycle report.
+/// Which serving backend a soak run uses. `Fixed` carries the one
+/// shared backend instance so the cycle counters of every service
+/// clone aggregate into a single report.
+enum BackendKind {
+    Native,
+    Fixed(FixedPointBackend),
+}
+
+impl BackendKind {
+    fn from_name(backend: &str, fmt: &str, seed: u64) -> Result<BackendKind> {
+        match backend {
+            "native" => Ok(BackendKind::Native),
+            "fixed" => Ok(BackendKind::Fixed(FixedPointBackend::new(
+                8,
+                seed,
+                FixedPointConfig::from_name(fmt)?,
+            ))),
+            other => Err(Error::config(format!(
+                "unknown soak backend {other:?} (expected native or fixed)"
+            ))),
+        }
+    }
+
+    /// Counter-sharing probe for the fixed backend's cycle report.
+    fn probe(&self) -> Option<FixedPointBackend> {
+        match self {
+            BackendKind::Native => None,
+            BackendKind::Fixed(be) => Some(be.clone()),
+        }
+    }
+
+    /// Start one service of this kind, recording into `sink`.
+    fn start(&self, cfg: ServiceConfig, seed: u64, sink: Arc<Metrics>) -> Service {
+        match self {
+            BackendKind::Native => {
+                Service::start_with_metrics(cfg, move || NativeBackend::new(8, seed), sink)
+            }
+            BackendKind::Fixed(be) => {
+                let b = be.clone();
+                Service::start_with_metrics(cfg, move || b.clone(), sink)
+            }
+        }
+    }
+}
+
+/// Start one service on the requested backend (the one-shot verify
+/// path). Returns the service plus, for the fixed backend, a
+/// counter-sharing probe for the cycle report.
 fn make_service(
     backend: &str,
     fmt: &str,
     workers: usize,
     seed: u64,
+    sink: Arc<Metrics>,
 ) -> Result<(Service, Option<FixedPointBackend>)> {
+    let kind = BackendKind::from_name(backend, fmt, seed)?;
     let cfg = ServiceConfig {
         workers,
         ..Default::default()
     };
-    match backend {
-        "native" => Ok((Service::start(cfg, move || NativeBackend::new(8, seed)), None)),
-        "fixed" => {
-            let fp = FixedPointConfig::from_name(fmt)?;
-            let be = FixedPointBackend::new(8, seed, fp);
-            let probe = be.clone();
-            Ok((Service::start(cfg, move || be.clone()), Some(probe)))
-        }
-        other => Err(Error::config(format!(
-            "unknown soak backend {other:?} (expected native or fixed)"
-        ))),
-    }
+    let svc = kind.start(cfg, seed, sink);
+    Ok((svc, kind.probe()))
+}
+
+/// Derive placement models for a `fleet`-sized heterogeneous fleet by
+/// cycling the canonical board roster at the serving dims.
+fn fleet_models(fleet: usize, window: usize) -> Vec<InstanceModel> {
+    let roster = heterogeneous_fleet(XD + UD, NATIVE_HID);
+    (0..fleet)
+        .map(|i| {
+            let mut board = roster[i % roster.len()].clone();
+            if fleet > roster.len() {
+                board.name = format!("{}#{}", board.name, i / roster.len());
+            }
+            InstanceSpec::new(board).model(window, XD, UD, NATIVE_XDIM * NATIVE_PLIB)
+        })
+        .collect()
+}
+
+/// Start the heterogeneous serving fleet: every instance runs an
+/// identically seeded backend (so placement never changes the math) and
+/// records into one shared metrics sink. For the fixed backend, all
+/// instances clone one backend so its cycle counters aggregate
+/// fleet-wide.
+fn make_fleet(
+    backend: &str,
+    fmt: &str,
+    workers: usize,
+    seed: u64,
+    models: &[InstanceModel],
+) -> Result<(Vec<(InstanceModel, Service)>, Option<FixedPointBackend>, Arc<Metrics>)> {
+    let kind = BackendKind::from_name(backend, fmt, seed)?;
+    let sink = Arc::new(Metrics::new());
+    let cfg = ServiceConfig {
+        workers,
+        ..Default::default()
+    };
+    let fleet = models
+        .iter()
+        .map(|m| (m.clone(), kind.start(cfg, seed, sink.clone())))
+        .collect();
+    Ok((fleet, kind.probe(), sink))
 }
 
 pub fn run(args: &Args) -> Result<()> {
@@ -101,6 +192,8 @@ pub fn run(args: &Args) -> Result<()> {
     let backend = args.get_or("backend", "native");
     let fmt = args.get_or("fmt", "q8.8");
     let verify = !args.flag("no-verify");
+    let fleet_n = args.get_usize("fleet", env_usize("MERINDA_SOAK_FLEET", 3)).max(1);
+    let warm = !args.flag("no-warm");
 
     if window != NATIVE_SEQ {
         return Err(Error::config(format!(
@@ -114,20 +207,27 @@ pub fn run(args: &Args) -> Result<()> {
     let scenarios: BTreeSet<&str> = streams.iter().map(|s| s.scenario).collect();
     println!(
         "soak: {tenants} tenant stream(s) over {} scenario(s), {samples} samples each, \
-         window {}/stride {}, backend {backend}, {workers} worker(s)",
+         window {}/stride {}, backend {backend}, {fleet_n}-instance fleet, \
+         {workers} worker(s)/instance, warm-start {}",
         scenarios.len(),
         wcfg.window,
-        wcfg.stride
+        wcfg.stride,
+        if warm { "on" } else { "off" }
     );
 
-    let (svc, probe) = make_service(&backend, &fmt, workers, seed)?;
+    let models = fleet_models(fleet_n, wcfg.window);
+    let (fleet, probe, _sink) = make_fleet(&backend, &fmt, workers, seed, &models)?;
     let scfg = StreamConfig {
         window: wcfg,
         tenant_queue: queue,
         shed,
+        warm_start: WarmStartConfig {
+            enabled: warm,
+            ..WarmStartConfig::default()
+        },
         ..Default::default()
     };
-    let mut coord = StreamCoordinator::new(svc, scfg, XD, UD);
+    let mut coord = StreamCoordinator::with_fleet(fleet, scfg, XD, UD);
 
     // Samples arrive interleaved round-robin across tenants — the
     // concurrent-stream shape, not tenant-after-tenant replay.
@@ -177,12 +277,52 @@ pub fn run(args: &Args) -> Result<()> {
             pt.shed
         );
     }
+    println!("placement ({} instance(s)):", stats.per_instance.len());
+    for (i, inst) in stats.per_instance.iter().enumerate() {
+        println!(
+            "  instance {:>2} [{:<16}] placed {:>4}  completed {:>4}  \
+             outstanding max {:>3}  {:>7} cycles/window",
+            i, inst.name, inst.placed, inst.completed, inst.outstanding_max, inst.window_cycles
+        );
+    }
+
+    // Warm-start accounting: per-scenario cold-vs-warm iteration totals
+    // over the paired windows (every warm-seeded window also refined
+    // from the cold seed on the same data).
+    let mut per_scenario: BTreeMap<&str, (u64, u64, u64)> = BTreeMap::new();
+    for pt in &stats.per_tenant {
+        let e = per_scenario
+            .entry(streams[pt.tenant as usize].scenario)
+            .or_insert((0, 0, 0));
+        e.0 += pt.refine_warm_iters;
+        e.1 += pt.refine_cold_iters;
+        e.2 += pt.refine_paired;
+    }
+    let scenarios_measured = per_scenario.values().filter(|v| v.2 > 0).count();
+    let scenarios_warm_below = per_scenario.values().filter(|v| v.2 > 0 && v.0 < v.1).count();
+    if warm {
+        println!(
+            "warm-start: {} paired windows, {} warm vs {} cold iterations \
+             (warm strictly below cold on {}/{} scenarios)",
+            stats.refine_paired,
+            stats.refine_warm_iters,
+            stats.refine_cold_iters,
+            scenarios_warm_below,
+            scenarios_measured
+        );
+        for (name, (w, c, p)) in &per_scenario {
+            println!(
+                "  scenario [{:<16}] warm {:>5}  cold {:>5}  over {:>3} windows",
+                name, w, c, p
+            );
+        }
+    }
 
     // Streaming-vs-one-shot equivalence: the same windows through
     // `recover_many` on an identically seeded backend must recover the
     // same coefficients bitwise (the pipeline adds routing, not math).
     let (verify_compared, verify_delta) = if verify {
-        let (svc2, _) = make_service(&backend, &fmt, workers, seed)?;
+        let (svc2, _) = make_service(&backend, &fmt, workers, seed, Arc::new(Metrics::new()))?;
         let plan = window_plan(samples, wcfg.window, wcfg.stride);
         let mut reqs = Vec::new();
         for (t, st) in streams.iter().enumerate() {
@@ -323,6 +463,91 @@ pub fn run(args: &Args) -> Result<()> {
             ("checked", Json::Bool(verify)),
             ("compared", Json::num(verify_compared as f64)),
             ("max_abs_delta", Json::num(verify_delta)),
+        ]),
+    );
+    report.section(
+        "placement",
+        Json::obj(vec![
+            ("instances", Json::num(stats.per_instance.len() as f64)),
+            (
+                "instances_used",
+                Json::num(
+                    stats.per_instance.iter().filter(|i| i.placed > 0).count() as f64,
+                ),
+            ),
+            (
+                "per_instance",
+                Json::Arr(
+                    stats
+                        .per_instance
+                        .iter()
+                        .map(|i| {
+                            Json::obj(vec![
+                                ("name", Json::str(i.name.clone())),
+                                ("placed", Json::num(i.placed as f64)),
+                                ("completed", Json::num(i.completed as f64)),
+                                ("outstanding_max", Json::num(i.outstanding_max as f64)),
+                                ("window_cycles", Json::num(i.window_cycles as f64)),
+                                ("modeled_cycles", Json::num(i.modeled_cycles as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+    // Warm-start: iteration and modeled-cycle ratios over the paired
+    // windows. The cycle ratio charges each path its NN window plus its
+    // refinement iterations on the serving accelerator's MAC lanes.
+    let plib = NATIVE_PLIB;
+    // The CG matvec retires on the same MAC lanes the serving
+    // accelerator schedules (its UNROLL factor).
+    let lanes = accel.cfg.unroll as u64;
+    let warm_cycles = stats.refine_paired * window_cycles
+        + refine_cycle_model(stats.refine_warm_iters, plib, lanes);
+    let cold_cycles = stats.refine_paired * window_cycles
+        + refine_cycle_model(stats.refine_cold_iters, plib, lanes);
+    let iter_ratio = if stats.refine_cold_iters > 0 {
+        stats.refine_warm_iters as f64 / stats.refine_cold_iters as f64
+    } else {
+        0.0
+    };
+    let cycle_ratio = if cold_cycles > 0 {
+        warm_cycles as f64 / cold_cycles as f64
+    } else {
+        0.0
+    };
+    report.section(
+        "warm_start",
+        Json::obj(vec![
+            ("enabled", Json::Bool(warm)),
+            ("paired_windows", Json::num(stats.refine_paired as f64)),
+            ("warm_iters", Json::num(stats.refine_warm_iters as f64)),
+            ("cold_iters", Json::num(stats.refine_cold_iters as f64)),
+            ("iter_ratio", Json::num(iter_ratio)),
+            ("warm_cycles", Json::num(warm_cycles as f64)),
+            ("cold_cycles", Json::num(cold_cycles as f64)),
+            ("cycle_ratio", Json::num(cycle_ratio)),
+            ("scenarios_measured", Json::num(scenarios_measured as f64)),
+            ("scenarios_warm_below_cold", Json::num(scenarios_warm_below as f64)),
+            (
+                "per_scenario",
+                Json::Obj(
+                    per_scenario
+                        .iter()
+                        .map(|(name, (w, c, p))| {
+                            (
+                                name.to_string(),
+                                Json::obj(vec![
+                                    ("warm_iters", Json::num(*w as f64)),
+                                    ("cold_iters", Json::num(*c as f64)),
+                                    ("paired_windows", Json::num(*p as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
         ]),
     );
     // Wall-clock numbers are informational only — machine-dependent, so

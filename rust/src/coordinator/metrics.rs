@@ -1,4 +1,5 @@
-//! Service metrics: counters and latency distribution.
+//! Service metrics: counters, latency distribution, and a per-instance
+//! breakdown so fleet placement decisions are observable.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -14,6 +15,33 @@ pub struct LatencyStats {
     pub max_ms: f64,
 }
 
+/// Per-accelerator-instance counters (fleet placement observability).
+#[derive(Clone, Copy, Debug, Default)]
+struct InstanceCounters {
+    placed: u64,
+    completed: u64,
+    rejected: u64,
+    queue_depth_max: u64,
+    modeled_cycles: u64,
+}
+
+/// A point-in-time copy of one instance's counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InstanceSnapshot {
+    /// Windows the placement layer routed to this instance.
+    pub placed: u64,
+    /// Windows this instance completed.
+    pub completed: u64,
+    /// Submissions this instance's bounded queue refused (spilled to a
+    /// sibling or held for retry).
+    pub rejected: u64,
+    /// High-water mark of outstanding windows on this instance.
+    pub queue_depth_max: u64,
+    /// Accelerator cycles this instance's completed windows consumed
+    /// under the cycle model.
+    pub modeled_cycles: u64,
+}
+
 /// Shared metrics sink (thread-safe).
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -25,10 +53,12 @@ pub struct Metrics {
     batched_items: AtomicU64,
     queue_depth_max: AtomicU64,
     latencies_ms: Mutex<Vec<f64>>,
+    /// Indexed by fleet instance id, grown on first touch.
+    instances: Mutex<Vec<InstanceCounters>>,
 }
 
 /// A point-in-time copy of the counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
@@ -42,6 +72,9 @@ pub struct MetricsSnapshot {
     /// High-water mark of the submission queue depth.
     pub queue_depth_max: u64,
     pub latency: LatencyStats,
+    /// Per-fleet-instance breakdown (empty for single-service setups
+    /// that never report placement).
+    pub per_instance: Vec<InstanceSnapshot>,
 }
 
 impl Metrics {
@@ -67,6 +100,38 @@ impl Metrics {
         self.queue_depth_max.fetch_max(depth as u64, Ordering::Relaxed);
     }
 
+    fn with_instance(&self, idx: usize, f: impl FnOnce(&mut InstanceCounters)) {
+        let mut v = self.instances.lock().unwrap();
+        if v.len() <= idx {
+            v.resize(idx + 1, InstanceCounters::default());
+        }
+        f(&mut v[idx]);
+    }
+
+    /// Record a window placed onto fleet instance `idx`.
+    pub fn on_instance_placed(&self, idx: usize) {
+        self.with_instance(idx, |c| c.placed += 1);
+    }
+
+    /// Record a window completed by fleet instance `idx`, charging its
+    /// modeled accelerator cycles.
+    pub fn on_instance_complete(&self, idx: usize, cycles: u64) {
+        self.with_instance(idx, |c| {
+            c.completed += 1;
+            c.modeled_cycles += cycles;
+        });
+    }
+
+    /// Record instance `idx` refusing a submission (bounded queue full).
+    pub fn on_instance_reject(&self, idx: usize) {
+        self.with_instance(idx, |c| c.rejected += 1);
+    }
+
+    /// Record instance `idx`'s outstanding-window depth (keeps the max).
+    pub fn on_instance_queue_depth(&self, idx: usize, depth: usize) {
+        self.with_instance(idx, |c| c.queue_depth_max = c.queue_depth_max.max(depth as u64));
+    }
+
     pub fn on_batch(&self, items: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(items, Ordering::Relaxed);
@@ -84,6 +149,19 @@ impl Metrics {
         let lats = self.latencies_ms.lock().unwrap().clone();
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
+        let per_instance = self
+            .instances
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|c| InstanceSnapshot {
+                placed: c.placed,
+                completed: c.completed,
+                rejected: c.rejected,
+                queue_depth_max: c.queue_depth_max,
+                modeled_cycles: c.modeled_cycles,
+            })
+            .collect();
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -97,6 +175,7 @@ impl Metrics {
                 0.0
             },
             latency: latency_stats(&lats),
+            per_instance,
         }
     }
 }
@@ -149,6 +228,29 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.latency.count, 0);
         assert_eq!(s.latency.p99_ms, 0.0);
+        assert!(s.per_instance.is_empty(), "no placement → no breakdown");
+    }
+
+    #[test]
+    fn per_instance_counters_grow_on_demand() {
+        let m = Metrics::new();
+        m.on_instance_placed(2);
+        m.on_instance_placed(0);
+        m.on_instance_placed(0);
+        m.on_instance_reject(2);
+        m.on_instance_queue_depth(0, 3);
+        m.on_instance_queue_depth(0, 1);
+        m.on_instance_complete(0, 500);
+        m.on_instance_complete(0, 700);
+        let s = m.snapshot();
+        assert_eq!(s.per_instance.len(), 3, "indexing must size the vector");
+        assert_eq!(s.per_instance[0].placed, 2);
+        assert_eq!(s.per_instance[0].completed, 2);
+        assert_eq!(s.per_instance[0].modeled_cycles, 1200);
+        assert_eq!(s.per_instance[0].queue_depth_max, 3);
+        assert_eq!(s.per_instance[1].placed, 0, "untouched slot stays zero");
+        assert_eq!(s.per_instance[2].placed, 1);
+        assert_eq!(s.per_instance[2].rejected, 1);
     }
 
     #[test]

@@ -15,6 +15,14 @@
 //! an AIMD burst controller with round-robin tenant fairness
 //! (`merinda soak` drives it across all six case-study scenarios).
 //!
+//! Scheduling across executors is resource-aware: [`placement`] models
+//! each accelerator instance's fabric budget, cycle-model window timing
+//! and link transfer cost, and the stream coordinator places every
+//! window on the instance with the lowest estimated completion time
+//! (spilling to siblings when one saturates). Consecutive overlapping
+//! windows warm-start their coefficient refinement from the previous
+//! window's result ([`stream::WarmStartConfig`]).
+//!
 //! The design is deliberately the vLLM-router shape scaled to this paper:
 //! request router → batcher → executor → response demux, with metrics.
 
@@ -22,6 +30,7 @@ mod batcher;
 mod fixed;
 mod metrics;
 mod native;
+pub mod placement;
 mod service;
 pub mod stream;
 
@@ -32,16 +41,17 @@ pub use fixed::{FixedCycleReport, FixedPointBackend, FixedPointConfig};
 pub use native::{
     NativeBackend, NATIVE_DENSE, NATIVE_HID, NATIVE_PLIB, NATIVE_SEQ, NATIVE_UDIM, NATIVE_XDIM,
 };
+pub use placement::{InstanceModel, InstanceSpec};
 pub use stream::{
-    window_plan, RecoveredWindow, ShedPolicy, StreamConfig, StreamCoordinator, StreamStats,
-    TenantStats, WindowConfig, Windower,
+    window_plan, InstanceStats, RecoveredWindow, RefinedWindow, ShedPolicy, StreamConfig,
+    StreamCoordinator, StreamStats, TenantStats, WarmStartConfig, WindowConfig, Windower,
 };
 
 /// Re-export of the padding helper for out-of-crate property tests.
 pub fn pad_rows_for_tests(data: Vec<f32>, row_len: usize, batch: usize) -> (Vec<f32>, usize) {
     batcher::pad_rows(data, row_len, batch)
 }
-pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
+pub use metrics::{InstanceSnapshot, LatencyStats, Metrics, MetricsSnapshot};
 pub use service::{
     InferenceBackend, MockBackend, PjrtBackend, RecoveryRequest, RecoveryResponse, Service,
     ServiceConfig,

@@ -1,0 +1,355 @@
+//! Resource-aware placement over a heterogeneous accelerator fleet.
+//!
+//! The scheduling half of MERINDA's multi-accelerator story: instead of
+//! spraying recovery windows round-robin onto anonymous, uniform
+//! executors, the [`StreamCoordinator`](super::StreamCoordinator) models
+//! each accelerator instance explicitly — its fabric budget
+//! (`fpga::resources`), its achievable window timing (the `GruAccel`
+//! stage schedule streamed through the `fpga::pipeline` cycle model) and
+//! its host-link transfer cost (`fpga::cluster::Link`) — and places each
+//! window on the instance with the lowest *estimated completion time*:
+//!
+//! ```text
+//! cost(instance) = transfer_s + outstanding · service_s + window_s
+//! ```
+//!
+//! where `service_s` is the steady-state per-window service time (queue
+//! wait is outstanding windows times that) and `window_s` the
+//! fill-included latency of the window itself. A saturated instance
+//! (outstanding at its budget) is skipped, so load spills to the next
+//! cheapest sibling instead of overloading.
+//!
+//! Budgets are *resource-derived*: an instance admits only as many
+//! concurrent windows as its free BRAM can double-buffer after the
+//! accelerator design itself is placed, and an instance whose design
+//! does not fit its device admits none. The property tests in
+//! `rust/tests/placement.rs` hold the placer to both invariants.
+//!
+//! # Example
+//!
+//! ```
+//! use merinda::coordinator::placement::{choose, InstanceSpec};
+//! use merinda::fpga::cluster::heterogeneous_fleet;
+//!
+//! // Three heterogeneous boards at the canonical serving dims.
+//! let models: Vec<_> = heterogeneous_fleet(4, 32)
+//!     .into_iter()
+//!     .map(|b| InstanceSpec::new(b).model(64, 3, 1, 45))
+//!     .collect();
+//! // An idle fleet: the fastest board (zu7ev) wins the first window.
+//! let idle = vec![0usize; models.len()];
+//! assert_eq!(choose(&models, &idle), Some(2));
+//! ```
+
+use crate::fpga::cluster::BoardSpec;
+use crate::fpga::resources::Resources;
+
+/// Bytes per BRAM18 block (18 Kb).
+const BRAM18_BYTES: u64 = 18 * 1024 / 8;
+
+/// An accelerator instance offered to the placer: a concrete board plus
+/// an optional explicit concurrency cap.
+#[derive(Clone, Debug)]
+pub struct InstanceSpec {
+    pub board: BoardSpec,
+    /// Hard cap on concurrently outstanding windows; `None` derives the
+    /// cap from the board's free BRAM (see [`InstanceSpec::model`]).
+    pub max_outstanding: Option<usize>,
+}
+
+impl InstanceSpec {
+    pub fn new(board: BoardSpec) -> InstanceSpec {
+        InstanceSpec {
+            board,
+            max_outstanding: None,
+        }
+    }
+
+    /// Explicit concurrency cap (tests and deliberately tiny
+    /// deployments). A cap of 0 takes the instance out of rotation —
+    /// the placer treats it exactly like a non-fitting design.
+    pub fn with_outstanding(board: BoardSpec, cap: usize) -> InstanceSpec {
+        InstanceSpec {
+            board,
+            max_outstanding: Some(cap),
+        }
+    }
+
+    /// Derive the static placement model for `window`-step recovery
+    /// windows of `(xdim, udim)` rows returning `theta_len` coefficients.
+    pub fn model(
+        &self,
+        window: usize,
+        xdim: usize,
+        udim: usize,
+        theta_len: usize,
+    ) -> InstanceModel {
+        let b = &self.board;
+        let timing = b.window_timing(window as u64);
+        let payload = window_payload_bytes(&b.cfg.act_fmt, window, xdim, udim, theta_len);
+        let report = b.report();
+        let fits = b.device.fits(&report.resources);
+        let max_outstanding = match self.max_outstanding {
+            // An explicit cap is honored verbatim (0 = drained), but a
+            // non-fitting design never serves regardless.
+            Some(cap) => {
+                if fits {
+                    cap
+                } else {
+                    0
+                }
+            }
+            None => derived_outstanding(b, &report.resources, payload, fits),
+        };
+        InstanceModel {
+            name: b.name.clone(),
+            window_cycles: timing.total_cycles,
+            service_cycles: timing.interval * window as u64,
+            window_s: b.device.cycles_to_seconds(timing.total_cycles),
+            service_s: b.device.cycles_to_seconds(timing.interval * window as u64),
+            transfer_s: b.link.transfer_s(payload),
+            payload_bytes: payload,
+            max_outstanding,
+            resources: report.resources,
+            fits,
+        }
+    }
+}
+
+/// Window payload crossing the host link: quantized `[y | u]` samples in,
+/// Θ coefficients back.
+pub fn window_payload_bytes(
+    act_fmt: &crate::fpga::fixedpoint::FixedFormat,
+    window: usize,
+    xdim: usize,
+    udim: usize,
+    theta_len: usize,
+) -> u64 {
+    let wb = (act_fmt.word_bits as u64).div_ceil(8);
+    ((window * (xdim + udim) + theta_len) as u64) * wb
+}
+
+/// Windows the board can hold concurrently: free BRAM after the design,
+/// double-buffered per window. Non-fitting designs admit nothing.
+fn derived_outstanding(b: &BoardSpec, used: &Resources, payload: u64, fits: bool) -> usize {
+    if !fits {
+        return 0;
+    }
+    let free_bytes = (b.device.capacity.bram18 - used.bram18) * BRAM18_BYTES;
+    let per_window = (2 * payload).max(1);
+    ((free_bytes / per_window) as usize).clamp(1, 512)
+}
+
+/// The static, per-instance inputs to the placement cost function,
+/// derived once from the accelerator cycle model.
+#[derive(Clone, Debug)]
+pub struct InstanceModel {
+    pub name: String,
+    /// Fill-included cycles for one window on this instance.
+    pub window_cycles: u64,
+    /// Steady-state cycles between window completions under load.
+    pub service_cycles: u64,
+    /// `window_cycles` at this instance's clock, in seconds.
+    pub window_s: f64,
+    /// `service_cycles` at this instance's clock, in seconds.
+    pub service_s: f64,
+    /// Host-link transfer seconds for one window's payload.
+    pub transfer_s: f64,
+    /// Payload bytes per window over the link.
+    pub payload_bytes: u64,
+    /// Concurrency budget (0 = unusable).
+    pub max_outstanding: usize,
+    /// Fabric the design consumes.
+    pub resources: Resources,
+    /// Whether the design fits the device.
+    pub fits: bool,
+}
+
+impl InstanceModel {
+    /// A hand-specified model with `window_s` doubling as the
+    /// steady-state service time, a nominal 1 kcycle window and
+    /// negligible transfer cost — for tests and synthetic fleets where
+    /// no real board stands behind the service.
+    pub fn synthetic(name: &str, window_s: f64, max_outstanding: usize) -> InstanceModel {
+        InstanceModel {
+            name: name.to_string(),
+            window_cycles: 1_000,
+            service_cycles: 800,
+            window_s,
+            service_s: window_s,
+            transfer_s: 1e-7,
+            payload_bytes: 512,
+            max_outstanding,
+            resources: Resources::ZERO,
+            fits: true,
+        }
+    }
+}
+
+/// Estimated completion seconds for one more window on `m` when
+/// `outstanding` windows are already queued or executing there.
+pub fn placement_cost(m: &InstanceModel, outstanding: usize) -> f64 {
+    m.transfer_s + outstanding as f64 * m.service_s + m.window_s
+}
+
+/// Pick the instance with the lowest estimated completion time among
+/// those with spare concurrency budget. Ties break toward the lower
+/// index. Returns `None` when every instance is saturated or unusable.
+pub fn choose(models: &[InstanceModel], outstanding: &[usize]) -> Option<usize> {
+    assert_eq!(models.len(), outstanding.len());
+    let mut best: Option<(usize, f64)> = None;
+    for (i, m) in models.iter().enumerate() {
+        if m.max_outstanding == 0 || outstanding[i] >= m.max_outstanding {
+            continue;
+        }
+        let c = placement_cost(m, outstanding[i]);
+        let better = match best {
+            None => true,
+            Some((_, bc)) => c < bc,
+        };
+        if better {
+            best = Some((i, c));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// All eligible instances in ascending cost order — the failover
+/// sequence the streaming pump walks when the cheapest instance's
+/// bounded queue rejects a submission mid-flight.
+pub fn rank(models: &[InstanceModel], outstanding: &[usize]) -> Vec<usize> {
+    assert_eq!(models.len(), outstanding.len());
+    let mut order: Vec<(usize, f64)> = models
+        .iter()
+        .enumerate()
+        .filter(|(i, m)| m.max_outstanding > 0 && outstanding[*i] < m.max_outstanding)
+        .map(|(i, m)| (i, placement_cost(m, outstanding[i])))
+        .collect();
+    order.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+    order.into_iter().map(|(i, _)| i).collect()
+}
+
+/// Modeled accelerator cycles for `iters` warm-start refinement
+/// iterations: each conjugate-gradient step is one (plib × plib) matvec
+/// retired on `lanes` MAC lanes.
+pub fn refine_cycle_model(iters: u64, plib: usize, lanes: u64) -> u64 {
+    iters * ((plib * plib) as u64).div_ceil(lanes.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::cluster::heterogeneous_fleet;
+
+    fn models() -> Vec<InstanceModel> {
+        heterogeneous_fleet(4, 32)
+            .into_iter()
+            .map(|b| InstanceSpec::new(b).model(64, 3, 1, 45))
+            .collect()
+    }
+
+    #[test]
+    fn canonical_fleet_models_are_usable_and_ordered() {
+        let ms = models();
+        assert_eq!(ms.len(), 3);
+        for m in &ms {
+            assert!(m.fits, "{}", m.name);
+            assert!(m.max_outstanding >= 1, "{}", m.name);
+            assert!(m.window_s > 0.0 && m.service_s > 0.0 && m.transfer_s > 0.0);
+        }
+        // zu7ev (faster clock + aurora link) is the cheapest idle choice;
+        // the sequential pynq is the dearest.
+        let c: Vec<f64> = ms.iter().map(|m| placement_cost(m, 0)).collect();
+        assert!(c[2] < c[0], "zu7ev {} vs pynq-dataflow {}", c[2], c[0]);
+        assert!(c[0] < c[1], "dataflow {} vs sequential {}", c[0], c[1]);
+    }
+
+    #[test]
+    fn cost_grows_with_queue_depth() {
+        let ms = models();
+        for m in &ms {
+            assert!(placement_cost(m, 0) < placement_cost(m, 1));
+            assert!(placement_cost(m, 1) < placement_cost(m, 8));
+        }
+    }
+
+    #[test]
+    fn choose_spills_to_sibling_as_load_mounts() {
+        let ms = models();
+        let mut outstanding = vec![0usize; 3];
+        // Keep placing without completing anything: the placer must
+        // eventually use every instance, never a saturated one.
+        let mut used = [false; 3];
+        for _ in 0..64 {
+            match choose(&ms, &outstanding) {
+                Some(i) => {
+                    assert!(outstanding[i] < ms[i].max_outstanding, "overfilled {}", ms[i].name);
+                    outstanding[i] += 1;
+                    used[i] = true;
+                }
+                None => break,
+            }
+        }
+        assert!(used.iter().all(|&u| u), "sustained load must reach every sibling");
+    }
+
+    #[test]
+    fn choose_none_when_everything_saturated() {
+        let ms = models();
+        let full: Vec<usize> = ms.iter().map(|m| m.max_outstanding).collect();
+        assert_eq!(choose(&ms, &full), None);
+        assert!(rank(&ms, &full).is_empty());
+    }
+
+    #[test]
+    fn rank_orders_by_cost_and_skips_saturated() {
+        let ms = models();
+        let idle = vec![0usize; 3];
+        let order = rank(&ms, &idle);
+        assert_eq!(order.len(), 3);
+        assert_eq!(order[0], 2, "idle fleet: zu7ev first");
+        for w in order.windows(2) {
+            assert!(
+                placement_cost(&ms[w[0]], idle[w[0]])
+                    <= placement_cost(&ms[w[1]], idle[w[1]])
+            );
+        }
+        let mut out = idle.clone();
+        out[2] = ms[2].max_outstanding;
+        let order = rank(&ms, &out);
+        assert!(!order.contains(&2), "saturated instance must drop out");
+    }
+
+    #[test]
+    fn explicit_cap_overrides_derived_budget() {
+        let board = heterogeneous_fleet(4, 32).remove(0);
+        let derived = InstanceSpec::new(board.clone()).model(64, 3, 1, 45);
+        let capped = InstanceSpec::with_outstanding(board, 2).model(64, 3, 1, 45);
+        assert!(derived.max_outstanding > 2);
+        assert_eq!(capped.max_outstanding, 2);
+    }
+
+    #[test]
+    fn zero_cap_drains_the_instance() {
+        let board = heterogeneous_fleet(4, 32).remove(0);
+        let drained = InstanceSpec::with_outstanding(board, 0).model(64, 3, 1, 45);
+        assert_eq!(drained.max_outstanding, 0, "cap 0 must mean out of rotation");
+        assert_eq!(choose(&[drained.clone()], &[0]), None);
+        assert!(rank(&[drained], &[0]).is_empty());
+    }
+
+    #[test]
+    fn payload_bytes_count_io_and_theta() {
+        let fmt = crate::fpga::fixedpoint::FixedFormat::q8_8();
+        // 64 × (3+1) samples + 45 coefficients at 2 bytes each.
+        assert_eq!(window_payload_bytes(&fmt, 64, 3, 1, 45), (64 * 4 + 45) * 2);
+    }
+
+    #[test]
+    fn refine_cycles_scale_with_iterations() {
+        assert_eq!(refine_cycle_model(0, 15, 32), 0);
+        let one = refine_cycle_model(1, 15, 32);
+        assert_eq!(one, (15u64 * 15).div_ceil(32));
+        assert_eq!(refine_cycle_model(10, 15, 32), 10 * one);
+    }
+}

@@ -209,7 +209,40 @@ impl Service {
     /// Start the service with a backend factory. The factory runs on each
     /// executor thread, so non-Send backends (PJRT) are fine; it must be
     /// callable once per worker.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use merinda::coordinator::{MockBackend, RecoveryRequest, Service, ServiceConfig};
+    ///
+    /// let svc = Service::start(ServiceConfig::default(), MockBackend::default);
+    /// let resp = svc
+    ///     .recover(RecoveryRequest {
+    ///         id: 7,
+    ///         y: vec![1.5; 64 * 3],
+    ///         u: vec![0.0; 64],
+    ///     })
+    ///     .unwrap();
+    /// assert_eq!(resp.id, 7);
+    /// assert_eq!(resp.theta.len(), 45);
+    /// ```
     pub fn start<B, F>(cfg: ServiceConfig, make_backend: F) -> Service
+    where
+        B: InferenceBackend + 'static,
+        F: Fn() -> B + Send + Sync + 'static,
+    {
+        Service::start_with_metrics(cfg, make_backend, Arc::new(Metrics::new()))
+    }
+
+    /// Like [`Service::start`], but recording into a caller-provided
+    /// [`Metrics`] sink. A multi-instance fleet passes one shared sink to
+    /// every instance's service so latency, batching and per-instance
+    /// placement counters aggregate into a single snapshot.
+    pub fn start_with_metrics<B, F>(
+        cfg: ServiceConfig,
+        make_backend: F,
+        metrics: Arc<Metrics>,
+    ) -> Service
     where
         B: InferenceBackend + 'static,
         F: Fn() -> B + Send + Sync + 'static,
@@ -221,7 +254,6 @@ impl Service {
             }),
             cv: Condvar::new(),
         });
-        let metrics = Arc::new(Metrics::new());
         let factory = Arc::new(make_backend);
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
@@ -634,6 +666,27 @@ mod tests {
         assert_eq!(s.completed, 100);
         assert!(s.batches >= 13); // ≥ ceil(100/8)
         assert!(s.latency.p50_ms <= s.latency.p99_ms);
+    }
+
+    #[test]
+    fn fleet_services_share_one_metrics_sink() {
+        let sink = Arc::new(Metrics::new());
+        let a = Service::start_with_metrics(
+            ServiceConfig::default(),
+            MockBackend::default,
+            sink.clone(),
+        );
+        let b = Service::start_with_metrics(
+            ServiceConfig::default(),
+            MockBackend::default,
+            sink.clone(),
+        );
+        a.recover(mk_req(1, 0.5)).unwrap();
+        b.recover(mk_req(2, 0.5)).unwrap();
+        let s = sink.snapshot();
+        assert_eq!(s.submitted, 2, "both services must record into the sink");
+        assert_eq!(s.completed, 2);
+        assert!(Arc::ptr_eq(&a.metrics, &sink) && Arc::ptr_eq(&b.metrics, &sink));
     }
 
     #[test]

@@ -7,8 +7,10 @@
 //! across boards (model parallel, all-gather each step). The interconnect
 //! is a simple store-and-forward Ethernet/Aurora model.
 
+use super::fixedpoint::FixedFormat;
 use super::gru_accel::{AccelReport, GruAccel, GruAccelConfig};
-use super::resources::Device;
+use super::pipeline::PipelineTiming;
+use super::resources::{Device, Resources};
 
 /// How work is split across boards.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -142,6 +144,112 @@ impl Tower {
     }
 }
 
+/// One concrete accelerator card in a *heterogeneous* fleet.
+///
+/// [`Tower`] models scale-out over identical boards; `BoardSpec` is the
+/// heterogeneous counterpart the resource-aware placement layer
+/// (`coordinator::placement`) schedules onto: each board carries its own
+/// device capacity, accelerator configuration and host link, so two
+/// boards in one fleet can differ in clock, fabric budget, DATAFLOW
+/// concurrency and transfer cost.
+#[derive(Clone, Debug)]
+pub struct BoardSpec {
+    /// Human-readable instance name (appears in soak reports).
+    pub name: String,
+    /// Fabric capacity + clock.
+    pub device: Device,
+    /// The accelerator design instantiated on this board.
+    pub cfg: GruAccelConfig,
+    /// Host-to-board link windows travel over.
+    pub link: Link,
+}
+
+impl BoardSpec {
+    pub fn new(
+        name: impl Into<String>,
+        device: Device,
+        cfg: GruAccelConfig,
+        link: Link,
+    ) -> BoardSpec {
+        BoardSpec {
+            name: name.into(),
+            device,
+            cfg,
+            link,
+        }
+    }
+
+    /// The assembled accelerator on this board's device.
+    pub fn accel(&self) -> GruAccel {
+        let mut a = GruAccel::new(self.cfg.clone());
+        a.device = self.device;
+        a
+    }
+
+    /// Structural report (cycles, interval, resources, power) of this
+    /// board's design.
+    pub fn report(&self) -> AccelReport {
+        self.accel().report()
+    }
+
+    /// Fabric consumed by this board's design.
+    pub fn resources(&self) -> Resources {
+        self.report().resources
+    }
+
+    /// Does the design fit this board's device?
+    pub fn fits(&self) -> bool {
+        self.device.fits(&self.resources())
+    }
+
+    /// Cycle-model timing for a `seq`-step recovery window streamed
+    /// through the board's stage pipeline. DATAFLOW boards overlap
+    /// stages; non-DATAFLOW boards execute them back to back.
+    pub fn window_timing(&self, seq: u64) -> PipelineTiming {
+        let p = self.accel().stage_pipeline();
+        if self.cfg.dataflow {
+            p.analyze(seq)
+        } else {
+            p.analyze_sequential(seq)
+        }
+    }
+
+    /// Wall-clock seconds for one window at this board's clock.
+    pub fn window_seconds(&self, seq: u64) -> f64 {
+        self.device.cycles_to_seconds(self.window_timing(seq).total_cycles)
+    }
+
+    /// Steady-state seconds between window completions when windows
+    /// stream back to back (interval-bound, not fill-bound).
+    pub fn window_service_seconds(&self, seq: u64) -> f64 {
+        self.device.cycles_to_seconds(self.window_timing(seq).interval * seq)
+    }
+
+    /// Seconds to move `bytes` of window payload over this board's link.
+    pub fn transfer_seconds(&self, bytes: u64) -> f64 {
+        self.link.transfer_s(bytes)
+    }
+}
+
+/// The canonical heterogeneous 3-board fleet used by `merinda soak
+/// --fleet 3` and the placement tests: a DATAFLOW PYNQ, a sequential
+/// (pre-optimization) PYNQ, and a faster-clocked UltraScale+ board on a
+/// low-latency link. `input`/`hidden` are the serving model dims.
+pub fn heterogeneous_fleet(input: usize, hidden: usize) -> Vec<BoardSpec> {
+    let fmt = FixedFormat::q8_8();
+    let dataflow = GruAccelConfig::serving(input, hidden, fmt, fmt);
+    let sequential = GruAccelConfig {
+        dataflow: false,
+        ddr_spill: true,
+        ..dataflow.clone()
+    };
+    vec![
+        BoardSpec::new("pynq-dataflow", Device::pynq_z2(), dataflow.clone(), Link::ten_gbe()),
+        BoardSpec::new("pynq-sequential", Device::pynq_z2(), sequential, Link::ten_gbe()),
+        BoardSpec::new("zu7ev-dataflow", Device::zu7ev(), dataflow, Link::aurora()),
+    ]
+}
+
 /// Sweep tower sizes for a sharding strategy.
 pub fn scaling_sweep(
     cfg: &GruAccelConfig,
@@ -215,5 +323,38 @@ mod tests {
         // 1.25 GB/s → 1 MB ≈ 0.8 ms + 8 µs latency.
         let t = l.transfer_s(1 << 20);
         assert!(t > 8e-4 && t < 1e-3, "t={t}");
+    }
+
+    #[test]
+    fn heterogeneous_fleet_is_genuinely_heterogeneous() {
+        let fleet = heterogeneous_fleet(4, 32);
+        assert_eq!(fleet.len(), 3);
+        let names: std::collections::BTreeSet<&str> =
+            fleet.iter().map(|b| b.name.as_str()).collect();
+        assert_eq!(names.len(), 3, "board names must be distinct");
+        // Every canonical board's design must fit its device — the
+        // placement layer treats a non-fitting board as unusable.
+        for b in &fleet {
+            assert!(b.fits(), "{}: {} on {}", b.name, b.resources(), b.device.name);
+        }
+        // The DATAFLOW PYNQ beats the sequential PYNQ per window; the
+        // higher-clocked ZU7EV beats both in wall-clock.
+        let w = |i: usize| fleet[i].window_seconds(64);
+        assert!(w(0) < w(1), "dataflow {} vs sequential {}", w(0), w(1));
+        assert!(w(2) < w(0), "zu7ev {} vs pynq {}", w(2), w(0));
+    }
+
+    #[test]
+    fn board_window_timing_matches_accel_models() {
+        let fleet = heterogeneous_fleet(4, 32);
+        let df = &fleet[0];
+        let seq = &fleet[1];
+        let p_df = df.accel().stage_pipeline();
+        assert_eq!(df.window_timing(64), p_df.analyze(64));
+        let p_seq = seq.accel().stage_pipeline();
+        assert_eq!(seq.window_timing(64), p_seq.analyze_sequential(64));
+        // Steady-state service time never exceeds the fill-included
+        // window latency for DATAFLOW boards.
+        assert!(df.window_service_seconds(64) <= df.window_seconds(64) + 1e-12);
     }
 }

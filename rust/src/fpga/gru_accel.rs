@@ -200,6 +200,19 @@ impl AccelReport {
 }
 
 /// The assembled accelerator.
+///
+/// # Example
+///
+/// ```
+/// use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+///
+/// let base = GruAccel::new(GruAccelConfig::gru_baseline()).report();
+/// let conc = GruAccel::new(GruAccelConfig::concurrent()).report();
+/// // DATAFLOW stage overlap shortens the steady-state interval...
+/// assert!(conc.interval < base.interval);
+/// // ...and the concurrent design still fits the PYNQ-Z2 fabric.
+/// assert!(conc.fits_pynq);
+/// ```
 pub struct GruAccel {
     pub cfg: GruAccelConfig,
     pub ddr: DdrModel,

@@ -8,6 +8,9 @@
 //! DDR/AXI transfers (`interconnect`), the calibrated power model
 //! (`power`), device capacities (`resources`), and the assembled GRU and
 //! LTC accelerators (`gru_accel`, `ltc_accel`) behind Tables 7–8 / Fig. 8.
+//! `cluster` scales out: identical-board towers plus the heterogeneous
+//! [`BoardSpec`](cluster::BoardSpec) fleet the resource-aware placement
+//! layer (`coordinator::placement`) schedules onto.
 
 pub mod bram;
 pub mod cluster;

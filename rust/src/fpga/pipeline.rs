@@ -44,6 +44,23 @@ pub struct PipelineTiming {
 }
 
 /// A linear DATAFLOW pipeline (the GRU graph in Fig. 6 is linear).
+///
+/// # Example
+///
+/// ```
+/// use merinda::fpga::pipeline::{Pipeline, Stage};
+///
+/// let p = Pipeline::new(vec![
+///     Stage::new("affine", 4, 32),
+///     Stage::new("interp", 1, 4),
+/// ]);
+/// let t = p.analyze(100);
+/// assert_eq!(t.interval, 4); // slowest stage II bounds throughput
+/// assert_eq!(t.fill_latency, 36); // sum of stage depths
+/// assert_eq!(t.total_cycles, 36 + 99 * 4);
+/// // The cycle-accurate simulation agrees with the closed form.
+/// assert_eq!(p.simulate(100), t);
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct Pipeline {
     pub stages: Vec<Stage>,

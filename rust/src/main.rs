@@ -6,7 +6,7 @@
 //!   train    --system S --steps N    — train the neural flow via PJRT
 //!   simulate --config C        — FPGA accelerator report (table-8 configs)
 //!   serve    --requests N      — run the streaming service demo
-//!   soak     --tenants N       — multi-tenant streaming pipeline workload
+//!   soak     --tenants N --fleet M — multi-tenant streaming workload on a fleet
 //!   table <1|2|4|5|6|7|8|fig8> — regenerate a paper table/figure
 //!
 //! `cargo run --release -- <subcommand> [flags]`
@@ -29,7 +29,7 @@ fn main() {
         &[
             "system", "method", "steps", "config", "requests", "seed", "samples", "dt", "lr",
             "artifacts", "out", "workers", "backend", "fmt", "tenants", "window", "stride",
-            "queue", "shed",
+            "queue", "shed", "fleet",
         ],
     );
     let result = match args.subcommand() {
@@ -48,7 +48,7 @@ fn main() {
                  \x20 merinda train --system aid --steps 300\n\
                  \x20 merinda simulate --config concurrent\n\
                  \x20 merinda serve --requests 256 --backend fixed --fmt q8.8\n\
-                 \x20 merinda soak --tenants 6 --samples 400 --backend native\n\
+                 \x20 merinda soak --tenants 6 --samples 400 --backend native --fleet 3\n\
                  \x20 merinda table 8"
             );
             std::process::exit(2);

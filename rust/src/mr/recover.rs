@@ -15,7 +15,7 @@
 //!   layer" + ridge step, §3.1/§4).
 
 use crate::mr::library::PolyLibrary;
-use crate::mr::ridge::ridge_masked;
+use crate::mr::ridge::{ridge_cg, ridge_masked, RidgeCgOpts};
 use crate::mr::sindy::{self, finite_difference, reconstruction_mse, SindyOpts, SparseModel};
 use crate::runtime::Runtime;
 use crate::systems::Trace;
@@ -139,6 +139,120 @@ pub fn recover_emily(tr: &Trace) -> Result<Recovery> {
     )?;
     shooting_refine(&mut model, tr, 4);
     Ok(eval("EMILY", model, tr, t0))
+}
+
+/// Options for the per-window iterative coefficient polish
+/// ([`refine_window_theta`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RefineOpts {
+    /// Ridge regularizer on the window least squares.
+    pub lambda: f64,
+    /// Polynomial library order over `[x | u]` (2 matches the canonical
+    /// serving library, so NN-proposed Θ seeds align term-for-term).
+    pub order: u32,
+    /// Conjugate-gradient stopping rule.
+    pub cg: RidgeCgOpts,
+}
+
+impl Default for RefineOpts {
+    fn default() -> Self {
+        RefineOpts {
+            lambda: 1e-3,
+            order: 2,
+            cg: RidgeCgOpts::default(),
+        }
+    }
+}
+
+/// Result of refining one window's coefficient estimate.
+#[derive(Clone, Debug)]
+pub struct RefineOutcome {
+    /// Polished (xdim × plib) coefficients, row-major like the serving Θ.
+    pub theta: Vec<f32>,
+    /// Total CG iterations across the `xdim` state equations — the
+    /// quantity warm-starting reduces.
+    pub iters: u64,
+    /// All equations reached the residual threshold.
+    pub converged: bool,
+    /// Worst per-equation final residual 2-norm.
+    pub residual: f64,
+}
+
+/// Iteratively polish a window's Θ estimate against that window's own
+/// data: least-squares fit of finite-difference derivatives onto the
+/// polynomial library, solved per state equation by warm-startable
+/// conjugate gradient ([`ridge_cg`]).
+///
+/// `y` is the (samples × xdim) window, `u` the (samples × udim) inputs
+/// (both row-major, f32 as on the serving path), and `theta0` the
+/// (xdim × plib) seed — the NN proposal for a cold start, or the
+/// previous overlapping window's refined Θ for a warm start. Both seeds
+/// converge to the same minimizer (the problem is strictly convex for
+/// `lambda > 0`); only the iteration count differs, which is exactly
+/// what `coordinator::stream`'s warm-start cache exploits and what
+/// `merinda soak` reports as the cold-vs-warm ratio.
+///
+/// Derivatives use a unit sample spacing: the stream layer does not know
+/// the generating `dt`, and a fixed spacing only rescales the recovered
+/// coefficients uniformly — iteration counts and convergence are
+/// unaffected.
+pub fn refine_window_theta(
+    y: &[f32],
+    xdim: usize,
+    u: &[f32],
+    udim: usize,
+    samples: usize,
+    theta0: &[f32],
+    opts: &RefineOpts,
+) -> Result<RefineOutcome> {
+    if samples < 3 {
+        return Err(crate::util::Error::config(format!(
+            "refinement needs >= 3 samples per window, got {samples}"
+        )));
+    }
+    if y.len() != samples * xdim || u.len() != samples * udim {
+        return Err(crate::util::Error::Shape {
+            expected: format!("y {}x{xdim}, u {}x{udim}", samples, samples),
+            got: format!("y len {}, u len {}", y.len(), u.len()),
+        });
+    }
+    let lib = PolyLibrary::new(xdim, udim, opts.order);
+    let p = lib.len();
+    if theta0.len() != xdim * p {
+        return Err(crate::util::Error::Shape {
+            expected: format!("theta0 len {}", xdim * p),
+            got: format!("{}", theta0.len()),
+        });
+    }
+    let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    let u64v: Vec<f64> = u.iter().map(|&v| v as f64).collect();
+    let dx = finite_difference(&y64, samples, xdim, 1.0);
+    let a = lib.design_matrix(&y64, &u64v, samples);
+
+    let mut theta = vec![0.0f32; xdim * p];
+    let mut iters = 0u64;
+    let mut converged = true;
+    let mut residual = 0.0f64;
+    for d in 0..xdim {
+        let b: Vec<f64> = (0..samples).map(|s| dx[s * xdim + d]).collect();
+        let w0: Vec<f64> = theta0[d * p..(d + 1) * p]
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        let sol = ridge_cg(&a, &b, samples, p, opts.lambda, &w0, &opts.cg);
+        iters += sol.iters;
+        converged &= sol.converged;
+        residual = residual.max(sol.residual);
+        for (dst, src) in theta[d * p..(d + 1) * p].iter_mut().zip(&sol.w) {
+            *dst = *src as f32;
+        }
+    }
+    Ok(RefineOutcome {
+        theta,
+        iters,
+        converged,
+        residual,
+    })
 }
 
 /// MERINDA configuration.
@@ -307,6 +421,68 @@ mod tests {
         let sm = smooth(&noisy, n, 1, 5);
         let var = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64;
         assert!(var(&sm) < var(&noisy) * 0.5);
+    }
+
+    /// A smooth synthetic stream at the canonical padded serving dims.
+    fn synthetic_stream(samples: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut y = Vec::with_capacity(samples * 3);
+        let mut u = Vec::with_capacity(samples);
+        for s in 0..samples {
+            let t = s as f32 * 0.05;
+            y.push((0.7 * t).sin());
+            y.push(0.5 * (0.9 * t).cos());
+            y.push(0.0); // padded state dim
+            u.push(0.2 * (0.3 * t).sin());
+        }
+        (y, u)
+    }
+
+    #[test]
+    fn refine_cold_and_warm_converge_to_same_theta() {
+        let (y, u) = synthetic_stream(128);
+        let w = 64usize;
+        let opts = RefineOpts::default();
+        let p = PolyLibrary::new(3, 1, 2).len();
+        // Cold seed: an arbitrary NN-like proposal.
+        let cold_seed: Vec<f32> = (0..3 * p).map(|i| 0.3 + 0.01 * i as f32).collect();
+        let first = refine_window_theta(&y[..w * 3], 3, &u[..w], 1, w, &cold_seed, &opts).unwrap();
+        assert!(first.converged, "residual {}", first.residual);
+
+        // Second, overlapping window (stride 16): warm vs cold seeds.
+        let s0 = 16usize;
+        let y2 = &y[s0 * 3..(s0 + w) * 3];
+        let u2 = &u[s0..s0 + w];
+        let warm = refine_window_theta(y2, 3, u2, 1, w, &first.theta, &opts).unwrap();
+        let cold = refine_window_theta(y2, 3, u2, 1, w, &cold_seed, &opts).unwrap();
+        assert!(warm.converged && cold.converged);
+        assert!(
+            warm.iters < cold.iters,
+            "warm {} vs cold {} iterations",
+            warm.iters,
+            cold.iters
+        );
+        // Agreement tolerance: each seed stops at residual ≤ rtol·‖c‖,
+        // which bounds the per-seed coefficient error by rtol·‖c‖/λ.
+        for (a, b) in warm.theta.iter().zip(&cold.theta) {
+            assert!(
+                (a - b).abs() < 1e-2,
+                "warm and cold must reach the same Θ: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn refine_rejects_bad_shapes() {
+        let (y, u) = synthetic_stream(64);
+        let p = PolyLibrary::new(3, 1, 2).len();
+        let seed = vec![0.0f32; 3 * p];
+        assert!(refine_window_theta(&y, 3, &u, 1, 2, &seed, &RefineOpts::default()).is_err());
+        assert!(
+            refine_window_theta(&y[..9], 3, &u, 1, 64, &seed, &RefineOpts::default()).is_err()
+        );
+        assert!(
+            refine_window_theta(&y, 3, &u, 1, 64, &seed[..5], &RefineOpts::default()).is_err()
+        );
     }
 
     #[test]

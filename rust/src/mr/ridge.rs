@@ -56,12 +56,18 @@ pub fn cholesky_solve(a: &[f64], b: &[f64], n: usize) -> Result<Vec<f64>> {
     Ok(x)
 }
 
-/// Ridge regression: `x` (rows, cols) row-major design matrix, `y` (rows,)
-/// targets, `lambda ≥ 0`. Returns the (cols,) weight vector.
-pub fn ridge(x: &[f64], y: &[f64], rows: usize, cols: usize, lambda: f64) -> Result<Vec<f64>> {
+/// Assemble the ridge normal equations `G = XᵀX + λI`, `c = Xᵀy` —
+/// shared by the direct ([`ridge`]) and iterative ([`ridge_cg`]) solvers
+/// so the two can never diverge in formulation.
+pub fn normal_equations(
+    x: &[f64],
+    y: &[f64],
+    rows: usize,
+    cols: usize,
+    lambda: f64,
+) -> (Vec<f64>, Vec<f64>) {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(y.len(), rows);
-    // Normal equations: G = XᵀX + λI, c = Xᵀy.
     let mut g = vec![0.0; cols * cols];
     let mut c = vec![0.0; cols];
     for r in 0..rows {
@@ -80,7 +86,132 @@ pub fn ridge(x: &[f64], y: &[f64], rows: usize, cols: usize, lambda: f64) -> Res
         }
         g[i * cols + i] += lambda.max(1e-12);
     }
+    (g, c)
+}
+
+/// Ridge regression: `x` (rows, cols) row-major design matrix, `y` (rows,)
+/// targets, `lambda ≥ 0`. Returns the (cols,) weight vector.
+pub fn ridge(x: &[f64], y: &[f64], rows: usize, cols: usize, lambda: f64) -> Result<Vec<f64>> {
+    let (g, c) = normal_equations(x, y, rows, cols, lambda);
     cholesky_solve(&g, &c, cols)
+}
+
+/// Stopping rule for [`ridge_cg`].
+#[derive(Clone, Copy, Debug)]
+pub struct RidgeCgOpts {
+    /// Relative residual threshold: stop when `‖r‖₂ ≤ rtol·‖Xᵀy‖₂`.
+    pub rtol: f64,
+    /// Absolute residual floor (covers `y = 0` right-hand sides).
+    pub atol: f64,
+    /// Iteration cap per solve.
+    pub max_iters: usize,
+}
+
+impl Default for RidgeCgOpts {
+    fn default() -> Self {
+        RidgeCgOpts {
+            rtol: 1e-6,
+            atol: 1e-10,
+            max_iters: 60,
+        }
+    }
+}
+
+/// Result of a [`ridge_cg`] solve.
+#[derive(Clone, Debug)]
+pub struct CgSolve {
+    /// The (cols,) weight vector.
+    pub w: Vec<f64>,
+    /// Conjugate-gradient iterations taken.
+    pub iters: u64,
+    /// Whether the residual threshold was reached within `max_iters`.
+    pub converged: bool,
+    /// Final residual 2-norm `‖Xᵀy − (XᵀX + λI)w‖₂`.
+    pub residual: f64,
+}
+
+/// Ridge regression by conjugate gradient on the normal equations,
+/// seeded from `w0` — the warm-startable counterpart of [`ridge`].
+///
+/// Solves `(XᵀX + λI) w = Xᵀy` (identical formulation to [`ridge`], so
+/// the two agree to solver tolerance) but iteratively: the iteration
+/// count scales with the distance from `w0` to the solution, which is
+/// what makes warm-starting consecutive overlapping recovery windows
+/// from the previous window's coefficients measurably cheaper than
+/// cold-starting each one (`coordinator::stream` warm-start path).
+pub fn ridge_cg(
+    x: &[f64],
+    y: &[f64],
+    rows: usize,
+    cols: usize,
+    lambda: f64,
+    w0: &[f64],
+    opts: &RidgeCgOpts,
+) -> CgSolve {
+    debug_assert_eq!(w0.len(), cols);
+    let (g, c) = normal_equations(x, y, rows, cols, lambda);
+
+    let matvec = |v: &[f64], out: &mut [f64]| {
+        for i in 0..cols {
+            let mut acc = 0.0;
+            for j in 0..cols {
+                acc += g[i * cols + j] * v[j];
+            }
+            out[i] = acc;
+        }
+    };
+    let dot = |a: &[f64], b: &[f64]| -> f64 { a.iter().zip(b).map(|(p, q)| p * q).sum() };
+
+    let mut w = w0.to_vec();
+    let mut gv = vec![0.0; cols];
+    matvec(&w, &mut gv);
+    let mut r: Vec<f64> = c.iter().zip(&gv).map(|(ci, gi)| ci - gi).collect();
+    let target = (opts.rtol * dot(&c, &c).sqrt()).max(opts.atol);
+    let mut rs = dot(&r, &r);
+    if rs.sqrt() <= target {
+        return CgSolve {
+            w,
+            iters: 0,
+            converged: true,
+            residual: rs.sqrt(),
+        };
+    }
+    let mut d = r.clone();
+    let mut iters = 0u64;
+    for _ in 0..opts.max_iters {
+        matvec(&d, &mut gv);
+        let dgd = dot(&d, &gv);
+        if dgd <= 0.0 || !dgd.is_finite() {
+            // Numerically lost SPD-ness: stop with what we have.
+            break;
+        }
+        let alpha = rs / dgd;
+        for i in 0..cols {
+            w[i] += alpha * d[i];
+            r[i] -= alpha * gv[i];
+        }
+        iters += 1;
+        let rs_new = dot(&r, &r);
+        if rs_new.sqrt() <= target {
+            return CgSolve {
+                w,
+                iters,
+                converged: true,
+                residual: rs_new.sqrt(),
+            };
+        }
+        let beta = rs_new / rs;
+        for i in 0..cols {
+            d[i] = r[i] + beta * d[i];
+        }
+        rs = rs_new;
+    }
+    CgSolve {
+        w,
+        iters,
+        converged: false,
+        residual: rs.sqrt(),
+    }
 }
 
 /// Ridge with a support mask: only columns with `mask[i] = true`
@@ -191,5 +322,101 @@ mod tests {
     fn all_masked_returns_zero() {
         let w = ridge_masked(&[1.0, 2.0], &[1.0], 1, 2, 0.1, &[false, false]).unwrap();
         assert_eq!(w, vec![0.0, 0.0]);
+    }
+
+    /// Random well-posed problem the direct and iterative solvers agree on.
+    fn random_problem(seed: u64, rows: usize, cols: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Prng::new(seed);
+        let mut x = vec![0.0; rows * cols];
+        let mut y = vec![0.0; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                x[r * cols + c] = rng.normal();
+            }
+            y[r] = (0..cols)
+                .map(|c| x[r * cols + c] * (c as f64 * 0.5 - 1.0))
+                .sum::<f64>()
+                + rng.normal_with(0.0, 0.01);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn cg_matches_cholesky_solution() {
+        for seed in [3u64, 17, 99] {
+            let (rows, cols) = (80, 9);
+            let (x, y) = random_problem(seed, rows, cols);
+            let lambda = 1e-3;
+            let direct = ridge(&x, &y, rows, cols, lambda).unwrap();
+            let cg = ridge_cg(
+                &x,
+                &y,
+                rows,
+                cols,
+                lambda,
+                &vec![0.0; cols],
+                &RidgeCgOpts::default(),
+            );
+            assert!(cg.converged, "seed {seed}: residual {}", cg.residual);
+            for (a, b) in cg.w.iter().zip(&direct) {
+                assert!((a - b).abs() < 1e-6, "seed {seed}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn cg_from_exact_solution_takes_zero_iterations() {
+        let (rows, cols) = (60, 6);
+        let (x, y) = random_problem(7, rows, cols);
+        let lambda = 1e-3;
+        let w_star = ridge(&x, &y, rows, cols, lambda).unwrap();
+        let cg = ridge_cg(&x, &y, rows, cols, lambda, &w_star, &RidgeCgOpts::default());
+        assert!(cg.converged);
+        assert_eq!(cg.iters, 0, "seeding at the solution must cost nothing");
+    }
+
+    #[test]
+    fn cg_warm_seed_beats_cold_seed() {
+        let (rows, cols) = (100, 12);
+        let (x, y) = random_problem(21, rows, cols);
+        let lambda = 1e-3;
+        let w_star = ridge(&x, &y, rows, cols, lambda).unwrap();
+        // Warm: a small perturbation of the solution (what the previous
+        // overlapping window provides). Cold: an unrelated seed.
+        let warm: Vec<f64> = w_star.iter().map(|v| v + 1e-4).collect();
+        let cold = vec![3.0; cols];
+        let opts = RidgeCgOpts::default();
+        let rw = ridge_cg(&x, &y, rows, cols, lambda, &warm, &opts);
+        let rc = ridge_cg(&x, &y, rows, cols, lambda, &cold, &opts);
+        assert!(rw.converged && rc.converged);
+        assert!(
+            rw.iters < rc.iters,
+            "warm {} vs cold {} iterations",
+            rw.iters,
+            rc.iters
+        );
+        for (a, b) in rw.w.iter().zip(&rc.w) {
+            assert!((a - b).abs() < 1e-5, "seeds must converge to one solution");
+        }
+    }
+
+    #[test]
+    fn cg_zero_rhs_converges_to_zero() {
+        let (rows, cols) = (40, 5);
+        let (x, _) = random_problem(5, rows, cols);
+        let y = vec![0.0; rows];
+        let cg = ridge_cg(
+            &x,
+            &y,
+            rows,
+            cols,
+            1e-3,
+            &vec![2.0; cols],
+            &RidgeCgOpts::default(),
+        );
+        assert!(cg.converged);
+        for v in &cg.w {
+            assert!(v.abs() < 1e-6, "zero rhs must shrink to zero: {v}");
+        }
     }
 }

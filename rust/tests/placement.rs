@@ -1,0 +1,275 @@
+//! Placement + warm-start acceptance tests (in-tree property-test
+//! driver, same style as `proptests.rs`).
+//!
+//! Three claims are held here:
+//! * the placer never exceeds any instance's concurrency/resource
+//!   budget, and reports saturation only when every budget is exhausted;
+//! * warm-start and cold-start refinement converge to the same
+//!   parameters within solver tolerance on all six `systems/*`
+//!   scenarios, with warm taking strictly fewer iterations on all but
+//!   at most one scenario (the soak acceptance bar);
+//! * a saturated instance sheds its load to a sibling instead of
+//!   overloading — the streaming regression the fleet exists for.
+
+use std::time::Duration;
+
+use merinda::coordinator::placement::{choose, placement_cost, rank, InstanceSpec};
+use merinda::coordinator::{
+    window_plan, BatcherConfig, InstanceModel, MockBackend, Service, ServiceConfig, StreamConfig,
+    StreamCoordinator, WindowConfig,
+};
+use merinda::fpga::cluster::heterogeneous_fleet;
+use merinda::mr::recover::{refine_window_theta, RefineOpts};
+use merinda::mr::ridge::RidgeCgOpts;
+use merinda::systems::streaming_systems;
+use merinda::util::Prng;
+
+const CASES: u64 = 32;
+
+/// The placer must never hand a window to an instance at its budget, and
+/// must report `None` only when *every* instance is saturated.
+#[test]
+fn prop_placement_never_exceeds_instance_budget() {
+    let mut rng = Prng::new(0xA31);
+    for case in 0..CASES {
+        let models: Vec<InstanceModel> = heterogeneous_fleet(4, 32)
+            .into_iter()
+            .map(|b| {
+                let cap = 1 + rng.below(6);
+                InstanceSpec::with_outstanding(b, cap).model(64, 3, 1, 45)
+            })
+            .collect();
+        let mut outstanding = vec![0usize; models.len()];
+        for step in 0..200 {
+            if rng.bernoulli(0.6) {
+                match choose(&models, &outstanding) {
+                    Some(i) => {
+                        assert!(
+                            outstanding[i] < models[i].max_outstanding,
+                            "case {case} step {step}: placed onto saturated {}",
+                            models[i].name
+                        );
+                        outstanding[i] += 1;
+                    }
+                    None => {
+                        for (o, m) in outstanding.iter().zip(&models) {
+                            assert!(
+                                *o >= m.max_outstanding,
+                                "case {case} step {step}: None with spare budget on {}",
+                                m.name
+                            );
+                        }
+                    }
+                }
+            } else {
+                let busy: Vec<usize> =
+                    (0..models.len()).filter(|&i| outstanding[i] > 0).collect();
+                if !busy.is_empty() {
+                    outstanding[busy[rng.below(busy.len())]] -= 1;
+                }
+            }
+        }
+    }
+}
+
+/// `choose` is the head of `rank`, and `rank` is cost-sorted over
+/// exactly the unsaturated instances.
+#[test]
+fn prop_choose_is_head_of_cost_sorted_rank() {
+    let mut rng = Prng::new(0xA32);
+    let models: Vec<InstanceModel> = heterogeneous_fleet(4, 32)
+        .into_iter()
+        .map(|b| InstanceSpec::with_outstanding(b, 4).model(64, 3, 1, 45))
+        .collect();
+    for case in 0..CASES {
+        let outstanding: Vec<usize> = models.iter().map(|_| rng.below(6)).collect();
+        let order = rank(&models, &outstanding);
+        assert_eq!(choose(&models, &outstanding), order.first().copied(), "case {case}");
+        let eligible = models
+            .iter()
+            .zip(&outstanding)
+            .filter(|(m, &o)| o < m.max_outstanding)
+            .count();
+        assert_eq!(order.len(), eligible, "case {case}");
+        for w in order.windows(2) {
+            assert!(
+                placement_cost(&models[w[0]], outstanding[w[0]])
+                    <= placement_cost(&models[w[1]], outstanding[w[1]]),
+                "case {case}: rank not cost-sorted"
+            );
+        }
+    }
+}
+
+/// Resource-derived budgets: every canonical board admits at least one
+/// window, never more than its free BRAM can double-buffer, and the
+/// budget is monotone in the window payload.
+#[test]
+fn derived_budget_tracks_bram_headroom() {
+    for board in heterogeneous_fleet(4, 32) {
+        let small = InstanceSpec::new(board.clone()).model(64, 3, 1, 45);
+        let large = InstanceSpec::new(board.clone()).model(256, 3, 1, 45);
+        assert!(small.fits, "{}", small.name);
+        assert!(small.max_outstanding >= 1);
+        assert!(
+            large.max_outstanding <= small.max_outstanding,
+            "{}: bigger windows must not raise the budget",
+            small.name
+        );
+        // The budgeted buffers actually fit the free BRAM.
+        let free_bytes =
+            (board.device.capacity.bram18 - small.resources.bram18) * (18 * 1024 / 8);
+        assert!(
+            (small.max_outstanding as u64) * 2 * small.payload_bytes <= free_bytes
+                || small.max_outstanding == 1,
+            "{}: budget overruns BRAM headroom",
+            small.name
+        );
+    }
+}
+
+/// Warm-start and cold-start refinement reach the same Θ on all six
+/// streaming scenarios, and warm takes strictly fewer iterations on all
+/// but at most one of them (the `merinda soak` acceptance bar).
+#[test]
+fn warm_and_cold_converge_on_all_six_scenarios() {
+    let roster = streaming_systems();
+    let total = roster.len();
+    assert_eq!(total, 6, "the acceptance bar is defined over six scenarios");
+    // Tight stopping rule so the two seeds' solutions are comparable well
+    // below the assertion tolerance.
+    let opts = RefineOpts {
+        cg: RidgeCgOpts {
+            rtol: 1e-8,
+            atol: 1e-11,
+            max_iters: 200,
+        },
+        ..RefineOpts::default()
+    };
+    let mut rng = Prng::new(42);
+    let mut warm_wins = 0usize;
+    for (sys, dt) in &roster {
+        let samples = 200usize;
+        let tr = sys.generate(samples, *dt, &mut rng);
+        let (y, u) = tr.padded_f32(3, 1);
+        let ys = y.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        let us = u.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        let y: Vec<f32> = y.iter().map(|v| v / ys).collect();
+        let u: Vec<f32> = u.iter().map(|v| v / us).collect();
+
+        // A fixed NN-like cold proposal, as the serving path provides.
+        let cold_seed: Vec<f32> = (0..45).map(|i| 0.2 + 0.01 * i as f32).collect();
+        let mut warm_prev: Option<Vec<f32>> = None;
+        let (mut warm_total, mut cold_total) = (0u64, 0u64);
+        for &s0 in &window_plan(samples, 64, 16) {
+            let yw = &y[s0 * 3..(s0 + 64) * 3];
+            let uw = &u[s0..s0 + 64];
+            let cold = refine_window_theta(yw, 3, uw, 1, 64, &cold_seed, &opts).unwrap();
+            assert!(cold.converged, "{}: cold residual {}", sys.name(), cold.residual);
+            match warm_prev.take() {
+                Some(prev) => {
+                    let warm = refine_window_theta(yw, 3, uw, 1, 64, &prev, &opts).unwrap();
+                    assert!(warm.converged, "{}: warm residual {}", sys.name(), warm.residual);
+                    warm_total += warm.iters;
+                    cold_total += cold.iters;
+                    for (a, b) in warm.theta.iter().zip(&cold.theta) {
+                        assert!(
+                            (a - b).abs() < 1e-2,
+                            "{}: warm and cold disagree at window {s0}: {a} vs {b}",
+                            sys.name()
+                        );
+                    }
+                    warm_prev = Some(warm.theta);
+                }
+                None => {
+                    warm_prev = Some(cold.theta.clone());
+                }
+            }
+        }
+        if warm_total < cold_total {
+            warm_wins += 1;
+        }
+        println!(
+            "{}: warm {warm_total} vs cold {cold_total} iterations",
+            sys.name()
+        );
+    }
+    assert!(
+        warm_wins >= total - 1,
+        "warm-start must beat cold-start on >= {}/{total} scenarios, got {warm_wins}",
+        total - 1
+    );
+}
+
+/// Regression: an instance whose bounded service queue saturates must
+/// shed its load to a sibling — no window may fail, be dropped, or pile
+/// onto the full queue.
+#[test]
+fn saturated_instance_spills_to_sibling_instead_of_overloading() {
+    // Instance 0 is modelled cheapest (always ranked first) but its
+    // service holds one request and serves slowly; the sibling is
+    // modelled dearer but has real capacity.
+    let tiny = ServiceConfig {
+        workers: 1,
+        queue_depth: 1,
+        batcher: BatcherConfig {
+            batch: 1,
+            max_wait: Duration::from_millis(1),
+        },
+    };
+    let svc0 = Service::start(tiny, || MockBackend {
+        batch: 1,
+        delay: Duration::from_millis(5),
+        ..Default::default()
+    });
+    let svc1 = Service::start(
+        ServiceConfig {
+            workers: 2,
+            ..Default::default()
+        },
+        MockBackend::default,
+    );
+    let fleet = vec![
+        (InstanceModel::synthetic("cheap-but-tiny", 1e-6, 64), svc0),
+        (InstanceModel::synthetic("sibling", 1e-3, 64), svc1),
+    ];
+    let cfg = StreamConfig {
+        window: WindowConfig {
+            window: 64,
+            stride: 8,
+        },
+        burst_initial: 8,
+        burst_max: 8,
+        ..StreamConfig::default()
+    };
+    let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1);
+    let mut rng = Prng::new(7);
+    for _ in 0..128 {
+        let y = rng.normal_vec_f32(3, 0.5);
+        let u = rng.normal_vec_f32(1, 0.5);
+        coord.push(0, &y, &u);
+        coord.push(1, &y, &u);
+    }
+    coord.flush_tails();
+    coord.drain();
+    let stats = coord.stats();
+    assert_eq!(stats.windows_failed, 0, "saturation must never fail windows");
+    assert_eq!(stats.windows_shed, 0, "deep tenant queues must not shed");
+    assert_eq!(stats.windows_completed, stats.windows_emitted);
+    assert_eq!(stats.per_instance.len(), 2);
+    assert!(
+        stats.per_instance[1].placed > 0,
+        "the sibling must absorb the spill: {:?}",
+        stats.per_instance
+    );
+    assert_eq!(
+        stats.per_instance.iter().map(|i| i.completed).sum::<u64>(),
+        stats.windows_completed
+    );
+    // The refusals that forced the spill are observable per instance.
+    let m = coord.metrics().snapshot();
+    assert!(
+        m.per_instance[0].rejected > 0,
+        "the saturated queue must have pushed back"
+    );
+}

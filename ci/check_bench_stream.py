@@ -1,18 +1,21 @@
 #!/usr/bin/env python3
 """Validate BENCH_stream.json (schema + deterministic throughput floor).
 
-Usage: check_bench_stream.py <expected-backend>
+Usage: check_bench_stream.py <expected-backend> [tuned]
 
 Run after `merinda soak` with MERINDA_SOAK_TENANTS / MERINDA_SOAK_SAMPLES
 set; every gated value below is window-count or cycle-model based, so the
 gate is machine-independent (wall-clock numbers live in the ungated
-"wall" section).
+"wall" section). Pass `tuned` as the second argument when the soak ran
+with `--tuned`, so CI notices if the tuned-placement path silently stops
+being exercised.
 """
 import json
 import os
 import sys
 
 expected_backend = sys.argv[1] if len(sys.argv) > 1 else "native"
+expected_tuned = len(sys.argv) > 2 and sys.argv[2] == "tuned"
 tenants = int(os.environ.get("MERINDA_SOAK_TENANTS", "6"))
 samples = int(os.environ.get("MERINDA_SOAK_SAMPLES", "400"))
 
@@ -25,7 +28,7 @@ for key in ("bench", "workload", "totals", "fairness", "queue",
     assert key in d, f"missing key: {key}"
 assert d["bench"] == "stream"
 for k in ("tenants", "samples_per_tenant", "window", "stride", "backend",
-          "workers", "scenarios"):
+          "workers", "scenarios", "tuned"):
     assert k in d["workload"], f"missing workload.{k}"
 for k in ("windows_emitted", "windows_completed", "windows_shed",
           "windows_failed"):
@@ -53,6 +56,8 @@ w = d["workload"]
 assert w["backend"] == expected_backend, \
     f"backend {w['backend']!r} != expected {expected_backend!r}"
 assert w["tenants"] == tenants and w["samples_per_tenant"] == samples
+assert w["tuned"] is expected_tuned, \
+    f"tuned {w['tuned']} != expected {expected_tuned}"
 
 # --- deterministic completion gate: every planned window recovered ---
 t = d["totals"]

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Validate BENCH_tune.json (schema + tuning-actually-helps gate).
+
+Usage: check_bench_tune.py
+
+Run after `merinda tune`. Every gated value is cycle-model or
+resource-model based, so the gate is machine-independent:
+
+* schema: workload / boards / summary sections with per-board default,
+  tuned, ratio and Pareto entries;
+* every board gets a *fitting* tuned config with a BRAM
+  double-buffering budget of at least one window;
+* tuned-vs-default cycle ratio >= 1.0 on every board (tuning never
+  regresses the shipped design) and > 1.0 on at least one (the search
+  finds a real win — the sequential PYNQ gains DATAFLOW);
+* each Pareto front is non-empty, fastest-first, and strictly
+  power-decreasing along the front.
+"""
+import json
+
+d = json.load(open("BENCH_tune.json"))
+
+# --- schema ---
+for key in ("bench", "workload", "boards", "summary", "rows", "speedups"):
+    assert key in d, f"missing key: {key}"
+assert d["bench"] == "tune"
+for k in ("window", "input", "hidden", "xdim", "udim", "theta_len", "boards"):
+    assert k in d["workload"], f"missing workload.{k}"
+for k in ("boards", "boards_fitting", "boards_improved", "min_ratio_cycles",
+          "max_ratio_cycles"):
+    assert k in d["summary"], f"missing summary.{k}"
+
+boards = d["boards"]
+assert len(boards) == d["workload"]["boards"] >= 1
+
+improved = 0
+for name, b in boards.items():
+    for k in ("default", "tuned", "ratio_cycles", "pareto_size", "evaluated",
+              "feasible", "pareto"):
+        assert k in b, f"{name}: missing {k}"
+    for k in ("window_cycles", "window_s", "power_w"):
+        assert k in b["default"], f"{name}: missing default.{k}"
+    t = b["tuned"]
+    for k in ("window_cycles", "window_s", "power_w", "energy_per_window_j",
+              "clock_mhz", "unroll", "banks", "reshape", "dataflow",
+              "stage_map", "format", "max_outstanding", "fits"):
+        assert k in t, f"{name}: missing tuned.{k}"
+
+    # --- every board must get a config that actually deploys ---
+    assert t["fits"] is True, f"{name}: tuned design must fit the device"
+    assert t["max_outstanding"] >= 1, \
+        f"{name}: tuned design must leave BRAM double-buffer headroom"
+    assert t["window_cycles"] > 0 and t["window_s"] > 0
+
+    # --- tuning never regresses, and the ratio is self-consistent ---
+    ratio = b["ratio_cycles"]
+    assert ratio >= 1.0, f"{name}: tuned slower than default ({ratio})"
+    expect = b["default"]["window_cycles"] / t["window_cycles"]
+    assert abs(ratio - expect) < 1e-6, \
+        f"{name}: ratio {ratio} != cycles ratio {expect}"
+    if ratio > 1.0:
+        improved += 1
+
+    # --- Pareto front: non-empty, fastest first, power strictly falls ---
+    front = b["pareto"]
+    assert len(front) == b["pareto_size"] >= 1
+    assert 1 <= b["feasible"] <= b["evaluated"]
+    for i in range(1, len(front)):
+        assert front[i - 1]["window_s"] <= front[i]["window_s"], \
+            f"{name}: Pareto front not fastest-first at {i}"
+        assert front[i - 1]["power_w"] > front[i]["power_w"], \
+            f"{name}: Pareto point {i} does not buy power back"
+
+assert improved >= 1, "tuning must strictly improve at least one board"
+s = d["summary"]
+assert s["boards"] == len(boards)
+assert s["boards_fitting"] == len(boards), "every board must get a fitting config"
+assert s["boards_improved"] == improved
+assert s["min_ratio_cycles"] >= 1.0 and s["max_ratio_cycles"] > 1.0
+
+print(f"BENCH_tune.json OK: {len(boards)} boards tuned, {improved} improved, "
+      f"cycle ratio {s['min_ratio_cycles']:.2f}x..{s['max_ratio_cycles']:.2f}x")

@@ -7,9 +7,11 @@
 //!
 //! Run with:  `cargo run --release --example fpga_design_space`
 
+use merinda::fpga::cluster::heterogeneous_fleet;
 use merinda::fpga::gru_accel::{all_stage_maps, stage_map_name, GruAccel, GruAccelConfig};
 use merinda::fpga::hls::Binding;
 use merinda::fpga::resources::Device;
+use merinda::fpga::tuner::{tune_fleet, TunerOptions};
 use merinda::report::Table;
 
 fn main() {
@@ -81,4 +83,25 @@ fn main() {
     let (name, cycles) = best.unwrap();
     println!("\nbest stage mapping: {name} at {cycles} cycles (paper: s1D_s2L_s3L_s4D at 380)");
     println!("device: {} ({} LUT, {} DSP, {} BRAM18)", dev.name, dev.capacity.lut, dev.capacity.dsp, dev.capacity.bram18);
+
+    // --- Sweep 4: the whole search, automated (`merinda tune`). ---
+    println!("\nAutotuner choices (fpga::tuner over the canonical fleet):");
+    for out in tune_fleet(&heterogeneous_fleet(4, 32), &TunerOptions::default())
+        .into_iter()
+        .flatten()
+    {
+        let t = &out.chosen;
+        println!(
+            "  {:<16} {} -> {} cycles/window ({:.1}x), u{}/b{} {} @ {:.0} MHz, {:.2} W",
+            out.board_name,
+            out.default_window_cycles,
+            t.window_cycles,
+            t.speedup_vs_default(),
+            t.board.cfg.unroll,
+            t.board.cfg.banks,
+            stage_map_name(&t.board.cfg.stage_map),
+            t.clock_mhz,
+            t.power_w
+        );
+    }
 }

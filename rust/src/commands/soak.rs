@@ -6,7 +6,11 @@
 //! windows are sliced/queued/shed per policy, and the coordinator
 //! places each window onto a heterogeneous accelerator fleet
 //! (`--fleet N`, default 3: DATAFLOW PYNQ, sequential PYNQ, ZU7EV) via
-//! the resource-aware cost function in `coordinator::placement`.
+//! the resource-aware cost function in `coordinator::placement`. With
+//! `--tuned`, each board first runs through the design-space autotuner
+//! (`fpga::tuner`) and the fleet is scheduled at the tuned operating
+//! points instead of the shipped defaults (never slower in modeled
+//! cycles — enforced at startup).
 //! Warm-start recovery is on by default (`--no-warm` disables): each
 //! window's Θ is polished seeded from the previous overlapping window,
 //! and the saved iterations are reported per scenario as the
@@ -39,6 +43,7 @@ use merinda::coordinator::{
 };
 use merinda::fpga::cluster::heterogeneous_fleet;
 use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use merinda::fpga::tuner::{tune_board, TunerOptions};
 use merinda::systems::streaming_systems;
 use merinda::util::bench::{artifact_path, env_usize};
 use merinda::util::cli::Args;
@@ -141,10 +146,47 @@ fn make_service(
 }
 
 /// Derive placement models for a `fleet`-sized heterogeneous fleet by
-/// cycling the canonical board roster at the serving dims.
-fn fleet_models(fleet: usize, window: usize) -> Vec<InstanceModel> {
-    let roster = heterogeneous_fleet(XD + UD, NATIVE_HID);
-    (0..fleet)
+/// cycling the canonical board roster at the serving dims. With
+/// `tuned`, every roster board is first retargeted to its design-space
+/// operating point (`fpga::tuner::tune_board`) before the cost models
+/// are derived; a tuned config that modeled *more* cycles per window
+/// than the shipped default would be a tuner bug, so it hard-fails.
+fn fleet_models(fleet: usize, window: usize, tuned: bool) -> Result<Vec<InstanceModel>> {
+    let mut roster = heterogeneous_fleet(XD + UD, NATIVE_HID);
+    // Small fleets use only the roster prefix — don't tune (or gate on)
+    // boards that never serve.
+    roster.truncate(fleet.max(1));
+    if tuned {
+        let opts = TunerOptions {
+            window,
+            xdim: XD,
+            udim: UD,
+            theta_len: NATIVE_XDIM * NATIVE_PLIB,
+            ..TunerOptions::default()
+        };
+        let mut tuned_boards = Vec::with_capacity(roster.len());
+        for board in &roster {
+            let out = tune_board(board, &opts).ok_or_else(|| {
+                Error::config(format!("tuner found no feasible design for {:?}", board.name))
+            })?;
+            if out.chosen.window_cycles > out.default_window_cycles {
+                return Err(Error::numeric(format!(
+                    "tuned config regressed {}: {} > {} cycles/window",
+                    board.name, out.chosen.window_cycles, out.default_window_cycles
+                )));
+            }
+            println!(
+                "  tuned [{:<16}] {} -> {} cycles/window ({:.2}x)",
+                board.name,
+                out.default_window_cycles,
+                out.chosen.window_cycles,
+                out.chosen.speedup_vs_default()
+            );
+            tuned_boards.push(out.chosen.board.clone());
+        }
+        roster = tuned_boards;
+    }
+    Ok((0..fleet)
         .map(|i| {
             let mut board = roster[i % roster.len()].clone();
             if fleet > roster.len() {
@@ -152,7 +194,7 @@ fn fleet_models(fleet: usize, window: usize) -> Vec<InstanceModel> {
             }
             InstanceSpec::new(board).model(window, XD, UD, NATIVE_XDIM * NATIVE_PLIB)
         })
-        .collect()
+        .collect())
 }
 
 /// Start the heterogeneous serving fleet: every instance runs an
@@ -194,6 +236,7 @@ pub fn run(args: &Args) -> Result<()> {
     let verify = !args.flag("no-verify");
     let fleet_n = args.get_usize("fleet", env_usize("MERINDA_SOAK_FLEET", 3)).max(1);
     let warm = !args.flag("no-warm");
+    let tuned = args.flag("tuned");
 
     if window != NATIVE_SEQ {
         return Err(Error::config(format!(
@@ -207,15 +250,16 @@ pub fn run(args: &Args) -> Result<()> {
     let scenarios: BTreeSet<&str> = streams.iter().map(|s| s.scenario).collect();
     println!(
         "soak: {tenants} tenant stream(s) over {} scenario(s), {samples} samples each, \
-         window {}/stride {}, backend {backend}, {fleet_n}-instance fleet, \
+         window {}/stride {}, backend {backend}, {fleet_n}-instance fleet{}, \
          {workers} worker(s)/instance, warm-start {}",
         scenarios.len(),
         wcfg.window,
         wcfg.stride,
+        if tuned { " (tuned)" } else { "" },
         if warm { "on" } else { "off" }
     );
 
-    let models = fleet_models(fleet_n, wcfg.window);
+    let models = fleet_models(fleet_n, wcfg.window, tuned)?;
     let (fleet, probe, _sink) = make_fleet(&backend, &fmt, workers, seed, &models)?;
     let scfg = StreamConfig {
         window: wcfg,
@@ -420,6 +464,7 @@ pub fn run(args: &Args) -> Result<()> {
             ("backend", Json::str(backend.clone())),
             ("workers", Json::num(workers as f64)),
             ("scenarios", Json::num(scenarios.len() as f64)),
+            ("tuned", Json::Bool(tuned)),
         ]),
     );
     report.section(

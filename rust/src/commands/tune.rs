@@ -1,0 +1,174 @@
+//! `merinda tune` — design-space autotuner over the canonical fleet.
+//!
+//! Runs `fpga::tuner` on every board of the heterogeneous roster at the
+//! serving dims: each board's tile size × fixed-point format × adder
+//! mix × clock space is swept, candidates are scored with the cycle,
+//! resource-fit and power models, and the chosen operating point (the
+//! fastest design that fits with BRAM double-buffering headroom, never
+//! slower in cycles than the shipped default) is reported per board
+//! together with its Pareto front. Writes `BENCH_tune.json` at the repo
+//! root — deterministic and machine-independent, gated in CI by
+//! `ci/check_bench_tune.py` (schema, every board fits, tuned-vs-default
+//! cycle ratio ≥ 1 everywhere and > 1 somewhere). `merinda soak
+//! --fleet N --tuned` then runs the streaming fleet at these operating
+//! points.
+
+use std::collections::BTreeMap;
+
+use merinda::coordinator::{NATIVE_HID, NATIVE_PLIB, NATIVE_SEQ, NATIVE_UDIM, NATIVE_XDIM};
+use merinda::fpga::cluster::heterogeneous_fleet;
+use merinda::fpga::gru_accel::stage_map_name;
+use merinda::fpga::tuner::{tune_board, TuneOutcome, TunerOptions};
+use merinda::util::bench::{artifact_path, BenchJson};
+use merinda::util::cli::Args;
+use merinda::util::json::Json;
+use merinda::util::{Error, Result};
+
+/// One board's entry in the `boards` section of `BENCH_tune.json`.
+fn board_json(out: &TuneOutcome) -> Json {
+    let t = &out.chosen;
+    let cfg = &t.board.cfg;
+    let pareto: Vec<Json> = out
+        .pareto()
+        .map(|c| {
+            Json::obj(vec![
+                ("window_cycles", Json::num(c.window_cycles as f64)),
+                ("window_s", Json::num(c.window_s)),
+                ("power_w", Json::num(c.power_w)),
+                ("clock_mhz", Json::num(c.clock_mhz)),
+                ("unroll", Json::num(c.cfg.unroll as f64)),
+                ("banks", Json::num(c.cfg.banks as f64)),
+                ("dataflow", Json::Bool(c.cfg.dataflow)),
+                ("format", Json::str(c.format)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        (
+            "default",
+            Json::obj(vec![
+                ("window_cycles", Json::num(out.default_window_cycles as f64)),
+                ("window_s", Json::num(out.default_window_s)),
+                ("power_w", Json::num(out.default_power_w)),
+            ]),
+        ),
+        (
+            "tuned",
+            Json::obj(vec![
+                ("window_cycles", Json::num(t.window_cycles as f64)),
+                ("window_s", Json::num(t.window_s)),
+                ("power_w", Json::num(t.power_w)),
+                ("energy_per_window_j", Json::num(t.energy_per_window_j)),
+                ("clock_mhz", Json::num(t.clock_mhz)),
+                ("unroll", Json::num(cfg.unroll as f64)),
+                ("banks", Json::num(cfg.banks as f64)),
+                ("reshape", Json::num(cfg.reshape as f64)),
+                ("dataflow", Json::Bool(cfg.dataflow)),
+                ("stage_map", Json::str(stage_map_name(&cfg.stage_map))),
+                ("format", Json::str(t.format)),
+                ("max_outstanding", Json::num(t.max_outstanding as f64)),
+                ("fits", Json::Bool(t.board.fits())),
+            ]),
+        ),
+        ("ratio_cycles", Json::num(t.speedup_vs_default())),
+        ("pareto_size", Json::num(pareto.len() as f64)),
+        ("evaluated", Json::num(out.evaluated as f64)),
+        ("feasible", Json::num(out.feasible as f64)),
+        ("pareto", Json::Arr(pareto)),
+    ])
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let window = args.get_usize("window", NATIVE_SEQ);
+    if window == 0 {
+        return Err(Error::config("tune needs --window >= 1"));
+    }
+    let input = NATIVE_XDIM + NATIVE_UDIM;
+    let opts = TunerOptions {
+        window,
+        xdim: NATIVE_XDIM,
+        udim: NATIVE_UDIM,
+        theta_len: NATIVE_XDIM * NATIVE_PLIB,
+        ..TunerOptions::default()
+    };
+    let roster = heterogeneous_fleet(input, NATIVE_HID);
+    println!(
+        "tune: {} board(s), {window}-step windows, serving dims {input}->{NATIVE_HID}",
+        roster.len()
+    );
+
+    let mut outcomes = Vec::new();
+    for board in &roster {
+        let out = tune_board(board, &opts).ok_or_else(|| {
+            Error::config(format!("no feasible design point for board {:?}", board.name))
+        })?;
+        outcomes.push(out);
+    }
+
+    let mut boards_json = BTreeMap::new();
+    let mut improved = 0usize;
+    let mut min_ratio = f64::INFINITY;
+    let mut max_ratio: f64 = 0.0;
+    for out in &outcomes {
+        let t = &out.chosen;
+        let cfg = &t.board.cfg;
+        let ratio = t.speedup_vs_default();
+        if ratio > 1.0 {
+            improved += 1;
+        }
+        min_ratio = min_ratio.min(ratio);
+        max_ratio = max_ratio.max(ratio);
+        println!(
+            "  [{:<16}] default {:>7} -> tuned {:>6} cycles/window ({ratio:.2}x)  \
+             u{}/b{}/r{} {} {} @ {:.1} MHz  {:.2} W  budget {}  pareto {}",
+            out.board_name,
+            out.default_window_cycles,
+            t.window_cycles,
+            cfg.unroll,
+            cfg.banks,
+            cfg.reshape,
+            stage_map_name(&cfg.stage_map),
+            t.format,
+            t.clock_mhz,
+            t.power_w,
+            t.max_outstanding,
+            out.pareto().len()
+        );
+        boards_json.insert(out.board_name.clone(), board_json(out));
+    }
+    let fitting = outcomes.iter().filter(|o| o.chosen.board.fits()).count();
+    println!(
+        "\nsummary: {fitting}/{} boards fit, {improved} improved, \
+         cycle ratio {min_ratio:.2}x..{max_ratio:.2}x",
+        outcomes.len()
+    );
+
+    let mut report = BenchJson::new("tune");
+    report.section(
+        "workload",
+        Json::obj(vec![
+            ("window", Json::num(window as f64)),
+            ("input", Json::num(input as f64)),
+            ("hidden", Json::num(NATIVE_HID as f64)),
+            ("xdim", Json::num(NATIVE_XDIM as f64)),
+            ("udim", Json::num(NATIVE_UDIM as f64)),
+            ("theta_len", Json::num((NATIVE_XDIM * NATIVE_PLIB) as f64)),
+            ("boards", Json::num(roster.len() as f64)),
+        ]),
+    );
+    report.section("boards", Json::Obj(boards_json));
+    report.section(
+        "summary",
+        Json::obj(vec![
+            ("boards", Json::num(outcomes.len() as f64)),
+            ("boards_fitting", Json::num(fitting as f64)),
+            ("boards_improved", Json::num(improved as f64)),
+            ("min_ratio_cycles", Json::num(min_ratio)),
+            ("max_ratio_cycles", Json::num(max_ratio)),
+        ]),
+    );
+    let path = artifact_path("BENCH_tune.json");
+    report.write(&path)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

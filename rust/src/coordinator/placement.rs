@@ -25,6 +25,12 @@
 //! does not fit its device admits none. The property tests in
 //! `rust/tests/placement.rs` hold the placer to both invariants.
 //!
+//! Boards need not run their shipped defaults: the design-space tuner
+//! (`fpga::tuner`) picks a per-board operating point, and
+//! [`InstanceSpec::from_tuned`] derives the cost model from that tuned
+//! design instead (`merinda soak --tuned`), so the fleet is scheduled
+//! at the speeds the hardware can actually reach.
+//!
 //! # Example
 //!
 //! ```
@@ -43,9 +49,12 @@
 
 use crate::fpga::cluster::BoardSpec;
 use crate::fpga::resources::Resources;
+use crate::fpga::tuner::TunedConfig;
 
-/// Bytes per BRAM18 block (18 Kb).
-const BRAM18_BYTES: u64 = 18 * 1024 / 8;
+// The per-window link payload model is shared with the hardware layer
+// (the tuner's BRAM double-buffering headroom constraint uses the same
+// bytes), so the two can never disagree about what a window costs.
+pub use crate::fpga::cluster::window_payload_bytes;
 
 /// An accelerator instance offered to the placer: a concrete board plus
 /// an optional explicit concurrency cap.
@@ -73,6 +82,13 @@ impl InstanceSpec {
             board,
             max_outstanding: Some(cap),
         }
+    }
+
+    /// An instance at its tuner-chosen operating point
+    /// (`fpga::tuner::tune_board`): the cost model derives from the
+    /// tuned design and clock instead of the board's shipped defaults.
+    pub fn from_tuned(tc: &TunedConfig) -> InstanceSpec {
+        InstanceSpec::new(tc.board.clone())
     }
 
     /// Derive the static placement model for `window`-step recovery
@@ -116,28 +132,16 @@ impl InstanceSpec {
     }
 }
 
-/// Window payload crossing the host link: quantized `[y | u]` samples in,
-/// Θ coefficients back.
-pub fn window_payload_bytes(
-    act_fmt: &crate::fpga::fixedpoint::FixedFormat,
-    window: usize,
-    xdim: usize,
-    udim: usize,
-    theta_len: usize,
-) -> u64 {
-    let wb = (act_fmt.word_bits as u64).div_ceil(8);
-    ((window * (xdim + udim) + theta_len) as u64) * wb
-}
-
 /// Windows the board can hold concurrently: free BRAM after the design,
-/// double-buffered per window. Non-fitting designs admit nothing.
+/// double-buffered per window (`Device::double_buffer_windows`).
+/// Non-fitting designs admit nothing; a fitting board always admits at
+/// least one window (the tuner is stricter — it rejects headroom-less
+/// designs outright rather than serializing on them).
 fn derived_outstanding(b: &BoardSpec, used: &Resources, payload: u64, fits: bool) -> usize {
     if !fits {
         return 0;
     }
-    let free_bytes = (b.device.capacity.bram18 - used.bram18) * BRAM18_BYTES;
-    let per_window = (2 * payload).max(1);
-    ((free_bytes / per_window) as usize).clamp(1, 512)
+    b.device.double_buffer_windows(used, payload).clamp(1, 512)
 }
 
 /// The static, per-instance inputs to the placement cost function,
@@ -338,11 +342,24 @@ mod tests {
         assert!(rank(&[drained], &[0]).is_empty());
     }
 
+    // `window_payload_bytes` moved to `fpga::cluster` (re-exported
+    // here); its unit test lives there now.
+
     #[test]
-    fn payload_bytes_count_io_and_theta() {
-        let fmt = crate::fpga::fixedpoint::FixedFormat::q8_8();
-        // 64 × (3+1) samples + 45 coefficients at 2 bytes each.
-        assert_eq!(window_payload_bytes(&fmt, 64, 3, 1, 45), (64 * 4 + 45) * 2);
+    fn tuned_instance_is_never_dearer_than_shipped() {
+        use crate::fpga::tuner::{tune_board, TunerOptions};
+        for board in heterogeneous_fleet(4, 32) {
+            let shipped = InstanceSpec::new(board.clone()).model(64, 3, 1, 45);
+            let out = tune_board(&board, &TunerOptions::default()).unwrap();
+            let tuned = InstanceSpec::from_tuned(&out.chosen).model(64, 3, 1, 45);
+            assert!(tuned.fits && tuned.max_outstanding >= 1, "{}", tuned.name);
+            assert_eq!(tuned.window_cycles, out.chosen.window_cycles);
+            // Same link, faster (or equal) window: an idle tuned
+            // instance never costs more than its shipped counterpart.
+            let c_tuned = placement_cost(&tuned, 0);
+            let c_ship = placement_cost(&shipped, 0);
+            assert!(c_tuned <= c_ship + 1e-12, "{}: {c_tuned} vs {c_ship}", tuned.name);
+        }
     }
 
     #[test]

@@ -179,6 +179,19 @@ impl BoardSpec {
         }
     }
 
+    /// The same physical board (name, fabric capacity, host link) running
+    /// a different accelerator design at a different PL clock — how the
+    /// design-space tuner (`fpga::tuner`) re-deploys a board at its
+    /// chosen operating point.
+    pub fn retargeted(&self, cfg: GruAccelConfig, clock_mhz: f64) -> BoardSpec {
+        BoardSpec {
+            name: self.name.clone(),
+            device: self.device.with_clock(clock_mhz),
+            cfg,
+            link: self.link,
+        }
+    }
+
     /// The assembled accelerator on this board's device.
     pub fn accel(&self) -> GruAccel {
         let mut a = GruAccel::new(self.cfg.clone());
@@ -229,6 +242,22 @@ impl BoardSpec {
     pub fn transfer_seconds(&self, bytes: u64) -> f64 {
         self.link.transfer_s(bytes)
     }
+}
+
+/// Window payload crossing the host link: quantized `[y | u]` samples
+/// in, Θ coefficients back. Shared by the placement cost model
+/// (`coordinator::placement`) and the tuner's BRAM double-buffering
+/// headroom constraint (`fpga::tuner`), so the two can never disagree
+/// about what one in-flight window costs.
+pub fn window_payload_bytes(
+    act_fmt: &FixedFormat,
+    window: usize,
+    xdim: usize,
+    udim: usize,
+    theta_len: usize,
+) -> u64 {
+    let wb = (act_fmt.word_bits as u64).div_ceil(8);
+    ((window * (xdim + udim) + theta_len) as u64) * wb
 }
 
 /// The canonical heterogeneous 3-board fleet used by `merinda soak
@@ -342,6 +371,31 @@ mod tests {
         let w = |i: usize| fleet[i].window_seconds(64);
         assert!(w(0) < w(1), "dataflow {} vs sequential {}", w(0), w(1));
         assert!(w(2) < w(0), "zu7ev {} vs pynq {}", w(2), w(0));
+    }
+
+    #[test]
+    fn retargeted_board_keeps_identity_changes_design() {
+        let base = heterogeneous_fleet(4, 32).remove(0);
+        let mut cfg = base.cfg.clone();
+        cfg.unroll = 64;
+        cfg.banks = 32;
+        let re = base.retargeted(cfg, 150.0);
+        assert_eq!(re.name, base.name);
+        assert_eq!(re.device.capacity.lut, base.device.capacity.lut);
+        assert!((re.device.clock_mhz - 150.0).abs() < 1e-12);
+        assert_eq!(re.cfg.unroll, 64);
+        // A faster design at a slower clock still reports coherently.
+        assert!(re.window_timing(64).total_cycles > 0);
+    }
+
+    #[test]
+    fn payload_bytes_count_io_and_theta() {
+        let fmt = FixedFormat::q8_8();
+        // 64 × (3+1) samples + 45 coefficients at 2 bytes each.
+        assert_eq!(window_payload_bytes(&fmt, 64, 3, 1, 45), (64 * 4 + 45) * 2);
+        // 12-bit words still occupy 2 bytes on the link.
+        let q48 = FixedFormat::q4_8();
+        assert_eq!(window_payload_bytes(&q48, 64, 3, 1, 45), (64 * 4 + 45) * 2);
     }
 
     #[test]

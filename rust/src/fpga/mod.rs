@@ -10,7 +10,12 @@
 //! LTC accelerators (`gru_accel`, `ltc_accel`) behind Tables 7–8 / Fig. 8.
 //! `cluster` scales out: identical-board towers plus the heterogeneous
 //! [`BoardSpec`](cluster::BoardSpec) fleet the resource-aware placement
-//! layer (`coordinator::placement`) schedules onto.
+//! layer (`coordinator::placement`) schedules onto. `tuner` closes the
+//! loop: it sweeps the design space (tiling × format × adder mix ×
+//! clock) per board, scores candidates with the cycle/resource/power
+//! models, and hands the chosen [`TunedConfig`](tuner::TunedConfig) to
+//! placement — the models stop describing designs and start picking
+//! them.
 
 pub mod bram;
 pub mod cluster;
@@ -24,3 +29,4 @@ pub mod ltc_accel;
 pub mod pipeline;
 pub mod power;
 pub mod resources;
+pub mod tuner;

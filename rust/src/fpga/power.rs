@@ -83,8 +83,15 @@ impl PowerModel {
         clock_mhz: f64,
     ) -> f64 {
         let p = self.watts(res, act);
-        p * interval_cycles as f64 / (clock_mhz * 1e6)
+        energy_j(p, interval_cycles, clock_mhz)
     }
+}
+
+/// Joules consumed running at `watts` for `cycles` at `clock_mhz` — the
+/// per-window energy the design-space tuner (`fpga::tuner`) scores
+/// candidates with (a whole recovery window rather than one output).
+pub fn energy_j(watts: f64, cycles: u64, clock_mhz: f64) -> f64 {
+    watts * cycles as f64 / (clock_mhz * 1e6)
 }
 
 #[cfg(test)]
@@ -113,6 +120,12 @@ mod tests {
         let small = Resources::new(10_000, 0, 50, 5);
         let big = Resources::new(100_000, 0, 500, 20);
         assert!(m.watts(&big, &full()) > m.watts(&small, &full()));
+    }
+
+    #[test]
+    fn energy_j_is_watts_times_seconds() {
+        // 2 W for 173e6 cycles at 173 MHz = 1 s = 2 J.
+        assert!((energy_j(2.0, 173_000_000, 173.0) - 2.0).abs() < 1e-9);
     }
 
     #[test]

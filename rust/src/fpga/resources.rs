@@ -10,6 +10,9 @@
 use std::fmt;
 use std::ops::{Add, AddAssign};
 
+/// Bytes of storage in one BRAM18 block (18 Kb).
+pub const BRAM18_BYTES: u64 = 18 * 1024 / 8;
+
 /// A bundle of fabric resources.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Resources {
@@ -54,6 +57,17 @@ impl Resources {
             ff: self.ff.max(other.ff),
             dsp: self.dsp.max(other.dsp),
             bram18: self.bram18.max(other.bram18),
+        }
+    }
+
+    /// Component-wise saturating subtraction (free capacity after a
+    /// design is placed; an overflowing class reads as zero headroom).
+    pub fn saturating_sub(&self, other: &Resources) -> Resources {
+        Resources {
+            lut: self.lut.saturating_sub(other.lut),
+            ff: self.ff.saturating_sub(other.ff),
+            dsp: self.dsp.saturating_sub(other.dsp),
+            bram18: self.bram18.saturating_sub(other.bram18),
         }
     }
 }
@@ -113,6 +127,27 @@ impl Device {
             capacity: Resources::new(230_400, 460_800, 1_728, 624),
             clock_mhz: 300.0,
         }
+    }
+
+    /// The same device retargeted to a different PL clock (the tuner's
+    /// clock axis; capacity is unchanged).
+    pub fn with_clock(self, clock_mhz: f64) -> Device {
+        Device { clock_mhz, ..self }
+    }
+
+    /// Fabric left over once a design consuming `used` is placed.
+    pub fn free(&self, used: &Resources) -> Resources {
+        self.capacity.saturating_sub(used)
+    }
+
+    /// How many `payload_bytes`-sized windows the BRAM left after `used`
+    /// can hold *double-buffered* (the streaming concurrency currency —
+    /// 0 means no headroom at all). Callers decide how to clamp: the
+    /// placement layer admits at least one window per fitting board,
+    /// while the tuner treats 0 as an infeasible design point.
+    pub fn double_buffer_windows(&self, used: &Resources, payload_bytes: u64) -> usize {
+        let free_bytes = self.free(used).bram18 * BRAM18_BYTES;
+        (free_bytes / (2 * payload_bytes).max(1)) as usize
     }
 
     /// Does a design fit this device?
@@ -184,5 +219,36 @@ mod tests {
         let a = Resources::new(10, 0, 5, 0);
         let b = Resources::new(3, 7, 1, 2);
         assert_eq!(a.max(&b), Resources::new(10, 7, 5, 2));
+    }
+
+    #[test]
+    fn saturating_sub_never_underflows() {
+        let a = Resources::new(10, 5, 3, 2);
+        let b = Resources::new(4, 9, 3, 1);
+        assert_eq!(a.saturating_sub(&b), Resources::new(6, 0, 0, 1));
+    }
+
+    #[test]
+    fn with_clock_keeps_capacity() {
+        let d = Device::pynq_z2().with_clock(100.0);
+        assert!((d.clock_mhz - 100.0).abs() < 1e-12);
+        assert_eq!(d.capacity.lut, Device::pynq_z2().capacity.lut);
+    }
+
+    #[test]
+    fn double_buffer_windows_counts_free_bram() {
+        let d = Device::pynq_z2();
+        // 278 free BRAM18 after a 2-block design; 1 KiB payloads need
+        // 2 KiB double-buffered each.
+        let used = Resources::new(0, 0, 0, 2);
+        let free_bytes = 278 * BRAM18_BYTES;
+        assert_eq!(
+            d.double_buffer_windows(&used, 1024),
+            (free_bytes / 2048) as usize
+        );
+        // A design eating all BRAM leaves no headroom.
+        assert_eq!(d.double_buffer_windows(&Resources::new(0, 0, 0, 280), 1024), 0);
+        // Zero payload never divides by zero.
+        assert!(d.double_buffer_windows(&used, 0) > 0);
     }
 }

@@ -1,0 +1,709 @@
+//! Hardware design-space autotuner: the search the paper runs by hand.
+//!
+//! MERINDA's headline numbers come from co-design — BRAM tiling, the
+//! fixed-point format sweet spot, DSP-vs-carry-chain adder mixes and the
+//! achievable clock are chosen *per board* (§5, Tables 7–8; the
+//! follow-up edge paper frames the same search under explicit resource
+//! budgets). This module automates that search: [`tune_board`] sweeps
+//! tile size (UNROLL × banking × reshape) × fixed-point format preset ×
+//! adder mix (DSP slices vs LUT-fabric/carry-chain, the Table 7 axis) ×
+//! PL clock over one [`BoardSpec`], scores every candidate with the
+//! existing models — the [`Pipeline`](super::pipeline::Pipeline) cycle
+//! model for window time, [`Device::fits`](super::resources::Device) for
+//! the fabric budget, the calibrated [`power`](super::power) model for
+//! watts — and returns the feasible Pareto front plus one
+//! [`TunedConfig`]: the fastest design that fits the device *with BRAM
+//! double-buffering headroom* for at least one in-flight window.
+//!
+//! Three so-far-descriptive models (resources, power, cycles) become
+//! optimization inputs here: `coordinator::placement` derives fleet cost
+//! models from tuner output (`InstanceSpec::from_tuned`), `merinda tune`
+//! emits the gated `BENCH_tune.json`, and `merinda soak --tuned` runs
+//! the streaming fleet at the tuned operating points.
+//!
+//! # Example
+//!
+//! ```
+//! use merinda::fpga::cluster::heterogeneous_fleet;
+//! use merinda::fpga::tuner::{tune_fleet, TunerOptions};
+//!
+//! let fleet = heterogeneous_fleet(4, 32);
+//! let outcomes = tune_fleet(&fleet, &TunerOptions::default());
+//! // Every canonical board gets a fitting, never-slower configuration.
+//! for out in outcomes.into_iter().map(Option::unwrap) {
+//!     assert!(out.chosen.window_cycles <= out.default_window_cycles);
+//! }
+//! ```
+
+use std::cmp::Ordering;
+
+use super::cluster::{window_payload_bytes, BoardSpec};
+use super::fixedpoint::FixedFormat;
+use super::gru_accel::{GruAccelConfig, StageMap};
+use super::hls::Binding;
+use super::power::energy_j;
+use super::resources::Resources;
+
+/// One tiling preset: MAC lanes per stage plus the BRAM banking /
+/// reshaping that feeds them (the II law decides whether the lanes
+/// actually stream at full rate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// UNROLL factor (parallel MAC lanes per matvec stage).
+    pub unroll: u32,
+    /// ARRAY_PARTITION factor on the weight arrays.
+    pub banks: u32,
+    /// ARRAY_RESHAPE factor (wide words).
+    pub reshape: u32,
+}
+
+impl Tile {
+    pub fn new(unroll: u32, banks: u32, reshape: u32) -> Tile {
+        Tile {
+            unroll,
+            banks,
+            reshape,
+        }
+    }
+}
+
+/// A named activation/weight fixed-point pairing (mirrors the serving
+/// presets of `coordinator::FixedPointConfig`, which lives a layer up).
+#[derive(Clone, Copy, Debug)]
+pub struct FormatPreset {
+    pub name: &'static str,
+    pub act: FixedFormat,
+    pub weight: FixedFormat,
+}
+
+fn preset(name: &'static str, act: FixedFormat, weight: FixedFormat) -> FormatPreset {
+    FormatPreset { name, act, weight }
+}
+
+/// The three serving format presets: `q8.8`, `q4.8`, `8bit`.
+pub fn default_formats() -> Vec<FormatPreset> {
+    vec![
+        preset("q8.8", FixedFormat::q8_8(), FixedFormat::q8_8()),
+        preset("q4.8", FixedFormat::q4_8(), FixedFormat::q4_8()),
+        preset("8bit", FixedFormat::new(8, 4), FixedFormat::new(8, 4)),
+    ]
+}
+
+/// Tiling ladder from the paper's sweep: baseline through BRAM-optimal.
+pub fn default_tiles() -> Vec<Tile> {
+    vec![
+        Tile::new(8, 2, 1),
+        Tile::new(16, 4, 1),
+        Tile::new(32, 8, 1),
+        Tile::new(32, 16, 1),
+        Tile::new(64, 32, 1),
+        Tile::new(96, 32, 4),
+    ]
+}
+
+/// The adder-mix axis: all-DSP, the paper's concurrent D/L/L/D mix, and
+/// all LUT-fabric (carry-chain) arithmetic.
+pub fn default_stage_maps() -> Vec<StageMap> {
+    let d = Binding::Dsp;
+    let l = Binding::Lut;
+    vec![[d, d, d, d], [d, l, l, d], [l, l, l, l]]
+}
+
+/// Highest clock, as a multiple of the board's base clock, a design can
+/// close timing at in this model: carry-chain multipliers on the matvec
+/// stages (s1/s3 bound to LUT fabric) cap the clock at base rate, wide
+/// unroll fanout does the same, and the widest tiles (96 lanes or 4-wide
+/// reshape) derate below it.
+pub fn max_clock_scale(cfg: &GruAccelConfig) -> f64 {
+    let lut_macs = cfg.stage_map[0] == Binding::Lut || cfg.stage_map[2] == Binding::Lut;
+    let mut scale: f64 = 1.15;
+    if lut_macs || cfg.unroll >= 64 {
+        scale = 1.0;
+    }
+    if cfg.unroll >= 96 || cfg.reshape >= 4 {
+        scale = 0.9;
+    }
+    scale
+}
+
+/// Search-space and constraint knobs for [`tune_board`].
+#[derive(Clone, Debug)]
+pub struct TunerOptions {
+    /// Recovery window length in GRU steps (the serving window).
+    pub window: usize,
+    /// Per-sample state rows crossing the link (payload model).
+    pub xdim: usize,
+    /// Per-sample input rows crossing the link.
+    pub udim: usize,
+    /// Θ coefficients returned per window.
+    pub theta_len: usize,
+    /// Tiling candidates (UNROLL × banks × reshape).
+    pub tiles: Vec<Tile>,
+    /// Fixed-point format presets to sweep.
+    pub formats: Vec<FormatPreset>,
+    /// Stage-to-fabric adder mixes to sweep.
+    pub stage_maps: Vec<StageMap>,
+    /// Clock candidates as multiples of the board's base clock.
+    pub clock_scales: Vec<f64>,
+    /// Also evaluate every point with DATAFLOW off (DDR-spill baseline).
+    pub sweep_dataflow: bool,
+    /// Fidelity floor: formats with fewer fractional bits are rejected
+    /// (the paper's "preserving fidelity" bar sits at 8 — Q8.8).
+    pub min_frac_bits: u32,
+    /// Optional power budget in watts (the edge-constrained search of
+    /// the follow-up paper); `None` leaves power as a score only.
+    pub max_power_w: Option<f64>,
+}
+
+impl Default for TunerOptions {
+    fn default() -> Self {
+        TunerOptions {
+            // Canonical serving window and payload dims (64-step windows
+            // of 3 state + 1 input rows, 45 Θ coefficients).
+            window: 64,
+            xdim: 3,
+            udim: 1,
+            theta_len: 45,
+            tiles: default_tiles(),
+            formats: default_formats(),
+            stage_maps: default_stage_maps(),
+            clock_scales: vec![0.85, 1.0, 1.15],
+            sweep_dataflow: true,
+            min_frac_bits: 8,
+            max_power_w: None,
+        }
+    }
+}
+
+/// One evaluated design point: the configuration, its modeled window
+/// timing/power at the candidate clock, and every feasibility verdict
+/// separately (so infeasible points are explainable, not just absent).
+#[derive(Clone, Debug)]
+pub struct TuneCandidate {
+    /// The accelerator configuration evaluated.
+    pub cfg: GruAccelConfig,
+    /// PL clock this point runs at (MHz).
+    pub clock_mhz: f64,
+    /// Cycle-model cycles for one recovery window.
+    pub window_cycles: u64,
+    /// Steady-state cycles between window outputs.
+    pub interval: u64,
+    /// `window_cycles` at `clock_mhz`, in seconds — the speed score.
+    pub window_s: f64,
+    /// Modeled power draw (W) — the second Pareto axis.
+    pub power_w: f64,
+    /// Energy for one full window (J).
+    pub energy_per_window_j: f64,
+    /// Fabric the design consumes.
+    pub resources: Resources,
+    /// Design fits the board's device capacity.
+    pub fits: bool,
+    /// Free BRAM can double-buffer at least one window payload.
+    pub headroom_ok: bool,
+    /// `clock_mhz` is within the design's timing-closure model.
+    pub clock_ok: bool,
+    /// Formats meet the fidelity floor (`min_frac_bits`).
+    pub fidelity_ok: bool,
+    /// Within the optional power budget.
+    pub power_ok: bool,
+    /// Concurrent windows the free BRAM double-buffers (capped at 512).
+    pub max_outstanding: usize,
+    /// Format preset name (`q8.8`, `q4.8`, `8bit`, `custom`).
+    pub format: &'static str,
+}
+
+impl TuneCandidate {
+    /// All feasibility verdicts at once — the Pareto/selection filter.
+    pub fn feasible(&self) -> bool {
+        self.fits && self.headroom_ok && self.clock_ok && self.fidelity_ok && self.power_ok
+    }
+}
+
+/// The tuner's pick for one board: the fastest feasible design point,
+/// never slower (in cycles) than the board's shipped configuration, as a
+/// ready-to-deploy [`BoardSpec`].
+///
+/// # Example
+///
+/// ```
+/// use merinda::coordinator::placement::InstanceSpec;
+/// use merinda::fpga::cluster::heterogeneous_fleet;
+/// use merinda::fpga::tuner::{tune_board, TunerOptions};
+///
+/// let board = heterogeneous_fleet(4, 32).remove(0);
+/// let tuned = tune_board(&board, &TunerOptions::default()).unwrap().chosen;
+/// // Feed the tuned operating point straight into fleet placement:
+/// let model = InstanceSpec::from_tuned(&tuned).model(64, 3, 1, 45);
+/// assert!(model.fits && model.max_outstanding >= 1);
+/// assert_eq!(model.window_cycles, tuned.window_cycles);
+/// ```
+#[derive(Clone, Debug)]
+pub struct TunedConfig {
+    /// The board retargeted to the chosen design and clock — hand this
+    /// to `coordinator::placement::InstanceSpec` (or use
+    /// `InstanceSpec::from_tuned`) to derive the fleet cost model.
+    pub board: BoardSpec,
+    /// Chosen PL clock (MHz).
+    pub clock_mhz: f64,
+    /// Window length the search was scored at.
+    pub window: usize,
+    /// Modeled cycles per window at the chosen design.
+    pub window_cycles: u64,
+    /// Seconds per window at the chosen clock.
+    pub window_s: f64,
+    /// Modeled power draw (W).
+    pub power_w: f64,
+    /// Energy per window (J).
+    pub energy_per_window_j: f64,
+    /// Fabric consumed.
+    pub resources: Resources,
+    /// BRAM double-buffering concurrency budget (≥ 1 by construction).
+    pub max_outstanding: usize,
+    /// Format preset name.
+    pub format: &'static str,
+    /// Cycles per window of the board's shipped configuration.
+    pub default_window_cycles: u64,
+}
+
+impl TunedConfig {
+    /// Cycle-count speedup over the board's shipped configuration
+    /// (≥ 1.0 whenever the shipped design was itself feasible).
+    pub fn speedup_vs_default(&self) -> f64 {
+        if self.window_cycles == 0 {
+            return 1.0;
+        }
+        self.default_window_cycles as f64 / self.window_cycles as f64
+    }
+}
+
+/// Everything [`tune_board`] learned about one board.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    /// Board the search ran over.
+    pub board_name: String,
+    /// Design points evaluated (grid + the shipped configuration).
+    pub evaluated: usize,
+    /// How many of them were feasible.
+    pub feasible: usize,
+    /// Whether the shipped configuration itself was feasible (when it
+    /// is, `chosen` is constrained to never regress its cycle count).
+    pub default_feasible: bool,
+    /// Cycles per window of the shipped configuration.
+    pub default_window_cycles: u64,
+    /// Seconds per window of the shipped configuration at base clock.
+    pub default_window_s: f64,
+    /// Power draw of the shipped configuration (W).
+    pub default_power_w: f64,
+    /// The selected operating point.
+    pub chosen: TunedConfig,
+    pareto: Vec<TuneCandidate>,
+}
+
+impl TuneOutcome {
+    /// The feasible Pareto front over (window seconds, watts), fastest
+    /// first: along the iteration window time never decreases and power
+    /// strictly decreases — every step slower must buy power back.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use merinda::fpga::cluster::heterogeneous_fleet;
+    /// use merinda::fpga::tuner::{tune_board, TunerOptions};
+    ///
+    /// let board = heterogeneous_fleet(4, 32).remove(2);
+    /// let out = tune_board(&board, &TunerOptions::default()).unwrap();
+    /// let front: Vec<_> = out.pareto().collect();
+    /// assert!(!front.is_empty());
+    /// for pair in front.windows(2) {
+    ///     assert!(pair[0].window_s <= pair[1].window_s);
+    ///     assert!(pair[0].power_w > pair[1].power_w);
+    /// }
+    /// ```
+    pub fn pareto(&self) -> std::slice::Iter<'_, TuneCandidate> {
+        self.pareto.iter()
+    }
+}
+
+/// Match a format pair back to its preset name for reporting.
+fn format_label(act: FixedFormat, weight: FixedFormat) -> &'static str {
+    for p in default_formats() {
+        if act == p.act && weight == p.weight {
+            return p.name;
+        }
+    }
+    "custom"
+}
+
+/// Score one configuration on one board, emitting one candidate per
+/// clock. The schedule, resources, cycle counts, power and budgets are
+/// clock-independent, so the expensive evaluation runs once per design
+/// and only the seconds/energy/closure verdicts vary per clock. Timing
+/// comes from [`BoardSpec::window_timing`] — the exact helper the
+/// placement cost model uses — so tuner scores and fleet cost models
+/// can never diverge.
+fn evaluate(
+    board: &BoardSpec,
+    cfg: GruAccelConfig,
+    clocks: &[f64],
+    opts: &TunerOptions,
+    format: &'static str,
+    out: &mut Vec<TuneCandidate>,
+) {
+    // The board running this design (at base clock — cycles and fabric
+    // are clock-independent; per-clock values are derived below).
+    let design = board.retargeted(cfg, board.device.clock_mhz);
+    let report = design.report();
+    let timing = design.window_timing(opts.window as u64);
+    let payload = window_payload_bytes(
+        &design.cfg.act_fmt,
+        opts.window,
+        opts.xdim,
+        opts.udim,
+        opts.theta_len,
+    );
+    let budget = board.device.double_buffer_windows(&report.resources, payload);
+    let fidelity_ok = design.cfg.act_fmt.frac_bits >= opts.min_frac_bits
+        && design.cfg.weight_fmt.frac_bits >= opts.min_frac_bits;
+    let power_ok = match opts.max_power_w {
+        Some(cap) => report.power_w <= cap,
+        None => true,
+    };
+    let max_clock = board.device.clock_mhz * max_clock_scale(&design.cfg);
+    for &clock_mhz in clocks {
+        let device = board.device.with_clock(clock_mhz);
+        out.push(TuneCandidate {
+            cfg: design.cfg.clone(),
+            clock_mhz,
+            window_cycles: timing.total_cycles,
+            interval: timing.interval,
+            window_s: device.cycles_to_seconds(timing.total_cycles),
+            power_w: report.power_w,
+            energy_per_window_j: energy_j(report.power_w, timing.total_cycles, clock_mhz),
+            resources: report.resources,
+            fits: board.device.fits(&report.resources),
+            headroom_ok: budget >= 1,
+            clock_ok: clock_mhz <= max_clock + 1e-9,
+            fidelity_ok,
+            power_ok,
+            max_outstanding: budget.min(512),
+            format,
+        });
+    }
+}
+
+/// Total order over possibly-NaN scores (NaN compares equal).
+fn cmp_f64(a: f64, b: f64) -> Ordering {
+    a.partial_cmp(&b).unwrap_or(Ordering::Equal)
+}
+
+/// Speed-then-power ordering (ties resolve toward lower power).
+fn cmp_speed_power(a: &TuneCandidate, b: &TuneCandidate) -> Ordering {
+    let speed = cmp_f64(a.window_s, b.window_s);
+    speed.then(cmp_f64(a.power_w, b.power_w))
+}
+
+/// Exhaustively sweep the design space for one board and pick its
+/// operating point. Returns `None` only when no design point satisfies
+/// every constraint (fit, BRAM double-buffer headroom, timing closure,
+/// fidelity floor, optional power budget).
+///
+/// The board's shipped configuration is always evaluated as a candidate;
+/// whenever it is feasible, the chosen config is additionally
+/// constrained to `window_cycles ≤` the shipped design's, so tuning can
+/// only speed a board up in the machine-independent cycle currency that
+/// placement and CI gate on.
+///
+/// # Example
+///
+/// ```
+/// use merinda::fpga::cluster::heterogeneous_fleet;
+/// use merinda::fpga::tuner::{tune_board, TunerOptions};
+///
+/// // The sequential PYNQ ships without DATAFLOW; the tuner finds the
+/// // overlapped design — a strict cycle-count win.
+/// let board = heterogeneous_fleet(4, 32).remove(1);
+/// let out = tune_board(&board, &TunerOptions::default()).unwrap();
+/// assert!(out.chosen.board.cfg.dataflow);
+/// assert!(out.chosen.speedup_vs_default() > 1.0);
+/// ```
+pub fn tune_board(board: &BoardSpec, opts: &TunerOptions) -> Option<TuneOutcome> {
+    assert!(opts.window > 0, "tuner needs a non-empty window");
+    let default_timing = board.window_timing(opts.window as u64);
+    let default_report = board.report();
+
+    // Candidate 0 is always the shipped configuration at base clock.
+    let mut candidates = Vec::new();
+    let shipped_label = format_label(board.cfg.act_fmt, board.cfg.weight_fmt);
+    let base_clock = [board.device.clock_mhz];
+    evaluate(
+        board,
+        board.cfg.clone(),
+        &base_clock,
+        opts,
+        shipped_label,
+        &mut candidates,
+    );
+    let mut clocks = Vec::with_capacity(opts.clock_scales.len());
+    for &s in &opts.clock_scales {
+        clocks.push(board.device.clock_mhz * s);
+    }
+    let dataflow_axis: &[bool] = if opts.sweep_dataflow {
+        &[true, false]
+    } else {
+        &[true]
+    };
+    for tile in &opts.tiles {
+        for fmtp in &opts.formats {
+            for map in &opts.stage_maps {
+                for &dataflow in dataflow_axis {
+                    let mut cfg = board.cfg.clone();
+                    cfg.unroll = tile.unroll;
+                    cfg.banks = tile.banks;
+                    cfg.reshape = tile.reshape;
+                    cfg.dataflow = dataflow;
+                    cfg.ddr_spill = !dataflow;
+                    cfg.stage_map = *map;
+                    cfg.act_fmt = fmtp.act;
+                    cfg.weight_fmt = fmtp.weight;
+                    evaluate(board, cfg, &clocks, opts, fmtp.name, &mut candidates);
+                }
+            }
+        }
+    }
+
+    let default_feasible = candidates[0].feasible();
+
+    // Selection: fastest feasible point, no cycle regression vs the
+    // shipped design (when that design is itself feasible).
+    let mut chosen: Option<usize> = None;
+    for (i, c) in candidates.iter().enumerate() {
+        if !c.feasible() {
+            continue;
+        }
+        if default_feasible && c.window_cycles > default_timing.total_cycles {
+            continue;
+        }
+        let better = match chosen {
+            None => true,
+            Some(j) => cmp_speed_power(c, &candidates[j]) == Ordering::Less,
+        };
+        if better {
+            chosen = Some(i);
+        }
+    }
+    let chosen = chosen?;
+
+    // Pareto front over (window_s, power_w) among all feasible points.
+    let mut order: Vec<usize> = Vec::new();
+    for (i, c) in candidates.iter().enumerate() {
+        if c.feasible() {
+            order.push(i);
+        }
+    }
+    let feasible = order.len();
+    order.sort_by(|&a, &b| cmp_speed_power(&candidates[a], &candidates[b]));
+    let mut pareto: Vec<TuneCandidate> = Vec::new();
+    let mut best_power = f64::INFINITY;
+    for i in order {
+        let c = &candidates[i];
+        if c.power_w < best_power {
+            best_power = c.power_w;
+            pareto.push(c.clone());
+        }
+    }
+
+    let c = &candidates[chosen];
+    let tuned = TunedConfig {
+        board: board.retargeted(c.cfg.clone(), c.clock_mhz),
+        clock_mhz: c.clock_mhz,
+        window: opts.window,
+        window_cycles: c.window_cycles,
+        window_s: c.window_s,
+        power_w: c.power_w,
+        energy_per_window_j: c.energy_per_window_j,
+        resources: c.resources,
+        max_outstanding: c.max_outstanding,
+        format: c.format,
+        default_window_cycles: default_timing.total_cycles,
+    };
+    Some(TuneOutcome {
+        board_name: board.name.clone(),
+        evaluated: candidates.len(),
+        feasible,
+        default_feasible,
+        default_window_cycles: default_timing.total_cycles,
+        default_window_s: board.window_seconds(opts.window as u64),
+        default_power_w: default_report.power_w,
+        chosen: tuned,
+        pareto,
+    })
+}
+
+/// Tune every board of a fleet independently (board order preserved;
+/// `None` marks a board with no feasible design point).
+pub fn tune_fleet(boards: &[BoardSpec], opts: &TunerOptions) -> Vec<Option<TuneOutcome>> {
+    boards.iter().map(|b| tune_board(b, opts)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::cluster::heterogeneous_fleet;
+    use crate::fpga::resources::BRAM18_BYTES;
+
+    fn outcomes() -> Vec<TuneOutcome> {
+        tune_fleet(&heterogeneous_fleet(4, 32), &TunerOptions::default())
+            .into_iter()
+            .map(|o| o.expect("every canonical board must tune"))
+            .collect()
+    }
+
+    #[test]
+    fn every_canonical_board_gets_a_fitting_config() {
+        let outs = outcomes();
+        assert_eq!(outs.len(), 3);
+        for out in &outs {
+            let t = &out.chosen;
+            assert!(t.board.fits(), "{}: tuned design must fit", out.board_name);
+            assert!(t.max_outstanding >= 1, "{}", out.board_name);
+            assert!(t.window_cycles > 0 && t.window_s > 0.0);
+            assert!(out.feasible >= 1 && out.feasible <= out.evaluated);
+        }
+    }
+
+    #[test]
+    fn tuned_has_bram_double_buffer_headroom() {
+        for out in outcomes() {
+            let t = &out.chosen;
+            let payload = window_payload_bytes(&t.board.cfg.act_fmt, t.window, 3, 1, 45);
+            let free = t.board.device.free(&t.resources).bram18 * BRAM18_BYTES;
+            assert!(
+                free >= 2 * payload,
+                "{}: free {free} B cannot double-buffer {payload} B",
+                out.board_name
+            );
+        }
+    }
+
+    #[test]
+    fn tuned_never_regresses_default_cycles() {
+        let outs = outcomes();
+        let mut strict = 0;
+        for out in &outs {
+            assert!(out.default_feasible, "{}", out.board_name);
+            assert!(
+                out.chosen.window_cycles <= out.default_window_cycles,
+                "{}: tuned {} vs default {}",
+                out.board_name,
+                out.chosen.window_cycles,
+                out.default_window_cycles
+            );
+            assert!(out.chosen.speedup_vs_default() >= 1.0);
+            if out.chosen.window_cycles < out.default_window_cycles {
+                strict += 1;
+            }
+        }
+        assert!(strict >= 1, "tuning must strictly beat at least one default");
+    }
+
+    #[test]
+    fn sequential_board_gains_dataflow() {
+        // heterogeneous_fleet board 1 ships with DATAFLOW off — by far
+        // the largest win in the space.
+        let board = heterogeneous_fleet(4, 32).remove(1);
+        assert!(!board.cfg.dataflow);
+        let out = tune_board(&board, &TunerOptions::default()).unwrap();
+        assert!(out.chosen.board.cfg.dataflow);
+        assert!(out.chosen.speedup_vs_default() > 2.0);
+    }
+
+    #[test]
+    fn pareto_front_is_an_antichain_fastest_first() {
+        for out in outcomes() {
+            let front: Vec<&TuneCandidate> = out.pareto().collect();
+            assert!(!front.is_empty());
+            for pair in front.windows(2) {
+                assert!(pair[0].window_s <= pair[1].window_s);
+                assert!(pair[0].power_w > pair[1].power_w);
+            }
+            for c in &front {
+                assert!(c.feasible());
+            }
+        }
+    }
+
+    #[test]
+    fn fidelity_floor_rejects_narrow_formats() {
+        for out in outcomes() {
+            assert!(out.chosen.board.cfg.act_fmt.frac_bits >= 8, "{}", out.board_name);
+            assert_ne!(out.chosen.format, "8bit");
+        }
+    }
+
+    #[test]
+    fn impossible_power_budget_yields_none() {
+        // 1 W is below the 1.7 W static floor of the power model.
+        let opts = TunerOptions {
+            max_power_w: Some(1.0),
+            ..TunerOptions::default()
+        };
+        let board = heterogeneous_fleet(4, 32).remove(0);
+        assert!(tune_board(&board, &opts).is_none());
+    }
+
+    #[test]
+    fn loose_power_budget_caps_chosen_power() {
+        let board = heterogeneous_fleet(4, 32).remove(0);
+        let unbounded = tune_board(&board, &TunerOptions::default()).unwrap();
+        let cap = unbounded.chosen.power_w - 1e-6;
+        let opts = TunerOptions {
+            max_power_w: Some(cap),
+            ..TunerOptions::default()
+        };
+        if let Some(bounded) = tune_board(&board, &opts) {
+            assert!(bounded.chosen.power_w <= cap);
+        }
+    }
+
+    #[test]
+    fn clock_scale_model_derates_carry_chains_and_wide_tiles() {
+        let base = GruAccelConfig::concurrent();
+        // Concurrent map has LUT-bound s2 but DSP-bound matvecs at
+        // unroll 32: full overclock headroom is denied only by s3.
+        let all_dsp = GruAccelConfig {
+            stage_map: [Binding::Dsp; 4],
+            ..base.clone()
+        };
+        assert!((max_clock_scale(&all_dsp) - 1.15).abs() < 1e-12);
+        assert!((max_clock_scale(&base) - 1.0).abs() < 1e-12);
+        let wide = GruAccelConfig {
+            unroll: 96,
+            ..all_dsp
+        };
+        assert!((max_clock_scale(&wide) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tuned_clock_within_timing_closure() {
+        for out in outcomes() {
+            let cfg = &out.chosen.board.cfg;
+            let base = heterogeneous_fleet(4, 32)
+                .into_iter()
+                .find(|b| b.name == out.board_name)
+                .unwrap();
+            let max = base.device.clock_mhz * max_clock_scale(cfg);
+            assert!(out.chosen.clock_mhz <= max + 1e-9, "{}", out.board_name);
+        }
+    }
+
+    #[test]
+    fn format_labels_round_trip() {
+        let q88 = FixedFormat::q8_8();
+        let q48 = FixedFormat::q4_8();
+        let i8f = FixedFormat::new(8, 4);
+        assert_eq!(format_label(q88, q88), "q8.8");
+        assert_eq!(format_label(q48, q48), "q4.8");
+        assert_eq!(format_label(i8f, i8f), "8bit");
+        assert_eq!(format_label(FixedFormat::new(16, 12), q88), "custom");
+    }
+}

@@ -7,6 +7,7 @@
 //!   simulate --config C        — FPGA accelerator report (table-8 configs)
 //!   serve    --requests N      — run the streaming service demo
 //!   soak     --tenants N --fleet M — multi-tenant streaming workload on a fleet
+//!   tune     [--window N]      — design-space autotuner, writes BENCH_tune.json
 //!   table <1|2|4|5|6|7|8|fig8> — regenerate a paper table/figure
 //!
 //! `cargo run --release -- <subcommand> [flags]`
@@ -20,6 +21,7 @@ mod commands {
     pub mod soak;
     pub mod tables;
     pub mod train;
+    pub mod tune;
 }
 
 fn main() {
@@ -39,16 +41,19 @@ fn main() {
         Some("simulate") => commands::simulate::run(&args),
         Some("serve") => commands::serve::run(&args),
         Some("soak") => commands::soak::run(&args),
+        Some("tune") => commands::tune::run(&args),
         Some("table") => commands::tables::run(&args),
         _ => {
             eprintln!(
-                "usage: merinda <info|recover|train|simulate|serve|soak|table> [--flags]\n\
+                "usage: merinda <info|recover|train|simulate|serve|soak|tune|table> [--flags]\n\
                  examples:\n\
                  \x20 merinda recover --system lotka --method merinda\n\
                  \x20 merinda train --system aid --steps 300\n\
                  \x20 merinda simulate --config concurrent\n\
                  \x20 merinda serve --requests 256 --backend fixed --fmt q8.8\n\
                  \x20 merinda soak --tenants 6 --samples 400 --backend native --fleet 3\n\
+                 \x20 merinda soak --fleet 3 --tuned\n\
+                 \x20 merinda tune --window 64\n\
                  \x20 merinda table 8"
             );
             std::process::exit(2);

@@ -1,0 +1,124 @@
+//! Design-space tuner acceptance/property tests (in-tree property-test
+//! driver, same style as `placement.rs`).
+//!
+//! Claims held here:
+//! * every tuner-chosen config passes the resources fit-check *with
+//!   BRAM double-buffering headroom*, across random search-space
+//!   subsets and window lengths — the admission invariant soak and
+//!   placement rely on;
+//! * the chosen config's modeled window cycles never exceed the shipped
+//!   default's on any canonical board (the CI cycle-ratio gate), and
+//!   strictly improve on at least one;
+//! * the Pareto front is a feasible antichain, fastest first.
+
+use merinda::fpga::cluster::{heterogeneous_fleet, window_payload_bytes};
+use merinda::fpga::resources::BRAM18_BYTES;
+use merinda::fpga::tuner::{
+    default_formats, default_stage_maps, default_tiles, tune_board, tune_fleet, TunerOptions,
+};
+use merinda::util::Prng;
+
+const CASES: u64 = 24;
+
+/// Keep a random non-empty subset of `all` (search-space fuzzing).
+fn pick<T: Clone>(rng: &mut Prng, all: &[T]) -> Vec<T> {
+    let mut out = Vec::new();
+    for item in all {
+        if rng.bernoulli(0.5) {
+            out.push(item.clone());
+        }
+    }
+    if out.is_empty() {
+        out.push(all[rng.below(all.len())].clone());
+    }
+    out
+}
+
+/// Whatever subset of the design space the tuner is offered, the chosen
+/// config must fit its board with BRAM double-buffering headroom and
+/// must never model more cycles per window than the shipped default.
+#[test]
+fn prop_tuned_configs_fit_with_headroom_across_random_spaces() {
+    let mut rng = Prng::new(0x7E5);
+    let windows = [32usize, 64, 96, 128, 192, 256];
+    let boards = heterogeneous_fleet(4, 32);
+    for case in 0..CASES {
+        let window = windows[rng.below(windows.len())];
+        let opts = TunerOptions {
+            window,
+            tiles: pick(&mut rng, &default_tiles()),
+            formats: pick(&mut rng, &default_formats()),
+            stage_maps: pick(&mut rng, &default_stage_maps()),
+            sweep_dataflow: rng.bernoulli(0.5),
+            ..TunerOptions::default()
+        };
+        for board in &boards {
+            let out = tune_board(board, &opts)
+                .unwrap_or_else(|| panic!("case {case}: no outcome for {}", board.name));
+            let t = &out.chosen;
+            assert!(t.board.fits(), "case {case} {}: must fit", out.board_name);
+            assert!(t.max_outstanding >= 1, "case {case} {}", out.board_name);
+            let payload = window_payload_bytes(&t.board.cfg.act_fmt, window, 3, 1, 45);
+            let free = t.board.device.free(&t.resources).bram18 * BRAM18_BYTES;
+            assert!(
+                free >= 2 * payload,
+                "case {case} {}: free {free} B cannot double-buffer {payload} B",
+                out.board_name
+            );
+            assert!(
+                t.window_cycles <= out.default_window_cycles,
+                "case {case} {}: tuned {} > default {}",
+                out.board_name,
+                t.window_cycles,
+                out.default_window_cycles
+            );
+        }
+    }
+}
+
+/// The canonical acceptance bar: tuned ≤ default cycles everywhere,
+/// strictly better somewhere (the sequential PYNQ gains DATAFLOW).
+#[test]
+fn tuned_beats_or_matches_default_on_every_canonical_board() {
+    let outs = tune_fleet(&heterogeneous_fleet(4, 32), &TunerOptions::default());
+    assert_eq!(outs.len(), 3);
+    let mut strict = 0usize;
+    for out in outs {
+        let out = out.expect("canonical board must tune");
+        assert!(out.default_feasible, "{}", out.board_name);
+        assert!(
+            out.chosen.window_cycles <= out.default_window_cycles,
+            "{}: tuned {} vs default {}",
+            out.board_name,
+            out.chosen.window_cycles,
+            out.default_window_cycles
+        );
+        assert!(out.chosen.speedup_vs_default() >= 1.0);
+        if out.chosen.window_cycles < out.default_window_cycles {
+            strict += 1;
+        }
+    }
+    assert!(strict >= 1, "tuning must strictly improve at least one board");
+}
+
+/// No Pareto point may dominate another (feasible antichain), and the
+/// front is ordered fastest first.
+#[test]
+fn pareto_front_is_feasible_antichain() {
+    let outs = tune_fleet(&heterogeneous_fleet(4, 32), &TunerOptions::default());
+    for out in outs.into_iter().flatten() {
+        let front: Vec<_> = out.pareto().collect();
+        assert!(!front.is_empty(), "{}", out.board_name);
+        for (i, a) in front.iter().enumerate() {
+            assert!(a.feasible());
+            for b in front.iter().skip(i + 1) {
+                let dom_ab = a.window_s <= b.window_s && a.power_w <= b.power_w;
+                let dom_ba = b.window_s <= a.window_s && b.power_w <= a.power_w;
+                assert!(!dom_ab && !dom_ba, "{}: dominated pair", out.board_name);
+            }
+        }
+        for pair in front.windows(2) {
+            assert!(pair[0].window_s <= pair[1].window_s, "front must be fastest first");
+        }
+    }
+}

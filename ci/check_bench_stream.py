@@ -1,21 +1,32 @@
 #!/usr/bin/env python3
 """Validate BENCH_stream.json (schema + deterministic throughput floor).
 
-Usage: check_bench_stream.py <expected-backend> [tuned]
+Usage: check_bench_stream.py <expected-backend> [tuned] [chaos]
 
 Run after `merinda soak` with MERINDA_SOAK_TENANTS / MERINDA_SOAK_SAMPLES
 set; every gated value below is window-count or cycle-model based, so the
 gate is machine-independent (wall-clock numbers live in the ungated
-"wall" section). Pass `tuned` as the second argument when the soak ran
-with `--tuned`, so CI notices if the tuned-placement path silently stops
-being exercised.
+"wall" section). Pass `tuned` when the soak ran with `--tuned`, and
+`chaos` when it ran with `--chaos`, so CI notices if either path
+silently stops being exercised.
+
+In chaos mode the completion gate is *stronger in spirit*: the fixed
+smoke plan injects a crash, a stall and a bit-flip, and every window
+must still complete (failover + retry absorb the faults), every injected
+flip must be caught by the fidelity check, and every crashed instance
+must be reported down. Wall-clock-dependent counters (timeouts,
+duplicates) are not gated — only their ledger consistency is.
 """
 import json
 import os
 import sys
 
 expected_backend = sys.argv[1] if len(sys.argv) > 1 else "native"
-expected_tuned = len(sys.argv) > 2 and sys.argv[2] == "tuned"
+flags = set(sys.argv[2:])
+unknown = flags - {"tuned", "chaos"}
+assert not unknown, f"unknown flags: {sorted(unknown)}"
+expected_tuned = "tuned" in flags
+expected_chaos = "chaos" in flags
 tenants = int(os.environ.get("MERINDA_SOAK_TENANTS", "6"))
 samples = int(os.environ.get("MERINDA_SOAK_SAMPLES", "400"))
 
@@ -23,8 +34,8 @@ d = json.load(open("BENCH_stream.json"))
 
 # --- schema ---
 for key in ("bench", "workload", "totals", "fairness", "queue",
-            "cycle_model", "verify", "placement", "warm_start", "wall",
-            "rows", "speedups"):
+            "cycle_model", "verify", "placement", "warm_start", "faults",
+            "wall", "rows", "speedups"):
     assert key in d, f"missing key: {key}"
 assert d["bench"] == "stream"
 for k in ("tenants", "samples_per_tenant", "window", "stride", "backend",
@@ -50,6 +61,15 @@ for k in ("enabled", "paired_windows", "warm_iters", "cold_iters",
           "scenarios_measured", "scenarios_warm_below_cold",
           "per_scenario"):
     assert k in d["warm_start"], f"missing warm_start.{k}"
+for k in ("chaos", "plan", "deadline_ms", "injected_crash",
+          "injected_stall", "injected_link", "injected_flip",
+          "detected_timeouts", "detected_disconnects",
+          "detected_corruptions", "detected_submit_down", "failed_over",
+          "retries", "duplicates_dropped", "exhausted",
+          "degraded_entries", "degraded_exits", "standby_windows",
+          "instances_down", "instances_recovered",
+          "recovery_rounds_total", "accounting_closed"):
+    assert k in d["faults"], f"missing faults.{k}"
 
 # --- workload matches the env knobs ---
 w = d["workload"]
@@ -70,7 +90,8 @@ expected_windows = tenants * per_tenant
 assert t["windows_emitted"] == expected_windows, \
     f"emitted {t['windows_emitted']} != planned {expected_windows}"
 assert t["windows_completed"] == t["windows_emitted"], \
-    "smoke workload must complete every window (no shed/fail)"
+    "smoke workload must complete every window (no shed/fail) — " \
+    "under chaos, failover and retry must absorb the injected faults"
 assert t["windows_shed"] == 0 and t["windows_failed"] == 0
 
 # --- fairness: identical-length streams must complete identically ---
@@ -92,24 +113,37 @@ assert v["max_abs_delta"] == 0.0, \
 p = d["placement"]
 per_inst = p["per_instance"]
 assert len(per_inst) == p["instances"] >= 1
-assert sum(i["placed"] for i in per_inst) == expected_windows, \
-    "every completed window must be attributed to an instance"
+if expected_chaos:
+    # Failed-over windows are placed more than once, so the placed sum
+    # exceeds the window count by exactly the observable failovers.
+    assert sum(i["placed"] for i in per_inst) >= expected_windows
+else:
+    assert sum(i["placed"] for i in per_inst) == expected_windows, \
+        "every completed window must be attributed to an instance"
 assert sum(i["completed"] for i in per_inst) == expected_windows
 for i in per_inst:
     assert i["completed"] <= i["placed"]
     assert i["window_cycles"] > 0, f"{i['name']}: cycle model must be wired in"
     assert i["modeled_cycles"] == i["completed"] * i["window_cycles"]
+    assert i["health"] in ("healthy", "degraded", "down", "recovering"), \
+        f"{i['name']}: unknown health {i['health']!r}"
 assert p["instances_used"] == sum(1 for i in per_inst if i["placed"] > 0)
 if p["instances"] > 1 and expected_windows >= 2 * tenants:
     assert p["instances_used"] >= 2, \
         "a loaded multi-instance fleet must spread windows across siblings"
 
 # --- warm-start recovery: fewer iterations than cold, per scenario ---
+# Under chaos, corruption retries invalidate the warm cache, so the
+# paired-window count is workload-dependent; the iteration gates apply
+# only to the healthy-fleet smoke.
 ws = d["warm_start"]
 assert ws["enabled"], "soak smoke must run with warm-start on"
-assert ws["paired_windows"] == tenants * max(per_tenant - 1, 0), \
-    "every non-first window must be measured warm AND cold"
-if ws["paired_windows"] > 0:
+if expected_chaos:
+    assert ws["paired_windows"] <= tenants * max(per_tenant - 1, 0)
+else:
+    assert ws["paired_windows"] == tenants * max(per_tenant - 1, 0), \
+        "every non-first window must be measured warm AND cold"
+if not expected_chaos and ws["paired_windows"] > 0:
     assert ws["warm_iters"] < ws["cold_iters"], \
         f"warm-start must save iterations: {ws['warm_iters']} vs {ws['cold_iters']}"
     assert 0.0 < ws["iter_ratio"] < 1.0 or ws["warm_iters"] == 0
@@ -124,8 +158,42 @@ if ws["paired_windows"] > 0:
          f"{ws['scenarios_warm_below_cold']}/{ws['scenarios_measured']} "
          f"({ws['per_scenario']})")
 
+# --- fault layer: ledger always closed; injection observable in chaos ---
+fa = d["faults"]
+assert fa["chaos"] is expected_chaos, \
+    f"chaos {fa['chaos']} != expected {expected_chaos}"
+assert fa["accounting_closed"], \
+    "per-tenant accounting must close: completed + shed + failed == emitted"
+injected = (fa["injected_crash"] + fa["injected_stall"]
+            + fa["injected_link"] + fa["injected_flip"])
+if expected_chaos:
+    assert fa["plan"], "a chaos run must record its plan spec"
+    assert injected >= 1, "the chaos plan must actually fire"
+    assert fa["detected_corruptions"] == fa["injected_flip"], \
+        (f"{fa['injected_flip']} flips injected but "
+         f"{fa['detected_corruptions']} caught by the fidelity check")
+    if fa["injected_crash"] > 0:
+        assert fa["instances_down"] >= fa["injected_crash"], \
+            "every crashed instance must be taken down by the health machine"
+        downs = sum(1 for i in per_inst if i["health"] == "down")
+        assert downs >= fa["injected_crash"], \
+            f"crashed instances must report down at exit: {per_inst}"
+    if fa["failed_over"] > 0:
+        assert fa["retries"] >= 1, \
+            "failover without retries would mean windows were dropped"
+else:
+    assert fa["plan"] == "", "no plan may be armed outside chaos mode"
+    assert injected == 0, f"faults injected without chaos: {fa}"
+    for k in ("detected_timeouts", "detected_disconnects",
+              "detected_corruptions", "detected_submit_down",
+              "failed_over", "retries", "duplicates_dropped", "exhausted",
+              "standby_windows", "instances_down"):
+        assert fa[k] == 0, \
+            f"healthy-fleet smoke observed faults.{k} = {fa[k]}"
+
+mode = " +chaos" if expected_chaos else ""
 print(f"BENCH_stream.json OK: {expected_windows} windows on "
-      f"{w['backend']}, {wpm:.1f} windows/Mcycle, "
+      f"{w['backend']}{mode}, {wpm:.1f} windows/Mcycle, "
       f"{p['instances_used']}/{p['instances']} instances used, "
       f"warm/cold iters {ws['warm_iters']}/{ws['cold_iters']}, "
       f"bitwise-verified")

@@ -28,18 +28,32 @@
 //! CI shrinks the workload via the `MERINDA_SOAK_TENANTS` /
 //! `MERINDA_SOAK_SAMPLES` env knobs (the same pattern as
 //! `MERINDA_BENCH_SEQ` for the cycles bench).
+//!
+//! `--chaos <plan>` (or `MERINDA_SOAK_CHAOS`) replays the same workload
+//! under deterministic fault injection (`coordinator::faults`): the
+//! plan grammar is `crash:I@N,stall:I@N+MSms,flip:I@K,link:I@N*F+D`
+//! (or the literal `seeded` to derive a plan from `--seed`). A warm
+//! standby instance on the same identically-seeded backend joins the
+//! roster, masked until the fleet degrades. The run then *self-verifies
+//! the fault accounting*: per tenant, completed + shed + failed must
+//! equal emitted (no window lost), no `(tenant, seq_no)` may complete
+//! twice, every fired crash must leave its instance `down`, and every
+//! fired bit-flip must have been caught by the fidelity check. The
+//! bitwise one-shot comparison still runs — surviving windows carry
+//! uncorrupted Θ. `--deadline-ms` bounds window completion before
+//! hedged failover (default 30000).
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use merinda::coordinator::placement::refine_cycle_model;
 use merinda::coordinator::stream::{decode_id, encode_id};
 use merinda::coordinator::{
-    window_plan, FixedPointBackend, FixedPointConfig, InstanceModel, InstanceSpec, Metrics,
-    NativeBackend, NATIVE_HID, NATIVE_PLIB, NATIVE_SEQ, NATIVE_UDIM, NATIVE_XDIM,
-    RecoveredWindow, RecoveryRequest, Service, ServiceConfig, ShedPolicy, StreamConfig,
-    StreamCoordinator, WarmStartConfig, WindowConfig,
+    window_plan, FaultKind, FaultPlan, FaultToleranceConfig, FixedPointBackend, FixedPointConfig,
+    InstanceModel, InstanceSpec, Metrics, NativeBackend, NATIVE_HID, NATIVE_PLIB, NATIVE_SEQ,
+    NATIVE_UDIM, NATIVE_XDIM, RecoveredWindow, RecoveryRequest, Service, ServiceConfig,
+    ShedPolicy, StreamConfig, StreamCoordinator, WarmStartConfig, WindowConfig,
 };
 use merinda::fpga::cluster::heterogeneous_fleet;
 use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
@@ -208,7 +222,7 @@ fn make_fleet(
     workers: usize,
     seed: u64,
     models: &[InstanceModel],
-) -> Result<(Vec<(InstanceModel, Service)>, Option<FixedPointBackend>, Arc<Metrics>)> {
+) -> Result<(Vec<(InstanceModel, Service)>, BackendKind, Arc<Metrics>)> {
     let kind = BackendKind::from_name(backend, fmt, seed)?;
     let sink = Arc::new(Metrics::new());
     let cfg = ServiceConfig {
@@ -219,7 +233,7 @@ fn make_fleet(
         .iter()
         .map(|m| (m.clone(), kind.start(cfg, seed, sink.clone())))
         .collect();
-    Ok((fleet, kind.probe(), sink))
+    Ok((fleet, kind, sink))
 }
 
 pub fn run(args: &Args) -> Result<()> {
@@ -237,6 +251,12 @@ pub fn run(args: &Args) -> Result<()> {
     let fleet_n = args.get_usize("fleet", env_usize("MERINDA_SOAK_FLEET", 3)).max(1);
     let warm = !args.flag("no-warm");
     let tuned = args.flag("tuned");
+    let deadline_ms = args.get_u64("deadline-ms", 30_000).max(1);
+    let chaos_spec: Option<String> = args
+        .get("chaos")
+        .map(str::to_string)
+        .or_else(|| std::env::var("MERINDA_SOAK_CHAOS").ok().filter(|s| !s.is_empty()));
+    let chaos = chaos_spec.is_some();
 
     if window != NATIVE_SEQ {
         return Err(Error::config(format!(
@@ -260,7 +280,8 @@ pub fn run(args: &Args) -> Result<()> {
     );
 
     let models = fleet_models(fleet_n, wcfg.window, tuned)?;
-    let (fleet, probe, _sink) = make_fleet(&backend, &fmt, workers, seed, &models)?;
+    let (fleet, kind, sink) = make_fleet(&backend, &fmt, workers, seed, &models)?;
+    let probe = kind.probe();
     let scfg = StreamConfig {
         window: wcfg,
         tenant_queue: queue,
@@ -269,9 +290,41 @@ pub fn run(args: &Args) -> Result<()> {
             enabled: warm,
             ..WarmStartConfig::default()
         },
+        faults: FaultToleranceConfig {
+            deadline: Duration::from_millis(deadline_ms),
+            ..FaultToleranceConfig::default()
+        },
         ..Default::default()
     };
-    let mut coord = StreamCoordinator::with_fleet(fleet, scfg, XD, UD);
+    let mut coord = StreamCoordinator::with_fleet(fleet, scfg, XD, UD)?;
+
+    // Arm the chaos plan and a warm standby. The standby runs the same
+    // identically-seeded backend kind as the fleet (so windows it
+    // absorbs still verify bitwise against the one-shot path) and stays
+    // masked out of placement until the fleet degrades.
+    let plan_starts = window_plan(samples, wcfg.window, wcfg.stride);
+    let fault_plan = match chaos_spec.as_deref() {
+        None => FaultPlan::none(),
+        Some("seeded") => {
+            let horizon = (tenants * plan_starts.len()) as u64;
+            FaultPlan::seeded(seed, fleet_n, horizon.max(4))
+        }
+        Some(spec) => FaultPlan::parse(spec, fleet_n)?,
+    };
+    if chaos {
+        coord.inject_faults(fault_plan.clone())?;
+        let standby_cfg = ServiceConfig {
+            workers,
+            ..Default::default()
+        };
+        let standby_svc = kind.start(standby_cfg, seed, sink.clone());
+        let standby_model = InstanceModel::synthetic("host-standby", 1e-3, 64);
+        coord.add_standby(standby_model, standby_svc);
+        println!(
+            "chaos: plan [{}], deadline {deadline_ms}ms, host standby armed",
+            fault_plan.spec()
+        );
+    }
 
     // Samples arrive interleaved round-robin across tenants — the
     // concurrent-stream shape, not tenant-after-tenant replay.
@@ -325,8 +378,100 @@ pub fn run(args: &Args) -> Result<()> {
     for (i, inst) in stats.per_instance.iter().enumerate() {
         println!(
             "  instance {:>2} [{:<16}] placed {:>4}  completed {:>4}  \
-             outstanding max {:>3}  {:>7} cycles/window",
-            i, inst.name, inst.placed, inst.completed, inst.outstanding_max, inst.window_cycles
+             outstanding max {:>3}  {:>7} cycles/window  health {:<10} failed-over {:>3}",
+            i,
+            inst.name,
+            inst.placed,
+            inst.completed,
+            inst.outstanding_max,
+            inst.window_cycles,
+            inst.health,
+            inst.failed_over
+        );
+    }
+
+    // Fault accounting: always reported; self-verified under --chaos.
+    let fstats = stats.faults;
+    if chaos || fstats.injected_total() > 0 || fstats.failed_over > 0 {
+        println!(
+            "faults: injected {} (crash {} stall {} link {} flip {})  detected: \
+             timeouts {} disconnects {} corruptions {} submit-down {}",
+            fstats.injected_total(),
+            fstats.injected_crash,
+            fstats.injected_stall,
+            fstats.injected_link,
+            fstats.injected_flip,
+            fstats.detected_timeouts,
+            fstats.detected_disconnects,
+            fstats.detected_corruptions,
+            fstats.detected_submit_down
+        );
+        println!(
+            "        failed over {}  retries {}  duplicates dropped {}  exhausted {}  \
+             standby windows {}  degraded entries/exits {}/{}",
+            fstats.failed_over,
+            fstats.retries,
+            fstats.duplicates_dropped,
+            fstats.exhausted,
+            fstats.standby_windows,
+            fstats.degraded_entries,
+            fstats.degraded_exits
+        );
+    }
+    if chaos {
+        // Chaos self-verification: the fault layer must account for
+        // every window and every injected fault must be observable.
+        for pt in &stats.per_tenant {
+            if pt.completed + pt.shed + pt.failed != pt.emitted {
+                return Err(Error::numeric(format!(
+                    "tenant {} lost windows under chaos: {} completed + {} shed + {} failed \
+                     != {} emitted",
+                    pt.tenant, pt.completed, pt.shed, pt.failed, pt.emitted
+                )));
+            }
+        }
+        let mut seen = BTreeSet::new();
+        for r in &results {
+            if !seen.insert((r.tenant, r.seq_no)) {
+                return Err(Error::numeric(format!(
+                    "window (tenant {}, seq {}) completed twice under chaos",
+                    r.tenant, r.seq_no
+                )));
+            }
+        }
+        let crash_events = fault_plan
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Crash))
+            .count() as u64;
+        if fstats.injected_crash == crash_events {
+            // Every planned crash fired: each victim must be observably
+            // down (a crash is permanent — no probe revives it).
+            for ev in &fault_plan.events {
+                if matches!(ev.kind, FaultKind::Crash)
+                    && stats.per_instance[ev.instance].health != "down"
+                {
+                    return Err(Error::numeric(format!(
+                        "instance {} was crashed but reports health {:?}",
+                        ev.instance, stats.per_instance[ev.instance].health
+                    )));
+                }
+            }
+        }
+        if fstats.detected_corruptions < fstats.injected_flip {
+            return Err(Error::numeric(format!(
+                "{} bit-flips injected but only {} corruptions caught by the fidelity check",
+                fstats.injected_flip, fstats.detected_corruptions
+            )));
+        }
+        println!(
+            "chaos self-check: accounting closed for {} tenant(s), {} unique windows, \
+             {} crash(es) observed down, {}/{} corruption(s) caught",
+            stats.per_tenant.len(),
+            results.len(),
+            fstats.injected_crash,
+            fstats.detected_corruptions,
+            fstats.injected_flip
         );
     }
 
@@ -534,6 +679,9 @@ pub fn run(args: &Args) -> Result<()> {
                                 ("outstanding_max", Json::num(i.outstanding_max as f64)),
                                 ("window_cycles", Json::num(i.window_cycles as f64)),
                                 ("modeled_cycles", Json::num(i.modeled_cycles as f64)),
+                                ("health", Json::str(i.health.clone())),
+                                ("failed_over", Json::num(i.failed_over as f64)),
+                                ("downs", Json::num(i.downs as f64)),
                             ])
                         })
                         .collect(),
@@ -591,6 +739,47 @@ pub fn run(args: &Args) -> Result<()> {
                             )
                         })
                         .collect(),
+                ),
+            ),
+        ]),
+    );
+    // Fault-layer accounting: always present (all-zero counters when no
+    // chaos plan is armed and the fleet stayed healthy) so
+    // `ci/check_bench_stream.py` can gate both modes.
+    report.section(
+        "faults",
+        Json::obj(vec![
+            ("chaos", Json::Bool(chaos)),
+            ("plan", Json::str(fault_plan.spec())),
+            ("deadline_ms", Json::num(deadline_ms as f64)),
+            ("injected_crash", Json::num(fstats.injected_crash as f64)),
+            ("injected_stall", Json::num(fstats.injected_stall as f64)),
+            ("injected_link", Json::num(fstats.injected_link as f64)),
+            ("injected_flip", Json::num(fstats.injected_flip as f64)),
+            ("detected_timeouts", Json::num(fstats.detected_timeouts as f64)),
+            ("detected_disconnects", Json::num(fstats.detected_disconnects as f64)),
+            ("detected_corruptions", Json::num(fstats.detected_corruptions as f64)),
+            ("detected_submit_down", Json::num(fstats.detected_submit_down as f64)),
+            ("failed_over", Json::num(fstats.failed_over as f64)),
+            ("retries", Json::num(fstats.retries as f64)),
+            ("duplicates_dropped", Json::num(fstats.duplicates_dropped as f64)),
+            ("exhausted", Json::num(fstats.exhausted as f64)),
+            ("degraded_entries", Json::num(fstats.degraded_entries as f64)),
+            ("degraded_exits", Json::num(fstats.degraded_exits as f64)),
+            ("standby_windows", Json::num(fstats.standby_windows as f64)),
+            ("instances_down", Json::num(fstats.instances_down as f64)),
+            ("instances_recovered", Json::num(fstats.instances_recovered as f64)),
+            (
+                "recovery_rounds_total",
+                Json::num(fstats.recovery_rounds_total as f64),
+            ),
+            (
+                "accounting_closed",
+                Json::Bool(
+                    stats
+                        .per_tenant
+                        .iter()
+                        .all(|t| t.completed + t.shed + t.failed == t.emitted),
                 ),
             ),
         ]),

@@ -1,0 +1,825 @@
+//! Deterministic fault injection, instance health, and retry policy for
+//! the streaming coordinator.
+//!
+//! MERINDA's mission-critical framing (fast model recovery for real-time
+//! digital twins) only holds if recovery *itself* survives failures: a
+//! crashed board, a stalled DMA, a flapping link, or a flipped
+//! accumulator bit must not strand windows or corrupt results silently.
+//! This module provides the pieces the [`StreamCoordinator`] composes
+//! into a failover layer:
+//!
+//! - [`FaultPlan`]: a deterministic, seed- or spec-driven schedule of
+//!   [`FaultEvent`]s (crash, stall, link degradation, bit-flip
+//!   corruption) keyed to the coordinator's logical clocks, so chaos
+//!   runs replay bit-identically.
+//! - [`InstanceHealth`]: a per-instance state machine
+//!   (healthy → degraded → down → recovering) driven by submission
+//!   outcomes and deadline timeouts. Down instances are masked out of
+//!   placement; non-permanent downs are re-probed with exponential
+//!   backoff and readmitted after consecutive clean completions.
+//! - [`RetryPolicy`]: bounded per-window retry with exponential backoff
+//!   plus deterministic jitter, layered *on top of* the AIMD
+//!   hold-and-retry that already handles plain overload.
+//! - [`fidelity_check`] / [`corrupt_theta`]: the detection side of the
+//!   bit-flip fault. A flipped high exponent bit throws a coefficient
+//!   outside any plausible magnitude for normalized inputs, so a cheap
+//!   range-and-finiteness check catches it without re-running the solve.
+//!
+//! All timing is in *pump rounds* (one [`StreamCoordinator::pump`] call
+//! advances the clock by one) except stalls, which hold wall-clock time
+//! to exercise the real deadline path.
+//!
+//! [`StreamCoordinator`]: super::StreamCoordinator
+//! [`StreamCoordinator::pump`]: super::StreamCoordinator::pump
+
+use std::time::Duration;
+
+use crate::util::{Error, Prng, Result};
+
+/// What a scheduled fault does to its instance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Hard crash: the instance's service is killed (queue cleared,
+    /// channels dropped) and never comes back. Queued windows strand.
+    Crash,
+    /// Transient stall: the instance stops being offered work for
+    /// `hold` of wall-clock time; windows already on it blow their
+    /// deadline and fail over. The instance recovers afterwards.
+    Stall { hold: Duration },
+    /// Link degradation: the instance's host-link transfer cost is
+    /// multiplied by `factor` for the next `windows` fleet submissions,
+    /// draining placement toward healthy links (see
+    /// [`Link::degraded`](crate::fpga::cluster::Link::degraded)).
+    LinkDegrade { factor: f64, windows: u64 },
+    /// Fixed-point bit-flip: the next response from the instance has one
+    /// coefficient's high exponent bit flipped. Detected by
+    /// [`fidelity_check`]; the window retries and the tenant's
+    /// warm-start cache is invalidated.
+    BitFlip,
+}
+
+/// One scheduled fault.
+///
+/// `at` is a logical trigger count: for `Crash`/`Stall`/`LinkDegrade`
+/// it is the fleet-wide submission counter value at (or after) which
+/// the event fires; for `BitFlip` it is the 1-based count of responses
+/// received from `instance` — the `at`-th response is corrupted.
+#[derive(Clone, Debug)]
+pub struct FaultEvent {
+    pub instance: usize,
+    pub at: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults for one chaos run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan (no injection; the fault layer still runs, so
+    /// genuine failures are handled identically).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a plan spec: comma-separated events, each one of
+    ///
+    /// ```text
+    /// crash:I@N        kill instance I at fleet submission N
+    /// stall:I@N+MSms   stall instance I at submission N for MS ms
+    /// flip:I@K         corrupt the K-th response from instance I
+    /// link:I@N*F+D     degrade I's link by factor F for D submissions
+    /// ```
+    ///
+    /// Instance indices are validated against `n_instances`.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use merinda::coordinator::faults::FaultPlan;
+    /// let plan = FaultPlan::parse("flip:2@1,crash:2@6,stall:0@10+200ms", 3).unwrap();
+    /// assert_eq!(plan.events.len(), 3);
+    /// ```
+    pub fn parse(spec: &str, n_instances: usize) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind, rest) = tok
+                .split_once(':')
+                .ok_or_else(|| Error::config(format!("fault `{tok}`: expected kind:I@N")))?;
+            let (inst, trigger) = rest
+                .split_once('@')
+                .ok_or_else(|| Error::config(format!("fault `{tok}`: expected kind:I@N")))?;
+            let instance: usize = inst
+                .parse()
+                .map_err(|_| Error::config(format!("fault `{tok}`: bad instance `{inst}`")))?;
+            if instance >= n_instances {
+                return Err(Error::config(format!(
+                    "fault `{tok}`: instance {instance} out of range (fleet has {n_instances})"
+                )));
+            }
+            let ev = match kind {
+                "crash" => FaultEvent {
+                    instance,
+                    at: parse_u64(tok, trigger)?,
+                    kind: FaultKind::Crash,
+                },
+                "flip" => {
+                    let at = parse_u64(tok, trigger)?;
+                    if at == 0 {
+                        return Err(Error::config(format!(
+                            "fault `{tok}`: flip response count is 1-based"
+                        )));
+                    }
+                    FaultEvent {
+                        instance,
+                        at,
+                        kind: FaultKind::BitFlip,
+                    }
+                }
+                "stall" => {
+                    let (at, hold) = trigger.split_once('+').ok_or_else(|| {
+                        Error::config(format!("fault `{tok}`: expected stall:I@N+MSms"))
+                    })?;
+                    let ms = hold.strip_suffix("ms").ok_or_else(|| {
+                        Error::config(format!("fault `{tok}`: stall hold needs `ms` suffix"))
+                    })?;
+                    FaultEvent {
+                        instance,
+                        at: parse_u64(tok, at)?,
+                        kind: FaultKind::Stall {
+                            hold: Duration::from_millis(parse_u64(tok, ms)?),
+                        },
+                    }
+                }
+                "link" => {
+                    let (at, fd) = trigger.split_once('*').ok_or_else(|| {
+                        Error::config(format!("fault `{tok}`: expected link:I@N*F+D"))
+                    })?;
+                    let (factor, dur) = fd.split_once('+').ok_or_else(|| {
+                        Error::config(format!("fault `{tok}`: expected link:I@N*F+D"))
+                    })?;
+                    let f: f64 = factor.parse().map_err(|_| {
+                        Error::config(format!("fault `{tok}`: bad factor `{factor}`"))
+                    })?;
+                    if f < 1.0 {
+                        return Err(Error::config(format!(
+                            "fault `{tok}`: degradation factor must be >= 1"
+                        )));
+                    }
+                    FaultEvent {
+                        instance,
+                        at: parse_u64(tok, at)?,
+                        kind: FaultKind::LinkDegrade {
+                            factor: f,
+                            windows: parse_u64(tok, dur)?,
+                        },
+                    }
+                }
+                other => {
+                    return Err(Error::config(format!(
+                        "fault `{tok}`: unknown kind `{other}` (crash|stall|flip|link)"
+                    )))
+                }
+            };
+            events.push(ev);
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// A random-but-reproducible plan: 1–3 events drawn from all four
+    /// kinds, triggers within `horizon` fleet submissions. At most one
+    /// crash, and never on instance 0, so a multi-fault draw cannot
+    /// take the whole fleet down (losing *capacity* is the scenario
+    /// under test; losing *everything* is a different one, covered by
+    /// targeted tests).
+    pub fn seeded(seed: u64, n_instances: usize, horizon: u64) -> FaultPlan {
+        assert!(n_instances > 0);
+        let mut rng = Prng::new(seed ^ 0xFA17_FA17_FA17_FA17);
+        let mut events = Vec::new();
+        let n = 1 + rng.below(3);
+        let mut crashed = false;
+        for _ in 0..n {
+            let instance = rng.below(n_instances);
+            let at = 1 + rng.next_u64() % horizon.max(2);
+            let kind = match rng.below(4) {
+                0 if !crashed && instance != 0 => {
+                    crashed = true;
+                    FaultKind::Crash
+                }
+                1 => FaultKind::Stall {
+                    hold: Duration::from_millis(10 + rng.below(60) as u64),
+                },
+                2 => FaultKind::LinkDegrade {
+                    factor: 2.0 + rng.below(14) as f64,
+                    windows: 2 + rng.next_u64() % (horizon / 2 + 2),
+                },
+                _ => FaultKind::BitFlip,
+            };
+            events.push(FaultEvent { instance, at, kind });
+        }
+        FaultPlan { events }
+    }
+
+    /// Re-serialize to the spec grammar (recorded in bench artifacts so
+    /// a chaos run is reproducible from its own report).
+    pub fn spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::Crash => format!("crash:{}@{}", e.instance, e.at),
+                FaultKind::Stall { hold } => {
+                    format!("stall:{}@{}+{}ms", e.instance, e.at, hold.as_millis())
+                }
+                FaultKind::BitFlip => format!("flip:{}@{}", e.instance, e.at),
+                FaultKind::LinkDegrade { factor, windows } => {
+                    format!("link:{}@{}*{}+{}", e.instance, e.at, factor, windows)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+fn parse_u64(tok: &str, s: &str) -> Result<u64> {
+    s.parse()
+        .map_err(|_| Error::config(format!("fault `{tok}`: bad number `{s}`")))
+}
+
+/// Per-instance health, as placement sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Full placement budget.
+    Healthy,
+    /// Recent anomalies; still placeable, but one more strike from Down.
+    Degraded,
+    /// Masked out of placement (crashed, or repeated anomalies).
+    Down,
+    /// Probing: one window at a time until it proves itself clean.
+    Recovering,
+}
+
+impl HealthState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Down => "down",
+            HealthState::Recovering => "recovering",
+        }
+    }
+}
+
+/// Thresholds for the health state machine, in consecutive outcomes and
+/// pump rounds.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// Consecutive anomalies before Healthy demotes to Degraded.
+    pub degraded_after: u32,
+    /// Consecutive anomalies before the instance goes Down.
+    pub down_after: u32,
+    /// Consecutive clean completions before Degraded/Recovering
+    /// readmits to Healthy.
+    pub recover_after: u32,
+    /// Pump rounds before the first re-probe of a Down instance.
+    pub probe_after_rounds: u64,
+    /// Cap on the doubling probe backoff.
+    pub probe_backoff_max: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            degraded_after: 1,
+            down_after: 3,
+            recover_after: 2,
+            probe_after_rounds: 8,
+            probe_backoff_max: 256,
+        }
+    }
+}
+
+/// The health state machine for one fleet instance.
+///
+/// Driven by the coordinator: `on_anomaly` for timeouts/corruptions,
+/// `on_dead` for hard evidence the service is gone, `on_ok` for clean
+/// completions, and `tick` each pump round to schedule re-probes.
+#[derive(Clone, Debug)]
+pub struct InstanceHealth {
+    state: HealthState,
+    anomalies: u32,
+    clean: u32,
+    /// A killed service never comes back; suppress probing.
+    permanent: bool,
+    probe_backoff: u64,
+    next_probe_at: u64,
+    /// Round the instance last went Down (recovery-latency accounting).
+    down_since: u64,
+    /// Times this instance entered Down.
+    pub downs: u64,
+    /// Times this instance recovered back to Healthy from Down.
+    pub recoveries: u64,
+    /// Total pump rounds spent Down/Recovering before readmission.
+    pub recovery_rounds: u64,
+}
+
+impl InstanceHealth {
+    pub fn new(cfg: &HealthConfig) -> InstanceHealth {
+        InstanceHealth {
+            state: HealthState::Healthy,
+            anomalies: 0,
+            clean: 0,
+            permanent: false,
+            probe_backoff: cfg.probe_after_rounds.max(1),
+            next_probe_at: 0,
+            down_since: 0,
+            downs: 0,
+            recoveries: 0,
+            recovery_rounds: 0,
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.state == HealthState::Down
+    }
+
+    pub fn is_permanently_down(&self) -> bool {
+        self.permanent
+    }
+
+    /// May placement offer this instance work right now?
+    pub fn placeable(&self) -> bool {
+        !matches!(self.state, HealthState::Down)
+    }
+
+    /// Concurrency cap while probing (`Recovering` instances get one
+    /// window at a time); `None` means the model's own budget applies.
+    pub fn probe_cap(&self) -> Option<usize> {
+        match self.state {
+            HealthState::Recovering => Some(1),
+            _ => None,
+        }
+    }
+
+    /// A clean completion. Enough of them readmit a Degraded or
+    /// Recovering instance to Healthy. Returns `true` on readmission
+    /// from Recovering (a full down→up cycle).
+    pub fn on_ok(&mut self, cfg: &HealthConfig, round: u64) -> bool {
+        self.anomalies = 0;
+        self.clean = self.clean.saturating_add(1);
+        match self.state {
+            HealthState::Degraded if self.clean >= cfg.recover_after => {
+                self.state = HealthState::Healthy;
+                false
+            }
+            HealthState::Recovering if self.clean >= cfg.recover_after => {
+                self.state = HealthState::Healthy;
+                self.recoveries += 1;
+                self.recovery_rounds += round.saturating_sub(self.down_since);
+                self.probe_backoff = cfg.probe_after_rounds.max(1);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// A soft anomaly (deadline timeout, corrupted result). Returns
+    /// `true` when this strike takes the instance Down.
+    pub fn on_anomaly(&mut self, cfg: &HealthConfig, round: u64) -> bool {
+        self.clean = 0;
+        self.anomalies = self.anomalies.saturating_add(1);
+        match self.state {
+            HealthState::Down => false,
+            _ if self.anomalies >= cfg.down_after => {
+                self.go_down(round, false);
+                true
+            }
+            HealthState::Healthy if self.anomalies >= cfg.degraded_after => {
+                self.state = HealthState::Degraded;
+                false
+            }
+            // A Recovering probe that misbehaves goes straight back Down.
+            HealthState::Recovering => {
+                self.go_down(round, false);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Hard evidence the service is gone (disconnected channel, killed
+    /// queue). `permanent` suppresses re-probing — a killed service
+    /// never reopens. Returns `true` when this transitions to Down.
+    pub fn on_dead(&mut self, round: u64, permanent: bool) -> bool {
+        self.permanent = self.permanent || permanent;
+        if self.state == HealthState::Down {
+            return false;
+        }
+        self.go_down(round, permanent);
+        true
+    }
+
+    fn go_down(&mut self, round: u64, permanent: bool) {
+        self.state = HealthState::Down;
+        self.permanent = self.permanent || permanent;
+        self.downs += 1;
+        self.down_since = round;
+        self.clean = 0;
+        self.next_probe_at = round + self.probe_backoff;
+        self.probe_backoff = (self.probe_backoff * 2).min(self.next_backoff_cap());
+    }
+
+    fn next_backoff_cap(&self) -> u64 {
+        // The cap is stored implicitly via HealthConfig at tick time;
+        // keep a generous hard ceiling so a lost config can't overflow.
+        1 << 20
+    }
+
+    /// Advance the probe clock: a non-permanent Down instance becomes
+    /// Recovering once its backoff expires. Call once per pump round.
+    pub fn tick(&mut self, cfg: &HealthConfig, round: u64) {
+        self.probe_backoff = self.probe_backoff.min(cfg.probe_backoff_max.max(1));
+        if self.state == HealthState::Down && !self.permanent && round >= self.next_probe_at {
+            self.state = HealthState::Recovering;
+            self.anomalies = 0;
+            self.clean = 0;
+        }
+    }
+}
+
+/// Bounded retry with exponential backoff and deterministic jitter,
+/// measured in pump rounds. This sits *above* the AIMD burst controller:
+/// AIMD paces how fast the pump pushes into a live fleet; this policy
+/// spaces out re-submissions of windows that already failed once, so a
+/// flapping instance is not hammered back down.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Re-submission attempts after the first (0 = fail immediately).
+    pub max_retries: u32,
+    /// Backoff before retry k is `base << k` rounds, capped…
+    pub base_rounds: u64,
+    /// …at this many rounds, plus jitter in `[0, delay/2]`.
+    pub max_rounds: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_rounds: 2,
+            max_rounds: 64,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Rounds to wait before retry number `attempt` (0-based), jittered.
+    pub fn delay(&self, attempt: u32, jitter: &mut Prng) -> u64 {
+        let exp = self
+            .base_rounds
+            .saturating_mul(1u64 << attempt.min(32))
+            .min(self.max_rounds.max(1));
+        exp + jitter.next_u64() % (exp / 2 + 1)
+    }
+}
+
+/// Everything the coordinator's fault layer is configured by.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultToleranceConfig {
+    /// In-flight windows older than this are presumed stranded and fail
+    /// over (hedged: the original, should it still arrive, is deduped).
+    pub deadline: Duration,
+    /// Per-window retry budget and backoff shape.
+    pub retry: RetryPolicy,
+    /// Fidelity bound: any |θ_i| above this (or non-finite) is
+    /// corruption. Generous vs normalized-data coefficients (≲ 10²) yet
+    /// far below what a flipped exponent bit produces (≳ 10³⁸).
+    pub theta_bound: f32,
+    /// When placeable concurrency budget falls below this fraction of
+    /// the full-fleet budget, enter degraded mode.
+    pub degraded_capacity_frac: f64,
+    /// AIMD burst ceiling while degraded (lower concurrency so the
+    /// surviving instances keep their deadlines).
+    pub degraded_burst: usize,
+    /// Health state machine thresholds.
+    pub health: HealthConfig,
+}
+
+impl Default for FaultToleranceConfig {
+    fn default() -> Self {
+        FaultToleranceConfig {
+            deadline: Duration::from_secs(30),
+            retry: RetryPolicy::default(),
+            theta_bound: 1e6,
+            degraded_capacity_frac: 0.75,
+            degraded_burst: 2,
+            health: HealthConfig::default(),
+        }
+    }
+}
+
+/// Cheap post-hoc fidelity check: every coefficient finite and within
+/// `bound`. For normalized inputs the recovered Θ lives well inside
+/// ±10³, while a flipped high exponent bit lands around ±10³⁸ — so the
+/// check separates the two regimes with no residual recomputation.
+pub fn fidelity_check(theta: &[f32], bound: f32) -> Result<()> {
+    for (i, &v) in theta.iter().enumerate() {
+        if !v.is_finite() || v.abs() > bound {
+            return Err(Error::corrupted(format!("theta[{i}] = {v} (bound {bound})")));
+        }
+    }
+    Ok(())
+}
+
+/// Inject a detectable bit-flip into `theta`: flip the high exponent
+/// bit (bit 30) of the first coefficient where the flip lands outside
+/// the fidelity bound, emulating an SEU in a result register. Returns
+/// `(index, bit)` of the applied flip, or `None` for the degenerate
+/// vector where no single flip is detectable (then nothing is injected
+/// — an undetectable upset is outside this fault model's scope).
+pub fn corrupt_theta(theta: &mut [f32], bound: f32) -> Option<(usize, u32)> {
+    for bit in [30u32, 29, 28] {
+        for (i, v) in theta.iter_mut().enumerate() {
+            let flipped = f32::from_bits(v.to_bits() ^ (1 << bit));
+            if !flipped.is_finite() || flipped.abs() > bound {
+                *v = flipped;
+                return Some((i, bit));
+            }
+        }
+    }
+    None
+}
+
+/// Counters for the `faults` section of `BENCH_stream.json` and the
+/// chaos self-verification in `merinda soak --chaos`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    pub injected_crash: u64,
+    pub injected_stall: u64,
+    pub injected_link: u64,
+    pub injected_flip: u64,
+    /// In-flight windows that blew the deadline and failed over.
+    pub detected_timeouts: u64,
+    /// Response channels observed disconnected (instance death).
+    pub detected_disconnects: u64,
+    /// Results rejected by the fidelity check.
+    pub detected_corruptions: u64,
+    /// Submissions refused because the target service was already dead.
+    pub detected_submit_down: u64,
+    /// Windows re-placed from a dead/stranded instance onto a sibling.
+    pub failed_over: u64,
+    /// Re-submissions performed by the bounded retry policy.
+    pub retries: u64,
+    /// Late (hedged) duplicates discarded by the dedupe filter.
+    pub duplicates_dropped: u64,
+    /// Windows that exhausted their retry budget and failed for real.
+    pub exhausted: u64,
+    /// Times the coordinator entered degraded mode.
+    pub degraded_entries: u64,
+    /// Times it restored full service.
+    pub degraded_exits: u64,
+    /// Windows served by the standby instance while degraded.
+    pub standby_windows: u64,
+    /// Instances that went Down at least once / recovered to Healthy.
+    pub instances_down: u64,
+    pub instances_recovered: u64,
+    /// Total pump rounds instances spent down before readmission.
+    pub recovery_rounds_total: u64,
+}
+
+impl FaultStats {
+    /// Sum of injected events (plan size actually fired).
+    pub fn injected_total(&self) -> u64 {
+        self.injected_crash + self.injected_stall + self.injected_link + self.injected_flip
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse("crash:1@6, stall:0@10+200ms, flip:2@1, link:1@4*8+20", 3)
+            .unwrap();
+        assert_eq!(p.events.len(), 4);
+        assert_eq!(p.events[0].instance, 1);
+        assert_eq!(p.events[0].at, 6);
+        assert_eq!(p.events[0].kind, FaultKind::Crash);
+        assert_eq!(
+            p.events[1].kind,
+            FaultKind::Stall {
+                hold: Duration::from_millis(200)
+            }
+        );
+        assert_eq!(p.events[2].kind, FaultKind::BitFlip);
+        assert_eq!(
+            p.events[3].kind,
+            FaultKind::LinkDegrade {
+                factor: 8.0,
+                windows: 20
+            }
+        );
+    }
+
+    #[test]
+    fn parse_round_trips_through_spec() {
+        let s = "crash:1@6,stall:0@10+200ms,flip:2@1,link:1@4*8+20";
+        let p = FaultPlan::parse(s, 3).unwrap();
+        assert_eq!(p.spec(), s);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "crash:9@1",        // instance out of range
+            "crash:1",          // missing trigger
+            "melt:0@1",         // unknown kind
+            "stall:0@1+5",      // missing ms suffix
+            "link:0@1*0.5+5",   // factor below 1
+            "flip:0@0",         // flips are 1-based
+            "crash:x@1",        // bad instance
+        ] {
+            assert!(FaultPlan::parse(bad, 3).is_err(), "accepted `{bad}`");
+        }
+        assert!(FaultPlan::parse("", 3).unwrap().is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_bounded() {
+        for seed in 0..64u64 {
+            let a = FaultPlan::seeded(seed, 3, 20);
+            let b = FaultPlan::seeded(seed, 3, 20);
+            assert_eq!(a.spec(), b.spec(), "seed {seed} must replay");
+            assert!(!a.is_empty() && a.events.len() <= 3);
+            let crashes: Vec<_> = a
+                .events
+                .iter()
+                .filter(|e| e.kind == FaultKind::Crash)
+                .collect();
+            assert!(crashes.len() <= 1, "seed {seed}: at most one crash");
+            for c in crashes {
+                assert_ne!(c.instance, 0, "seed {seed}: instance 0 never crashes");
+            }
+        }
+        assert_ne!(
+            FaultPlan::seeded(1, 3, 20).spec(),
+            FaultPlan::seeded(2, 3, 20).spec()
+        );
+    }
+
+    #[test]
+    fn health_degrades_then_downs_then_recovers() {
+        let cfg = HealthConfig::default();
+        let mut h = InstanceHealth::new(&cfg);
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert!(h.placeable());
+
+        h.on_anomaly(&cfg, 0);
+        assert_eq!(h.state(), HealthState::Degraded);
+        assert!(h.placeable(), "degraded still serves");
+
+        h.on_anomaly(&cfg, 1);
+        let went_down = h.on_anomaly(&cfg, 2);
+        assert!(went_down);
+        assert_eq!(h.state(), HealthState::Down);
+        assert!(!h.placeable(), "down is masked");
+        assert_eq!(h.downs, 1);
+
+        // Probe backoff: not recovering until the clock passes.
+        h.tick(&cfg, 3);
+        assert_eq!(h.state(), HealthState::Down);
+        h.tick(&cfg, 2 + cfg.probe_after_rounds);
+        assert_eq!(h.state(), HealthState::Recovering);
+        assert_eq!(h.probe_cap(), Some(1), "probe one window at a time");
+
+        // Clean probes readmit.
+        assert!(!h.on_ok(&cfg, 12));
+        let recovered = h.on_ok(&cfg, 13);
+        assert!(recovered);
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert_eq!(h.recoveries, 1);
+        assert!(h.recovery_rounds > 0);
+    }
+
+    #[test]
+    fn degraded_heals_with_clean_completions() {
+        let cfg = HealthConfig::default();
+        let mut h = InstanceHealth::new(&cfg);
+        h.on_anomaly(&cfg, 0);
+        assert_eq!(h.state(), HealthState::Degraded);
+        h.on_ok(&cfg, 1);
+        h.on_ok(&cfg, 2);
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert_eq!(h.downs, 0, "never went down");
+    }
+
+    #[test]
+    fn permanent_death_never_probes() {
+        let cfg = HealthConfig::default();
+        let mut h = InstanceHealth::new(&cfg);
+        assert!(h.on_dead(5, true));
+        assert!(h.is_permanently_down());
+        for round in 0..10_000 {
+            h.tick(&cfg, round);
+        }
+        assert_eq!(h.state(), HealthState::Down, "killed instances stay down");
+    }
+
+    #[test]
+    fn failed_probe_goes_straight_back_down_with_longer_backoff() {
+        let cfg = HealthConfig::default();
+        let mut h = InstanceHealth::new(&cfg);
+        h.on_dead(0, false);
+        h.tick(&cfg, cfg.probe_after_rounds);
+        assert_eq!(h.state(), HealthState::Recovering);
+        assert!(h.on_anomaly(&cfg, cfg.probe_after_rounds + 1));
+        assert_eq!(h.state(), HealthState::Down);
+        assert_eq!(h.downs, 2);
+        // Second probe waits roughly twice as long (doubled backoff).
+        let second_wait = cfg.probe_after_rounds + 1 + 2 * cfg.probe_after_rounds;
+        h.tick(&cfg, second_wait - 1);
+        assert_eq!(h.state(), HealthState::Down);
+        h.tick(&cfg, second_wait);
+        assert_eq!(h.state(), HealthState::Recovering);
+    }
+
+    #[test]
+    fn retry_backoff_grows_and_caps_with_bounded_jitter() {
+        let pol = RetryPolicy::default();
+        let mut rng = Prng::new(1);
+        let mut prev_floor = 0u64;
+        for attempt in 0..10 {
+            let floor = pol
+                .base_rounds
+                .saturating_mul(1 << attempt)
+                .min(pol.max_rounds);
+            let d = pol.delay(attempt, &mut rng);
+            assert!(d >= floor, "attempt {attempt}: {d} < floor {floor}");
+            assert!(
+                d <= floor + floor / 2,
+                "attempt {attempt}: jitter above 50%: {d} vs {floor}"
+            );
+            assert!(floor >= prev_floor, "backoff must be monotone");
+            prev_floor = floor;
+        }
+        // Deterministic for a fixed seed.
+        let a = pol.delay(3, &mut Prng::new(9));
+        let b = pol.delay(3, &mut Prng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fidelity_passes_sane_rejects_corrupt() {
+        let ok = vec![0.0f32, -3.25, 42.0, 1e3];
+        assert!(fidelity_check(&ok, 1e6).is_ok());
+        for bad in [f32::NAN, f32::INFINITY, -2e38, 2e7] {
+            let theta = vec![1.0f32, bad];
+            let err = fidelity_check(&theta, 1e6).unwrap_err();
+            assert!(err.is_corrupted(), "{bad} must read as corruption");
+            assert!(err.to_string().contains("theta[1]"));
+        }
+    }
+
+    #[test]
+    fn corrupt_theta_is_always_detected() {
+        // Across magnitudes a normalized solve can produce, the injected
+        // flip must violate the fidelity bound it will be checked with.
+        for base in [1e-4f32, 0.5, 2.0, 45.0, -127.5, 900.0] {
+            let mut theta = vec![base; 8];
+            let hit = corrupt_theta(&mut theta, 1e6);
+            let (i, bit) = hit.expect("flip must be injectable");
+            assert!(bit >= 28);
+            assert!(
+                fidelity_check(&theta, 1e6).is_err(),
+                "flip of {base} at bit {bit} (idx {i}) escaped detection"
+            );
+        }
+        // The degenerate all-zero vector has no detectable single-bit
+        // flip (the largest reachable value is 2.0); nothing is injected.
+        let mut zeros = vec![0.0f32; 4];
+        assert_eq!(corrupt_theta(&mut zeros, 1e6), None);
+        assert!(zeros.iter().all(|&v| v == 0.0), "must not corrupt silently");
+    }
+
+    #[test]
+    fn fault_stats_total_sums_injections() {
+        let s = FaultStats {
+            injected_crash: 1,
+            injected_stall: 2,
+            injected_link: 3,
+            injected_flip: 4,
+            ..Default::default()
+        };
+        assert_eq!(s.injected_total(), 10);
+    }
+}

@@ -23,6 +23,7 @@ struct InstanceCounters {
     rejected: u64,
     queue_depth_max: u64,
     modeled_cycles: u64,
+    failed_over: u64,
 }
 
 /// A point-in-time copy of one instance's counters.
@@ -40,6 +41,9 @@ pub struct InstanceSnapshot {
     /// Accelerator cycles this instance's completed windows consumed
     /// under the cycle model.
     pub modeled_cycles: u64,
+    /// Windows stranded on this instance (crash/timeout) and re-placed
+    /// on a healthy sibling by the fault layer.
+    pub failed_over: u64,
 }
 
 /// Shared metrics sink (thread-safe).
@@ -101,7 +105,12 @@ impl Metrics {
     }
 
     fn with_instance(&self, idx: usize, f: impl FnOnce(&mut InstanceCounters)) {
-        let mut v = self.instances.lock().unwrap();
+        // Metrics must survive a worker panic (poisoned lock): counters
+        // are plain integers, always coherent.
+        let mut v = self
+            .instances
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
         if v.len() <= idx {
             v.resize(idx + 1, InstanceCounters::default());
         }
@@ -127,6 +136,12 @@ impl Metrics {
         self.with_instance(idx, |c| c.rejected += 1);
     }
 
+    /// Record a window stranded on instance `idx` and re-placed on a
+    /// healthy sibling (crash / deadline-timeout failover).
+    pub fn on_instance_failover(&self, idx: usize) {
+        self.with_instance(idx, |c| c.failed_over += 1);
+    }
+
     /// Record instance `idx`'s outstanding-window depth (keeps the max).
     pub fn on_instance_queue_depth(&self, idx: usize, depth: usize) {
         self.with_instance(idx, |c| c.queue_depth_max = c.queue_depth_max.max(depth as u64));
@@ -141,18 +156,22 @@ impl Metrics {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latencies_ms
             .lock()
-            .unwrap()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
             .push(latency.as_secs_f64() * 1e3);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lats = self.latencies_ms.lock().unwrap().clone();
+        let lats = self
+            .latencies_ms
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .clone();
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
         let per_instance = self
             .instances
             .lock()
-            .unwrap()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
             .iter()
             .map(|c| InstanceSnapshot {
                 placed: c.placed,
@@ -160,6 +179,7 @@ impl Metrics {
                 rejected: c.rejected,
                 queue_depth_max: c.queue_depth_max,
                 modeled_cycles: c.modeled_cycles,
+                failed_over: c.failed_over,
             })
             .collect();
         MetricsSnapshot {
@@ -251,6 +271,16 @@ mod tests {
         assert_eq!(s.per_instance[1].placed, 0, "untouched slot stays zero");
         assert_eq!(s.per_instance[2].placed, 1);
         assert_eq!(s.per_instance[2].rejected, 1);
+    }
+
+    #[test]
+    fn failover_counter_tracks_stranded_windows() {
+        let m = Metrics::new();
+        m.on_instance_failover(1);
+        m.on_instance_failover(1);
+        let s = m.snapshot();
+        assert_eq!(s.per_instance[1].failed_over, 2);
+        assert_eq!(s.per_instance[0].failed_over, 0);
     }
 
     #[test]

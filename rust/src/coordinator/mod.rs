@@ -23,10 +23,19 @@
 //! windows warm-start their coefficient refinement from the previous
 //! window's result ([`stream::WarmStartConfig`]).
 //!
+//! The fleet is not assumed healthy: [`faults`] provides deterministic
+//! fault injection (crash / stall / link degradation / bit-flip), a
+//! per-instance health state machine, and a bounded retry policy; the
+//! stream coordinator masks down instances out of placement, fails
+//! stranded windows over to healthy siblings, and degrades gracefully
+//! (standby capacity, lower burst) when the fleet shrinks
+//! (`merinda soak --chaos`).
+//!
 //! The design is deliberately the vLLM-router shape scaled to this paper:
 //! request router → batcher → executor → response demux, with metrics.
 
 mod batcher;
+pub mod faults;
 mod fixed;
 mod metrics;
 mod native;
@@ -35,6 +44,10 @@ mod service;
 pub mod stream;
 
 pub use batcher::{AimdBurst, BatcherConfig, PendingBatch};
+pub use faults::{
+    FaultEvent, FaultKind, FaultPlan, FaultStats, FaultToleranceConfig, HealthConfig, HealthState,
+    InstanceHealth, RetryPolicy,
+};
 pub use fixed::{FixedCycleReport, FixedPointBackend, FixedPointConfig};
 // Constant re-exports let CLI tools and out-of-crate tests reference the
 // canonical serving dims without reaching into the private module.

@@ -222,12 +222,67 @@ pub fn choose(models: &[InstanceModel], outstanding: &[usize]) -> Option<usize> 
 /// sequence the streaming pump walks when the cheapest instance's
 /// bounded queue rejects a submission mid-flight.
 pub fn rank(models: &[InstanceModel], outstanding: &[usize]) -> Vec<usize> {
+    rank_with(
+        models,
+        outstanding,
+        &vec![PlacementOverride::default(); models.len()],
+    )
+}
+
+/// Per-instance dynamic adjustment layered over the static
+/// [`InstanceModel`] by the fault/health layer: health masking, link
+/// degradation, and probing caps. The static model stays immutable so
+/// recovery (an instance coming back) is just dropping the override.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementOverride {
+    /// Instance is out of rotation entirely (health `Down`, or a warm
+    /// standby held back until the fleet degrades).
+    pub masked: bool,
+    /// Multiplier on the modeled link transfer time (≥ 1.0 under a
+    /// link-degradation fault; 1.0 = nominal).
+    pub transfer_factor: f64,
+    /// Tighter concurrency cap than the model's budget, if any — a
+    /// `Recovering` instance probes with a cap of 1 before the health
+    /// machine readmits it at full budget.
+    pub cap: Option<usize>,
+}
+
+impl Default for PlacementOverride {
+    fn default() -> Self {
+        PlacementOverride {
+            masked: false,
+            transfer_factor: 1.0,
+            cap: None,
+        }
+    }
+}
+
+/// [`rank`] with per-instance health/fault overrides applied: masked
+/// instances never place, degraded links pay their inflated transfer
+/// cost (so traffic drains toward healthy links), and probing caps
+/// bound what a recovering instance may hold.
+pub fn rank_with(
+    models: &[InstanceModel],
+    outstanding: &[usize],
+    overrides: &[PlacementOverride],
+) -> Vec<usize> {
     assert_eq!(models.len(), outstanding.len());
+    assert_eq!(models.len(), overrides.len());
     let mut order: Vec<(usize, f64)> = models
         .iter()
         .enumerate()
-        .filter(|(i, m)| m.max_outstanding > 0 && outstanding[*i] < m.max_outstanding)
-        .map(|(i, m)| (i, placement_cost(m, outstanding[i])))
+        .filter(|(i, m)| {
+            let ov = &overrides[*i];
+            let cap = ov.cap.unwrap_or(m.max_outstanding).min(m.max_outstanding);
+            !ov.masked && cap > 0 && outstanding[*i] < cap
+        })
+        .map(|(i, m)| {
+            let ov = &overrides[i];
+            let cost = ov.transfer_factor * m.transfer_s
+                + outstanding[i] as f64 * m.service_s
+                + m.window_s;
+            (i, cost)
+        })
         .collect();
     order.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
     order.into_iter().map(|(i, _)| i).collect()
@@ -322,6 +377,57 @@ mod tests {
         out[2] = ms[2].max_outstanding;
         let order = rank(&ms, &out);
         assert!(!order.contains(&2), "saturated instance must drop out");
+    }
+
+    #[test]
+    fn rank_with_masks_down_instances() {
+        let ms = models();
+        let idle = vec![0usize; 3];
+        let mut ov = vec![PlacementOverride::default(); 3];
+        ov[2].masked = true; // cheapest instance is down
+        let order = rank_with(&ms, &idle, &ov);
+        assert_eq!(order.len(), 2);
+        assert!(!order.contains(&2), "down instance must never place");
+        assert_eq!(order[0], 0, "next-cheapest healthy sibling takes over");
+    }
+
+    #[test]
+    fn rank_with_degraded_link_reorders_by_inflated_transfer() {
+        // Two synthetic instances where transfer dominates: degrading
+        // the cheaper link far enough must flip the order.
+        let a = InstanceModel {
+            transfer_s: 1e-3,
+            ..InstanceModel::synthetic("a", 1e-4, 4)
+        };
+        let b = InstanceModel {
+            transfer_s: 2e-3,
+            ..InstanceModel::synthetic("b", 1e-4, 4)
+        };
+        let ms = vec![a, b];
+        let idle = vec![0usize; 2];
+        assert_eq!(rank(&ms, &idle)[0], 0);
+        let mut ov = vec![PlacementOverride::default(); 2];
+        ov[0].transfer_factor = 10.0;
+        assert_eq!(
+            rank_with(&ms, &idle, &ov)[0],
+            1,
+            "degraded link must drain traffic to the healthy sibling"
+        );
+    }
+
+    #[test]
+    fn rank_with_probe_cap_limits_recovering_instance() {
+        let ms = models();
+        let mut ov = vec![PlacementOverride::default(); 3];
+        ov[2].cap = Some(1); // recovering: one probe window only
+        let idle = vec![0usize; 3];
+        assert!(rank_with(&ms, &idle, &ov).contains(&2), "probe slot open");
+        let mut out = idle;
+        out[2] = 1;
+        assert!(
+            !rank_with(&ms, &out, &ov).contains(&2),
+            "probe cap of 1 must exclude the instance once the probe is out"
+        );
     }
 
     #[test]

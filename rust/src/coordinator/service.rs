@@ -20,6 +20,17 @@ use crate::util::{Error, Result};
 use super::batcher::{pad_rows, BatcherConfig, PendingBatch};
 use super::metrics::Metrics;
 
+/// Lock that survives a poisoned mutex: a worker panicking mid-batch must
+/// read as *that instance died*, not take the whole coordinator down with
+/// a cascading panic. The queue state is a plain FIFO + flag, so the
+/// inner value is always coherent even after a panic.
+fn lock_queue(shared: &Shared) -> std::sync::MutexGuard<'_, QueueState> {
+    shared
+        .state
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// One inference request: a (seq, xdim) window + (seq, udim) inputs.
 #[derive(Clone, Debug)]
 pub struct RecoveryRequest {
@@ -274,8 +285,9 @@ impl Service {
     /// with a typed [`Error::Overloaded`] if the queue is full, so
     /// callers (the streaming layer in particular) can tell transient
     /// backpressure apart from permanent failures and make an explicit
-    /// shed-vs-retry decision. A shut-down service reports a config
-    /// error instead — retrying that would never succeed.
+    /// shed-vs-retry decision. A shut-down or killed service reports
+    /// [`Error::ServiceDown`] instead — retrying *here* would never
+    /// succeed, but the work can fail over to a healthy sibling.
     pub fn submit(&self, req: RecoveryRequest) -> Result<Receiver<RecoveryResponse>> {
         self.try_submit(req).map_err(|(e, _)| e)
     }
@@ -291,11 +303,11 @@ impl Service {
         let (rtx, rrx) = sync_channel(1);
         self.metrics.on_submit();
         let depth = {
-            let mut q = self.shared.state.lock().unwrap();
+            let mut q = lock_queue(&self.shared);
             if !q.open {
                 drop(q);
                 self.metrics.on_reject();
-                return Err((Error::config("service is shut down"), req));
+                return Err((Error::service_down("service is shut down"), req));
             }
             if q.items.len() >= self.queue_depth {
                 let depth = q.items.len();
@@ -319,7 +331,25 @@ impl Service {
     pub fn recover(&self, req: RecoveryRequest) -> Result<RecoveryResponse> {
         let rx = self.submit(req)?;
         rx.recv()
-            .map_err(|_| Error::config("service shut down mid-request"))
+            .map_err(|_| Error::service_down("service shut down mid-request"))
+    }
+
+    /// Hard-kill the instance: close the queue AND drop every queued
+    /// request without serving it, simulating an accelerator crash.
+    ///
+    /// Unlike `Drop` (graceful shutdown — workers drain the remaining
+    /// queue first), callers holding response receivers for queued work
+    /// observe a disconnected channel, exactly what a host sees when a
+    /// board dies mid-window. In-flight batches already popped by a
+    /// worker may still complete; that race is faithful to real crashes
+    /// and the coordinator's dedupe handles late arrivals.
+    pub fn kill(&self) {
+        {
+            let mut q = lock_queue(&self.shared);
+            q.open = false;
+            q.items.clear();
+        }
+        self.shared.cv.notify_all();
     }
 
     /// Submit many requests up front (so batches fill) and wait for all
@@ -339,7 +369,7 @@ impl Service {
 impl Drop for Service {
     fn drop(&mut self) {
         {
-            let mut q = self.shared.state.lock().unwrap();
+            let mut q = lock_queue(&self.shared);
             q.open = false;
         }
         self.shared.cv.notify_all();
@@ -364,7 +394,7 @@ fn worker_loop<B: InferenceBackend>(
         let mut flush_now = false;
         let mut exit = false;
         {
-            let mut q = shared.state.lock().unwrap();
+            let mut q = lock_queue(&shared);
             loop {
                 // Drain queued requests into the local batch.
                 while pending.len() < cap {
@@ -389,7 +419,10 @@ fn worker_loop<B: InferenceBackend>(
                 }
                 let now = Instant::now();
                 if pending.is_empty() {
-                    q = shared.cv.wait(q).unwrap();
+                    q = shared
+                        .cv
+                        .wait(q)
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
                 } else if pending.should_flush(now) {
                     flush_now = true;
                     break;
@@ -397,7 +430,10 @@ fn worker_loop<B: InferenceBackend>(
                     let timeout = pending
                         .time_to_deadline(now)
                         .unwrap_or(Duration::from_millis(50));
-                    let (guard, _) = shared.cv.wait_timeout(q, timeout).unwrap();
+                    let (guard, _) = shared
+                        .cv
+                        .wait_timeout(q, timeout)
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
                     q = guard;
                 }
             }
@@ -687,6 +723,49 @@ mod tests {
         assert_eq!(s.submitted, 2, "both services must record into the sink");
         assert_eq!(s.completed, 2);
         assert!(Arc::ptr_eq(&a.metrics, &sink) && Arc::ptr_eq(&b.metrics, &sink));
+    }
+
+    #[test]
+    fn killed_service_rejects_with_service_down() {
+        let svc = Service::start(ServiceConfig::default(), MockBackend::default);
+        svc.kill();
+        match svc.submit(mk_req(1, 0.0)) {
+            Err(e) => assert!(e.is_service_down(), "expected ServiceDown, got: {e}"),
+            Ok(_) => panic!("killed service must reject submissions"),
+        }
+    }
+
+    #[test]
+    fn kill_drops_queued_work_with_disconnected_channels() {
+        // A crash must strand queued windows (callers see Disconnected),
+        // unlike graceful Drop which drains the queue first.
+        let cfg = ServiceConfig {
+            queue_depth: 64,
+            workers: 1,
+            batcher: BatcherConfig {
+                batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+        };
+        let svc = Service::start(cfg, || MockBackend {
+            batch: 1,
+            delay: Duration::from_millis(30),
+            ..Default::default()
+        });
+        let rxs: Vec<_> = (0..16)
+            .map(|i| svc.submit(mk_req(i, 0.0)).unwrap())
+            .collect();
+        svc.kill();
+        let mut disconnected = 0;
+        for rx in rxs {
+            if rx.recv().is_err() {
+                disconnected += 1;
+            }
+        }
+        assert!(
+            disconnected > 0,
+            "killing a loaded service must strand queued windows"
+        );
     }
 
     #[test]

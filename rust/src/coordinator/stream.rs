@@ -49,16 +49,21 @@
 //!
 //! [`InferenceBackend`]: super::service::InferenceBackend
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::mr::recover::{refine_window_theta, RefineOpts};
+use crate::util::{Error, Prng, Result};
 
 use super::batcher::AimdBurst;
+use super::faults::{
+    corrupt_theta, fidelity_check, FaultEvent, FaultKind, FaultPlan, FaultStats,
+    FaultToleranceConfig, InstanceHealth,
+};
 use super::metrics::Metrics;
-use super::placement::{rank, InstanceModel};
+use super::placement::{rank_with, InstanceModel, PlacementOverride};
 use super::service::{RecoveryRequest, RecoveryResponse, Service};
 
 /// How a continuous stream is sliced into recovery windows.
@@ -307,6 +312,11 @@ pub struct StreamConfig {
     pub burst_max: usize,
     /// Warm-start refinement (off by default; `merinda soak` enables it).
     pub warm_start: WarmStartConfig,
+    /// Fault tolerance: deadlines, bounded retry, health thresholds,
+    /// degraded-mode policy. Always active — injection is opt-in via
+    /// [`StreamCoordinator::inject_faults`], but genuine instance
+    /// failures take the same detection/failover paths.
+    pub faults: FaultToleranceConfig,
 }
 
 impl Default for StreamConfig {
@@ -318,6 +328,7 @@ impl Default for StreamConfig {
             burst_initial: 1,
             burst_max: 8,
             warm_start: WarmStartConfig::default(),
+            faults: FaultToleranceConfig::default(),
         }
     }
 }
@@ -392,6 +403,13 @@ pub struct InstanceStats {
     pub window_cycles: u64,
     /// Modeled cycles consumed by completed windows.
     pub modeled_cycles: u64,
+    /// Health-machine state at snapshot time
+    /// (`healthy`/`degraded`/`down`/`recovering`).
+    pub health: String,
+    /// Windows stranded on this instance and re-placed elsewhere.
+    pub failed_over: u64,
+    /// Times the health machine took this instance down.
+    pub downs: u64,
 }
 
 /// Whole-pipeline streaming counters.
@@ -417,6 +435,11 @@ pub struct StreamStats {
     pub refine_warm_iters: u64,
     pub refine_cold_iters: u64,
     pub refine_paired: u64,
+    /// Fault-layer counters: injections, detections, failovers, retries.
+    pub faults: FaultStats,
+    /// Whether the coordinator is currently in degraded mode (placeable
+    /// capacity below the configured fraction of the full fleet).
+    pub degraded: bool,
 }
 
 /// Encode a `(tenant, seq_no)` pair into a service request id.
@@ -434,9 +457,12 @@ struct PendingWindow {
     start: usize,
     y: Vec<f32>,
     u: Vec<f32>,
-    /// Warm-start payload clone, cached across hold-and-retry rounds so
-    /// backpressure does not re-clone the window on every attempt.
-    refine_payload: Option<(Vec<f32>, Vec<f32>)>,
+    /// Prior submission attempts (0 for a fresh window; bumped by the
+    /// fault layer on each failover retry).
+    attempts: u32,
+    /// Earliest pump round this window may be resubmitted (retry
+    /// backoff). 0 for fresh windows.
+    not_before: u64,
 }
 
 struct TenantState {
@@ -463,9 +489,16 @@ struct InFlightWindow {
     start: usize,
     /// Fleet instance the window was placed on.
     instance: usize,
-    /// Window payload retained for warm-start refinement (None when
-    /// warm-start is off).
-    refine_payload: Option<(Vec<f32>, Vec<f32>)>,
+    /// Window payload `(y, u)` retained so a stranded window (crash,
+    /// deadline timeout, corrupted result) can be re-placed on a healthy
+    /// sibling, and so warm-start refinement has its inputs.
+    payload: (Vec<f32>, Vec<f32>),
+    /// Submission attempts so far, including this one (0-based: the
+    /// first submission carries 0).
+    attempts: u32,
+    /// Wall-clock submission time; the fault layer fails the window over
+    /// once `submitted_at.elapsed()` exceeds the deadline.
+    submitted_at: Instant,
     rx: Receiver<RecoveryResponse>,
 }
 
@@ -483,10 +516,12 @@ struct InstanceRt {
 enum SubmitOutcome {
     /// Accepted by some instance.
     Accepted,
-    /// Every instance failed permanently (e.g. shut down).
+    /// Every instance is permanently down (or has no capacity at all):
+    /// the window can never be served.
     Failed,
-    /// Every eligible instance is saturated or backpressured: the window
-    /// comes back for a hold-and-retry.
+    /// Every eligible instance is saturated, backpressured, or
+    /// transiently unhealthy: the window comes back for a
+    /// hold-and-retry.
     Saturated(PendingWindow),
 }
 
@@ -564,6 +599,45 @@ pub struct StreamCoordinator {
     /// service refused, so a freed slot goes to the starved tenant first
     /// instead of restarting at the lowest id every time.
     rr_resume: u32,
+
+    // --- fault layer ---
+    /// Per-instance health machines, parallel to `instances`.
+    health: Vec<InstanceHealth>,
+    /// Scheduled fault events not yet fired (see [`FaultPlan`]).
+    plan: Vec<FaultEvent>,
+    /// Fleet-wide accepted-submission counter (Crash/Stall/LinkDegrade
+    /// trigger clock).
+    submit_clock: u64,
+    /// Pump rounds elapsed (retry-backoff and health-probe clock).
+    rounds: u64,
+    /// Per-instance count of responses received (BitFlip trigger clock).
+    responses_from: Vec<u64>,
+    /// Per-instance stall window: masked from placement and left
+    /// unread by `poll` until the instant passes.
+    stall_until: Vec<Option<Instant>>,
+    /// Per-instance link-degradation factor and the `submit_clock` value
+    /// at which it expires.
+    link_factor: Vec<f64>,
+    link_expire: Vec<u64>,
+    /// Request ids that were deadline-hedged: their original submission
+    /// may still answer after the retry, so completions dedupe via
+    /// `done`.
+    hedged: BTreeSet<u64>,
+    /// Hedged ids already accounted (completed or exhausted).
+    done: BTreeSet<u64>,
+    /// Hedged originals: moved out of `in_flight` (slot already
+    /// released) but kept so a late response is drained as a duplicate
+    /// instead of leaking the channel.
+    late: Vec<InFlightWindow>,
+    /// Standby instance index (masked from placement until the fleet
+    /// degrades), if one was registered via
+    /// [`add_standby`](Self::add_standby).
+    standby: Option<usize>,
+    /// Degraded mode: placeable capacity below the configured fraction.
+    degraded: bool,
+    fault_stats: FaultStats,
+    /// Deterministic jitter source for retry backoff.
+    jitter: Prng,
 }
 
 /// Cost model for a coordinator wrapping a single anonymous service: no
@@ -589,7 +663,7 @@ impl StreamCoordinator {
     /// widths the backend expects (padded dims, e.g. 3/1 for the
     /// canonical serving model).
     pub fn new(svc: Service, cfg: StreamConfig, xdim: usize, udim: usize) -> StreamCoordinator {
-        StreamCoordinator::with_fleet(vec![(uniform_model(), svc)], cfg, xdim, udim)
+        StreamCoordinator::build(vec![(uniform_model(), svc)], cfg, xdim, udim)
     }
 
     /// Wrap a heterogeneous fleet: each entry pairs the instance's static
@@ -606,8 +680,22 @@ impl StreamCoordinator {
         cfg: StreamConfig,
         xdim: usize,
         udim: usize,
+    ) -> Result<StreamCoordinator> {
+        if fleet.is_empty() {
+            return Err(Error::config(
+                "fleet must have at least one instance (placement needs a roster)",
+            ));
+        }
+        Ok(StreamCoordinator::build(fleet, cfg, xdim, udim))
+    }
+
+    fn build(
+        fleet: Vec<(InstanceModel, Service)>,
+        cfg: StreamConfig,
+        xdim: usize,
+        udim: usize,
     ) -> StreamCoordinator {
-        assert!(!fleet.is_empty(), "fleet must have at least one instance");
+        debug_assert!(!fleet.is_empty());
         let cfg = StreamConfig {
             window: cfg.window.normalized(),
             ..cfg
@@ -623,7 +711,23 @@ impl StreamCoordinator {
             });
         }
         let metrics = instances[0].svc.metrics.clone();
+        let n = instances.len();
         StreamCoordinator {
+            health: (0..n).map(|_| InstanceHealth::new(&cfg.faults.health)).collect(),
+            plan: Vec::new(),
+            submit_clock: 0,
+            rounds: 0,
+            responses_from: vec![0; n],
+            stall_until: vec![None; n],
+            link_factor: vec![1.0; n],
+            link_expire: vec![0; n],
+            hedged: BTreeSet::new(),
+            done: BTreeSet::new(),
+            late: Vec::new(),
+            standby: None,
+            degraded: false,
+            fault_stats: FaultStats::default(),
+            jitter: Prng::new(0xC0FF_EE00_D15EA5E5),
             models,
             instances,
             metrics,
@@ -637,6 +741,55 @@ impl StreamCoordinator {
             in_flight_max: 0,
             rr_resume: 0,
         }
+    }
+
+    /// Arm a deterministic fault schedule (see [`FaultPlan`]). Events
+    /// fire as their trigger clocks pass; calling again replaces any
+    /// unfired events. Fails if an event names an instance outside the
+    /// fleet.
+    pub fn inject_faults(&mut self, plan: FaultPlan) -> Result<()> {
+        if let Some(ev) = plan.events.iter().find(|e| e.instance >= self.instances.len()) {
+            return Err(Error::config(format!(
+                "fault plan names instance {} but the fleet has {}",
+                ev.instance,
+                self.instances.len()
+            )));
+        }
+        self.plan = plan.events;
+        Ok(())
+    }
+
+    /// Register a standby instance (e.g. a host-native backend). It is
+    /// masked out of placement while the fleet is healthy and becomes
+    /// placeable only in degraded mode, when primary capacity has
+    /// shrunk below [`FaultToleranceConfig::degraded_capacity_frac`].
+    /// Returns the standby's fleet index.
+    pub fn add_standby(&mut self, model: InstanceModel, svc: Service) -> usize {
+        self.models.push(model);
+        self.instances.push(InstanceRt {
+            svc,
+            outstanding: 0,
+        });
+        self.health.push(InstanceHealth::new(&self.cfg.faults.health));
+        self.responses_from.push(0);
+        self.stall_until.push(None);
+        self.link_factor.push(1.0);
+        self.link_expire.push(0);
+        let idx = self.instances.len() - 1;
+        self.standby = Some(idx);
+        idx
+    }
+
+    /// Fault-layer counters (injections, detections, failovers), with
+    /// per-instance health tallies folded in.
+    pub fn fault_stats(&self) -> FaultStats {
+        let mut fs = self.fault_stats;
+        for h in &self.health {
+            fs.instances_down += h.downs;
+            fs.instances_recovered += h.recoveries;
+            fs.recovery_rounds_total += h.recovery_rounds;
+        }
+        fs
     }
 
     /// The shared metrics sink (latency, batches, sheds, per-instance
@@ -673,7 +826,8 @@ impl StreamCoordinator {
                 start,
                 y,
                 u,
-                refine_payload: None,
+                attempts: 0,
+                not_before: 0,
             };
             t.next_seq += 1;
             t.emitted += 1;
@@ -690,7 +844,8 @@ impl StreamCoordinator {
                     start,
                     y,
                     u,
-                    refine_payload: None,
+                    attempts: 0,
+                    not_before: 0,
                 };
                 t.next_seq += 1;
                 t.emitted += 1;
@@ -699,44 +854,141 @@ impl StreamCoordinator {
         }
     }
 
+    /// Fire every armed submission-clocked fault event whose trigger has
+    /// passed (Crash / Stall / LinkDegrade; BitFlip fires on the
+    /// response path, see [`record`](Self::record)).
+    fn fire_submission_faults(&mut self) {
+        if self.plan.is_empty() {
+            return;
+        }
+        let clock = self.submit_clock;
+        let mut i = 0;
+        while i < self.plan.len() {
+            let due = !matches!(self.plan[i].kind, FaultKind::BitFlip) && clock >= self.plan[i].at;
+            if !due {
+                i += 1;
+                continue;
+            }
+            let ev = self.plan.remove(i);
+            match ev.kind {
+                FaultKind::Crash => {
+                    self.instances[ev.instance].svc.kill();
+                    self.health[ev.instance].on_dead(self.rounds, true);
+                    self.fault_stats.injected_crash += 1;
+                }
+                FaultKind::Stall { hold } => {
+                    self.stall_until[ev.instance] = Some(Instant::now() + hold);
+                    self.fault_stats.injected_stall += 1;
+                }
+                FaultKind::LinkDegrade { factor, windows } => {
+                    self.link_factor[ev.instance] = factor.max(1.0);
+                    self.link_expire[ev.instance] = clock.saturating_add(windows);
+                    self.fault_stats.injected_link += 1;
+                }
+                FaultKind::BitFlip => unreachable!("BitFlip fires on the response path"),
+            }
+        }
+    }
+
+    fn stall_active(&self, i: usize) -> bool {
+        self.stall_until[i].is_some_and(|t| Instant::now() < t)
+    }
+
+    /// Per-instance placement overrides derived from fault state: down
+    /// and stalled instances are masked, a recovering instance is capped
+    /// to one probe window, degraded links inflate their transfer cost,
+    /// and the standby joins the roster only in degraded mode.
+    fn placement_overrides(&self) -> Vec<PlacementOverride> {
+        (0..self.models.len())
+            .map(|i| PlacementOverride {
+                masked: !self.health[i].placeable()
+                    || self.stall_active(i)
+                    || (self.standby == Some(i) && !self.degraded),
+                transfer_factor: if self.submit_clock < self.link_expire[i] {
+                    self.link_factor[i]
+                } else {
+                    1.0
+                },
+                cap: self.health[i].probe_cap(),
+            })
+            .collect()
+    }
+
+    /// Whether any instance could ever serve a window again: counts
+    /// transiently-full, stalled, down-but-probeable and (not yet
+    /// activated) standby instances; only a fleet of permanently dead or
+    /// zero-capacity instances is hopeless.
+    fn any_hope(&self) -> bool {
+        self.models
+            .iter()
+            .enumerate()
+            .any(|(i, m)| m.max_outstanding > 0 && !self.health[i].is_permanently_down())
+    }
+
+    /// Recompute degraded mode: placeable primary capacity (standby
+    /// excluded) below `degraded_capacity_frac` of the full primary
+    /// fleet. Entering degraded mode unmasks the standby and clamps the
+    /// AIMD burst; recovery exits it.
+    fn update_degraded(&mut self) {
+        let mut full = 0.0f64;
+        let mut avail = 0.0f64;
+        for (i, m) in self.models.iter().enumerate() {
+            if self.standby == Some(i) || m.max_outstanding == 0 {
+                continue;
+            }
+            // Clamp the uniform model's unbounded budget so the sum
+            // stays a meaningful ratio.
+            let cap = m.max_outstanding.min(1 << 20) as f64;
+            full += cap;
+            if self.health[i].placeable() && !self.stall_active(i) {
+                avail += self.health[i].probe_cap().map_or(cap, |c| (c as f64).min(cap));
+            }
+        }
+        let degraded = full > 0.0 && avail < self.cfg.faults.degraded_capacity_frac * full;
+        if degraded && !self.degraded {
+            self.fault_stats.degraded_entries += 1;
+        } else if !degraded && self.degraded {
+            self.fault_stats.degraded_exits += 1;
+        }
+        self.degraded = degraded;
+    }
+
     /// Submit one window to the fleet, walking instances in ascending
-    /// placement-cost order ([`rank`]): the cheapest instance under its
-    /// concurrency budget gets the window; a bounded-queue refusal spills
-    /// to the next sibling (clone-free — `try_submit` hands the payload
-    /// back). Only when every eligible instance refuses (or none is
-    /// eligible) does the window return for the AIMD hold-and-retry.
+    /// placement-cost order ([`rank_with`]): the cheapest healthy
+    /// instance under its concurrency budget gets the window; a
+    /// bounded-queue refusal spills to the next sibling (`try_submit`
+    /// hands the payload back), and a dead instance is marked down and
+    /// skipped. Only when no instance could ever serve again does the
+    /// window fail; otherwise it returns for the AIMD hold-and-retry.
     fn submit_placed(&mut self, tenant: u32, w: PendingWindow) -> SubmitOutcome {
+        self.fire_submission_faults();
+        self.update_degraded();
         let PendingWindow {
             seq_no,
             start,
             y,
             u,
-            refine_payload,
+            attempts,
+            not_before,
         } = w;
-        let refine_payload = if self.cfg.warm_start.enabled {
-            Some(refine_payload.unwrap_or_else(|| (y.clone(), u.clone())))
-        } else {
-            None
-        };
+        // Retained so a stranded window can be re-placed (and for
+        // warm-start refinement inputs).
+        let payload = (y.clone(), u.clone());
         let mut req = RecoveryRequest {
             id: encode_id(tenant, seq_no),
             y,
             u,
         };
         let outstanding: Vec<usize> = self.instances.iter().map(|r| r.outstanding).collect();
-        let order = rank(&self.models, &outstanding);
-        // Instances excluded from `order` because they are at their
-        // concurrency budget are *transiently* full: even if every
-        // instance in `order` fails permanently, the window must be held
-        // for retry, not dropped, while a budget-excluded sibling can
-        // still free a slot.
-        let usable = self.models.iter().filter(|m| m.max_outstanding > 0).count();
-        let mut saw_backpressure = order.len() < usable;
+        let overrides = self.placement_overrides();
+        let order = rank_with(&self.models, &outstanding, &overrides);
+        let mut went_down = false;
         for &i in &order {
             match self.instances[i].svc.try_submit(req) {
                 Ok(rx) => {
                     let inst = &mut self.instances[i];
                     inst.outstanding += 1;
+                    self.submit_clock += 1;
                     self.metrics.on_instance_placed(i);
                     self.metrics.on_instance_queue_depth(i, inst.outstanding);
                     self.in_flight.push_back(InFlightWindow {
@@ -744,7 +996,9 @@ impl StreamCoordinator {
                         seq_no,
                         start,
                         instance: i,
-                        refine_payload,
+                        payload,
+                        attempts,
+                        submitted_at: Instant::now(),
                         rx,
                     });
                     self.in_flight_max = self.in_flight_max.max(self.in_flight.len());
@@ -753,19 +1007,31 @@ impl StreamCoordinator {
                 Err((e, back)) => {
                     if e.is_overload() {
                         self.metrics.on_instance_reject(i);
-                        saw_backpressure = true;
+                    } else if e.is_service_down() {
+                        // The instance died between ranking and submit
+                        // (or a probe hit a corpse): mark it permanently
+                        // down and spill to the next sibling.
+                        self.fault_stats.detected_submit_down += 1;
+                        went_down |= self.health[i].on_dead(self.rounds, true);
                     }
                     req = back;
                 }
             }
         }
-        if saw_backpressure {
+        if went_down {
+            self.update_degraded();
+        }
+        if self.any_hope() {
+            // Transient: budget-excluded, overloaded, stalled or
+            // probeable-down instances can still free up — hold the
+            // window rather than drop it.
             SubmitOutcome::Saturated(PendingWindow {
                 seq_no,
                 start,
-                y: req.y,
-                u: req.u,
-                refine_payload,
+                y: payload.0,
+                u: payload.1,
+                attempts,
+                not_before,
             })
         } else {
             SubmitOutcome::Failed
@@ -784,6 +1050,11 @@ impl StreamCoordinator {
     /// A clean round with submissions grows the burst. Returns the
     /// number of windows submitted.
     pub fn pump(&mut self) -> usize {
+        self.rounds += 1;
+        for h in &mut self.health {
+            h.tick(&self.cfg.faults.health, self.rounds);
+        }
+        self.update_degraded();
         let ids: Vec<u32> = self.tenants.keys().copied().collect();
         if ids.is_empty() {
             return 0;
@@ -791,30 +1062,46 @@ impl StreamCoordinator {
         let pivot = ids.iter().position(|&id| id >= self.rr_resume).unwrap_or(0);
         let mut total = 0usize;
         loop {
-            let burst = self.burst.current();
+            // Degraded mode caps the burst so a shrunken fleet is not
+            // slammed with the healthy-fleet submission rate.
+            let burst = if self.degraded {
+                self.burst.current().min(self.cfg.faults.degraded_burst.max(1))
+            } else {
+                self.burst.current()
+            };
             let mut submitted = 0usize;
             let mut overloaded = false;
             'tenants: for k in 0..ids.len() {
                 let tid = ids[(pivot + k) % ids.len()];
                 for _ in 0..burst {
-                    let t = self.tenants.get_mut(&tid).expect("tenant vanished mid-pump");
+                    let round = self.rounds;
+                    // Tenants are never removed, but a missing entry must
+                    // not panic the pump loop.
+                    let Some(t) = self.tenants.get_mut(&tid) else { break };
+                    // A head window still in retry backoff defers — and
+                    // blocks the tenant's later windows, preserving
+                    // per-tenant submission order.
+                    let ready = t.queue.front().is_some_and(|w| w.not_before <= round);
+                    if !ready {
+                        break;
+                    }
                     let Some(w) = t.queue.pop_front() else { break };
                     match self.submit_placed(tid, w) {
                         SubmitOutcome::Accepted => {
                             submitted += 1;
                         }
                         SubmitOutcome::Failed => {
-                            // Permanent failure for this window.
-                            let t =
-                                self.tenants.get_mut(&tid).expect("tenant vanished mid-pump");
-                            t.failed += 1;
+                            // No instance can ever serve this window.
+                            if let Some(t) = self.tenants.get_mut(&tid) {
+                                t.failed += 1;
+                            }
                         }
                         SubmitOutcome::Saturated(back) => {
                             // Transient backpressure: hold the window,
                             // back off, let this tenant lead next pump.
-                            let t =
-                                self.tenants.get_mut(&tid).expect("tenant vanished mid-pump");
-                            t.queue.push_front(back);
+                            if let Some(t) = self.tenants.get_mut(&tid) {
+                                t.queue.push_front(back);
+                            }
                             self.rr_resume = tid;
                             overloaded = true;
                             break 'tenants;
@@ -841,42 +1128,165 @@ impl StreamCoordinator {
     /// warm-start cache seeded from the true previous window), but
     /// tenants are reaped independently — a slow window on one instance
     /// does not hold completed windows, or their placement slots, on a
-    /// faster sibling. Returns the number of windows recorded.
+    /// faster sibling.
+    ///
+    /// This is a single linear pass over the in-flight deque (entries
+    /// move into a kept deque rather than being removed mid-scan, so
+    /// deep fleets stay O(n)). The fault layer hangs off the same pass:
+    /// a window past its deadline is hedged (retried on a sibling while
+    /// the original is parked in `late`), and a disconnected channel
+    /// (service death) fails the window over immediately. Returns the
+    /// number of responses processed.
     pub fn poll(&mut self) -> usize {
         let mut received = 0usize;
-        let mut blocked: std::collections::BTreeSet<u32> = std::collections::BTreeSet::new();
-        let mut i = 0usize;
-        while i < self.in_flight.len() {
-            if blocked.contains(&self.in_flight[i].tenant) {
-                i += 1;
+        let mut blocked: BTreeSet<u32> = BTreeSet::new();
+        let deadline = self.cfg.faults.deadline;
+        let mut kept: VecDeque<InFlightWindow> = VecDeque::with_capacity(self.in_flight.len());
+        for inf in std::mem::take(&mut self.in_flight) {
+            if blocked.contains(&inf.tenant) {
+                kept.push_back(inf);
                 continue;
             }
-            match self.in_flight[i].rx.try_recv() {
+            // A stalled instance's responses are deliberately left
+            // unread (the stall models an unresponsive instance): the
+            // window either outlives the stall or blows its deadline.
+            if self.stall_active(inf.instance) {
+                if inf.submitted_at.elapsed() >= deadline {
+                    self.hedge_timeout(inf);
+                } else {
+                    blocked.insert(inf.tenant);
+                    kept.push_back(inf);
+                }
+                continue;
+            }
+            match inf.rx.try_recv() {
                 Ok(resp) => {
-                    let inf = self.in_flight.remove(i).expect("in-flight entry vanished");
-                    self.record(inf, resp);
+                    self.record(inf, resp, false);
                     received += 1;
-                    // The next entry shifted into slot `i`.
                 }
                 Err(TryRecvError::Empty) => {
-                    blocked.insert(self.in_flight[i].tenant);
-                    i += 1;
+                    if inf.submitted_at.elapsed() >= deadline {
+                        self.hedge_timeout(inf);
+                    } else {
+                        blocked.insert(inf.tenant);
+                        kept.push_back(inf);
+                    }
                 }
                 Err(TryRecvError::Disconnected) => {
-                    let inf = self.in_flight.remove(i).expect("in-flight entry vanished");
-                    self.fail_in_flight(inf);
+                    self.handle_disconnect(inf);
                 }
             }
         }
+        self.in_flight = kept;
+        received += self.sweep_late();
         received
     }
 
+    /// Drain late responses from hedged originals: a completion races
+    /// its retry through the `done` set (first one wins, the loser is
+    /// dropped as a duplicate); a disconnect just retires the channel —
+    /// the retry already owns the window.
+    fn sweep_late(&mut self) -> usize {
+        if self.late.is_empty() {
+            return 0;
+        }
+        let mut received = 0usize;
+        let mut kept = Vec::with_capacity(self.late.len());
+        for inf in std::mem::take(&mut self.late) {
+            match inf.rx.try_recv() {
+                Ok(resp) => {
+                    self.record(inf, resp, true);
+                    received += 1;
+                }
+                Err(TryRecvError::Empty) => kept.push(inf),
+                Err(TryRecvError::Disconnected) => {}
+            }
+        }
+        self.late = kept;
+        received
+    }
+
+    /// A window blew its completion deadline: charge the instance an
+    /// anomaly, release its slot, park the original submission in
+    /// `late` (its response may still arrive) and hedge a retry onto a
+    /// sibling.
+    fn hedge_timeout(&mut self, inf: InFlightWindow) {
+        self.fault_stats.detected_timeouts += 1;
+        self.fault_stats.failed_over += 1;
+        self.metrics.on_instance_failover(inf.instance);
+        let rt = &mut self.instances[inf.instance];
+        rt.outstanding = rt.outstanding.saturating_sub(1);
+        self.health[inf.instance].on_anomaly(&self.cfg.faults.health, self.rounds);
+        self.hedged.insert(encode_id(inf.tenant, inf.seq_no));
+        let (tenant, seq_no, start, attempts) = (inf.tenant, inf.seq_no, inf.start, inf.attempts);
+        let payload = inf.payload.clone();
+        self.late.push(inf);
+        self.retry_or_fail(tenant, seq_no, start, payload, attempts);
+    }
+
+    /// A response channel died (service killed or shut down
+    /// mid-request): charge the instance an anomaly — repeated
+    /// disconnects take it down — and fail the window over.
+    fn handle_disconnect(&mut self, inf: InFlightWindow) {
+        self.fault_stats.detected_disconnects += 1;
+        self.fault_stats.failed_over += 1;
+        self.metrics.on_instance_failover(inf.instance);
+        let rt = &mut self.instances[inf.instance];
+        rt.outstanding = rt.outstanding.saturating_sub(1);
+        self.health[inf.instance].on_anomaly(&self.cfg.faults.health, self.rounds);
+        self.retry_or_fail(inf.tenant, inf.seq_no, inf.start, inf.payload, inf.attempts);
+    }
+
+    /// Re-enqueue a stranded window at the front of its tenant queue
+    /// with exponential-backoff-with-jitter `not_before`, or fail it for
+    /// good once the retry budget is spent.
+    fn retry_or_fail(
+        &mut self,
+        tenant: u32,
+        seq_no: u32,
+        start: usize,
+        payload: (Vec<f32>, Vec<f32>),
+        attempts: u32,
+    ) {
+        let pol = self.cfg.faults.retry;
+        if attempts >= pol.max_retries {
+            self.fault_stats.exhausted += 1;
+            let id = encode_id(tenant, seq_no);
+            if self.hedged.contains(&id) {
+                // A late original must not resurrect a window already
+                // accounted as failed.
+                self.done.insert(id);
+            }
+            if let Some(t) = self.tenants.get_mut(&tenant) {
+                t.failed += 1;
+            }
+            return;
+        }
+        let delay = pol.delay(attempts, &mut self.jitter);
+        self.fault_stats.retries += 1;
+        let w = PendingWindow {
+            seq_no,
+            start,
+            y: payload.0,
+            u: payload.1,
+            attempts: attempts + 1,
+            not_before: self.rounds + delay,
+        };
+        if let Some(t) = self.tenants.get_mut(&tenant) {
+            // Front of the queue: the stranded window is the tenant's
+            // oldest; retries may exceed the queue cap rather than shed.
+            t.queue.push_front(w);
+            t.queue_high = t.queue_high.max(t.queue.len());
+        }
+    }
+
     /// Blocking: pump and receive until every queued window has been
-    /// submitted and every in-flight response has arrived. Ready
-    /// responses are reaped first ([`poll`](Self::poll)) so fast
-    /// instances release their placement slots before the loop blocks
-    /// on the oldest outstanding window. Returns the number of windows
-    /// recorded.
+    /// submitted and every in-flight response has arrived (or been
+    /// failed over and resolved by the fault layer). The loop never
+    /// blocks on a single channel — it spins poll with a short sleep so
+    /// deadline timeouts, health probes and retry backoffs keep firing
+    /// even when the oldest outstanding window is stuck on a stalled
+    /// instance. Returns the number of windows recorded.
     pub fn drain(&mut self) -> usize {
         let mut received = 0usize;
         loop {
@@ -888,22 +1298,31 @@ impl StreamCoordinator {
                 // before blocking.
                 continue;
             }
-            if let Some(inf) = self.in_flight.pop_front() {
-                match inf.rx.recv() {
-                    Ok(resp) => {
-                        self.record(inf, resp);
-                        received += 1;
-                    }
-                    Err(_) => {
-                        self.fail_in_flight(inf);
-                    }
-                }
-            } else if self.queued_windows() == 0 {
+            if !self.in_flight.is_empty() || !self.late.is_empty() {
+                // Responses outstanding: wait briefly and re-poll (a
+                // bounded sleep, not a blocking recv, so the fault
+                // clocks keep advancing).
+                std::thread::sleep(Duration::from_micros(500));
+                continue;
+            }
+            if self.queued_windows() == 0 {
                 break;
-            } else if submitted == 0 {
-                // Nothing in flight, nothing submittable (pathological
-                // config, e.g. a zero-depth service queue): shed the
-                // leftovers rather than spin forever.
+            }
+            if submitted == 0 {
+                if self
+                    .tenants
+                    .values()
+                    .any(|t| t.queue.front().is_some_and(|w| w.not_before > self.rounds))
+                {
+                    // Head windows deferred by retry backoff: let the
+                    // round clock advance rather than shed work the
+                    // fault layer still owns.
+                    continue;
+                }
+                // Nothing in flight, nothing submittable, nothing
+                // deferred (pathological config, e.g. a zero-depth
+                // service queue): shed the leftovers rather than spin
+                // forever.
                 for t in self.tenants.values_mut() {
                     let n = t.queue.len() as u64;
                     t.queue.clear();
@@ -978,41 +1397,86 @@ impl StreamCoordinator {
                 outstanding_max: c.queue_depth_max as usize,
                 window_cycles: model.window_cycles,
                 modeled_cycles: c.modeled_cycles,
+                health: self.health[idx].state().as_str().to_string(),
+                failed_over: c.failed_over,
+                downs: self.health[idx].downs,
             });
         }
+        s.faults = self.fault_stats();
+        s.degraded = self.degraded;
         s
     }
 
-    /// A response channel died (service shut down mid-request): count
-    /// the failure and release the instance slot.
-    fn fail_in_flight(&mut self, inf: InFlightWindow) {
-        if let Some(t) = self.tenants.get_mut(&inf.tenant) {
-            t.failed += 1;
+    /// Fire an armed bit-flip if `instance` just delivered its
+    /// trigger-count-th response.
+    fn due_flip(&mut self, instance: usize) -> bool {
+        let count = self.responses_from[instance];
+        if let Some(pos) = self.plan.iter().position(|e| {
+            matches!(e.kind, FaultKind::BitFlip) && e.instance == instance && e.at <= count
+        }) {
+            self.plan.remove(pos);
+            return true;
         }
-        let rt = &mut self.instances[inf.instance];
-        rt.outstanding = rt.outstanding.saturating_sub(1);
+        false
     }
 
-    fn record(&mut self, inf: InFlightWindow, resp: RecoveryResponse) {
+    /// Account one response. `late` marks a hedged original whose
+    /// instance slot was already released at hedge time. The response
+    /// runs the fidelity check first: a corrupted Θ invalidates the
+    /// tenant's warm-start cache (a poisoned seed must not leak into the
+    /// next window), charges the instance an anomaly, and retries the
+    /// window instead of recording it.
+    fn record(&mut self, inf: InFlightWindow, mut resp: RecoveryResponse, late: bool) {
         let InFlightWindow {
             tenant,
             seq_no,
             start,
             instance,
-            refine_payload,
+            payload,
+            attempts,
+            submitted_at: _,
             rx: _rx,
         } = inf;
         debug_assert_eq!(resp.id, encode_id(tenant, seq_no), "response demux mismatch");
-        let rt = &mut self.instances[instance];
-        rt.outstanding = rt.outstanding.saturating_sub(1);
+        if !late {
+            let rt = &mut self.instances[instance];
+            rt.outstanding = rt.outstanding.saturating_sub(1);
+        }
+        let id = encode_id(tenant, seq_no);
+        if self.hedged.contains(&id) && self.done.contains(&id) {
+            // The hedged twin already completed (or exhausted): this
+            // arrival is surplus.
+            self.fault_stats.duplicates_dropped += 1;
+            return;
+        }
+        self.responses_from[instance] += 1;
+        if self.due_flip(instance)
+            && corrupt_theta(&mut resp.theta, self.cfg.faults.theta_bound).is_some()
+        {
+            self.fault_stats.injected_flip += 1;
+        }
+        if fidelity_check(&resp.theta, self.cfg.faults.theta_bound).is_err() {
+            self.fault_stats.detected_corruptions += 1;
+            self.health[instance].on_anomaly(&self.cfg.faults.health, self.rounds);
+            if let Some(t) = self.tenants.get_mut(&tenant) {
+                t.warm_theta = None;
+            }
+            self.retry_or_fail(tenant, seq_no, start, payload, attempts);
+            return;
+        }
+        if self.hedged.contains(&id) {
+            self.done.insert(id);
+        }
+        self.health[instance].on_ok(&self.cfg.faults.health, self.rounds);
+        if self.standby == Some(instance) {
+            self.fault_stats.standby_windows += 1;
+        }
         self.metrics
             .on_instance_complete(instance, self.models[instance].window_cycles);
 
         let mut refined = None;
         if self.cfg.warm_start.enabled {
-            if let Some((y, u)) = refine_payload {
-                refined = self.refine_completed(tenant, &y, &u, &resp.theta);
-            }
+            refined = self.refine_completed(tenant, &payload.0, &payload.1, &resp.theta);
         }
         if let Some(t) = self.tenants.get_mut(&tenant) {
             t.completed += 1;
@@ -1324,7 +1788,7 @@ mod tests {
             },
             ..StreamConfig::default()
         };
-        let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1);
+        let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1).expect("non-empty fleet");
         push_stream(&mut coord, 0, 66, 0.0); // 3 windows, no pumping yet
         assert_eq!(coord.queued_windows(), 3);
         coord.pump();
@@ -1356,6 +1820,15 @@ mod tests {
         // Results carry their serving instance.
         let results = coord.take_results();
         assert!(results.iter().any(|r| r.instance == 1));
+    }
+
+    #[test]
+    fn empty_fleet_is_a_typed_config_error_not_a_panic() {
+        let Err(err) = StreamCoordinator::with_fleet(Vec::new(), StreamConfig::default(), 3, 1)
+        else {
+            panic!("empty roster must be rejected");
+        };
+        assert!(format!("{err}").contains("fleet"), "error names the roster: {err}");
     }
 
     #[test]

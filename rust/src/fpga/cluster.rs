@@ -51,6 +51,19 @@ impl Link {
     pub fn transfer_s(&self, bytes: u64) -> f64 {
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
+
+    /// This link under a degradation fault: bandwidth divided and
+    /// latency multiplied by `factor` (≥ 1.0 — e.g. a flapping SFP or a
+    /// saturated switch port). The fault layer models a degraded
+    /// instance by inflating its placement transfer cost by the same
+    /// factor, so the two views agree.
+    pub fn degraded(&self, factor: f64) -> Link {
+        let f = factor.max(1.0);
+        Link {
+            bandwidth_bps: self.bandwidth_bps / f,
+            latency_s: self.latency_s * f,
+        }
+    }
 }
 
 /// A tower of identical boards running the GRU accelerator.
@@ -352,6 +365,18 @@ mod tests {
         // 1.25 GB/s → 1 MB ≈ 0.8 ms + 8 µs latency.
         let t = l.transfer_s(1 << 20);
         assert!(t > 8e-4 && t < 1e-3, "t={t}");
+    }
+
+    #[test]
+    fn degraded_link_costs_the_degradation_factor_more() {
+        let l = Link::ten_gbe();
+        let d = l.degraded(4.0);
+        let bytes = 1u64 << 20;
+        let ratio = d.transfer_s(bytes) / l.transfer_s(bytes);
+        assert!((ratio - 4.0).abs() < 1e-9, "ratio={ratio}");
+        // Factors below 1 clamp to nominal: degradation never speeds up.
+        let same = l.degraded(0.5);
+        assert!((same.transfer_s(bytes) - l.transfer_s(bytes)).abs() < 1e-15);
     }
 
     #[test]

@@ -31,7 +31,7 @@ fn main() {
         &[
             "system", "method", "steps", "config", "requests", "seed", "samples", "dt", "lr",
             "artifacts", "out", "workers", "backend", "fmt", "tenants", "window", "stride",
-            "queue", "shed", "fleet",
+            "queue", "shed", "fleet", "chaos", "deadline-ms",
         ],
     );
     let result = match args.subcommand() {
@@ -53,6 +53,7 @@ fn main() {
                  \x20 merinda serve --requests 256 --backend fixed --fmt q8.8\n\
                  \x20 merinda soak --tenants 6 --samples 400 --backend native --fleet 3\n\
                  \x20 merinda soak --fleet 3 --tuned\n\
+                 \x20 merinda soak --fleet 3 --chaos crash:2@6,flip:1@2 --deadline-ms 250\n\
                  \x20 merinda tune --window 64\n\
                  \x20 merinda table 8"
             );

@@ -34,6 +34,26 @@ pub enum Error {
         /// Queue occupancy observed at rejection time.
         depth: usize,
     },
+    /// A serving instance died: its service was shut down or killed, a
+    /// worker panicked (poisoned lock), or a response channel dropped
+    /// mid-request.
+    ///
+    /// This is a *fleet-recoverable* fault, not a coordinator abort: the
+    /// health state machine marks the instance down and the stranded
+    /// windows fail over to healthy siblings. It must never be folded
+    /// into [`Error::Config`] — retrying a dead instance is pointless,
+    /// but retrying the *work* elsewhere is exactly the right move.
+    ServiceDown {
+        /// What died (queue closed, lock poisoned, channel dropped).
+        reason: String,
+    },
+    /// A recovered result failed its fidelity check (non-finite or
+    /// out-of-bound coefficients — the signature of fixed-point bit-flip
+    /// corruption). The window is retried; the corrupt Θ is discarded.
+    Corrupted {
+        /// What the fidelity check saw.
+        detail: String,
+    },
 }
 
 impl fmt::Display for Error {
@@ -49,6 +69,12 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Overloaded { depth } => {
                 write!(f, "overloaded: queue full at depth {depth} (backpressure)")
+            }
+            Error::ServiceDown { reason } => {
+                write!(f, "service down: {reason} (fail over)")
+            }
+            Error::Corrupted { detail } => {
+                write!(f, "corrupted result: {detail} (retry)")
             }
         }
     }
@@ -91,6 +117,31 @@ impl Error {
     pub fn is_overload(&self) -> bool {
         matches!(self, Error::Overloaded { .. })
     }
+
+    /// Helper for instance-death faults.
+    pub fn service_down(reason: impl Into<String>) -> Self {
+        Error::ServiceDown {
+            reason: reason.into(),
+        }
+    }
+
+    /// Helper for fidelity-check failures.
+    pub fn corrupted(detail: impl Into<String>) -> Self {
+        Error::Corrupted {
+            detail: detail.into(),
+        }
+    }
+
+    /// True when the error means the serving instance is gone and the
+    /// work should be re-placed on a healthy sibling.
+    pub fn is_service_down(&self) -> bool {
+        matches!(self, Error::ServiceDown { .. })
+    }
+
+    /// True when the error is a detected-corruption fault (retryable).
+    pub fn is_corrupted(&self) -> bool {
+        matches!(self, Error::Corrupted { .. })
+    }
 }
 
 #[cfg(test)]
@@ -123,5 +174,22 @@ mod tests {
         assert!(e.is_overload());
         assert!(e.to_string().contains("depth 7"));
         assert!(!Error::config("full").is_overload());
+    }
+
+    #[test]
+    fn service_down_is_typed_and_recoverable() {
+        let e = Error::service_down("queue closed");
+        assert!(e.is_service_down());
+        assert!(!e.is_overload());
+        assert!(e.to_string().contains("queue closed"));
+        assert!(!Error::config("shut down").is_service_down());
+    }
+
+    #[test]
+    fn corrupted_is_typed_and_retryable() {
+        let e = Error::corrupted("theta[2] = NaN");
+        assert!(e.is_corrupted());
+        assert!(!e.is_service_down());
+        assert!(e.to_string().contains("NaN"));
     }
 }

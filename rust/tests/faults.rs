@@ -1,0 +1,308 @@
+//! Fault-injection acceptance tests: the chaos layer's end-to-end
+//! guarantees, driven against live services with deterministic plans.
+//!
+//! Claims held here:
+//! * under any seeded fault plan, every emitted window is accounted for
+//!   (completed + shed + failed == emitted, per tenant) and no window is
+//!   ever delivered twice;
+//! * a saturated instance dying mid-window loses nothing — stranded
+//!   windows fail over to the surviving sibling;
+//! * the single-pass poll sweep sustains hundreds of outstanding
+//!   windows (the O(n²) sweep regression);
+//! * a stalled instance's windows blow the deadline, hedge to a
+//!   sibling, and the late original is deduped, not double-counted;
+//! * losing the whole fleet fails windows *with closed accounting*
+//!   instead of hanging or panicking.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use merinda::coordinator::{
+    BatcherConfig, FaultPlan, FaultToleranceConfig, InstanceModel, MockBackend, Service,
+    ServiceConfig, StreamConfig, StreamCoordinator,
+};
+use merinda::util::Prng;
+
+/// Push `samples` rows for each of `tenants` streams (xdim 3 / udim 1,
+/// the canonical serving dims) and close out the tails.
+fn feed(coord: &mut StreamCoordinator, tenants: u32, samples: usize, seed: u64) {
+    let mut rng = Prng::new(seed);
+    for _ in 0..samples {
+        let y = rng.normal_vec_f32(3, 0.5);
+        let u = rng.normal_vec_f32(1, 0.5);
+        for t in 0..tenants {
+            coord.push(t, &y, &u);
+        }
+    }
+    coord.flush_tails();
+}
+
+/// Accounting must close per tenant and no (tenant, seq_no) may be
+/// delivered twice; returns the number of completed results checked.
+fn assert_accounting_closes(coord: &mut StreamCoordinator) -> usize {
+    let stats = coord.stats();
+    for t in &stats.per_tenant {
+        assert_eq!(
+            t.completed + t.shed + t.failed,
+            t.emitted,
+            "tenant {}: accounting must close (completed {} + shed {} + failed {} vs emitted {})",
+            t.tenant,
+            t.completed,
+            t.shed,
+            t.failed,
+            t.emitted
+        );
+    }
+    let results = coord.take_results();
+    assert_eq!(results.len() as u64, stats.windows_completed);
+    let mut seen = BTreeSet::new();
+    for r in &results {
+        assert!(
+            seen.insert((r.tenant, r.seq_no)),
+            "tenant {} window {} delivered twice",
+            r.tenant,
+            r.seq_no
+        );
+        for (i, v) in r.theta.iter().enumerate() {
+            assert!(
+                v.is_finite() && v.abs() <= 1e6,
+                "tenant {} window {}: corrupt theta[{i}] = {v} reached a caller",
+                r.tenant,
+                r.seq_no
+            );
+        }
+    }
+    results.len()
+}
+
+/// Property: any seeded fault plan — crashes, stalls, link degradation,
+/// bit-flips in any deterministic mix — leaves the ledger balanced and
+/// the delivered results clean.
+#[test]
+fn prop_seeded_fault_plans_never_lose_or_duplicate_windows() {
+    for seed in 0..8u64 {
+        let fleet: Vec<(InstanceModel, Service)> = [("a", 1e-6), ("b", 2e-6), ("c", 3e-6)]
+            .iter()
+            .map(|&(name, w)| {
+                let svc = Service::start(ServiceConfig::default(), || MockBackend {
+                    delay: Duration::from_millis(1),
+                    ..Default::default()
+                });
+                (InstanceModel::synthetic(name, w, 4), svc)
+            })
+            .collect();
+        let mut coord =
+            StreamCoordinator::with_fleet(fleet, StreamConfig::default(), 3, 1).expect("fleet");
+        // 4 tenants x 128 samples = 20 windows; triggers within reach.
+        coord
+            .inject_faults(FaultPlan::seeded(seed, 3, 20))
+            .expect("seeded plans target the fleet");
+        feed(&mut coord, 4, 128, 0x5EED ^ seed);
+        coord.drain();
+        let checked = assert_accounting_closes(&mut coord);
+        let stats = coord.stats();
+        assert!(checked > 0, "seed {seed}: nothing completed at all");
+        assert_eq!(stats.windows_emitted, 20, "seed {seed}");
+    }
+}
+
+/// Regression: the cheapest instance absorbs the early burst, then its
+/// service is killed with windows still in flight. Every stranded
+/// window must fail over to the surviving sibling; nothing is lost.
+#[test]
+fn saturated_instance_dying_mid_window_fails_over_with_zero_loss() {
+    // Serve one window at a time, slowly: at kill time all but the
+    // window being processed are still in the service queue, so their
+    // response channels observably disconnect (a popped batch may still
+    // complete — that race is faithful to real crashes and is deduped).
+    let doomed = Service::start(
+        ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            ..Default::default()
+        },
+        || MockBackend {
+            batch: 1,
+            delay: Duration::from_millis(100),
+            ..Default::default()
+        },
+    );
+    let survivor = Service::start(
+        ServiceConfig {
+            workers: 2,
+            ..Default::default()
+        },
+        MockBackend::default,
+    );
+    let fleet = vec![
+        (InstanceModel::synthetic("doomed", 1e-6, 8), doomed),
+        (InstanceModel::synthetic("survivor", 1e-3, 64), survivor),
+    ];
+    let cfg = StreamConfig {
+        // Submit the whole first burst at once so windows are in flight
+        // on the doomed instance when the crash trigger passes.
+        burst_initial: 8,
+        burst_max: 8,
+        ..StreamConfig::default()
+    };
+    let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1).expect("fleet");
+    coord
+        .inject_faults(FaultPlan::parse("crash:0@4", 2).expect("spec"))
+        .expect("in range");
+    feed(&mut coord, 2, 128, 11);
+    coord.drain();
+
+    let stats = coord.stats();
+    assert_eq!(stats.windows_failed, 0, "sibling capacity must absorb the crash");
+    assert_eq!(stats.windows_shed, 0);
+    assert_eq!(stats.windows_completed, stats.windows_emitted);
+    assert_eq!(stats.per_instance[0].health, "down");
+    assert!(
+        stats.per_instance[1].placed > 0,
+        "survivor must have served the failover: {:?}",
+        stats.per_instance
+    );
+    let fs = stats.faults;
+    assert_eq!(fs.injected_crash, 1);
+    assert!(fs.instances_down >= 1);
+    assert!(
+        fs.detected_disconnects + fs.detected_submit_down >= 1,
+        "the crash must be *detected*, not coincidentally avoided: {fs:?}"
+    );
+    assert_accounting_closes(&mut coord);
+}
+
+/// Regression for the poll sweep: with hundreds of windows genuinely
+/// outstanding the coordinator must keep pace (the old implementation
+/// re-scanned every in-flight entry per completed response, going
+/// quadratic exactly when the fleet was busiest).
+#[test]
+fn poll_sustains_hundreds_of_outstanding_windows() {
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            queue_depth: 1024,
+            ..Default::default()
+        },
+        || MockBackend {
+            delay: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let fleet = vec![(InstanceModel::synthetic("deep", 1e-6, 600), svc)];
+    let cfg = StreamConfig {
+        tenant_queue: 128,
+        burst_initial: 64,
+        burst_max: 64,
+        ..StreamConfig::default()
+    };
+    let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1).expect("fleet");
+    // 8 tenants x 80 windows each = 640 windows through one instance.
+    feed(&mut coord, 8, 64 + 79 * 16, 23);
+    coord.drain();
+    let stats = coord.stats();
+    assert_eq!(stats.windows_emitted, 640);
+    assert_eq!(stats.windows_completed, 640);
+    assert_eq!(stats.windows_failed, 0);
+    assert_eq!(stats.windows_shed, 0);
+    assert!(
+        stats.in_flight_max >= 256,
+        "the sweep was never under load (in_flight_max {})",
+        stats.in_flight_max
+    );
+    assert_eq!(stats.faults.detected_timeouts, 0, "no deadline pressure here");
+    assert_accounting_closes(&mut coord);
+}
+
+/// A stalled instance holds a window past the deadline: the coordinator
+/// must hedge it to a sibling, serve the retry, and discard the late
+/// original as a duplicate — exactly-once delivery under timeout.
+#[test]
+fn stalled_window_hedges_to_sibling_and_dedupes_the_late_original() {
+    let molasses = Service::start(
+        ServiceConfig {
+            workers: 1,
+            queue_depth: 4,
+            batcher: BatcherConfig {
+                batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+        },
+        || MockBackend {
+            batch: 1,
+            delay: Duration::from_millis(300),
+            ..Default::default()
+        },
+    );
+    let sprinter = Service::start(ServiceConfig::default(), MockBackend::default);
+    let fleet = vec![
+        (InstanceModel::synthetic("molasses", 1e-6, 4), molasses),
+        (InstanceModel::synthetic("sprinter", 1e-3, 64), sprinter),
+    ];
+    let cfg = StreamConfig {
+        faults: FaultToleranceConfig {
+            deadline: Duration::from_millis(50),
+            ..FaultToleranceConfig::default()
+        },
+        ..StreamConfig::default()
+    };
+    let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1).expect("fleet");
+    // First submission lands on the cheap instance, then the stall masks
+    // it for longer than both the deadline and the backend's delay.
+    coord
+        .inject_faults(FaultPlan::parse("stall:0@1+400ms", 2).expect("spec"))
+        .expect("in range");
+    feed(&mut coord, 1, 96, 31); // 3 windows for one tenant
+    coord.drain();
+
+    let stats = coord.stats();
+    assert_eq!(stats.windows_emitted, 3);
+    assert_eq!(stats.windows_completed, 3, "the hedged window must still complete");
+    assert_eq!(stats.windows_failed, 0);
+    let fs = stats.faults;
+    assert_eq!(fs.injected_stall, 1);
+    assert!(fs.detected_timeouts >= 1, "the stall must blow the deadline: {fs:?}");
+    assert!(fs.failed_over >= 1);
+    assert!(fs.retries >= 1);
+    assert!(
+        fs.duplicates_dropped >= 1,
+        "the late original must be discarded, not re-delivered: {fs:?}"
+    );
+    assert_accounting_closes(&mut coord);
+}
+
+/// Losing *all* capacity is not recoverable — but it must fail loudly
+/// and consistently: accounting closes, the coordinator reports
+/// degraded, and drain terminates instead of spinning.
+#[test]
+fn whole_fleet_loss_fails_windows_with_closed_accounting() {
+    let svc = Service::start(ServiceConfig::default(), || MockBackend {
+        delay: Duration::from_millis(2),
+        ..Default::default()
+    });
+    let fleet = vec![(InstanceModel::synthetic("lonely", 1e-6, 8), svc)];
+    let cfg = StreamConfig {
+        burst_initial: 2,
+        ..StreamConfig::default()
+    };
+    let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1).expect("fleet");
+    coord
+        .inject_faults(FaultPlan::parse("crash:0@2", 1).expect("spec"))
+        .expect("in range");
+    feed(&mut coord, 2, 96, 47); // 3 windows x 2 tenants
+    coord.drain();
+
+    let stats = coord.stats();
+    assert_eq!(stats.windows_emitted, 6);
+    assert!(
+        stats.windows_failed >= 4,
+        "windows after the crash have nowhere to go: {stats:?}"
+    );
+    assert!(stats.degraded, "an empty fleet is degraded by definition");
+    assert_eq!(stats.per_instance[0].health, "down");
+    assert_eq!(stats.faults.injected_crash, 1);
+    assert_accounting_closes(&mut coord);
+}

@@ -242,7 +242,7 @@ fn saturated_instance_spills_to_sibling_instead_of_overloading() {
         burst_max: 8,
         ..StreamConfig::default()
     };
-    let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1);
+    let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1).expect("non-empty fleet");
     let mut rng = Prng::new(7);
     for _ in 0..128 {
         let y = rng.normal_vec_f32(3, 0.5);

@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Validate BENCH_table7.json (schema + stage-mapping-sweep gate).
+
+Usage: check_bench_table7.py
+
+Run after `cargo bench --bench table7_stage_mapping`. Every gated value
+is cycle-model or resource-model derived, so the gate is
+machine-independent:
+
+* schema: workload / mappings / summary sections, 16 mapping rows;
+* rows follow Table 7 order: all-DSP first, all-LUT last, all 16
+  stage-map names distinct;
+* every mapping has positive cycles/interval and interval <= cycles;
+* binding choice only perturbs pipeline fill depth, never throughput:
+  the cycle spread across the sweep stays under 1.15x;
+* the all-DSP row spends the most DSPs and the all-LUT row none;
+* the summary block is self-consistent with the rows.
+"""
+import json
+
+d = json.load(open("BENCH_table7.json"))
+
+# --- schema ---
+for key in ("bench", "workload", "mappings", "summary", "rows"):
+    assert key in d, f"missing key: {key}"
+assert d["bench"] == "table7"
+for k in ("base_config", "mappings", "device"):
+    assert k in d["workload"], f"missing workload.{k}"
+assert d["workload"]["base_config"] == "concurrent"
+
+rows = d["mappings"]
+assert len(rows) == d["workload"]["mappings"] == 16, "Table 7 is the 2^4 sweep"
+for r in rows:
+    for k in ("config", "cycles", "interval", "lut", "ff", "dsp", "bram18",
+              "worst_stage_ii", "fits_pynq"):
+        assert k in r, f"{r.get('config', '?')}: missing {k}"
+    assert r["cycles"] > 0 and r["interval"] > 0, f"{r['config']}: empty model"
+    assert r["interval"] <= r["cycles"], f"{r['config']}: interval > cycles"
+    assert r["worst_stage_ii"] >= 1
+
+# --- Table 7 row order and naming ---
+names = [r["config"] for r in rows]
+assert len(set(names)) == 16, "stage-map names must be distinct"
+assert names[0] == "s1D_s2D_s3D_s4D", f"row 0 must be all-DSP, got {names[0]}"
+assert names[15] == "s1L_s2L_s3L_s4L", f"row 15 must be all-LUT, got {names[15]}"
+
+# --- binding moves resources, not throughput ---
+best = min(r["cycles"] for r in rows)
+worst = max(r["cycles"] for r in rows)
+spread = worst / best
+assert spread < 1.15, f"binding changed throughput: cycle spread {spread:.3f}x"
+assert rows[15]["dsp"] == 0, "all-LUT mapping must spend no DSP48s"
+assert rows[0]["dsp"] == max(r["dsp"] for r in rows), \
+    "all-DSP mapping must be the DSP-heaviest row"
+assert rows[15]["lut"] > rows[0]["lut"], \
+    "all-LUT mapping must pay for its MACs in fabric LUTs"
+fitting = sum(1 for r in rows if r["fits_pynq"])
+assert fitting >= 1, "at least one mapping must fit the PYNQ-Z2"
+
+# --- summary self-consistency ---
+s = d["summary"]
+for k in ("best_cycles", "worst_cycles", "cycle_spread", "fitting"):
+    assert k in s, f"missing summary.{k}"
+assert s["best_cycles"] == best and s["worst_cycles"] == worst
+assert abs(s["cycle_spread"] - spread) < 1e-9
+assert s["fitting"] == fitting
+
+print(f"BENCH_table7.json OK: 16 mappings, {fitting} fit, "
+      f"cycle spread {spread:.3f}x ({best:.0f}..{worst:.0f} cycles)")

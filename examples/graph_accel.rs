@@ -1,0 +1,130 @@
+//! Dataflow-graph IR walkthrough: one graph description drives the
+//! whole hardware stack for a brand-new model family.
+//!
+//! The SINDy library + dense-head accelerator (`fpga::sindy_accel`)
+//! has no hand-written stage schedule anywhere — its graph IS the
+//! hardware description. This example takes that one description
+//! through every layer:
+//!   1. build + validate the graph (`fpga::graph`),
+//!   2. lower it through the shared cycle/fit/power models (`lower`),
+//!   3. tune the family over the shared design axes (`tune_graph`),
+//!   4. join the heterogeneous GRU fleet via
+//!      `coordinator::placement::GraphInstanceSpec`.
+//!
+//! Run with:  `cargo run --release --example graph_accel`
+
+use merinda::coordinator::placement::{placement_cost, rank, GraphInstanceSpec, InstanceSpec};
+use merinda::fpga::cluster::{heterogeneous_fleet, Link};
+use merinda::fpga::graph::{lower, Target};
+use merinda::fpga::resources::Device;
+use merinda::fpga::sindy_accel::SindyAccelConfig;
+use merinda::fpga::tuner::{tune_graph, TunerOptions};
+use merinda::report::Table;
+
+fn main() {
+    // --- 1. The whole hardware description: four ops, three edges. ---
+    let cfg = SindyAccelConfig::concurrent();
+    let g = cfg.graph();
+    g.validate().expect("shipped SINDy graph must be well-formed");
+    println!(
+        "graph {:?}: {} ops, {} edges, {} library terms -> {} theta coefficients",
+        g.name,
+        g.ops.len(),
+        g.edges.len(),
+        cfg.library_terms(),
+        cfg.output
+    );
+
+    // --- 2. Lower it: schedules, cycles, resources, power — all derived. ---
+    let low = lower(&g, &Target::default()).expect("well-formed graph must lower");
+    let mut t = Table::new(
+        "Lowered SINDy graph (concurrent point, PYNQ-Z2)",
+        &["op", "II", "depth", "cycles", "LUT", "FF", "DSP", "BRAM18"],
+    );
+    for s in &low.stages {
+        t.row(vec![
+            s.name.clone(),
+            s.ii.to_string(),
+            s.depth.to_string(),
+            s.cycles.to_string(),
+            s.resources.lut.to_string(),
+            s.resources.ff.to_string(),
+            s.resources.dsp.to_string(),
+            s.resources.bram18.to_string(),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!(
+        "item latency {} cycles, steady-state interval {}, worst II {}, {:.2} W, fits: {}",
+        low.cycles,
+        low.interval,
+        low.worst_stage_ii,
+        low.power_w,
+        if low.fits { "yes" } else { "NO" }
+    );
+
+    // --- 3. Tune the family: same axes, same gates as the GRU boards. ---
+    let out = tune_graph(
+        "sindy_head",
+        &cfg.family(),
+        &cfg.design_point(),
+        &Target::default(),
+        &TunerOptions::default(),
+    )
+    .expect("the SINDy family must have a feasible operating point");
+    let c = &out.chosen;
+    println!(
+        "\ntune_graph: {} points evaluated, {} feasible; chosen u{}/b{} {} {} @ {:.0} MHz",
+        out.evaluated,
+        out.feasible,
+        c.point.tile.unroll,
+        c.point.tile.banks,
+        if c.point.dataflow { "DATAFLOW" } else { "DDR-spill" },
+        c.format,
+        c.clock_mhz
+    );
+    println!(
+        "  window: default {} -> chosen {} cycles ({:.3} ms, {:.2} W, {:.2} mJ/window)",
+        out.default_window_cycles,
+        c.window_cycles,
+        c.window_s * 1e3,
+        c.power_w,
+        c.energy_per_window_j * 1e3
+    );
+    println!("  Pareto front (fastest first, power strictly falling):");
+    for p in out.pareto() {
+        println!(
+            "    u{:<3} {:>9} cycles  {:.3} ms  {:.2} W",
+            p.point.tile.unroll,
+            p.window_cycles,
+            p.window_s * 1e3,
+            p.power_w
+        );
+    }
+
+    // --- 4. Join the fleet: graph families place like any GRU board. ---
+    let mut models: Vec<_> = heterogeneous_fleet(4, 32)
+        .into_iter()
+        .map(|b| InstanceSpec::new(b).model(64, 3, 1, 45))
+        .collect();
+    let sindy = GraphInstanceSpec::new(
+        "sindy-pynq-z2",
+        out.chosen_lowered.clone(),
+        Device::pynq_z2(),
+        Link::ten_gbe(),
+    );
+    models.push(sindy.model(64, 3, 1, 45));
+    let idle = vec![0usize; models.len()];
+    println!("\nmixed fleet, idle placement order (lowest estimated completion first):");
+    for i in rank(&models, &idle) {
+        let m = &models[i];
+        println!(
+            "  {:<18} cost {:.3} ms  (window {:.3} ms, transfer {:.3} ms, budget {})",
+            m.name,
+            placement_cost(m, 0) * 1e3,
+            m.window_s * 1e3,
+            m.transfer_s * 1e3,
+            m.max_outstanding
+        );
+    }
+}

@@ -1,6 +1,88 @@
-//! Bench: regenerate paper Table 7 (16-way DSP/LUT stage-mapping sweep).
+//! Bench: regenerate paper Table 7 (16-way DSP/LUT stage-mapping sweep)
+//! and emit the machine-readable `BENCH_table7.json` artifact.
+//!
+//! Every stage-map variant is the *concurrent* GRU design with one of
+//! the 16 per-stage fabric bindings (`fpga::graph::all_stage_maps`,
+//! Table 7 row order), lowered through the dataflow-graph IR. All gated
+//! values are cycle/resource-model derived, so `ci/check_bench_table7.py`
+//! is machine-independent; the one timed row just tracks sweep cost.
+use merinda::fpga::graph::stage_map_name;
+use merinda::fpga::gru_accel::{all_stage_maps, AccelReport, GruAccel, GruAccelConfig};
 use merinda::report::experiments::table7;
+use merinda::util::bench::{artifact_path, Bench, BenchJson};
+use merinda::util::json::Json;
+
+fn sweep() -> Vec<AccelReport> {
+    all_stage_maps()
+        .into_iter()
+        .map(|m| GruAccel::new(GruAccelConfig::concurrent().with_stage_map(m)).report())
+        .collect()
+}
 
 fn main() {
     println!("{}", table7().to_text());
+
+    let reports = sweep();
+    assert_eq!(reports.len(), 16, "Table 7 is the full 2^4 binding sweep");
+
+    let mut out = BenchJson::new("table7");
+    let bench = Bench::default();
+    out.record(&bench.run("stage_map_sweep_16", sweep));
+
+    out.section(
+        "workload",
+        Json::obj(vec![
+            ("base_config", Json::str("concurrent")),
+            ("mappings", Json::num(reports.len() as f64)),
+            ("device", Json::str("pynq-z2")),
+        ]),
+    );
+    out.section(
+        "mappings",
+        Json::arr(
+            reports
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("config", Json::str(r.name.clone())),
+                        ("cycles", Json::num(r.cycles as f64)),
+                        ("interval", Json::num(r.interval as f64)),
+                        ("lut", Json::num(r.resources.lut as f64)),
+                        ("ff", Json::num(r.resources.ff as f64)),
+                        ("dsp", Json::num(r.resources.dsp as f64)),
+                        ("bram18", Json::num(r.resources.bram18 as f64)),
+                        ("worst_stage_ii", Json::num(r.worst_stage_ii as f64)),
+                        ("fits_pynq", Json::Bool(r.fits_pynq)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+
+    let best = reports.iter().map(|r| r.cycles).min().unwrap();
+    let worst = reports.iter().map(|r| r.cycles).max().unwrap();
+    let fitting = reports.iter().filter(|r| r.fits_pynq).count();
+    out.section(
+        "summary",
+        Json::obj(vec![
+            ("best_cycles", Json::num(best as f64)),
+            ("worst_cycles", Json::num(worst as f64)),
+            ("cycle_spread", Json::num(worst as f64 / best as f64)),
+            ("fitting", Json::num(fitting as f64)),
+        ]),
+    );
+
+    let path = artifact_path("BENCH_table7.json");
+    out.write(&path).expect("write BENCH_table7.json");
+    println!(
+        "\nwrote {} ({} mappings, {} fit the PYNQ-Z2, cycle spread {:.3}x)",
+        path.display(),
+        reports.len(),
+        fitting,
+        worst as f64 / best as f64
+    );
+
+    for (m, r) in all_stage_maps().into_iter().zip(&reports) {
+        assert_eq!(r.name, stage_map_name(&m), "artifact rows follow Table 7 order");
+    }
 }

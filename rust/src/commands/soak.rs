@@ -180,9 +180,7 @@ fn fleet_models(fleet: usize, window: usize, tuned: bool) -> Result<Vec<Instance
         };
         let mut tuned_boards = Vec::with_capacity(roster.len());
         for board in &roster {
-            let out = tune_board(board, &opts).ok_or_else(|| {
-                Error::config(format!("tuner found no feasible design for {:?}", board.name))
-            })?;
+            let out = tune_board(board, &opts)?;
             if out.chosen.window_cycles > out.default_window_cycles {
                 return Err(Error::numeric(format!(
                     "tuned config regressed {}: {} > {} cycles/window",

@@ -99,10 +99,9 @@ pub fn run(args: &Args) -> Result<()> {
 
     let mut outcomes = Vec::new();
     for board in &roster {
-        let out = tune_board(board, &opts).ok_or_else(|| {
-            Error::config(format!("no feasible design point for board {:?}", board.name))
-        })?;
-        outcomes.push(out);
+        // `tune_board` now explains infeasibility itself (per-candidate
+        // rejection tally in the `Error::Config` message).
+        outcomes.push(tune_board(board, &opts)?);
     }
 
     let mut boards_json = BTreeMap::new();

@@ -31,6 +31,12 @@
 //! design instead (`merinda soak --tuned`), so the fleet is scheduled
 //! at the speeds the hardware can actually reach.
 //!
+//! Nor need instances be GRU boards at all: any model family expressed
+//! in the dataflow-graph IR (`fpga::graph`) joins the fleet through
+//! [`GraphInstanceSpec`], whose cost model derives from the lowered
+//! graph's own cycle law — the placer sees one [`InstanceModel`]
+//! vocabulary regardless of what hardware description produced it.
+//!
 //! # Example
 //!
 //! ```
@@ -47,8 +53,9 @@
 //! assert_eq!(choose(&models, &idle), Some(2));
 //! ```
 
-use crate::fpga::cluster::BoardSpec;
-use crate::fpga::resources::Resources;
+use crate::fpga::cluster::{BoardSpec, Link};
+use crate::fpga::graph::LoweredGraph;
+use crate::fpga::resources::{Device, Resources};
 use crate::fpga::tuner::TunedConfig;
 
 // The per-window link payload model is shared with the hardware layer
@@ -142,6 +149,71 @@ fn derived_outstanding(b: &BoardSpec, used: &Resources, payload: u64, fits: bool
         return 0;
     }
     b.device.double_buffer_windows(used, payload).clamp(1, 512)
+}
+
+/// An accelerator instance defined by a *lowered dataflow graph*
+/// (`fpga::graph`) rather than a GRU `BoardSpec` — how other model
+/// families (e.g. the SINDy head, `fpga::sindy_accel`) enter the fleet.
+/// The cost model derives entirely from the graph's own cycle law
+/// ([`LoweredGraph::window_timing`]), the named device and the host
+/// link, so a heterogeneous fleet can mix families and the placer never
+/// knows the difference.
+#[derive(Clone, Debug)]
+pub struct GraphInstanceSpec {
+    pub name: String,
+    pub lowered: LoweredGraph,
+    pub device: Device,
+    pub link: Link,
+}
+
+impl GraphInstanceSpec {
+    pub fn new(
+        name: impl Into<String>,
+        lowered: LoweredGraph,
+        device: Device,
+        link: Link,
+    ) -> GraphInstanceSpec {
+        GraphInstanceSpec {
+            name: name.into(),
+            lowered,
+            device,
+            link,
+        }
+    }
+
+    /// Derive the static placement model — same shape and semantics as
+    /// [`InstanceSpec::model`], with the lowered graph standing in for
+    /// the board's hand-built schedule.
+    pub fn model(
+        &self,
+        window: usize,
+        xdim: usize,
+        udim: usize,
+        theta_len: usize,
+    ) -> InstanceModel {
+        let timing = self.lowered.window_timing(window as u64);
+        let payload = window_payload_bytes(&self.lowered.act_fmt, window, xdim, udim, theta_len);
+        let fits = self.device.fits(&self.lowered.resources);
+        let max_outstanding = if fits {
+            self.device
+                .double_buffer_windows(&self.lowered.resources, payload)
+                .clamp(1, 512)
+        } else {
+            0
+        };
+        InstanceModel {
+            name: self.name.clone(),
+            window_cycles: timing.total_cycles,
+            service_cycles: timing.interval * window as u64,
+            window_s: self.device.cycles_to_seconds(timing.total_cycles),
+            service_s: self.device.cycles_to_seconds(timing.interval * window as u64),
+            transfer_s: self.link.transfer_s(payload),
+            payload_bytes: payload,
+            max_outstanding,
+            resources: self.lowered.resources,
+            fits,
+        }
+    }
 }
 
 /// The static, per-instance inputs to the placement cost function,
@@ -466,6 +538,26 @@ mod tests {
             let c_ship = placement_cost(&shipped, 0);
             assert!(c_tuned <= c_ship + 1e-12, "{}: {c_tuned} vs {c_ship}", tuned.name);
         }
+    }
+
+    #[test]
+    fn graph_instance_joins_the_fleet() {
+        use crate::fpga::graph::{lower, Target};
+        use crate::fpga::sindy_accel::SindyAccelConfig;
+        let low = lower(&SindyAccelConfig::concurrent().graph(), &Target::default()).unwrap();
+        let spec = GraphInstanceSpec::new("sindy-pynq", low, Device::pynq_z2(), Link::ten_gbe());
+        let m = spec.model(64, 3, 1, 45);
+        assert!(m.fits, "concurrent SINDy design must fit the PYNQ-Z2");
+        assert!(m.max_outstanding >= 1 && m.payload_bytes > 0);
+        assert!(m.window_s > 0.0 && m.service_s > 0.0 && m.transfer_s > 0.0);
+        // Mixed fleet: the graph-backed instance ranks alongside the
+        // GRU boards with no special casing.
+        let mut ms = models();
+        ms.push(m);
+        let idle = vec![0usize; ms.len()];
+        let order = rank(&ms, &idle);
+        assert_eq!(order.len(), ms.len());
+        assert!(order.contains(&(ms.len() - 1)));
     }
 
     #[test]

@@ -1,0 +1,964 @@
+//! Dataflow-graph IR for accelerator lowering: one graph description,
+//! every model family.
+//!
+//! Before this module, every accelerator was hand-described:
+//! `gru_accel` and `ltc_accel` each built their own stage schedule and
+//! report arithmetic, and adding a model family meant re-deriving
+//! stages, BRAM tiling and adder-mix choices by hand. Here the
+//! description is lifted into a small IR — [`Op`] nodes (matvec,
+//! elementwise, nonlinearity, reduction) carrying exactly the
+//! annotations the HLS scheduler consumes (trip count, UNROLL lanes,
+//! MAC/elementwise/activation counts, [`Binding`] to DSP or LUT fabric,
+//! BRAM tile footprints via [`BankedArray`]), [`Edge`]s between them
+//! (element volume, DATAFLOW FIFO depth, DDR spill round trips) and
+//! explicit [`Transfer`] records for DDR/BRAM movement the compute
+//! graph itself does not express — and [`lower`] compiles any
+//! well-formed graph through the existing cycle model
+//! ([`schedule`](super::hls::schedule) per op, then the streaming or
+//! iterative interval law), [`Device::fits`], and the calibrated
+//! [`power`](super::power) model.
+//!
+//! The GRU and LTC accelerators are graph *instances* now
+//! (`GruAccel::graph` / `LtcAccel::graph`); their lowered schedules are
+//! asserted cycle-exact against the original hand-built ones across the
+//! whole tuner search space (`rust/tests/graph.rs`), and new families —
+//! the SINDy library + dense-head accelerator in
+//! [`sindy_accel`](super::sindy_accel) — need zero scheduling code.
+//!
+//! # Example
+//!
+//! ```
+//! use merinda::fpga::graph::{lower, Graph, Op, Target};
+//! use merinda::fpga::bram::BankedArray;
+//! use merinda::fpga::fixedpoint::FixedFormat;
+//!
+//! // Two-stage streaming accelerator: a matvec feeding an elementwise op.
+//! let fmt = FixedFormat::q8_8();
+//! let mut g = Graph::new("demo", fmt, fmt).streaming(true, false).with_io_elems(20);
+//! let mv = g.push_op(
+//!     Op::matvec("mv", 256)
+//!         .unrolled(8)
+//!         .with_array(BankedArray::new("w", 256, 16), 1, 0),
+//! );
+//! let ew = g.push_op(Op::elementwise("scale", 16, 2).unrolled(4));
+//! g.connect(mv, ew, 16, 1);
+//!
+//! let low = lower(&g, &Target::default()).unwrap();
+//! assert_eq!(low.stages.len(), 2);
+//! assert!(low.cycles > 0 && low.interval <= low.cycles);
+//! assert!(low.fits);
+//! ```
+
+use super::bram::{BankedArray, BramFifo};
+use super::fixedpoint::FixedFormat;
+use super::hls::{schedule, ArrayAccess, Binding, LoopNest, ScheduledLoop};
+use super::interconnect::DdrModel;
+use super::pipeline::{Pipeline, PipelineTiming, Stage};
+use super::power::{Activity, PowerModel};
+use super::resources::{Device, Resources};
+use crate::util::error::{Error, Result};
+
+/// Stage-to-fabric mapping, Table 7's configuration axis. Four-slot by
+/// convention (the paper's four-stage designs); graphs with a different
+/// op count index it positionally and ignore the tail.
+pub type StageMap = [Binding; 4];
+
+/// Short config name like `s1D_s2L_s3L_s4D`.
+pub fn stage_map_name(m: &StageMap) -> String {
+    format!(
+        "s1{}_s2{}_s3{}_s4{}",
+        m[0].letter(),
+        m[1].letter(),
+        m[2].letter(),
+        m[3].letter()
+    )
+}
+
+/// All 16 stage mappings in Table 7's row order.
+pub fn all_stage_maps() -> Vec<StageMap> {
+    let b = [Binding::Dsp, Binding::Lut];
+    let mut out = Vec::with_capacity(16);
+    for s1 in b {
+        for s2 in b {
+            for s3 in b {
+                for s4 in b {
+                    out.push([s1, s2, s3, s4]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The adder-mix axis the tuner sweeps by default: all-DSP, the paper's
+/// concurrent D/L/L/D mix, and all LUT-fabric (carry-chain) arithmetic.
+pub fn default_stage_maps() -> Vec<StageMap> {
+    let d = Binding::Dsp;
+    let l = Binding::Lut;
+    vec![[d, d, d, d], [d, l, l, d], [l, l, l, l]]
+}
+
+/// What kind of work an op performs — decides which annotations
+/// [`Graph::validate`] requires it to carry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Dense multiply–accumulate (matvec / GEMM tile): `macs_per_iter > 0`.
+    MatVec,
+    /// Pointwise arithmetic (adds, muls, divides): `elementwise_per_iter > 0`.
+    Elementwise,
+    /// Activation-table lookups (sigmoid/tanh/ReLU in LUT RAM):
+    /// `activations_per_iter > 0`.
+    Nonlinearity,
+    /// Accumulating reduction (sum/argmax tree): MAC or elementwise work.
+    Reduction,
+}
+
+/// One compute node: the per-op resource/latency annotations the HLS
+/// scheduler consumes. [`Op::loop_nest`] reconstructs the exact
+/// [`LoopNest`] the hand-built accelerators used to build inline, so
+/// lowering a graph schedules precisely what the original code did.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub name: String,
+    pub kind: OpKind,
+    /// Trip count of the innermost loop before unrolling.
+    pub trip: u64,
+    /// UNROLL factor (parallel lanes).
+    pub unroll: u32,
+    /// MAC operations per original iteration.
+    pub macs_per_iter: u32,
+    /// Non-MAC elementwise ops per original iteration.
+    pub elementwise_per_iter: u32,
+    /// Activation-table lookups per original iteration.
+    pub activations_per_iter: u32,
+    /// DSP or LUT fabric for the arithmetic.
+    pub binding: Binding,
+    /// BRAM tiles the op touches, with per-iteration read/write counts
+    /// (these drive the II law).
+    pub arrays: Vec<ArrayAccess>,
+    /// Fixed-point word width (drives LUT fabric cost).
+    pub word_bits: u32,
+}
+
+impl Op {
+    fn with_kind(name: impl Into<String>, kind: OpKind, trip: u64) -> Op {
+        Op {
+            name: name.into(),
+            kind,
+            trip,
+            unroll: 1,
+            macs_per_iter: 0,
+            elementwise_per_iter: 0,
+            activations_per_iter: 0,
+            binding: Binding::Dsp,
+            arrays: Vec::new(),
+            word_bits: 16,
+        }
+    }
+
+    /// A dense MAC op (one MAC per iteration by default).
+    pub fn matvec(name: impl Into<String>, trip: u64) -> Op {
+        let mut op = Op::with_kind(name, OpKind::MatVec, trip);
+        op.macs_per_iter = 1;
+        op
+    }
+
+    /// A pointwise op performing `per_iter` elementwise operations per
+    /// iteration.
+    pub fn elementwise(name: impl Into<String>, trip: u64, per_iter: u32) -> Op {
+        let mut op = Op::with_kind(name, OpKind::Elementwise, trip);
+        op.elementwise_per_iter = per_iter;
+        op
+    }
+
+    /// An activation-lookup op (one table lookup per iteration by default).
+    pub fn nonlinearity(name: impl Into<String>, trip: u64) -> Op {
+        let mut op = Op::with_kind(name, OpKind::Nonlinearity, trip);
+        op.activations_per_iter = 1;
+        op
+    }
+
+    /// An accumulating reduction (one MAC per iteration by default).
+    pub fn reduction(name: impl Into<String>, trip: u64) -> Op {
+        let mut op = Op::with_kind(name, OpKind::Reduction, trip);
+        op.macs_per_iter = 1;
+        op
+    }
+
+    pub fn unrolled(mut self, u: u32) -> Op {
+        self.unroll = u.max(1);
+        self
+    }
+
+    pub fn macs(mut self, m: u32) -> Op {
+        self.macs_per_iter = m;
+        self
+    }
+
+    pub fn elementwise_ops(mut self, e: u32) -> Op {
+        self.elementwise_per_iter = e;
+        self
+    }
+
+    pub fn activations(mut self, a: u32) -> Op {
+        self.activations_per_iter = a;
+        self
+    }
+
+    pub fn bound(mut self, b: Binding) -> Op {
+        self.binding = b;
+        self
+    }
+
+    pub fn with_array(mut self, array: BankedArray, reads: u32, writes: u32) -> Op {
+        self.arrays.push(ArrayAccess {
+            array,
+            reads_per_iter: reads,
+            writes_per_iter: writes,
+        });
+        self
+    }
+
+    /// The exact [`LoopNest`] this op schedules as.
+    pub fn loop_nest(&self) -> LoopNest {
+        LoopNest {
+            name: self.name.clone(),
+            trip: self.trip,
+            unroll: self.unroll,
+            macs_per_iter: self.macs_per_iter,
+            elementwise_per_iter: self.elementwise_per_iter,
+            activations_per_iter: self.activations_per_iter,
+            arrays: self.arrays.clone(),
+            binding: self.binding,
+            word_bits: self.word_bits,
+        }
+    }
+}
+
+/// A producer→consumer dependency between two ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Edge {
+    /// Producing op (index into `Graph::ops`).
+    pub from: usize,
+    /// Consuming op.
+    pub to: usize,
+    /// Elements carried per item.
+    pub elems: u64,
+    /// DDR round trips when the graph spills intermediates
+    /// (`ddr_spill`): each trip moves `elems` activation words out to
+    /// DDR (and a trip of 2 covers out-and-back). Zero for values that
+    /// stay in registers.
+    pub round_trips: u64,
+    /// DATAFLOW FIFO depth override in elements (`None` → the graph's
+    /// default `fifo_depth`).
+    pub fifo_depth: Option<u32>,
+}
+
+/// How items flow through the graph — decides the interval law lowering
+/// applies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// Feed-forward pipeline (the GRU shape): ops overlap under
+    /// DATAFLOW, intermediates ride FIFOs or spill to DDR.
+    Streaming,
+    /// Iterative solver (the LTC shape): every op runs sequentially
+    /// `iterations` times per item with a host-sync round trip per
+    /// iteration; nothing overlaps across iterations.
+    Iterative {
+        iterations: u32,
+        host_sync_cycles: u64,
+    },
+}
+
+/// Explicit DDR traffic per item (streaming) or per iteration
+/// (iterative) that the op/edge structure does not already imply —
+/// the IR's "DDR/BRAM transfer" vocabulary. Element counts are scaled
+/// by the graph's activation word width at lowering time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transfer {
+    /// `transactions` scattered DMA transactions of `elems_each`
+    /// activation words (uncoalesced round trips — each pays the full
+    /// DDR latency).
+    Scattered { transactions: u64, elems_each: u64 },
+    /// One coalesced burst of `elems` activation words.
+    Burst { elems: u64 },
+}
+
+/// A dataflow-graph accelerator description. Build with
+/// [`Graph::new`] + [`Graph::push_op`] + [`Graph::connect`], then
+/// compile with [`lower`].
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    /// Fixed-point activation format (FIFO widths, DDR word size).
+    pub act_fmt: FixedFormat,
+    /// Fixed-point weight format (BRAM tile widths).
+    pub weight_fmt: FixedFormat,
+    /// DATAFLOW on/off (op overlap; streaming profile only).
+    pub dataflow: bool,
+    /// Spill edge intermediates to DDR (pre-optimization baseline
+    /// behaviour; off when DATAFLOW FIFOs carry them).
+    pub ddr_spill: bool,
+    /// Default inter-op FIFO depth in elements.
+    pub fifo_depth: u32,
+    /// Input + output activation words crossing DDR per item.
+    pub io_elems: u64,
+    pub profile: Profile,
+    pub ops: Vec<Op>,
+    pub edges: Vec<Edge>,
+    /// Extra DDR traffic (per iteration under [`Profile::Iterative`]).
+    pub transfers: Vec<Transfer>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>, act_fmt: FixedFormat, weight_fmt: FixedFormat) -> Graph {
+        Graph {
+            name: name.into(),
+            act_fmt,
+            weight_fmt,
+            dataflow: false,
+            ddr_spill: false,
+            fifo_depth: 256,
+            io_elems: 0,
+            profile: Profile::Streaming,
+            ops: Vec::new(),
+            edges: Vec::new(),
+            transfers: Vec::new(),
+        }
+    }
+
+    /// Streaming profile with the DATAFLOW / DDR-spill axes set.
+    pub fn streaming(mut self, dataflow: bool, ddr_spill: bool) -> Graph {
+        self.profile = Profile::Streaming;
+        self.dataflow = dataflow;
+        self.ddr_spill = ddr_spill;
+        self
+    }
+
+    /// Iterative-solver profile: ops run sequentially `iterations` times
+    /// per item, paying `host_sync_cycles` of PS-side control per
+    /// iteration.
+    pub fn iterative(mut self, iterations: u32, host_sync_cycles: u64) -> Graph {
+        self.profile = Profile::Iterative {
+            iterations,
+            host_sync_cycles,
+        };
+        self.dataflow = false;
+        self.ddr_spill = false;
+        self
+    }
+
+    pub fn with_fifo_depth(mut self, depth: u32) -> Graph {
+        self.fifo_depth = depth;
+        self
+    }
+
+    pub fn with_io_elems(mut self, elems: u64) -> Graph {
+        self.io_elems = elems;
+        self
+    }
+
+    /// Append an op, returning its index for [`Graph::connect`].
+    pub fn push_op(&mut self, op: Op) -> usize {
+        self.ops.push(op);
+        self.ops.len() - 1
+    }
+
+    /// Connect producer `from` to consumer `to` with `elems` elements
+    /// per item and `round_trips` DDR round trips when spilled.
+    pub fn connect(&mut self, from: usize, to: usize, elems: u64, round_trips: u64) {
+        self.edges.push(Edge {
+            from,
+            to,
+            elems,
+            round_trips,
+            fifo_depth: None,
+        });
+    }
+
+    /// Record explicit DDR traffic (see [`Transfer`]).
+    pub fn transfer(&mut self, t: Transfer) {
+        self.transfers.push(t);
+    }
+
+    /// Well-formedness: at least one op, positive trip counts,
+    /// kind-consistent annotations, in-range edges, acyclicity, and a
+    /// positive iteration count for iterative profiles. Every failure is
+    /// a typed [`Error::Config`] naming the offending node.
+    pub fn validate(&self) -> Result<()> {
+        if self.ops.is_empty() {
+            return Err(Error::config(format!("graph {:?} has no ops", self.name)));
+        }
+        for op in &self.ops {
+            if op.trip == 0 {
+                return Err(Error::config(format!(
+                    "graph {:?}: op {:?} has a zero trip count",
+                    self.name, op.name
+                )));
+            }
+            let complete = match op.kind {
+                OpKind::MatVec => op.macs_per_iter > 0,
+                OpKind::Elementwise => op.elementwise_per_iter > 0,
+                OpKind::Nonlinearity => op.activations_per_iter > 0,
+                OpKind::Reduction => op.macs_per_iter > 0 || op.elementwise_per_iter > 0,
+            };
+            if !complete {
+                return Err(Error::config(format!(
+                    "graph {:?}: {:?} op {:?} is missing its {} annotation",
+                    self.name,
+                    op.kind,
+                    op.name,
+                    match op.kind {
+                        OpKind::MatVec => "MAC-count",
+                        OpKind::Elementwise => "elementwise-count",
+                        OpKind::Nonlinearity => "activation-count",
+                        OpKind::Reduction => "MAC- or elementwise-count",
+                    }
+                )));
+            }
+        }
+        let n = self.ops.len();
+        for e in &self.edges {
+            if e.from >= n || e.to >= n {
+                return Err(Error::config(format!(
+                    "graph {:?}: edge {}→{} references a missing op (have {n})",
+                    self.name, e.from, e.to
+                )));
+            }
+        }
+        // Kahn-style elimination; anything left has a cycle through it.
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.to] += 1;
+        }
+        let mut done = vec![false; n];
+        let mut visited = 0;
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for i in 0..n {
+                if done[i] || indeg[i] != 0 {
+                    continue;
+                }
+                done[i] = true;
+                visited += 1;
+                progressed = true;
+                for e in &self.edges {
+                    if e.from == i {
+                        indeg[e.to] -= 1;
+                    }
+                }
+            }
+        }
+        if visited < n {
+            let stuck: Vec<&str> = self
+                .ops
+                .iter()
+                .zip(&done)
+                .filter(|(_, d)| !**d)
+                .map(|(op, _)| op.name.as_str())
+                .collect();
+            return Err(Error::config(format!(
+                "graph {:?} has a dependency cycle through {:?}",
+                self.name, stuck
+            )));
+        }
+        if let Profile::Iterative { iterations, .. } = self.profile {
+            if iterations == 0 {
+                return Err(Error::config(format!(
+                    "graph {:?}: iterative profile needs iterations >= 1",
+                    self.name
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The hardware a graph lowers onto: a device plus the shared DDR and
+/// power calibrations. [`Target::default`] is the PYNQ-Z2 with the
+/// models every hand-built accelerator used.
+#[derive(Clone, Copy, Debug)]
+pub struct Target {
+    pub device: Device,
+    pub ddr: DdrModel,
+    pub power: PowerModel,
+}
+
+impl Default for Target {
+    fn default() -> Self {
+        Target::for_device(Device::pynq_z2())
+    }
+}
+
+impl Target {
+    pub fn for_device(device: Device) -> Target {
+        Target {
+            device,
+            ddr: DdrModel::default(),
+            power: PowerModel::default(),
+        }
+    }
+}
+
+/// A compiled graph: per-op schedules plus the whole-design cycle,
+/// resource, power and fit verdicts — everything the tuner, the
+/// placement cost model and the report tables consume.
+#[derive(Clone, Debug)]
+pub struct LoweredGraph {
+    pub name: String,
+    /// One scheduled loop per op, in op order.
+    pub stages: Vec<ScheduledLoop>,
+    /// End-to-end latency for one item.
+    pub cycles: u64,
+    /// Steady-state spacing between outputs.
+    pub interval: u64,
+    pub resources: Resources,
+    pub power_w: f64,
+    pub energy_per_output_j: f64,
+    /// Worst achieved initiation interval across ops.
+    pub worst_stage_ii: u32,
+    /// Design fits the target device.
+    pub fits: bool,
+    /// DDR cycles charged per item (streaming) or per iteration sweep
+    /// (iterative).
+    pub ddr_cycles_per_item: u64,
+    pub dataflow: bool,
+    pub profile: Profile,
+    pub act_fmt: FixedFormat,
+    /// Timing-closure derate for this design (multiple of the base
+    /// clock it can close at) — see [`graph_clock_scale`].
+    pub clock_scale: f64,
+}
+
+impl LoweredGraph {
+    /// The scheduled ops as a stage pipeline, one item per graph
+    /// invocation: each stage's service time is both its per-item
+    /// initiation interval and its latency.
+    pub fn stage_pipeline(&self) -> Pipeline {
+        let stages: Vec<Stage> = self
+            .stages
+            .iter()
+            .map(|s| Stage::new(s.name.clone(), s.cycles as u32, s.cycles as u32))
+            .collect();
+        Pipeline::new(stages)
+    }
+
+    /// Cycle-model timing for a `seq`-item window: DATAFLOW graphs
+    /// overlap items through the stage pipeline, sequential streaming
+    /// graphs drain it per item, and iterative graphs pay the full
+    /// interval (compute + DDR + host sync) every item.
+    pub fn window_timing(&self, seq: u64) -> PipelineTiming {
+        match self.profile {
+            Profile::Streaming => {
+                let p = self.stage_pipeline();
+                if self.dataflow {
+                    p.analyze(seq)
+                } else {
+                    p.analyze_sequential(seq)
+                }
+            }
+            Profile::Iterative { .. } => PipelineTiming {
+                total_cycles: seq * self.interval,
+                interval: self.interval,
+                fill_latency: self.interval,
+            },
+        }
+    }
+
+    /// Report-style window cycles: fill then steady state for streaming
+    /// graphs, `seq · interval` for iterative ones.
+    pub fn window_cycles(&self, seq: u64) -> u64 {
+        if seq == 0 {
+            return 0;
+        }
+        match self.profile {
+            Profile::Streaming => self.cycles + (seq - 1) * self.interval,
+            Profile::Iterative { .. } => seq * self.interval,
+        }
+    }
+}
+
+/// Highest clock, as a multiple of the target's base clock, a graph can
+/// close timing at in this model: carry-chain multipliers on any MAC op
+/// cap the clock at base rate, ≥64-lane unroll does the same, and the
+/// widest designs (96 lanes or 4-wide BRAM reshape) derate below it.
+/// On GRU graphs this agrees exactly with
+/// [`tuner::max_clock_scale`](super::tuner::max_clock_scale).
+pub fn graph_clock_scale(g: &Graph) -> f64 {
+    let lut_macs = g
+        .ops
+        .iter()
+        .any(|o| o.macs_per_iter > 0 && o.binding == Binding::Lut);
+    let max_unroll = g.ops.iter().map(|o| o.unroll).max().unwrap_or(1);
+    let max_reshape = g
+        .ops
+        .iter()
+        .flat_map(|o| o.arrays.iter())
+        .map(|a| a.array.reshape)
+        .max()
+        .unwrap_or(1);
+    let mut scale: f64 = 1.15;
+    if lut_macs || max_unroll >= 64 {
+        scale = 1.0;
+    }
+    if max_unroll >= 96 || max_reshape >= 4 {
+        scale = 0.9;
+    }
+    scale
+}
+
+/// Compile a graph onto a target: validate, schedule every op through
+/// the HLS scheduler, then apply the profile's interval law, charge the
+/// DDR traffic, sum resources (FIFOs under DATAFLOW, the DMA/AXI
+/// overhead every design pays) and price power/energy.
+///
+/// # Example
+///
+/// ```
+/// use merinda::fpga::graph::{lower, Target};
+/// use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+///
+/// // Lowering the GRU graph reproduces the hand-built report exactly.
+/// let accel = GruAccel::new(GruAccelConfig::concurrent());
+/// let low = lower(&accel.graph(), &Target::default()).unwrap();
+/// let report = accel.report();
+/// assert_eq!(low.cycles, report.cycles);
+/// assert_eq!(low.interval, report.interval);
+/// assert_eq!(low.resources, report.resources);
+/// ```
+pub fn lower(g: &Graph, t: &Target) -> Result<LoweredGraph> {
+    g.validate()?;
+    let stages: Vec<ScheduledLoop> = g.ops.iter().map(|op| schedule(&op.loop_nest())).collect();
+    match g.profile {
+        Profile::Streaming => lower_streaming(g, t, stages),
+        Profile::Iterative {
+            iterations,
+            host_sync_cycles,
+        } => lower_iterative(g, t, stages, iterations, host_sync_cycles),
+    }
+}
+
+/// Streaming interval law — the GRU report arithmetic, generalized to
+/// N ops: DATAFLOW overlaps ops (interval = slowest op + exposed DDR),
+/// sequential graphs sum services; spilled edges turn into scattered
+/// DMA transactions, FIFO-carried edges into BRAM FIFOs.
+fn lower_streaming(g: &Graph, t: &Target, stages: Vec<ScheduledLoop>) -> Result<LoweredGraph> {
+    let services: Vec<u64> = stages.iter().map(|s| s.cycles).collect();
+    let sum_service: u64 = services.iter().sum();
+    let max_service: u64 = *services.iter().max().expect("validated: >=1 op");
+
+    // Per-item DDR traffic: I/O always; spilled edge intermediates too.
+    let wb = (g.act_fmt.word_bits as u64).div_ceil(8);
+    let io_bytes = g.io_elems * wb;
+    let spill_bytes: u64 = g.edges.iter().map(|e| e.elems * e.round_trips * wb).sum();
+    let extra_bytes: u64 = g
+        .transfers
+        .iter()
+        .map(|tr| match *tr {
+            Transfer::Scattered {
+                transactions,
+                elems_each,
+            } => transactions * elems_each * wb,
+            Transfer::Burst { elems } => elems * wb,
+        })
+        .sum();
+    let ddr_bytes = if g.ddr_spill {
+        io_bytes + spill_bytes + extra_bytes
+    } else {
+        io_bytes + extra_bytes
+    };
+
+    let n_ops = stages.len() as u64;
+    let ddr_cycles = if g.ddr_spill {
+        // Scattered small transactions between ops.
+        t.ddr.scattered_cycles(n_ops, ddr_bytes / n_ops)
+    } else {
+        // Streaming: amortized burst, overlapped with compute under
+        // DATAFLOW; only the non-overlapped remainder shows up.
+        let burst = t.ddr.burst_cycles(ddr_bytes);
+        if g.dataflow {
+            burst.saturating_sub(max_service).min(burst / 4)
+        } else {
+            burst
+        }
+    };
+
+    let (cycles, interval) = if g.dataflow {
+        let fifo_skew = 2 * (stages.len() as u64 - 1); // FIFO handshakes
+        (
+            sum_service + fifo_skew + ddr_cycles,
+            max_service + ddr_cycles,
+        )
+    } else {
+        let per_item = sum_service + ddr_cycles;
+        (per_item, per_item)
+    };
+
+    // Resources: ops + FIFOs (dataflow) + DMA engine + AXI.
+    let mut res = Resources::ZERO;
+    for s in &stages {
+        res += s.resources;
+    }
+    if g.dataflow {
+        for e in &g.edges {
+            let depth = e.fifo_depth.unwrap_or(g.fifo_depth) as u64;
+            let name = format!("fifo_{}_{}", e.from, e.to);
+            res += BramFifo::for_format(name, depth, g.act_fmt).resources();
+        }
+    }
+    // DMA + AXI crossbar + control.
+    res += Resources::new(1_800, 2_400, 0, 2);
+
+    // Activity: a stalled pipeline (II>1 or sequential ops) toggles
+    // compute less but hammers DDR more.
+    let worst_ii = stages.iter().map(|s| s.ii).max().expect("validated: >=1 op");
+    let busy = if g.dataflow {
+        max_service as f64 / interval.max(1) as f64
+    } else {
+        // Each op active only its share of the item time.
+        sum_service as f64 / (stages.len() as f64 * interval.max(1) as f64)
+    };
+    let act = Activity {
+        dsp: busy / worst_ii as f64,
+        lut: 0.35 + 0.25 * busy,
+        bram: (0.4 + 0.5 * busy).min(1.0),
+        ddr: (ddr_cycles as f64 / interval.max(1) as f64).min(1.0)
+            + if g.ddr_spill { 0.55 } else { 0.15 },
+    };
+    let act = Activity {
+        ddr: act.ddr.min(1.0),
+        ..act
+    };
+
+    let power_w = t.power.watts(&res, &act);
+    let energy = t
+        .power
+        .energy_per_output_j(&res, &act, interval, t.device.clock_mhz);
+
+    Ok(LoweredGraph {
+        name: g.name.clone(),
+        cycles,
+        interval,
+        resources: res,
+        power_w,
+        energy_per_output_j: energy,
+        worst_stage_ii: worst_ii,
+        fits: t.device.fits(&res),
+        ddr_cycles_per_item: ddr_cycles,
+        dataflow: g.dataflow,
+        profile: g.profile,
+        act_fmt: g.act_fmt,
+        clock_scale: graph_clock_scale(g),
+        stages,
+    })
+}
+
+/// Iterative interval law — the LTC report arithmetic, generalized: all
+/// ops run back-to-back `iterations` times per item, each iteration
+/// paying the graph's [`Transfer`] traffic plus the host-sync round
+/// trip. Nothing overlaps.
+fn lower_iterative(
+    g: &Graph,
+    t: &Target,
+    stages: Vec<ScheduledLoop>,
+    iterations: u32,
+    host_sync_cycles: u64,
+) -> Result<LoweredGraph> {
+    let sweep_cycles: u64 = stages.iter().map(|s| s.cycles).sum();
+    let mut sweep_res = Resources::ZERO;
+    for s in &stages {
+        sweep_res += s.resources;
+    }
+    let cycles = sweep_cycles * iterations as u64;
+
+    let wb = (g.act_fmt.word_bits as u64).div_ceil(8);
+    let mut ddr_per_iter = 0u64;
+    for tr in &g.transfers {
+        ddr_per_iter += match *tr {
+            Transfer::Scattered {
+                transactions,
+                elems_each,
+            } => t.ddr.scattered_cycles(transactions, elems_each * wb),
+            Transfer::Burst { elems } => t.ddr.burst_cycles(elems * wb),
+        };
+    }
+    let interval = cycles + iterations as u64 * (ddr_per_iter + host_sync_cycles);
+
+    // The same engine is reused across iterations; add the solver
+    // sequencing FSM + buffers and the DMA/AXI overhead.
+    let mut res = sweep_res;
+    res += Resources::new(9_000, 18_000, 4, 2);
+    res += Resources::new(1_800, 2_400, 0, 2);
+
+    let worst_ii = stages.iter().map(|s| s.ii).max().expect("validated: >=1 op");
+    let busy = cycles as f64 / interval.max(1) as f64;
+    let act = Activity {
+        dsp: 0.75 * busy,
+        lut: 0.35 + 0.3 * busy,
+        bram: 0.5,
+        ddr: (1.0 - busy).clamp(0.3, 1.0),
+    };
+    let power_w = t.power.watts(&res, &act);
+    let energy = t
+        .power
+        .energy_per_output_j(&res, &act, interval, t.device.clock_mhz);
+
+    Ok(LoweredGraph {
+        name: g.name.clone(),
+        cycles,
+        interval,
+        resources: res,
+        power_w,
+        energy_per_output_j: energy,
+        worst_stage_ii: worst_ii,
+        fits: t.device.fits(&res),
+        ddr_cycles_per_item: ddr_per_iter,
+        dataflow: false,
+        profile: g.profile,
+        act_fmt: g.act_fmt,
+        clock_scale: graph_clock_scale(g),
+        stages,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::gru_accel::{GruAccel, GruAccelConfig};
+    use crate::fpga::tuner::max_clock_scale;
+
+    fn tiny(dataflow: bool) -> Graph {
+        let fmt = FixedFormat::q8_8();
+        let mut g = Graph::new("tiny", fmt, fmt)
+            .streaming(dataflow, false)
+            .with_io_elems(8);
+        let a = g.push_op(
+            Op::matvec("mv", 256)
+                .unrolled(8)
+                .with_array(BankedArray::new("w", 256, 16), 1, 0),
+        );
+        let b = g.push_op(Op::elementwise("ew", 16, 2).unrolled(4));
+        g.connect(a, b, 16, 1);
+        g
+    }
+
+    #[test]
+    fn valid_graph_lowers() {
+        let low = lower(&tiny(true), &Target::default()).unwrap();
+        assert_eq!(low.stages.len(), 2);
+        assert!(low.cycles > 0);
+        assert!(low.interval <= low.cycles);
+        assert!(low.fits);
+        assert!(low.power_w > 0.0 && low.energy_per_output_j > 0.0);
+    }
+
+    #[test]
+    fn empty_graph_rejected() {
+        let fmt = FixedFormat::q8_8();
+        let g = Graph::new("empty", fmt, fmt);
+        assert!(matches!(g.validate(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn zero_trip_rejected() {
+        let fmt = FixedFormat::q8_8();
+        let mut g = Graph::new("zt", fmt, fmt);
+        g.push_op(Op::matvec("mv", 0));
+        let err = g.validate().unwrap_err();
+        assert!(format!("{err:?}").contains("zero trip"));
+    }
+
+    #[test]
+    fn annotation_completeness_enforced() {
+        let mut g = tiny(true);
+        g.ops[0].macs_per_iter = 0; // MatVec op without MACs
+        assert!(matches!(g.validate(), Err(Error::Config(_))));
+        let mut g = tiny(true);
+        g.ops[1].elementwise_per_iter = 0;
+        assert!(matches!(g.validate(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let mut g = tiny(true);
+        g.connect(1, 0, 16, 1); // back edge: 0→1→0
+        let err = g.validate().unwrap_err();
+        assert!(format!("{err:?}").contains("cycle"));
+    }
+
+    #[test]
+    fn self_loop_rejected() {
+        let mut g = tiny(true);
+        g.connect(0, 0, 4, 1);
+        assert!(matches!(g.validate(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn out_of_range_edge_rejected() {
+        let mut g = tiny(true);
+        g.connect(0, 9, 4, 1);
+        let err = g.validate().unwrap_err();
+        assert!(format!("{err:?}").contains("missing op"));
+    }
+
+    #[test]
+    fn iterative_zero_iterations_rejected() {
+        let fmt = FixedFormat::q8_8();
+        let mut g = Graph::new("it", fmt, fmt).iterative(0, 100);
+        g.push_op(Op::matvec("mv", 64));
+        assert!(matches!(g.validate(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn dataflow_adds_one_fifo_per_edge() {
+        let df = lower(&tiny(true), &Target::default()).unwrap();
+        let seq = lower(&tiny(false), &Target::default()).unwrap();
+        // One edge → one BRAM FIFO (256 × 16 bits < one BRAM18).
+        assert_eq!(df.resources.bram18, seq.resources.bram18 + 1);
+    }
+
+    #[test]
+    fn sixteen_stage_maps_in_table7_order() {
+        let maps = all_stage_maps();
+        assert_eq!(maps.len(), 16);
+        assert_eq!(stage_map_name(&maps[0]), "s1D_s2D_s3D_s4D");
+        assert_eq!(stage_map_name(&maps[15]), "s1L_s2L_s3L_s4L");
+        assert_eq!(default_stage_maps().len(), 3);
+    }
+
+    #[test]
+    fn clock_scale_matches_gru_timing_model() {
+        // graph_clock_scale on a GRU graph must agree with the tuner's
+        // config-level closure model for every shipped config and the
+        // derate-triggering corners.
+        let mut cases = vec![
+            GruAccelConfig::gru_baseline(),
+            GruAccelConfig::concurrent(),
+            GruAccelConfig::bram_optimal(),
+            GruAccelConfig::concurrent().with_stage_map([Binding::Lut; 4]),
+        ];
+        let mut wide = GruAccelConfig::base();
+        wide.unroll = 64;
+        cases.push(wide);
+        for cfg in cases {
+            let g = GruAccel::new(cfg.clone()).graph();
+            assert_eq!(
+                graph_clock_scale(&g),
+                max_clock_scale(&cfg),
+                "{}",
+                stage_map_name(&cfg.stage_map)
+            );
+        }
+    }
+
+    #[test]
+    fn window_timing_profiles() {
+        let df = lower(&tiny(true), &Target::default()).unwrap();
+        let services: Vec<u64> = df.stages.iter().map(|s| s.cycles).collect();
+        let t = df.window_timing(100);
+        assert_eq!(t.interval, *services.iter().max().unwrap());
+        assert_eq!(df.window_cycles(0), 0);
+        assert_eq!(df.window_cycles(5), df.cycles + 4 * df.interval);
+    }
+}

@@ -15,46 +15,21 @@
 //! * `cycles`   — end-to-end latency for one GRU step (pipeline fill).
 //! * `interval` — steady-state spacing between outputs on a long stream.
 
-use super::bram::{BankedArray, BramFifo, Partition};
+use super::bram::{BankedArray, Partition};
 use super::fixedpoint::FixedFormat;
+use super::graph::{lower, Graph, LoweredGraph, Op, Target};
 use super::hls::{schedule, Binding, LoopNest, ScheduledLoop};
 use super::interconnect::DdrModel;
 use super::lut::{Activation, ActivationTable};
-use super::pipeline::{Pipeline, Stage};
-use super::power::{Activity, PowerModel};
+use super::pipeline::Pipeline;
+use super::power::PowerModel;
 use super::resources::{Device, Resources};
 use crate::mr::gru::GruParams;
 use crate::mr::linalg;
 
-/// Stage-to-fabric mapping, Table 7's configuration axis.
-pub type StageMap = [Binding; 4];
-
-/// Short config name like `s1D_s2L_s3L_s4D`.
-pub fn stage_map_name(m: &StageMap) -> String {
-    format!(
-        "s1{}_s2{}_s3{}_s4{}",
-        m[0].letter(),
-        m[1].letter(),
-        m[2].letter(),
-        m[3].letter()
-    )
-}
-
-/// All 16 stage mappings in Table 7's row order.
-pub fn all_stage_maps() -> Vec<StageMap> {
-    let b = [Binding::Dsp, Binding::Lut];
-    let mut out = Vec::with_capacity(16);
-    for s1 in b {
-        for s2 in b {
-            for s3 in b {
-                for s4 in b {
-                    out.push([s1, s2, s3, s4]);
-                }
-            }
-        }
-    }
-    out
-}
+// The stage-map vocabulary lives in the graph IR now; re-exported here
+// so existing `fpga::gru_accel::{...}` imports keep working.
+pub use super::graph::{all_stage_maps, stage_map_name, StageMap};
 
 /// GRU accelerator configuration.
 #[derive(Clone, Debug)]
@@ -295,119 +270,102 @@ impl GruAccel {
         vec![s1, s2, s3, s4]
     }
 
+    /// The four-stage pipeline of Fig. 6 as a dataflow graph: the same
+    /// ops, arrays and annotations [`GruAccel::stages`] schedules by
+    /// hand, expressed in the IR so [`lower`] (and through it the tuner
+    /// and placement) can compile it. `rust/tests/graph.rs` asserts the
+    /// lowered schedule cycle-exact against `stages()` across the whole
+    /// tuner search space.
+    pub fn graph(&self) -> Graph {
+        let c = &self.cfg;
+        let h = c.hidden as u64;
+        let mut g = Graph::new(stage_map_name(&c.stage_map), c.act_fmt, c.weight_fmt)
+            .streaming(c.dataflow, c.ddr_spill)
+            .with_fifo_depth(c.fifo_depth)
+            .with_io_elems((c.input + c.hidden) as u64);
+
+        // Stage 1: gate affines. One weight read per MAC lane per cycle.
+        let w_elems = (c.input * 3 * c.hidden + c.hidden * 2 * c.hidden) as u64;
+        let s1 = g.push_op(
+            Op::matvec("s1_gate_affine", c.stage1_macs())
+                .unrolled(c.unroll)
+                .bound(c.stage_map[0])
+                .with_array(self.weight_array("gate_weights", w_elems), 1, 0),
+        );
+
+        // Stage 2: sigmoid(r), sigmoid(z) lookups + reset modulation r∘h.
+        let act_lanes = c.unroll.min(2 * c.hidden as u32);
+        let mut s2_op = Op::nonlinearity("s2_sigmoid", 2 * h)
+            .unrolled(act_lanes)
+            .elementwise_ops(1)
+            .bound(c.stage_map[1]);
+        if !c.dataflow {
+            s2_op = s2_op.with_array(self.weight_array("h_prev", h).reshaped(c.reshape), 1, 0);
+        }
+        let s2 = g.push_op(s2_op);
+
+        // Stage 3: candidate (r∘h)·Un + tanh.
+        let s3 = g.push_op(
+            Op::matvec("s3_candidate", c.stage3_macs())
+                .unrolled(c.unroll)
+                .activations(1)
+                .bound(c.stage_map[2])
+                .with_array(self.weight_array("Un", h * h), 1, 0),
+        );
+
+        // Stage 4: interpolation h' = (1−z)∘n + z∘h.
+        let mut s4_op = Op::elementwise("s4_interp", h, 3)
+            .unrolled(c.unroll.min(c.hidden as u32))
+            .bound(c.stage_map[3]);
+        if !c.dataflow {
+            s4_op = s4_op.with_array(self.weight_array("z_gate", h), 2, 1);
+        }
+        let s4 = g.push_op(s4_op);
+
+        // Edge volumes carry the DDR-spill accounting: 3H gate
+        // pre-activations out + back (r_pre/z_pre/h_pre), then the r/z/n
+        // intermediates one way.
+        g.connect(s1, s2, 3 * h, 2);
+        g.connect(s2, s3, 2 * h, 1);
+        g.connect(s3, s4, h, 1);
+        g
+    }
+
+    fn target(&self) -> Target {
+        Target {
+            device: self.device,
+            ddr: self.ddr,
+            power: self.power,
+        }
+    }
+
+    /// The graph compiled for this accelerator's target.
+    fn lowered(&self) -> LoweredGraph {
+        lower(&self.graph(), &self.target()).expect("GRU graph is well-formed by construction")
+    }
+
     /// The four scheduled stages as a DATAFLOW stage pipeline, one item
     /// per GRU step: each stage's service time (its internal loop drain)
     /// is both its per-item initiation interval and its latency. Shared
     /// by the quantized serving backend's cycle report and the `cycles`
     /// bench so the two can never diverge.
     pub fn stage_pipeline(&self) -> Pipeline {
-        let stages: Vec<Stage> = self
-            .stages()
-            .iter()
-            .map(|s| Stage::new(s.name.clone(), s.cycles as u32, s.cycles as u32))
-            .collect();
-        Pipeline::new(stages)
+        self.lowered().stage_pipeline()
     }
 
-    /// Per-item DDR traffic in bytes (input + output always; intermediates
-    /// too when `ddr_spill`).
-    fn ddr_bytes_per_item(&self) -> u64 {
-        let c = &self.cfg;
-        let wb = (c.act_fmt.word_bits as u64).div_ceil(8);
-        let io = (c.input as u64 + c.hidden as u64) * wb;
-        if c.ddr_spill {
-            // 3H gate pre-activations out + back, r/z/n intermediates.
-            io + (3 * c.hidden as u64) * 2 * wb + (3 * c.hidden as u64) * wb
-        } else {
-            io
-        }
-    }
-
-    /// Structural report for this configuration.
+    /// Structural report for this configuration, derived by lowering
+    /// [`GruAccel::graph`] through the shared graph compiler.
     pub fn report(&self) -> AccelReport {
-        let stages = self.stages();
-        let c = &self.cfg;
-
-        // Per-item service time of each stage (its internal loop drain).
-        let services: Vec<u64> = stages.iter().map(|s| s.cycles).collect();
-        let sum_service: u64 = services.iter().sum();
-        let max_service: u64 = *services.iter().max().unwrap();
-
-        // DDR cost per item.
-        let ddr_cycles = if c.ddr_spill {
-            // Scattered small transactions between stages.
-            self.ddr
-                .scattered_cycles(4, self.ddr_bytes_per_item() / 4)
-        } else {
-            // Streaming: amortized burst, overlapped with compute under
-            // DATAFLOW; only the non-overlapped remainder shows up.
-            let burst = self.ddr.burst_cycles(self.ddr_bytes_per_item());
-            if c.dataflow {
-                burst.saturating_sub(max_service).min(burst / 4)
-            } else {
-                burst
-            }
-        };
-
-        let (cycles, interval) = if c.dataflow {
-            let fifo_skew = 2 * (stages.len() as u64 - 1); // FIFO handshakes
-            (
-                sum_service + fifo_skew + ddr_cycles,
-                max_service + ddr_cycles,
-            )
-        } else {
-            let per_item = sum_service + ddr_cycles;
-            (per_item, per_item)
-        };
-
-        // Resources: stages + FIFOs (dataflow) + DMA engine + AXI.
-        let mut res = Resources::ZERO;
-        for s in &stages {
-            res += s.resources;
-        }
-        if c.dataflow {
-            for name in ["r_pre", "z_pre", "h_pre"] {
-                res += BramFifo::for_format(name, c.fifo_depth as u64, c.act_fmt).resources();
-            }
-        }
-        // DMA + AXI crossbar + control.
-        res += Resources::new(1_800, 2_400, 0, 2);
-
-        // Activity: a stalled pipeline (II>1 or sequential stages) toggles
-        // compute less but hammers DDR more.
-        let worst_ii = stages.iter().map(|s| s.ii).max().unwrap();
-        let busy = if c.dataflow {
-            max_service as f64 / interval.max(1) as f64
-        } else {
-            // Each stage active only its share of the item time.
-            sum_service as f64 / (4.0 * interval.max(1) as f64)
-        };
-        let act = Activity {
-            dsp: busy / worst_ii as f64,
-            lut: 0.35 + 0.25 * busy,
-            bram: (0.4 + 0.5 * busy).min(1.0),
-            ddr: (ddr_cycles as f64 / interval.max(1) as f64).min(1.0)
-                + if c.ddr_spill { 0.55 } else { 0.15 },
-        };
-        let act = Activity {
-            ddr: act.ddr.min(1.0),
-            ..act
-        };
-
-        let power_w = self.power.watts(&res, &act);
-        let energy = self
-            .power
-            .energy_per_output_j(&res, &act, interval, self.device.clock_mhz);
-
+        let low = self.lowered();
         AccelReport {
-            name: stage_map_name(&c.stage_map),
-            cycles,
-            interval,
-            resources: res,
-            power_w,
-            energy_per_output_j: energy,
-            worst_stage_ii: worst_ii,
-            fits_pynq: self.device.fits(&res),
+            name: low.name,
+            cycles: low.cycles,
+            interval: low.interval,
+            resources: low.resources,
+            power_w: low.power_w,
+            energy_per_output_j: low.energy_per_output_j,
+            worst_stage_ii: low.worst_stage_ii,
+            fits_pynq: low.fits,
         }
     }
 

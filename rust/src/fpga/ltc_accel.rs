@@ -11,10 +11,11 @@
 
 use super::bram::BankedArray;
 use super::fixedpoint::FixedFormat;
-use super::hls::{schedule, Binding, LoopNest};
+use super::graph::{lower, Graph, Op, Target, Transfer};
+use super::hls::Binding;
 use super::interconnect::DdrModel;
 use super::lut::{Activation, ActivationTable};
-use super::power::{Activity, PowerModel};
+use super::power::PowerModel;
 use super::resources::{Device, Resources};
 use crate::mr::ltc::LtcParams;
 
@@ -80,9 +81,13 @@ impl LtcAccel {
         }
     }
 
-    /// One solver sub-step: f = σ(Wx + Uh + b), then the fused update
-    /// h ← (h + dt·f∘A) / (1 + dt·(1/τ + f)).
+    /// One solver sub-step scheduled by hand: f = σ(Wx + Uh + b), then the
+    /// fused update h ← (h + dt·f∘A) / (1 + dt·(1/τ + f)). Retained as the
+    /// equivalence oracle for the graph lowering
+    /// (`graph_lowering_matches_hand_built_substeps`).
+    #[cfg(test)]
     fn substep_cycles(&self) -> (u64, Resources) {
+        use super::hls::{schedule, LoopNest};
         let c = &self.cfg;
         let h = c.hidden as u64;
         let macs = (c.input * c.hidden + c.hidden * c.hidden) as u64;
@@ -114,54 +119,66 @@ impl LtcAccel {
         )
     }
 
-    pub fn report(&self) -> LtcReport {
+    /// The iterative solver as a dataflow graph: one matvec op feeding the
+    /// fused-update op, run `solver_steps` times per item under the
+    /// [`Profile::Iterative`](super::graph::Profile) law, with the
+    /// per-sub-step costs the feed-forward GRU design simply does not
+    /// have —
+    ///  (a) state out + state in as scattered DMA transactions and the
+    ///      adaptive-coefficient reload as a burst (online coefficients
+    ///      defeat prefetch/caching);
+    ///  (b) a PS-side solver-control round trip — the adaptive step
+    ///      size/convergence check runs on the ARM core, an AXI-Lite
+    ///      poll + interrupt costing ~5 µs ≈ 865 cycles at 173 MHz.
+    /// This is the paper's §1 complaint ("iterative dependencies,
+    /// kernel-launch overheads, high data-movement latency") in cycles.
+    pub fn graph(&self) -> Graph {
         let c = &self.cfg;
-        let (sub_cycles, sub_res) = self.substep_cycles();
+        let h = c.hidden as u64;
+        let macs = (c.input * c.hidden + c.hidden * c.hidden) as u64;
+        let mut g =
+            Graph::new("ltc_solver", c.act_fmt, c.weight_fmt).iterative(c.solver_steps, 865);
+        let mac = g.push_op(
+            Op::matvec("ltc_affine", macs)
+                .unrolled(c.unroll)
+                .bound(Binding::Dsp)
+                .with_array(BankedArray::new("ltc_w", macs, c.weight_fmt.word_bits), 1, 0),
+        );
+        // Sigmoid lookups + fused update: 1 div ≈ 8 elementwise ops (no
+        // hard divider; iterative reciprocal on DSP).
+        let upd = g.push_op(
+            Op::nonlinearity("ltc_update", h)
+                .unrolled(c.unroll.min(c.hidden as u32))
+                .elementwise_ops(10)
+                .bound(Binding::Dsp)
+                .with_array(BankedArray::new("ltc_state", h, c.act_fmt.word_bits), 3, 1),
+        );
+        g.connect(mac, upd, h, 1);
+        g.transfer(Transfer::Scattered {
+            transactions: 2,
+            elems_each: h,
+        });
+        g.transfer(Transfer::Burst {
+            elems: (c.input + c.hidden) as u64 * c.hidden as u64,
+        });
+        g
+    }
 
-        // Sequential sub-steps; latency = solver_steps × substep.
-        let cycles = sub_cycles * c.solver_steps as u64;
-
-        // Interval: no cross-item overlap, plus per-sub-step costs that the
-        // feed-forward GRU design simply does not have:
-        //  (a) state out + state in + adaptive-coefficient reload as three
-        //      scattered DMA transactions (online coefficients defeat
-        //      prefetch/caching);
-        //  (b) a PS-side solver-control round trip — the adaptive step
-        //      size/convergence check runs on the ARM core, an AXI-Lite
-        //      poll + interrupt costing ~5 µs ≈ 865 cycles at 173 MHz.
-        // This is the paper's §1 complaint ("iterative dependencies,
-        // kernel-launch overheads, high data-movement latency") in cycles.
-        let wb = (c.act_fmt.word_bits as u64).div_ceil(8);
-        let state_bytes = (c.hidden as u64) * wb;
-        let coef_bytes = ((c.input + c.hidden) as u64 * c.hidden as u64) * wb;
-        let ddr_per_substep = self.ddr.scattered_cycles(2, state_bytes)
-            + self.ddr.burst_cycles(coef_bytes);
-        let ps_sync = 865u64;
-        let interval = cycles + c.solver_steps as u64 * (ddr_per_substep + ps_sync);
-
-        // Resources shared across sub-steps (same engine reused) + solver
-        // sequencing control.
-        let mut res = sub_res;
-        res += Resources::new(9_000, 18_000, 4, 2); // solver FSM + buffers
-        res += Resources::new(1_800, 2_400, 0, 2); // DMA + AXI
-
-        let busy = cycles as f64 / interval.max(1) as f64;
-        let act = Activity {
-            dsp: 0.75 * busy,
-            lut: 0.35 + 0.3 * busy,
-            bram: 0.5,
-            ddr: (1.0 - busy).clamp(0.3, 1.0),
+    /// Structural report, derived by lowering [`LtcAccel::graph`] through
+    /// the shared graph compiler.
+    pub fn report(&self) -> LtcReport {
+        let target = Target {
+            device: self.device,
+            ddr: self.ddr,
+            power: self.power,
         };
-        let power_w = self.power.watts(&res, &act);
-        let energy = self
-            .power
-            .energy_per_output_j(&res, &act, interval, self.device.clock_mhz);
+        let low = lower(&self.graph(), &target).expect("LTC graph is well-formed by construction");
         LtcReport {
-            cycles,
-            interval,
-            resources: res,
-            power_w,
-            energy_per_output_j: energy,
+            cycles: low.cycles,
+            interval: low.interval,
+            resources: low.resources,
+            power_w: low.power_w,
+            energy_per_output_j: low.energy_per_output_j,
         }
     }
 
@@ -255,6 +272,30 @@ mod tests {
         let ratio = ltc.window_cycles(64) as f64 / gru.window_cycles(64) as f64;
         assert!(ratio >= 4.0, "ltc/gru window cycle ratio {ratio}");
         assert_eq!(ltc.window_cycles(64), 64 * ltc.interval);
+    }
+
+    #[test]
+    fn graph_lowering_matches_hand_built_substeps() {
+        // The graph instance must reproduce the hand-built sub-step
+        // schedule exactly: same per-sweep cycles and resources, and the
+        // same solver-steps × sub-step latency law.
+        for unroll in [4, 8, 32] {
+            let mut cfg = LtcAccelConfig::base();
+            cfg.unroll = unroll;
+            let accel = LtcAccel::new(cfg);
+            let (sub_cycles, sub_res) = accel.substep_cycles();
+            let low = lower(&accel.graph(), &Target::default()).unwrap();
+            let sweep: u64 = low.stages.iter().map(|s| s.cycles).sum();
+            let sweep_res = low
+                .stages
+                .iter()
+                .fold(Resources::ZERO, |a, s| a + s.resources);
+            assert_eq!(sweep, sub_cycles, "unroll {unroll}");
+            assert_eq!(sweep_res, sub_res, "unroll {unroll}");
+            assert_eq!(low.cycles, sub_cycles * accel.cfg.solver_steps as u64);
+            let r = accel.report();
+            assert_eq!((r.cycles, r.interval), (low.cycles, low.interval));
+        }
     }
 
     #[test]

@@ -6,21 +6,28 @@
 //! fabric arithmetic (`lut`), fixed-point numerics (`fixedpoint`), the
 //! DATAFLOW stage pipeline (`pipeline`), an HLS-style scheduler (`hls`),
 //! DDR/AXI transfers (`interconnect`), the calibrated power model
-//! (`power`), device capacities (`resources`), and the assembled GRU and
-//! LTC accelerators (`gru_accel`, `ltc_accel`) behind Tables 7–8 / Fig. 8.
-//! `cluster` scales out: identical-board towers plus the heterogeneous
-//! [`BoardSpec`](cluster::BoardSpec) fleet the resource-aware placement
-//! layer (`coordinator::placement`) schedules onto. `tuner` closes the
-//! loop: it sweeps the design space (tiling × format × adder mix ×
-//! clock) per board, scores candidates with the cycle/resource/power
-//! models, and hands the chosen [`TunedConfig`](tuner::TunedConfig) to
-//! placement — the models stop describing designs and start picking
-//! them.
+//! (`power`), and device capacities (`resources`). Accelerators are not
+//! hand-assembled on top of those primitives any more: `graph` is a
+//! dataflow-graph IR (ops + edges + per-op resource/latency annotations)
+//! whose lowering pass compiles any well-formed graph through the cycle,
+//! fit and power models — the GRU and LTC accelerators behind Tables 7–8
+//! / Fig. 8 (`gru_accel`, `ltc_accel`) are graph instances, and the
+//! SINDy library + dense-head family (`sindy_accel`) is described by its
+//! graph alone. `cluster` scales out: identical-board towers plus the
+//! heterogeneous [`BoardSpec`](cluster::BoardSpec) fleet the
+//! resource-aware placement layer (`coordinator::placement`) schedules
+//! onto. `tuner` closes the loop: it sweeps the design space (tiling ×
+//! format × adder mix × clock) per board — or per graph family via
+//! [`tune_graph`](tuner::tune_graph) — scores candidates with the
+//! cycle/resource/power models, and hands the chosen
+//! [`TunedConfig`](tuner::TunedConfig) to placement — the models stop
+//! describing designs and start picking them.
 
 pub mod bram;
 pub mod cluster;
 pub mod dsp;
 pub mod fixedpoint;
+pub mod graph;
 pub mod gru_accel;
 pub mod hls;
 pub mod interconnect;
@@ -29,4 +36,8 @@ pub mod ltc_accel;
 pub mod pipeline;
 pub mod power;
 pub mod resources;
+pub mod sindy_accel;
 pub mod tuner;
+
+// The stage-map vocabulary, shared by every four-op family.
+pub use graph::{all_stage_maps, default_stage_maps, stage_map_name, StageMap};

@@ -1,0 +1,284 @@
+//! SINDy library-evaluation + dense-head accelerator — the first model
+//! family described *only* as a graph.
+//!
+//! The datapath streams one `[x | u]` sample per item through four ops:
+//! incremental polynomial-library evaluation (each monomial is one
+//! multiply on top of a lower-degree monomial — `mr::library`'s chain),
+//! the dense head's first GEMM layer, the ReLU, and the second GEMM
+//! layer producing the Θ coefficient estimates (`mr::dense`). Unlike
+//! `gru_accel` and `ltc_accel` there is **no hand-built stage schedule
+//! anywhere in this module**: [`SindyAccelConfig::graph`] is the whole
+//! hardware description, and cycle counts, resources, power, tuning and
+//! placement all come from [`lower`](super::graph::lower),
+//! [`tune_graph`](super::tuner::tune_graph) and
+//! `coordinator::placement::GraphInstanceSpec` — the payoff the graph
+//! IR exists for.
+//!
+//! # Example
+//!
+//! ```
+//! use merinda::fpga::graph::{lower, Target};
+//! use merinda::fpga::sindy_accel::SindyAccelConfig;
+//!
+//! let low = lower(&SindyAccelConfig::concurrent().graph(), &Target::default()).unwrap();
+//! assert_eq!(low.stages.len(), 4);
+//! assert!(low.fits && low.interval <= low.cycles);
+//! ```
+
+use super::bram::{BankedArray, Partition};
+use super::fixedpoint::FixedFormat;
+use super::graph::{stage_map_name, Graph, Op, StageMap};
+use super::hls::Binding;
+use super::tuner::{DesignPoint, Tile};
+use crate::mr::library::library_size;
+
+/// SINDy-head accelerator configuration: model dims plus the same
+/// design axes the tuner sweeps for every family.
+#[derive(Clone, Debug)]
+pub struct SindyAccelConfig {
+    /// State rows per sample.
+    pub xdim: usize,
+    /// Input rows per sample.
+    pub udim: usize,
+    /// Polynomial library order.
+    pub order: u32,
+    /// Dense-head hidden units.
+    pub hidden: usize,
+    /// Θ coefficients produced per sample (`xdim ×` library terms).
+    pub output: usize,
+    /// UNROLL factor: parallel lanes per GEMM op.
+    pub unroll: u32,
+    /// ARRAY_PARTITION factor on the weight arrays.
+    pub banks: u32,
+    /// ARRAY_RESHAPE factor (wide words).
+    pub reshape: u32,
+    /// DATAFLOW on/off (op overlap).
+    pub dataflow: bool,
+    /// Spill intermediates to DDR between ops.
+    pub ddr_spill: bool,
+    /// Per-op fabric binding.
+    pub stage_map: StageMap,
+    /// Fixed-point activation format.
+    pub act_fmt: FixedFormat,
+    /// Fixed-point weight format.
+    pub weight_fmt: FixedFormat,
+    /// Inter-op FIFO depth (elements).
+    pub fifo_depth: u32,
+}
+
+impl SindyAccelConfig {
+    /// Canonical serving dims (3 states + 1 input, order-2 library → 15
+    /// terms, 45 Θ coefficients), sequential DDR-spill baseline.
+    pub fn base() -> SindyAccelConfig {
+        SindyAccelConfig {
+            xdim: 3,
+            udim: 1,
+            order: 2,
+            hidden: 16,
+            output: 45,
+            unroll: 8,
+            banks: 1,
+            reshape: 1,
+            dataflow: false,
+            ddr_spill: true,
+            stage_map: [Binding::Dsp; 4],
+            act_fmt: FixedFormat::new(16, 8),
+            weight_fmt: FixedFormat::new(16, 8),
+            fifo_depth: 256,
+        }
+    }
+
+    /// The DATAFLOW operating point: overlapped ops, FIFO-carried
+    /// intermediates, the library op on LUT fabric (it is all single
+    /// multiplies — no MAC chains to derate the clock).
+    pub fn concurrent() -> SindyAccelConfig {
+        SindyAccelConfig {
+            unroll: 32,
+            banks: 8,
+            dataflow: true,
+            ddr_spill: false,
+            stage_map: [Binding::Lut, Binding::Dsp, Binding::Lut, Binding::Dsp],
+            ..SindyAccelConfig::base()
+        }
+    }
+
+    /// Monomials in the candidate library: C(order + xdim + udim, xdim + udim).
+    pub fn library_terms(&self) -> u64 {
+        library_size(self.xdim + self.udim, self.order) as u64
+    }
+
+    /// Dense-head MAC volume per sample — by construction equal to
+    /// `mr::dense::DenseHead::macs()` for an unpruned head of the same
+    /// dims (asserted in this module's tests).
+    pub fn head_macs(&self) -> u64 {
+        let p = self.library_terms();
+        p * self.hidden as u64 + self.hidden as u64 * self.output as u64
+    }
+
+    /// This configuration's position on the shared tuner axes.
+    pub fn design_point(&self) -> DesignPoint {
+        DesignPoint {
+            tile: Tile::new(self.unroll, self.banks, self.reshape),
+            stage_map: self.stage_map,
+            act_fmt: self.act_fmt,
+            weight_fmt: self.weight_fmt,
+            dataflow: self.dataflow,
+        }
+    }
+
+    /// The same model dims at another design point (the tuner's
+    /// candidate-mutation rule: tile → unroll/banks/reshape, DATAFLOW
+    /// vs DDR-spill, adder mix, formats).
+    pub fn at_point(&self, p: &DesignPoint) -> SindyAccelConfig {
+        SindyAccelConfig {
+            unroll: p.tile.unroll,
+            banks: p.tile.banks,
+            reshape: p.tile.reshape,
+            dataflow: p.dataflow,
+            ddr_spill: !p.dataflow,
+            stage_map: p.stage_map,
+            act_fmt: p.act_fmt,
+            weight_fmt: p.weight_fmt,
+            ..self.clone()
+        }
+    }
+
+    /// The family closure [`tune_graph`](super::tuner::tune_graph)
+    /// sweeps: design point in, graph out.
+    pub fn family(&self) -> impl Fn(&DesignPoint) -> Graph + '_ {
+        |p: &DesignPoint| self.at_point(p).graph()
+    }
+
+    fn weight_array(&self, name: &str, elements: u64) -> BankedArray {
+        let mut a = BankedArray::new(name, elements, self.weight_fmt.word_bits);
+        if self.banks > 1 {
+            a = a.partitioned(Partition::Cyclic(self.banks));
+        }
+        if self.reshape > 1 {
+            a = a.reshaped(self.reshape);
+        }
+        a
+    }
+
+    /// The whole hardware description: four ops, three edges, nothing
+    /// scheduled by hand.
+    pub fn graph(&self) -> Graph {
+        let p = self.library_terms();
+        let h = self.hidden as u64;
+        let o = self.output as u64;
+        let mut g = Graph::new(
+            format!("sindy_{}", stage_map_name(&self.stage_map)),
+            self.act_fmt,
+            self.weight_fmt,
+        )
+        .streaming(self.dataflow, self.ddr_spill)
+        .with_fifo_depth(self.fifo_depth)
+        .with_io_elems((self.xdim + self.udim) as u64 + o);
+
+        // Op 1: incremental library evaluation — one multiply per
+        // monomial on top of an already-computed lower-degree monomial.
+        // Without DATAFLOW the φ vector sits in a shared BRAM buffer and
+        // the read-modify-write traffic competes for its ports.
+        let mut s1_op = Op::elementwise("s1_library", p, 1)
+            .unrolled(self.unroll.min(p as u32))
+            .bound(self.stage_map[0]);
+        if !self.dataflow {
+            s1_op = s1_op.with_array(BankedArray::new("phi", p, self.act_fmt.word_bits), 1, 1);
+        }
+        let s1 = g.push_op(s1_op);
+
+        // Op 2: dense-head layer 1 (φ → hidden GEMM).
+        let s2 = g.push_op(
+            Op::matvec("s2_head_l1", p * h)
+                .unrolled(self.unroll)
+                .bound(self.stage_map[1])
+                .with_array(self.weight_array("w1", p * h), 1, 0),
+        );
+
+        // Op 3: ReLU through the activation tables.
+        let s3 = g.push_op(
+            Op::nonlinearity("s3_relu", h)
+                .unrolled(self.unroll.min(self.hidden as u32))
+                .bound(self.stage_map[2]),
+        );
+
+        // Op 4: dense-head layer 2 (hidden → Θ GEMM).
+        let s4 = g.push_op(
+            Op::matvec("s4_head_l2", h * o)
+                .unrolled(self.unroll)
+                .bound(self.stage_map[3])
+                .with_array(self.weight_array("w2", h * o), 1, 0),
+        );
+
+        // φ out + back when spilled; hidden activations one way each.
+        g.connect(s1, s2, p, 2);
+        g.connect(s2, s3, h, 1);
+        g.connect(s3, s4, h, 1);
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::graph::{lower, Target};
+    use crate::mr::dense::DenseHead;
+    use crate::util::Prng;
+
+    #[test]
+    fn library_terms_match_mr_library() {
+        let cfg = SindyAccelConfig::base();
+        assert_eq!(cfg.library_terms(), 15); // C(2+4, 4)
+        assert_eq!(cfg.output as u64, cfg.xdim as u64 * cfg.library_terms());
+    }
+
+    #[test]
+    fn head_macs_match_dense_head_cost_model() {
+        let cfg = SindyAccelConfig::base();
+        let mut rng = Prng::new(11);
+        let head = DenseHead::random(
+            cfg.library_terms() as usize,
+            cfg.hidden,
+            cfg.output,
+            &mut rng,
+        );
+        assert_eq!(cfg.head_macs(), head.macs());
+    }
+
+    #[test]
+    fn graph_is_well_formed_and_concurrent_fits_pynq() {
+        for cfg in [SindyAccelConfig::base(), SindyAccelConfig::concurrent()] {
+            let g = cfg.graph();
+            g.validate().unwrap();
+            let low = lower(&g, &Target::default()).unwrap();
+            assert_eq!(low.stages.len(), 4);
+            assert!(low.cycles > 0 && low.interval > 0);
+        }
+        let conc = lower(&SindyAccelConfig::concurrent().graph(), &Target::default()).unwrap();
+        assert!(conc.fits, "{:?}", conc.resources);
+    }
+
+    #[test]
+    fn dataflow_beats_ddr_spill_baseline() {
+        let t = Target::default();
+        let base = lower(&SindyAccelConfig::base().graph(), &t).unwrap();
+        let conc = lower(&SindyAccelConfig::concurrent().graph(), &t).unwrap();
+        assert!(
+            conc.interval < base.interval,
+            "conc={} base={}",
+            conc.interval,
+            base.interval
+        );
+    }
+
+    #[test]
+    fn design_point_round_trips() {
+        let cfg = SindyAccelConfig::concurrent();
+        let p = cfg.design_point();
+        let back = cfg.at_point(&p);
+        assert_eq!(back.unroll, cfg.unroll);
+        assert_eq!(back.banks, cfg.banks);
+        assert_eq!(back.dataflow, cfg.dataflow);
+        assert_eq!(back.stage_map, cfg.stage_map);
+    }
+}

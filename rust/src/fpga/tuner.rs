@@ -21,6 +21,14 @@
 //! emits the gated `BENCH_tune.json`, and `merinda soak --tuned` runs
 //! the streaming fleet at the tuned operating points.
 //!
+//! The search is not GRU-specific: [`tune_graph`] runs the same sweep
+//! over *any* accelerator family expressed in the
+//! [`graph`](super::graph) IR — a closure maps each [`DesignPoint`]
+//! (tile × format × adder mix × DATAFLOW) to a graph, lowering scores
+//! it, and the selection/Pareto machinery is shared. [`tune_board`] is
+//! the GRU-family instance of that search, kept as the `BoardSpec`-level
+//! entry point the CLI and placement consume.
+//!
 //! # Example
 //!
 //! ```
@@ -30,7 +38,7 @@
 //! let fleet = heterogeneous_fleet(4, 32);
 //! let outcomes = tune_fleet(&fleet, &TunerOptions::default());
 //! // Every canonical board gets a fitting, never-slower configuration.
-//! for out in outcomes.into_iter().map(Option::unwrap) {
+//! for out in outcomes.into_iter().map(Result::unwrap) {
 //!     assert!(out.chosen.window_cycles <= out.default_window_cycles);
 //! }
 //! ```
@@ -39,10 +47,12 @@ use std::cmp::Ordering;
 
 use super::cluster::{window_payload_bytes, BoardSpec};
 use super::fixedpoint::FixedFormat;
-use super::gru_accel::{GruAccelConfig, StageMap};
+use super::graph::{lower, Graph, LoweredGraph, StageMap, Target};
+use super::gru_accel::GruAccelConfig;
 use super::hls::Binding;
 use super::power::energy_j;
 use super::resources::Resources;
+use crate::util::error::{Error, Result};
 
 /// One tiling preset: MAC lanes per stage plus the BRAM banking /
 /// reshaping that feeds them (the II law decides whether the lanes
@@ -101,13 +111,9 @@ pub fn default_tiles() -> Vec<Tile> {
     ]
 }
 
-/// The adder-mix axis: all-DSP, the paper's concurrent D/L/L/D mix, and
-/// all LUT-fabric (carry-chain) arithmetic.
-pub fn default_stage_maps() -> Vec<StageMap> {
-    let d = Binding::Dsp;
-    let l = Binding::Lut;
-    vec![[d, d, d, d], [d, l, l, d], [l, l, l, l]]
-}
+// The adder-mix axis lives with the rest of the stage-map vocabulary in
+// the graph IR; re-exported here so existing tuner imports keep working.
+pub use super::graph::default_stage_maps;
 
 /// Highest clock, as a multiple of the board's base clock, a design can
 /// close timing at in this model: carry-chain multipliers on the matvec
@@ -396,15 +402,61 @@ fn cmp_f64(a: f64, b: f64) -> Ordering {
     a.partial_cmp(&b).unwrap_or(Ordering::Equal)
 }
 
+/// Speed-then-power ordering over `(window_s, power_w)` keys (ties
+/// resolve toward lower power) — shared by the board-level and
+/// graph-level searches.
+fn cmp_speed_power_key(a: (f64, f64), b: (f64, f64)) -> Ordering {
+    cmp_f64(a.0, b.0).then(cmp_f64(a.1, b.1))
+}
+
 /// Speed-then-power ordering (ties resolve toward lower power).
 fn cmp_speed_power(a: &TuneCandidate, b: &TuneCandidate) -> Ordering {
-    let speed = cmp_f64(a.window_s, b.window_s);
-    speed.then(cmp_f64(a.power_w, b.power_w))
+    cmp_speed_power_key((a.window_s, a.power_w), (b.window_s, b.power_w))
+}
+
+/// Why a search came up empty: every constraint rejection counted
+/// separately, so the `Error::config` a dry search returns names the
+/// binding constraint instead of a silent absence.
+#[derive(Default)]
+struct FeasibilityTally {
+    evaluated: usize,
+    unfit: usize,
+    no_headroom: usize,
+    clock_fail: usize,
+    low_fidelity: usize,
+    over_power: usize,
+}
+
+impl FeasibilityTally {
+    fn add(&mut self, fits: bool, headroom: bool, clock: bool, fidelity: bool, power: bool) {
+        self.evaluated += 1;
+        self.unfit += usize::from(!fits);
+        self.no_headroom += usize::from(!headroom);
+        self.clock_fail += usize::from(!clock);
+        self.low_fidelity += usize::from(!fidelity);
+        self.over_power += usize::from(!power);
+    }
+
+    fn error(&self, name: &str) -> Error {
+        Error::config(format!(
+            "no feasible design point for {name}: {} candidates evaluated \
+             ({} over the fabric budget, {} without BRAM double-buffer headroom, \
+             {} failing timing closure, {} below the fidelity floor, \
+             {} over the power budget)",
+            self.evaluated,
+            self.unfit,
+            self.no_headroom,
+            self.clock_fail,
+            self.low_fidelity,
+            self.over_power
+        ))
+    }
 }
 
 /// Exhaustively sweep the design space for one board and pick its
-/// operating point. Returns `None` only when no design point satisfies
-/// every constraint (fit, BRAM double-buffer headroom, timing closure,
+/// operating point. Fails with a typed [`Error::Config`] — naming the
+/// binding constraint — only when no design point satisfies every
+/// constraint (fit, BRAM double-buffer headroom, timing closure,
 /// fidelity floor, optional power budget).
 ///
 /// The board's shipped configuration is always evaluated as a candidate;
@@ -426,7 +478,7 @@ fn cmp_speed_power(a: &TuneCandidate, b: &TuneCandidate) -> Ordering {
 /// assert!(out.chosen.board.cfg.dataflow);
 /// assert!(out.chosen.speedup_vs_default() > 1.0);
 /// ```
-pub fn tune_board(board: &BoardSpec, opts: &TunerOptions) -> Option<TuneOutcome> {
+pub fn tune_board(board: &BoardSpec, opts: &TunerOptions) -> Result<TuneOutcome> {
     assert!(opts.window > 0, "tuner needs a non-empty window");
     let default_timing = board.window_timing(opts.window as u64);
     let default_report = board.report();
@@ -475,8 +527,10 @@ pub fn tune_board(board: &BoardSpec, opts: &TunerOptions) -> Option<TuneOutcome>
 
     // Selection: fastest feasible point, no cycle regression vs the
     // shipped design (when that design is itself feasible).
+    let mut tally = FeasibilityTally::default();
     let mut chosen: Option<usize> = None;
     for (i, c) in candidates.iter().enumerate() {
+        tally.add(c.fits, c.headroom_ok, c.clock_ok, c.fidelity_ok, c.power_ok);
         if !c.feasible() {
             continue;
         }
@@ -491,7 +545,10 @@ pub fn tune_board(board: &BoardSpec, opts: &TunerOptions) -> Option<TuneOutcome>
             chosen = Some(i);
         }
     }
-    let chosen = chosen?;
+    let chosen = match chosen {
+        Some(i) => i,
+        None => return Err(tally.error(&board.name)),
+    };
 
     // Pareto front over (window_s, power_w) among all feasible points.
     let mut order: Vec<usize> = Vec::new();
@@ -526,7 +583,7 @@ pub fn tune_board(board: &BoardSpec, opts: &TunerOptions) -> Option<TuneOutcome>
         format: c.format,
         default_window_cycles: default_timing.total_cycles,
     };
-    Some(TuneOutcome {
+    Ok(TuneOutcome {
         board_name: board.name.clone(),
         evaluated: candidates.len(),
         feasible,
@@ -539,10 +596,304 @@ pub fn tune_board(board: &BoardSpec, opts: &TunerOptions) -> Option<TuneOutcome>
     })
 }
 
-/// Tune every board of a fleet independently (board order preserved;
-/// `None` marks a board with no feasible design point).
-pub fn tune_fleet(boards: &[BoardSpec], opts: &TunerOptions) -> Vec<Option<TuneOutcome>> {
+/// Tune every board of a fleet independently (board order preserved; an
+/// `Err` marks a board with no feasible design point, naming the
+/// binding constraint).
+pub fn tune_fleet(boards: &[BoardSpec], opts: &TunerOptions) -> Vec<Result<TuneOutcome>> {
     boards.iter().map(|b| tune_board(b, opts)).collect()
+}
+
+/// One point on the shared design axes every family sweep walks:
+/// everything a graph builder needs to materialize one candidate
+/// design. The GRU family maps it onto `GruAccelConfig`
+/// (tile → unroll/banks/reshape, `dataflow` → DATAFLOW vs DDR-spill);
+/// other families interpret the same axes for their own structure.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    /// Tiling (UNROLL lanes × BRAM banking × reshape).
+    pub tile: Tile,
+    /// Stage-to-fabric adder mix.
+    pub stage_map: StageMap,
+    /// Fixed-point activation format.
+    pub act_fmt: FixedFormat,
+    /// Fixed-point weight format.
+    pub weight_fmt: FixedFormat,
+    /// DATAFLOW on (FIFO-carried edges) vs off (DDR-spill baseline).
+    pub dataflow: bool,
+}
+
+/// One evaluated graph design point — the graph-family analogue of
+/// [`TuneCandidate`], carrying the [`DesignPoint`] instead of a
+/// `GruAccelConfig` and otherwise the same scores and per-constraint
+/// feasibility verdicts.
+#[derive(Clone, Debug)]
+pub struct GraphTuneCandidate {
+    /// The design point the graph was built from.
+    pub point: DesignPoint,
+    /// PL clock this point runs at (MHz).
+    pub clock_mhz: f64,
+    /// Cycle-model cycles for one recovery window.
+    pub window_cycles: u64,
+    /// Steady-state cycles between window outputs.
+    pub interval: u64,
+    /// `window_cycles` at `clock_mhz`, in seconds — the speed score.
+    pub window_s: f64,
+    /// Modeled power draw (W) — the second Pareto axis.
+    pub power_w: f64,
+    /// Energy for one full window (J).
+    pub energy_per_window_j: f64,
+    /// Fabric the design consumes.
+    pub resources: Resources,
+    /// Design fits the target device.
+    pub fits: bool,
+    /// Free BRAM can double-buffer at least one window payload.
+    pub headroom_ok: bool,
+    /// `clock_mhz` is within the design's timing-closure model.
+    pub clock_ok: bool,
+    /// Formats meet the fidelity floor (`min_frac_bits`).
+    pub fidelity_ok: bool,
+    /// Within the optional power budget.
+    pub power_ok: bool,
+    /// Concurrent windows the free BRAM double-buffers (capped at 512).
+    pub max_outstanding: usize,
+    /// Format preset name (`q8.8`, `q4.8`, `8bit`, `custom`).
+    pub format: &'static str,
+}
+
+impl GraphTuneCandidate {
+    /// All feasibility verdicts at once — the Pareto/selection filter.
+    pub fn feasible(&self) -> bool {
+        self.fits && self.headroom_ok && self.clock_ok && self.fidelity_ok && self.power_ok
+    }
+}
+
+/// Everything [`tune_graph`] learned about one accelerator family.
+#[derive(Clone, Debug)]
+pub struct GraphTuneOutcome {
+    /// Family name the search ran over.
+    pub family: String,
+    /// Design points evaluated (grid + the family default).
+    pub evaluated: usize,
+    /// How many of them were feasible.
+    pub feasible: usize,
+    /// Cycles per window of the family's default design point.
+    pub default_window_cycles: u64,
+    /// The selected operating point.
+    pub chosen: GraphTuneCandidate,
+    /// The chosen design compiled — hand this to
+    /// `coordinator::placement::GraphInstanceSpec` to derive a fleet
+    /// cost model for the family.
+    pub chosen_lowered: LoweredGraph,
+    pareto: Vec<GraphTuneCandidate>,
+}
+
+impl GraphTuneOutcome {
+    /// The feasible Pareto front over (window seconds, watts), fastest
+    /// first — same antichain contract as [`TuneOutcome::pareto`].
+    pub fn pareto(&self) -> std::slice::Iter<'_, GraphTuneCandidate> {
+        self.pareto.iter()
+    }
+}
+
+/// Score one lowered graph, emitting one candidate per clock — the
+/// graph-family analogue of [`evaluate`]. Timing comes from
+/// [`LoweredGraph::window_timing`], the same cycle law the placement
+/// cost model uses, and the timing-closure ceiling from the lowered
+/// graph's own `clock_scale` annotation.
+fn evaluate_graph_point(
+    point: &DesignPoint,
+    low: &LoweredGraph,
+    clocks: &[f64],
+    target: &Target,
+    opts: &TunerOptions,
+    format: &'static str,
+    out: &mut Vec<GraphTuneCandidate>,
+) {
+    let timing = low.window_timing(opts.window as u64);
+    let payload = window_payload_bytes(
+        &low.act_fmt,
+        opts.window,
+        opts.xdim,
+        opts.udim,
+        opts.theta_len,
+    );
+    let budget = target.device.double_buffer_windows(&low.resources, payload);
+    let fidelity_ok = point.act_fmt.frac_bits >= opts.min_frac_bits
+        && point.weight_fmt.frac_bits >= opts.min_frac_bits;
+    let power_ok = match opts.max_power_w {
+        Some(cap) => low.power_w <= cap,
+        None => true,
+    };
+    let max_clock = target.device.clock_mhz * low.clock_scale;
+    for &clock_mhz in clocks {
+        let device = target.device.with_clock(clock_mhz);
+        out.push(GraphTuneCandidate {
+            point: point.clone(),
+            clock_mhz,
+            window_cycles: timing.total_cycles,
+            interval: timing.interval,
+            window_s: device.cycles_to_seconds(timing.total_cycles),
+            power_w: low.power_w,
+            energy_per_window_j: energy_j(low.power_w, timing.total_cycles, clock_mhz),
+            resources: low.resources,
+            fits: low.fits,
+            headroom_ok: budget >= 1,
+            clock_ok: clock_mhz <= max_clock + 1e-9,
+            fidelity_ok,
+            power_ok,
+            max_outstanding: budget.min(512),
+            format,
+        });
+    }
+}
+
+/// Exhaustively sweep the shared design axes for one accelerator
+/// *family* — any closure from [`DesignPoint`] to a graph — and pick
+/// its operating point. Same contract as [`tune_board`]: the family's
+/// `default_point` is always evaluated at base clock, the chosen point
+/// never regresses its cycle count when the default is feasible, and a
+/// dry search fails with the typed [`Error::Config`] naming the binding
+/// constraint.
+///
+/// # Example
+///
+/// ```
+/// use merinda::fpga::graph::Target;
+/// use merinda::fpga::sindy_accel::SindyAccelConfig;
+/// use merinda::fpga::tuner::{tune_graph, TunerOptions};
+///
+/// // Tune the SINDy library + dense-head family — no hand-written
+/// // schedule anywhere, the graph builder is the whole description.
+/// let cfg = SindyAccelConfig::concurrent();
+/// let out = tune_graph(
+///     "sindy_head",
+///     &cfg.family(),
+///     &cfg.design_point(),
+///     &Target::default(),
+///     &TunerOptions::default(),
+/// )
+/// .unwrap();
+/// assert!(out.chosen.feasible());
+/// assert!(out.chosen.window_cycles <= out.default_window_cycles);
+/// ```
+pub fn tune_graph(
+    family: &str,
+    build: &dyn Fn(&DesignPoint) -> Graph,
+    default_point: &DesignPoint,
+    target: &Target,
+    opts: &TunerOptions,
+) -> Result<GraphTuneOutcome> {
+    assert!(opts.window > 0, "tuner needs a non-empty window");
+
+    // Candidate 0 is always the family's default point at base clock.
+    let mut candidates = Vec::new();
+    let base_clock = [target.device.clock_mhz];
+    let default_low = lower(&build(default_point), target)?;
+    let shipped_label = format_label(default_point.act_fmt, default_point.weight_fmt);
+    evaluate_graph_point(
+        default_point,
+        &default_low,
+        &base_clock,
+        target,
+        opts,
+        shipped_label,
+        &mut candidates,
+    );
+    let default_window_cycles = candidates[0].window_cycles;
+
+    let mut clocks = Vec::with_capacity(opts.clock_scales.len());
+    for &s in &opts.clock_scales {
+        clocks.push(target.device.clock_mhz * s);
+    }
+    let dataflow_axis: &[bool] = if opts.sweep_dataflow {
+        &[true, false]
+    } else {
+        &[true]
+    };
+    for tile in &opts.tiles {
+        for fmtp in &opts.formats {
+            for map in &opts.stage_maps {
+                for &dataflow in dataflow_axis {
+                    let point = DesignPoint {
+                        tile: *tile,
+                        stage_map: *map,
+                        act_fmt: fmtp.act,
+                        weight_fmt: fmtp.weight,
+                        dataflow,
+                    };
+                    let low = lower(&build(&point), target)?;
+                    evaluate_graph_point(
+                        &point,
+                        &low,
+                        &clocks,
+                        target,
+                        opts,
+                        fmtp.name,
+                        &mut candidates,
+                    );
+                }
+            }
+        }
+    }
+
+    let default_feasible = candidates[0].feasible();
+    let mut tally = FeasibilityTally::default();
+    let mut chosen: Option<usize> = None;
+    for (i, c) in candidates.iter().enumerate() {
+        tally.add(c.fits, c.headroom_ok, c.clock_ok, c.fidelity_ok, c.power_ok);
+        if !c.feasible() {
+            continue;
+        }
+        if default_feasible && c.window_cycles > default_window_cycles {
+            continue;
+        }
+        let better = match chosen {
+            None => true,
+            Some(j) => {
+                let prev = &candidates[j];
+                cmp_speed_power_key((c.window_s, c.power_w), (prev.window_s, prev.power_w))
+                    == Ordering::Less
+            }
+        };
+        if better {
+            chosen = Some(i);
+        }
+    }
+    let chosen = match chosen {
+        Some(i) => i,
+        None => return Err(tally.error(family)),
+    };
+
+    // Pareto front over (window_s, power_w) among all feasible points.
+    let mut order: Vec<usize> = (0..candidates.len())
+        .filter(|&i| candidates[i].feasible())
+        .collect();
+    let feasible = order.len();
+    order.sort_by(|&a, &b| {
+        let (x, y) = (&candidates[a], &candidates[b]);
+        cmp_speed_power_key((x.window_s, x.power_w), (y.window_s, y.power_w))
+    });
+    let mut pareto: Vec<GraphTuneCandidate> = Vec::new();
+    let mut best_power = f64::INFINITY;
+    for i in order {
+        let c = &candidates[i];
+        if c.power_w < best_power {
+            best_power = c.power_w;
+            pareto.push(c.clone());
+        }
+    }
+
+    let c = candidates[chosen].clone();
+    let chosen_lowered = lower(&build(&c.point), target)?;
+    Ok(GraphTuneOutcome {
+        family: family.to_string(),
+        evaluated: candidates.len(),
+        feasible,
+        default_window_cycles,
+        chosen: c,
+        chosen_lowered,
+        pareto,
+    })
 }
 
 #[cfg(test)]
@@ -641,14 +992,18 @@ mod tests {
     }
 
     #[test]
-    fn impossible_power_budget_yields_none() {
-        // 1 W is below the 1.7 W static floor of the power model.
+    fn impossible_power_budget_yields_config_error() {
+        // 1 W is below the 1.7 W static floor of the power model; the
+        // error must say the power budget was the binding constraint.
         let opts = TunerOptions {
             max_power_w: Some(1.0),
             ..TunerOptions::default()
         };
         let board = heterogeneous_fleet(4, 32).remove(0);
-        assert!(tune_board(&board, &opts).is_none());
+        let err = tune_board(&board, &opts).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("no feasible design point"), "{msg}");
+        assert!(msg.contains("power budget"), "{msg}");
     }
 
     #[test]
@@ -660,7 +1015,7 @@ mod tests {
             max_power_w: Some(cap),
             ..TunerOptions::default()
         };
-        if let Some(bounded) = tune_board(&board, &opts) {
+        if let Ok(bounded) = tune_board(&board, &opts) {
             assert!(bounded.chosen.power_w <= cap);
         }
     }

@@ -1,0 +1,191 @@
+//! Graph-IR acceptance tests: the correctness oracle for the lowering
+//! pass (in-tree property-test driver, same style as `tuner.rs`).
+//!
+//! Claims held here:
+//! * the lowered GRU graph is **cycle-exact** against the hand-built
+//!   `GruAccel::stages()` schedule — per stage (name, II, depth,
+//!   cycles, resources, bottleneck) and whole-design — across the
+//!   entire tuner search space (tiles × formats × stage maps ×
+//!   DATAFLOW) and all 16 Table 7 stage mappings;
+//! * lowering is device-independent in cycles/resources; only fit
+//!   moves with the target device;
+//! * the SINDy family runs end to end — validate, lower, `tune_graph`,
+//!   `GraphInstanceSpec` fleet placement — with zero hand-written
+//!   scheduling, and a dry graph search fails with the typed
+//!   `Error::Config` naming the binding constraint.
+
+use merinda::coordinator::placement::{placement_cost, rank, GraphInstanceSpec, InstanceSpec};
+use merinda::fpga::cluster::{heterogeneous_fleet, Link};
+use merinda::fpga::graph::{all_stage_maps, lower, stage_map_name, Target};
+use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
+use merinda::fpga::resources::Device;
+use merinda::fpga::sindy_accel::SindyAccelConfig;
+use merinda::fpga::tuner::{
+    default_formats, default_stage_maps, default_tiles, tune_graph, TunerOptions,
+};
+
+/// The oracle: lowering `accel.graph()` must reproduce the hand-built
+/// schedule exactly, stage by stage, and the whole-design report must
+/// be internally consistent with those stages.
+fn assert_cycle_exact(accel: &GruAccel, label: &str) {
+    let hand = accel.stages();
+    let low = lower(&accel.graph(), &Target::default())
+        .unwrap_or_else(|e| panic!("{label}: lowering failed: {e}"));
+    assert_eq!(low.stages.len(), hand.len(), "{label}: stage count");
+    for (h, g) in hand.iter().zip(&low.stages) {
+        assert_eq!(h.name, g.name, "{label}: stage order");
+        assert_eq!(h.ii, g.ii, "{label} {}: II", h.name);
+        assert_eq!(h.depth, g.depth, "{label} {}: depth", h.name);
+        assert_eq!(h.cycles, g.cycles, "{label} {}: cycles", h.name);
+        assert_eq!(h.resources, g.resources, "{label} {}: resources", h.name);
+        assert_eq!(h.bottleneck, g.bottleneck, "{label} {}: bottleneck", h.name);
+    }
+    let r = accel.report();
+    assert_eq!(r.cycles, low.cycles, "{label}");
+    assert_eq!(r.interval, low.interval, "{label}");
+    assert_eq!(r.resources, low.resources, "{label}");
+    assert_eq!(r.worst_stage_ii, low.worst_stage_ii, "{label}");
+    assert_eq!(r.fits_pynq, low.fits, "{label}");
+    let max_ii = hand.iter().map(|s| s.ii).max().unwrap();
+    assert_eq!(low.worst_stage_ii, max_ii, "{label}: worst II is the max stage II");
+    assert!(low.interval <= low.cycles, "{label}: interval > latency");
+    assert!(low.power_w > 0.0 && low.energy_per_output_j > 0.0, "{label}");
+}
+
+/// Cycle-exactness across the exact candidate grid `tune_board` sweeps
+/// (same mutation rule: tile → unroll/banks/reshape, DATAFLOW vs
+/// DDR-spill, adder mix, formats).
+#[test]
+fn prop_lowered_gru_cycle_exact_across_tuner_space() {
+    for tile in default_tiles() {
+        for fmtp in default_formats() {
+            for map in default_stage_maps() {
+                for dataflow in [true, false] {
+                    let mut cfg = GruAccelConfig::base();
+                    cfg.unroll = tile.unroll;
+                    cfg.banks = tile.banks;
+                    cfg.reshape = tile.reshape;
+                    cfg.dataflow = dataflow;
+                    cfg.ddr_spill = !dataflow;
+                    cfg.stage_map = map;
+                    cfg.act_fmt = fmtp.act;
+                    cfg.weight_fmt = fmtp.weight;
+                    let label = format!(
+                        "u{}/b{}/r{} {} {} df={}",
+                        tile.unroll,
+                        tile.banks,
+                        tile.reshape,
+                        fmtp.name,
+                        stage_map_name(&map),
+                        dataflow
+                    );
+                    assert_cycle_exact(&GruAccel::new(cfg), &label);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_sixteen_stage_maps_cycle_exact_at_concurrent_point() {
+    for m in all_stage_maps() {
+        let accel = GruAccel::new(GruAccelConfig::concurrent().with_stage_map(m));
+        assert_cycle_exact(&accel, &stage_map_name(&m));
+    }
+}
+
+#[test]
+fn canonical_configs_cycle_exact() {
+    for (cfg, label) in [
+        (GruAccelConfig::gru_baseline(), "gru_baseline"),
+        (GruAccelConfig::concurrent(), "concurrent"),
+        (GruAccelConfig::bram_optimal(), "bram_optimal"),
+    ] {
+        assert_cycle_exact(&GruAccel::new(cfg), label);
+    }
+}
+
+/// Scheduling is fabric-capacity independent; retargeting a graph only
+/// moves the fit verdict (and downstream seconds/power pricing).
+#[test]
+fn lowering_is_device_independent_in_cycles() {
+    let accel = GruAccel::new(GruAccelConfig::bram_optimal());
+    let pynq = lower(&accel.graph(), &Target::default()).unwrap();
+    let zu = lower(&accel.graph(), &Target::for_device(Device::zu7ev())).unwrap();
+    assert_eq!(pynq.cycles, zu.cycles);
+    assert_eq!(pynq.interval, zu.interval);
+    assert_eq!(pynq.resources, zu.resources);
+    assert_eq!(pynq.worst_stage_ii, zu.worst_stage_ii);
+    assert_eq!(zu.fits, Device::zu7ev().fits(&zu.resources));
+    assert_eq!(pynq.fits, Device::pynq_z2().fits(&pynq.resources));
+}
+
+/// The tentpole's payoff: a model family with zero hand-written
+/// scheduling goes from graph description to tuned fleet placement.
+#[test]
+fn sindy_family_tunes_and_places_with_no_hand_schedule() {
+    let cfg = SindyAccelConfig::concurrent();
+    cfg.graph().validate().expect("shipped SINDy graph must validate");
+    let out = tune_graph(
+        "sindy_head",
+        &cfg.family(),
+        &cfg.design_point(),
+        &Target::default(),
+        &TunerOptions::default(),
+    )
+    .expect("SINDy family must have a feasible operating point");
+    assert!(out.chosen.feasible());
+    assert!(
+        out.chosen.window_cycles <= out.default_window_cycles,
+        "tuned {} vs default {}",
+        out.chosen.window_cycles,
+        out.default_window_cycles
+    );
+    assert!(out.evaluated > 1 && out.feasible >= 1);
+    assert!(out.pareto().count() >= 1);
+
+    // The chosen lowered graph feeds the placement cost model directly.
+    let spec = GraphInstanceSpec::new(
+        "sindy-pynq",
+        out.chosen_lowered.clone(),
+        Device::pynq_z2(),
+        Link::ten_gbe(),
+    );
+    let sindy = spec.model(64, 3, 1, 45);
+    assert!(sindy.fits && sindy.max_outstanding >= 1, "{:?}", sindy.resources);
+
+    // Mixed GRU + SINDy fleet: the placer ranks all of them together.
+    let mut models: Vec<_> = heterogeneous_fleet(4, 32)
+        .into_iter()
+        .map(|b| InstanceSpec::new(b).model(64, 3, 1, 45))
+        .collect();
+    models.push(sindy);
+    let idle = vec![0usize; models.len()];
+    let order = rank(&models, &idle);
+    assert_eq!(order.len(), models.len(), "every instance must be placeable");
+    for i in order {
+        assert!(placement_cost(&models[i], 0) > 0.0);
+    }
+}
+
+/// A dry graph search explains itself: the typed error names the
+/// binding constraint (here, the power budget).
+#[test]
+fn graph_tuner_dry_search_names_binding_constraint() {
+    let cfg = SindyAccelConfig::concurrent();
+    let opts = TunerOptions {
+        max_power_w: Some(1e-3),
+        ..TunerOptions::default()
+    };
+    let err = tune_graph(
+        "sindy_head",
+        &cfg.family(),
+        &cfg.design_point(),
+        &Target::default(),
+        &opts,
+    )
+    .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("no feasible design point"), "{msg}");
+    assert!(msg.contains("power budget"), "{msg}");
+}

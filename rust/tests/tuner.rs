@@ -54,7 +54,7 @@ fn prop_tuned_configs_fit_with_headroom_across_random_spaces() {
         };
         for board in &boards {
             let out = tune_board(board, &opts)
-                .unwrap_or_else(|| panic!("case {case}: no outcome for {}", board.name));
+                .unwrap_or_else(|e| panic!("case {case}: no outcome for {}: {e}", board.name));
             let t = &out.chosen;
             assert!(t.board.fits(), "case {case} {}: must fit", out.board_name);
             assert!(t.max_outstanding >= 1, "case {case} {}", out.board_name);

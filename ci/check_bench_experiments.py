@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Validate BENCH_experiments.json (paper-reproduction harness gate).
+
+Usage: check_bench_experiments.py [--require-parsed]
+
+Run after `merinda experiments` (or the bench wrappers). Gates:
+
+* schema: bench == "experiments", experiments + summary sections;
+* every registry entry present: table1..table8, fig8, cycles — all
+  Tables 1-8 and Fig. 8 of the paper are reproduced;
+* each experiment: schema_version, source in {parsed, executed}, title,
+  non-empty headers/rows, comparisons with ours/paper/ratio/band fields;
+* every gated comparison's ours/paper ratio sits inside its declared
+  tolerance band (within_band recomputed here, not trusted);
+* the summary envelope is self-consistent with the per-experiment data;
+* with --require-parsed: zero executions — the committed logs alone
+  regenerated everything (the parse-or-execute second-run contract).
+"""
+import json
+import sys
+
+REQUIRED_IDS = [
+    "table1", "table2", "table3", "table4", "table5",
+    "table6", "table7", "table8", "fig8", "cycles",
+]
+
+require_parsed = "--require-parsed" in sys.argv[1:]
+
+d = json.load(open("BENCH_experiments.json"))
+
+# --- schema ---
+for key in ("bench", "rows", "speedups", "experiments", "summary"):
+    assert key in d, f"missing key: {key}"
+assert d["bench"] == "experiments"
+
+exps = d["experiments"]
+missing = [i for i in REQUIRED_IDS if i not in exps]
+assert not missing, f"missing experiments: {missing}"
+
+total_comparisons = 0
+gated = 0
+gated_within = 0
+executed = 0
+for eid, e in sorted(exps.items()):
+    for k in ("id", "schema_version", "source", "title", "headers", "rows",
+              "comparisons", "notes"):
+        assert k in e, f"{eid}: missing {k}"
+    assert e["id"] == eid, f"{eid}: id mismatch ({e['id']})"
+    assert e["source"] in ("parsed", "executed"), f"{eid}: bad source"
+    if e["source"] == "executed":
+        executed += 1
+    assert e["headers"], f"{eid}: empty headers"
+    assert e["rows"], f"{eid}: empty rows"
+    for row in e["rows"]:
+        assert len(row) == len(e["headers"]), \
+            f"{eid}: row arity {len(row)} != headers {len(e['headers'])}"
+    for c in e["comparisons"]:
+        for k in ("metric", "ours", "paper", "ratio", "band_lo", "band_hi",
+                  "gated", "within_band"):
+            assert k in c, f"{eid}.{c.get('metric', '?')}: missing {k}"
+        assert c["paper"] > 0, f"{eid}.{c['metric']}: paper value must be > 0"
+        ratio = c["ours"] / c["paper"]
+        assert abs(ratio - c["ratio"]) < 1e-6 * max(1.0, abs(ratio)), \
+            f"{eid}.{c['metric']}: recorded ratio {c['ratio']} != {ratio}"
+        total_comparisons += 1
+        if c["gated"]:
+            gated += 1
+            inside = c["band_lo"] - 1e-12 <= ratio <= c["band_hi"] + 1e-12
+            assert inside == c["within_band"], \
+                f"{eid}.{c['metric']}: within_band flag inconsistent"
+            assert inside, (
+                f"{eid}.{c['metric']}: ratio {ratio:.4f} outside band "
+                f"[{c['band_lo']}, {c['band_hi']}] "
+                f"(ours {c['ours']}, paper {c['paper']})"
+            )
+            gated_within += 1
+
+# Fig. 8 must carry its rendered chart.
+assert exps["fig8"].get("chart"), "fig8: missing ASCII chart"
+
+# --- summary self-consistency ---
+s = d["summary"]
+for k in ("experiments", "executed", "parsed", "comparisons",
+          "gated_comparisons", "gated_within_band", "all_within_band"):
+    assert k in s, f"missing summary.{k}"
+assert s["experiments"] == len(exps)
+assert s["executed"] + s["parsed"] == s["experiments"]
+assert s["executed"] == executed
+assert s["comparisons"] == total_comparisons
+assert s["gated_comparisons"] == gated == gated_within
+assert s["gated_within_band"] == s["gated_comparisons"], \
+    "summary reports a gated comparison outside its band"
+assert s["all_within_band"] is True
+
+if require_parsed:
+    assert s["executed"] == 0, (
+        f"--require-parsed: {s['executed']} entries executed; committed "
+        "logs must regenerate everything"
+    )
+
+print(f"BENCH_experiments.json OK: {len(exps)} experiments "
+      f"({s['parsed']} parsed, {s['executed']} executed), "
+      f"{gated}/{total_comparisons} comparisons gated, all within band")

@@ -1,6 +1,20 @@
-//! Bench: regenerate paper Fig. 8 (power linear / energy log, 4 configs).
-use merinda::report::experiments::fig8;
+//! Bench: regenerate paper Fig. 8 (power linear / energy log, 4 configs)
+//! through the parse-or-execute experiments runner, sharing the
+//! `merinda experiments` code path and the `experiments/fig8.json` log.
+
+use merinda::report::runner::{Mode, Runner};
 
 fn main() {
-    println!("{}", fig8());
+    match Runner::at_repo_root().run_one("fig8", Mode::ParseOrExecute) {
+        Ok(out) => {
+            println!("[{}]{}", out.source, out.record.table().to_text());
+            if let Some(chart) = &out.record.chart {
+                println!("{chart}");
+            }
+        }
+        Err(e) => {
+            eprintln!("fig8 failed: {e}");
+            std::process::exit(1);
+        }
+    }
 }

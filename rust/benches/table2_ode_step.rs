@@ -1,6 +1,26 @@
-//! Bench: regenerate paper Table 2 (per-ODE-step component breakdown).
-use merinda::report::experiments::table2;
+//! Bench: regenerate paper Table 2 (per-ODE-step component breakdown)
+//! through the parse-or-execute experiments runner, sharing the
+//! `merinda experiments` code path and the `experiments/table2.json` log.
+
+use merinda::report::runner::{Mode, Runner};
 
 fn main() {
-    println!("{}", table2().to_text());
+    match Runner::at_repo_root().run_one("table2", Mode::ParseOrExecute) {
+        Ok(out) => {
+            println!("[{}]{}", out.source, out.record.table().to_text());
+            for c in &out.record.comparisons {
+                println!(
+                    "  {:<34} ours {:>10.3}  paper {:>8.3}  ratio {:.3}",
+                    c.metric,
+                    c.ours,
+                    c.paper,
+                    c.ratio()
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("table2 failed: {e}");
+            std::process::exit(1);
+        }
+    }
 }

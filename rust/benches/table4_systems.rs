@@ -1,9 +1,25 @@
-//! Bench: regenerate paper Table 4 (SINDy MR time/energy/DRAM per system).
-use merinda::report::experiments::table4;
+//! Bench: regenerate paper Table 4 (SINDy MR time/energy/DRAM per
+//! system) through the parse-or-execute experiments runner, sharing the
+//! `merinda experiments` code path and the `experiments/table4.json` log.
+
+use merinda::report::runner::{Mode, Runner};
 
 fn main() {
-    match table4() {
-        Ok(t) => println!("{}", t.to_text()),
+    match Runner::at_repo_root().run_one("table4", Mode::ParseOrExecute) {
+        Ok(out) => {
+            println!("[{}]{}", out.source, out.record.table().to_text());
+            for c in out.record.comparisons.iter().filter(|c| c.gated) {
+                println!(
+                    "  gate {:<22} ours {:>9.2}  paper {:>9.2}  ratio {:.3} (band {:.2}..{:.2})",
+                    c.metric,
+                    c.ours,
+                    c.paper,
+                    c.ratio(),
+                    c.band.0,
+                    c.band.1
+                );
+            }
+        }
         Err(e) => {
             eprintln!("table4 failed: {e}");
             std::process::exit(1);

@@ -1,9 +1,17 @@
-//! Bench: regenerate paper Table 5 (workloads x platforms on AID).
-use merinda::report::experiments::table5;
+//! Bench: regenerate paper Table 5 (workloads x platforms on AID)
+//! through the parse-or-execute experiments runner, sharing the
+//! `merinda experiments` code path and the `experiments/table5.json` log.
+
+use merinda::report::runner::{Mode, Runner};
 
 fn main() {
-    match table5(None) {
-        Ok(t) => println!("{}", t.to_text()),
+    match Runner::at_repo_root().run_one("table5", Mode::ParseOrExecute) {
+        Ok(out) => {
+            println!("[{}]{}", out.source, out.record.table().to_text());
+            for n in &out.record.notes {
+                println!("  note: {n}");
+            }
+        }
         Err(e) => {
             eprintln!("table5 failed: {e}");
             std::process::exit(1);

@@ -1,8 +1,31 @@
-//! Bench: regenerate paper Table 8 (LTC vs GRU accelerator configs).
-use merinda::report::experiments::{table8, table8_speedups};
+//! Bench: regenerate paper Table 8 (LTC vs GRU accelerator configs)
+//! through the parse-or-execute experiments runner, sharing the
+//! `merinda experiments` code path and the `experiments/table8.json` log.
+
+use merinda::report::experiments::table8_speedups;
+use merinda::report::runner::{Mode, Runner};
 
 fn main() {
-    println!("{}", table8().to_text());
+    match Runner::at_repo_root().run_one("table8", Mode::ParseOrExecute) {
+        Ok(out) => {
+            println!("[{}]{}", out.source, out.record.table().to_text());
+            for c in out.record.comparisons.iter().filter(|c| c.gated) {
+                println!(
+                    "  gate {:<22} ours {:>9.2}  paper {:>9.2}  ratio {:.3} (band {:.2}..{:.2})",
+                    c.metric,
+                    c.ours,
+                    c.paper,
+                    c.ratio(),
+                    c.band.0,
+                    c.band.1
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("table8 failed: {e}");
+            std::process::exit(1);
+        }
+    }
     let (s1, s2, s3) = table8_speedups();
     println!(
         "interval speedups: LTC->GRU {s1:.1}x (paper 44.3x), GRU->DATAFLOW {s2:.2}x (paper 1.87x), DATAFLOW->banking {s3:.2}x (paper 1.36x)"

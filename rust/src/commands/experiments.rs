@@ -1,0 +1,114 @@
+//! `merinda experiments` — the parse-or-execute paper-results runner.
+//!
+//! Regenerates every paper table/figure from the per-experiment JSON
+//! logs under `experiments/`, executing only entries whose logs are
+//! missing or stale, then writes the aggregated CI-gated
+//! `BENCH_experiments.json`. See EXPERIMENTS.md §Paper results for the
+//! table→command index.
+//!
+//! Flags:
+//!   --only <ids>    comma-separated registry ids (e.g. table4,fig8)
+//!   --execute       parse-or-execute (the default, named explicitly)
+//!   --parse-only    never execute; missing/stale logs are an error
+//!   --force         re-execute everything, rewriting the logs
+//!   --logdir <dir>  log directory (default: experiments/ at repo root)
+//!   --out <file>    report path (default: BENCH_experiments.json)
+//!   --artifacts <d> PJRT artifact dir probed by the table6 entry
+
+use merinda::report::runner::{ExecCtx, Mode, Runner, Source};
+use merinda::util::bench::artifact_path;
+use merinda::util::cli::Args;
+use merinda::util::{Error, Result};
+
+pub fn run(args: &Args) -> Result<()> {
+    let mode = match (args.flag("force"), args.flag("parse-only")) {
+        (true, true) => {
+            return Err(Error::config("--force and --parse-only are mutually exclusive"))
+        }
+        (true, false) => Mode::Force,
+        (false, true) => Mode::ParseOnly,
+        // --execute is the default mode's explicit name; accept it as a
+        // no-op so invocations read naturally.
+        (false, false) => Mode::ParseOrExecute,
+    };
+
+    let ctx = ExecCtx {
+        artifact_dir: args.get_or("artifacts", "artifacts"),
+        ..Default::default()
+    };
+    let log_dir = match args.get("logdir") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => artifact_path("experiments"),
+    };
+    let runner = Runner::with_ctx(&log_dir, ctx);
+
+    let all_ids = Runner::ids();
+    let selected: Vec<String> = match args.get("only") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => all_ids.iter().map(|s| s.to_string()).collect(),
+    };
+    let ids: Vec<&str> = selected.iter().map(String::as_str).collect();
+    for id in &ids {
+        Runner::entry(id)?; // fail fast on typos before any execution
+    }
+
+    println!(
+        "experiments runner: {} entr{} | mode {:?} | logs {}",
+        ids.len(),
+        if ids.len() == 1 { "y" } else { "ies" },
+        mode,
+        runner.log_dir().display()
+    );
+
+    let outcomes = runner.run(&ids, mode)?;
+    for out in &outcomes {
+        let anchor = Runner::entry(&out.record.id)?.anchor;
+        println!("\n[{}] {} — {}", out.source, out.record.id, anchor);
+        println!("{}", out.record.table().to_text());
+        if let Some(chart) = &out.record.chart {
+            println!("{chart}");
+        }
+        for c in &out.record.comparisons {
+            let gate = if !c.gated {
+                "info     "
+            } else if c.within_band() {
+                "gate ok  "
+            } else {
+                "GATE FAIL"
+            };
+            println!(
+                "  {gate} {:<34} ours {:>12.4}  paper {:>10.4}  ratio {:.3}",
+                c.metric,
+                c.ours,
+                c.paper,
+                c.ratio()
+            );
+        }
+        for n in &out.record.notes {
+            println!("  note: {n}");
+        }
+    }
+
+    let executed = outcomes.iter().filter(|o| o.source == Source::Executed).count();
+    println!(
+        "\n{} regenerated: {} executed, {} parsed from committed logs",
+        outcomes.len(),
+        executed,
+        outcomes.len() - executed
+    );
+
+    let report = Runner::bench_report(&outcomes);
+    let out_path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => artifact_path("BENCH_experiments.json"),
+    };
+    report.write(&out_path)?;
+    println!("wrote {}", out_path.display());
+
+    if outcomes.iter().any(|o| !o.record.gated_ok()) {
+        return Err(Error::numeric(
+            "one or more gated paper comparisons left their tolerance band",
+        ));
+    }
+    Ok(())
+}

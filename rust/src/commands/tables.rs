@@ -33,7 +33,7 @@ pub fn run(args: &Args) -> Result<()> {
     let which = args
         .positional
         .get(1)
-        .ok_or_else(|| Error::config("usage: merinda table <1|2|4|5|6|7|8|fig8|all>"))?
+        .ok_or_else(|| Error::config("usage: merinda table <1|2|3|4|5|6|7|8|fig8|all>"))?
         .as_str();
     let print = |t: merinda::report::Table| {
         println!("{}", t.to_text());
@@ -41,8 +41,9 @@ pub fn run(args: &Args) -> Result<()> {
     match which {
         "1" => print(exp::table1()),
         "2" => print(exp::table2()),
+        "3" => print(exp::table3()),
         "4" => print(exp::table4()?),
-        "5" => print(exp::table5(None)?),
+        "5" => print(exp::table5()?),
         "6" => {
             let rt = Runtime::new(artifact_dir(args))?;
             let opts = exp::Table6Opts {
@@ -58,8 +59,9 @@ pub fn run(args: &Args) -> Result<()> {
         "all" => {
             print(exp::table1());
             print(exp::table2());
+            print(exp::table3());
             print(exp::table4()?);
-            print(exp::table5(None)?);
+            print(exp::table5()?);
             print(exp::table7());
             print(exp::table8());
             println!("{}", exp::fig8());

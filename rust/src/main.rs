@@ -8,13 +8,16 @@
 //!   serve    --requests N      — run the streaming service demo
 //!   soak     --tenants N --fleet M — multi-tenant streaming workload on a fleet
 //!   tune     [--window N]      — design-space autotuner, writes BENCH_tune.json
-//!   table <1|2|4|5|6|7|8|fig8> — regenerate a paper table/figure
+//!   table <1|2|3|4|5|6|7|8|fig8> — regenerate a paper table/figure
+//!   experiments [--only ids] [--parse-only|--force] — parse-or-execute
+//!       runner over every paper table/figure, writes BENCH_experiments.json
 //!
 //! `cargo run --release -- <subcommand> [flags]`
 
 use merinda::util::cli;
 
 mod commands {
+    pub mod experiments;
     pub mod recover;
     pub mod serve;
     pub mod simulate;
@@ -31,11 +34,12 @@ fn main() {
         &[
             "system", "method", "steps", "config", "requests", "seed", "samples", "dt", "lr",
             "artifacts", "out", "workers", "backend", "fmt", "tenants", "window", "stride",
-            "queue", "shed", "fleet", "chaos", "deadline-ms",
+            "queue", "shed", "fleet", "chaos", "deadline-ms", "only", "logdir",
         ],
     );
     let result = match args.subcommand() {
         Some("info") => commands::tables::info(&args),
+        Some("experiments") => commands::experiments::run(&args),
         Some("recover") => commands::recover::run(&args),
         Some("train") => commands::train::run(&args),
         Some("simulate") => commands::simulate::run(&args),
@@ -45,7 +49,7 @@ fn main() {
         Some("table") => commands::tables::run(&args),
         _ => {
             eprintln!(
-                "usage: merinda <info|recover|train|simulate|serve|soak|tune|table> [--flags]\n\
+                "usage: merinda <info|recover|train|simulate|serve|soak|tune|table|experiments> [--flags]\n\
                  examples:\n\
                  \x20 merinda recover --system lotka --method merinda\n\
                  \x20 merinda train --system aid --steps 300\n\
@@ -55,7 +59,9 @@ fn main() {
                  \x20 merinda soak --fleet 3 --tuned\n\
                  \x20 merinda soak --fleet 3 --chaos crash:2@6,flip:1@2 --deadline-ms 250\n\
                  \x20 merinda tune --window 64\n\
-                 \x20 merinda table 8"
+                 \x20 merinda table 8\n\
+                 \x20 merinda experiments --only table8,fig8\n\
+                 \x20 merinda experiments --parse-only"
             );
             std::process::exit(2);
         }

@@ -1,24 +1,39 @@
 //! Experiment generators: one function per paper table/figure.
 //!
-//! Shared by the CLI (`merinda table N`) and the bench harness
-//! (`cargo bench`). Each returns a [`Table`] (or chart string) whose rows
-//! contain our measured values with the paper's values alongside, so the
-//! reproduction "shape" is auditable at a glance. See DESIGN.md §5 for the
-//! experiment index and EXPERIMENTS.md for recorded runs.
+//! Shared by the CLI (`merinda table N`, `merinda experiments`) and the
+//! bench harness (`cargo bench`). Each `tableN()` returns a [`Table`]
+//! (or chart string) whose rows contain our measured values with the
+//! paper's values alongside, so the reproduction "shape" is auditable at
+//! a glance; each `tableN_record()` additionally emits the structured
+//! our-value/paper-value comparisons that feed the parse-or-execute
+//! runner ([`super::runner`]) and the CI-gated `BENCH_experiments.json`.
+//! See EXPERIMENTS.md §Paper results for the table→command reproduction
+//! index and recorded runs.
 
 use crate::fpga::gru_accel::{all_stage_maps, stage_map_name, GruAccel, GruAccelConfig};
 use crate::fpga::interconnect::DramFootprint;
 use crate::fpga::ltc_accel::{LtcAccel, LtcAccelConfig};
 use crate::fpga::resources::Device;
+use crate::mr::library::PolyLibrary;
 use crate::mr::ltc::{LtcCell, LtcParams};
-use crate::mr::recover::{self, MerindaOpts};
+use crate::mr::recover::{self, MerindaOpts, Recovery};
 use crate::mr::train::TrainOpts;
 use crate::platform::{evaluate, workloads, PlatformModel};
 use crate::runtime::Runtime;
-use crate::systems::{table6_systems, Aid, Apc, AvLateral, CaseStudy};
-use crate::util::{Prng, Result};
+use crate::systems::{table6_systems, Aid, Apc, AvLateral, CaseStudy, Trace};
+use crate::util::bench::env_usize;
+use crate::util::{Error, Prng, Result};
 
+use super::runner::{Comparison, ExperimentRecord};
 use super::{bar_chart, fmt, sci, Table};
+
+/// Parse a numeric table cell (the generators format every measured cell
+/// with [`fmt`]/[`sci`], both of which `f64::from_str` accepts).
+fn cell(t: &Table, row: usize, col: usize) -> f64 {
+    t.rows[row][col]
+        .parse()
+        .unwrap_or_else(|_| panic!("non-numeric cell [{row}][{col}]: {:?}", t.rows[row][col]))
+}
 
 /// Table 1: overall forward pass split (sensory vs ODE solver).
 pub fn table1() -> Table {
@@ -55,6 +70,23 @@ pub fn table1() -> Table {
         "100.0%".into(),
     ]);
     t
+}
+
+/// Structured Table 1 record: the solver-dominance share is gated (the
+/// paper's structural claim), the sensory share is informational
+/// (wall-clock measured on whatever host executes).
+pub fn table1_record() -> ExperimentRecord {
+    let t = table1();
+    let sensory = cell(&t, 0, 2);
+    let solver = cell(&t, 1, 2);
+    let mut rec = ExperimentRecord::from_table("table1", &t);
+    rec.comparisons = vec![
+        // Paper: 87.7% solver. Gate: solver stays dominant (60..100%).
+        Comparison::gated("solver_share_pct", solver, 87.7, 0.68, 1.14),
+        Comparison::informational("sensory_share_pct", sensory, 12.3),
+    ];
+    rec.notes.push("shares are host wall-clock; only solver dominance is gated".to_string());
+    rec
 }
 
 /// Table 2: per-ODE-step component breakdown.
@@ -97,6 +129,79 @@ pub fn table2() -> Table {
     t
 }
 
+/// Structured Table 2 record: per-component shares are informational
+/// (host wall-clock); the structural claim — recurrent sigmoid + sum
+/// operations dominate the ODE step — is gated.
+pub fn table2_record() -> ExperimentRecord {
+    let t = table2();
+    let share = |row: usize| cell(&t, row, 2);
+    let mut rec = ExperimentRecord::from_table("table2", &t);
+    // Paper shares: 46.7 + 34.4 = 81.1% for sigmoid + sums.
+    rec.comparisons = vec![
+        Comparison::gated("sigmoid_plus_sums_share_pct", share(0) + share(3), 81.1, 0.62, 1.24),
+        Comparison::informational("recurrent_sigmoid_share_pct", share(0), 46.7),
+        Comparison::informational("weight_activation_share_pct", share(1), 2.4),
+        Comparison::informational("reversal_activation_share_pct", share(2), 2.5),
+        Comparison::informational("sum_operations_share_pct", share(3), 34.4),
+        Comparison::informational("euler_update_share_pct", share(4), 14.0),
+    ];
+    rec.notes.push("shares are host wall-clock; only sigmoid+sums dominance is gated".to_string());
+    rec
+}
+
+/// Table 3: the case-study system roster (paper §6.1) — dimensions,
+/// polynomial-library size, and ground-truth sparsity per system.
+pub fn table3() -> Table {
+    table3_record().table()
+}
+
+/// Structured Table 3 record; the roster shape (7 systems, 4 of them in
+/// the Table 6 accuracy comparison) is gated.
+pub fn table3_record() -> ExperimentRecord {
+    let mut roster: Vec<(Box<dyn CaseStudy>, &str)> = table6_systems()
+        .into_iter()
+        .map(|s| (s, "Table 6, soak"))
+        .collect();
+    roster.push((Box::new(Aid::default()), "Table 4/5, soak"));
+    roster.push((Box::new(AvLateral::default()), "Table 4, soak"));
+    roster.push((Box::new(Apc::default()), "Table 4"));
+    let table6_count = 4usize;
+
+    let mut t = Table::new(
+        "Table 3: Case-study systems (dims, library, ground-truth sparsity)",
+        &[
+            "System",
+            "xdim",
+            "udim",
+            "Library terms",
+            "True nonzeros",
+            "Appears in",
+        ],
+    );
+    for (sys, appears) in &roster {
+        let lib = PolyLibrary::new(sys.xdim(), sys.udim(), 2);
+        let nonzeros = match sys.true_coeffs() {
+            Some(c) => c.iter().filter(|v| **v != 0.0).count().to_string(),
+            None => "-".to_string(),
+        };
+        t.row(vec![
+            sys.name().into(),
+            sys.xdim().to_string(),
+            sys.udim().to_string(),
+            lib.len().to_string(),
+            nonzeros,
+            (*appears).into(),
+        ]);
+    }
+    let mut rec = ExperimentRecord::from_table("table3", &t);
+    rec.comparisons = vec![
+        Comparison::gated("systems", roster.len() as f64, 7.0, 1.0, 1.0),
+        Comparison::gated("table6_systems", table6_count as f64, 4.0, 1.0, 1.0),
+    ];
+    rec.notes.push("roster characterization is fully deterministic (no measurement)".to_string());
+    rec
+}
+
 /// Table 4: SINDy-MR on AID / Autonomous Car / APC through the FPGA model.
 pub fn table4() -> Result<Table> {
     let device = Device::pynq_z2();
@@ -129,8 +234,9 @@ pub fn table4() -> Result<Table> {
         let host_s = t0.elapsed().as_secs_f64();
         let _ = rec;
         // ...scaled onto the PYNQ's ARM A9 (≈120× slower than this host
-        // for dense f64 loops — calibrated once, DESIGN.md §7), plus the
-        // library-evaluation offload modeled on the fabric.
+        // for dense f64 loops — calibrated once; see EXPERIMENTS.md
+        // §Paper results), plus the library-evaluation offload modeled
+        // on the fabric.
         let arm_scale = 120.0;
         let fpga_s = host_s * arm_scale;
         let accel = GruAccel::new(GruAccelConfig::gru_baseline());
@@ -153,8 +259,47 @@ pub fn table4() -> Result<Table> {
     Ok(t)
 }
 
+/// Structured Table 4 record: DRAM footprints are model-derived and
+/// gated; time and energy pass through the host-dependent ARM scaling,
+/// so they stay informational.
+pub fn table4_record() -> Result<ExperimentRecord> {
+    let t = table4()?;
+    // Paper per-system (time s, energy J, DRAM MB), in row order.
+    let paper = [
+        ("aid", 56.63, 107.88, 192.36),
+        ("av_lateral", 21.23, 40.44, 213.00),
+        ("apc", 20.74, 39.43, 289.18),
+    ];
+    let mut rec = ExperimentRecord::from_table("table4", &t);
+    for (row, (key, time, energy, dram)) in paper.iter().enumerate() {
+        rec.comparisons.push(Comparison::informational(
+            format!("{key}_time_s"),
+            cell(&t, row, 1),
+            *time,
+        ));
+        rec.comparisons.push(Comparison::informational(
+            format!("{key}_energy_j"),
+            cell(&t, row, 2),
+            *energy,
+        ));
+        // The DRAM model (params + 2×trace + runtime + workspace) is
+        // deterministic; its calibrated ratios sit in 0.45..1.45.
+        rec.comparisons.push(Comparison::gated(
+            format!("{key}_dram_mb"),
+            cell(&t, row, 3),
+            *dram,
+            0.2,
+            2.0,
+        ));
+    }
+    rec.notes.push(
+        "time/energy scaled by the calibrated ARM factor (120x), informational only".to_string(),
+    );
+    Ok(rec)
+}
+
 /// Table 5: workloads × platforms on the AID dataset.
-pub fn table5(rt: Option<&Runtime>) -> Result<Table> {
+pub fn table5() -> Result<Table> {
     let mut t = Table::new(
         "Table 5: Cross-platform comparison, AID workload",
         &[
@@ -212,8 +357,32 @@ pub fn table5(rt: Option<&Runtime>) -> Result<Table> {
             fmt(dev.clock_mhz, 0),
         ]);
     }
-    let _ = rt;
     Ok(t)
+}
+
+/// Structured Table 5 record: the table shape (4 workloads × 3
+/// platforms) and the modeled PYNQ clock are gated; cross-platform cell
+/// values are platform-model estimates without embedded paper cells, so
+/// the FPGA-vs-GPU power advantage is recorded as the one structural
+/// comparison.
+pub fn table5_record() -> Result<ExperimentRecord> {
+    let t = table5()?;
+    let rows = t.rows.len() as f64;
+    let clock = cell(&t, 2, 5); // first FPGA row
+    let power_frac = cell(&t, 2, 3) / cell(&t, 0, 3).max(1e-9);
+    let mut rec = ExperimentRecord::from_table("table5", &t);
+    rec.comparisons = vec![
+        Comparison::gated("rows", rows, 12.0, 1.0, 1.0),
+        // Paper runs the PYNQ-Z2 fabric at 173 MHz.
+        Comparison::gated("fpga_clock_mhz", clock, 173.0, 0.99, 1.01),
+        // Structural claim: the FPGA draws a small fraction of GPU power.
+        Comparison::gated("fpga_over_gpu_power", power_frac, 0.05, 0.1, 10.0),
+    ];
+    rec.notes.push(
+        "platform cells are calibrated-model estimates; no per-cell paper values embedded"
+            .to_string(),
+    );
+    Ok(rec)
 }
 
 /// Table 6 options (training budget for MERINDA).
@@ -236,6 +405,34 @@ impl Default for Table6Opts {
 
 /// Table 6: reconstruction MSE, EMILY vs PINN+SR vs MERINDA, 4 systems.
 pub fn table6(rt: &Runtime, opts: Table6Opts) -> Result<Table> {
+    table6_record(rt, opts).map(|r| r.table())
+}
+
+/// Structured Table 6 record with MERINDA trained through the PJRT
+/// artifacts (requires `make artifacts`).
+pub fn table6_record(rt: &Runtime, opts: Table6Opts) -> Result<ExperimentRecord> {
+    table6_record_impl(opts, "MERINDA trained via the PJRT AOT artifacts", |tr, mo| {
+        recover::recover_merinda(rt, tr, mo)
+    })
+}
+
+/// Structured Table 6 record on the native fallback
+/// ([`recover::recover_merinda_native`]): the same sparsity-driven
+/// masked-ridge polish, with STLSQ proposing the support instead of the
+/// trained neural flow. Used by the experiments runner when no PJRT
+/// artifacts are present (offline containers, CI).
+pub fn table6_native_record(opts: Table6Opts) -> Result<ExperimentRecord> {
+    table6_record_impl(
+        opts,
+        "no PJRT artifacts: MERINDA column uses the native STLSQ-support fallback",
+        recover::recover_merinda_native,
+    )
+}
+
+fn table6_record_impl<F>(opts: Table6Opts, note: &str, mut merinda: F) -> Result<ExperimentRecord>
+where
+    F: FnMut(&Trace, MerindaOpts) -> Result<Recovery>,
+{
     let mut t = Table::new(
         "Table 6: Recovery accuracy (trajectory reconstruction MSE)",
         &[
@@ -246,14 +443,16 @@ pub fn table6(rt: &Runtime, opts: Table6Opts) -> Result<Table> {
             "Paper (EMILY/PINN+SR/MERINDA)",
         ],
     );
+    // Paper MSEs per system: (EMILY, PINN+SR, MERINDA).
     let papers = [
-        "0.03 / 0.05 / 0.03",
-        "1.7 / 2.11 / 1.68",
-        "4.2 / 6.9 / 5.1",
-        "14.3 / 12.1 / 15.1",
+        ("lotka", 0.03, 0.05, 0.03),
+        ("lorenz", 1.7, 2.11, 1.68),
+        ("f8", 4.2, 6.9, 5.1),
+        ("pathogen", 14.3, 12.1, 15.1),
     ];
+    let mut comparisons = Vec::new();
     let mut rng = Prng::new(opts.seed);
-    for (sys, paper) in table6_systems().iter().zip(papers) {
+    for (sys, (key, pe, pp, pm)) in table6_systems().iter().zip(papers) {
         // Per-system dt tuned for identifiability.
         let dt = match sys.name() {
             "Chaotic Lorenz" => 0.004,
@@ -265,8 +464,7 @@ pub fn table6(rt: &Runtime, opts: Table6Opts) -> Result<Table> {
             .with_noise(0.002, &mut rng);
         let e = recover::recover_emily(&tr)?;
         let p = recover::recover_pinn_sr(&tr)?;
-        let m = recover::recover_merinda(
-            rt,
+        let m = merinda(
             &tr,
             MerindaOpts {
                 train: TrainOpts {
@@ -283,10 +481,31 @@ pub fn table6(rt: &Runtime, opts: Table6Opts) -> Result<Table> {
             sci(e.recon_mse),
             sci(p.recon_mse),
             sci(m.recon_mse),
-            paper.into(),
+            format!("{pe} / {pp} / {pm}"),
         ]);
+        // MSE magnitudes track trajectory scale and noise draw, so all
+        // accuracy comparisons stay informational.
+        comparisons.push(Comparison::informational(
+            format!("{key}_emily_mse"),
+            e.recon_mse,
+            pe,
+        ));
+        comparisons.push(Comparison::informational(
+            format!("{key}_pinn_sr_mse"),
+            p.recon_mse,
+            pp,
+        ));
+        comparisons.push(Comparison::informational(
+            format!("{key}_merinda_mse"),
+            m.recon_mse,
+            pm,
+        ));
     }
-    Ok(t)
+    let mut rec = ExperimentRecord::from_table("table6", &t);
+    rec.comparisons = comparisons;
+    rec.notes.push(note.to_string());
+    rec.notes.push(format!("samples={} merinda_steps={}", opts.samples, opts.merinda_steps));
+    Ok(rec)
 }
 
 /// Table 7: the 16-way stage-mapping sweep.
@@ -309,6 +528,28 @@ pub fn table7() -> Table {
         ]);
     }
     t
+}
+
+/// Structured Table 7 record: the sweep shape and the
+/// binding-moves-resources-not-throughput invariant are gated (all
+/// cycle-model derived, machine-independent).
+pub fn table7_record() -> ExperimentRecord {
+    let t = table7();
+    let cycles: Vec<f64> = (0..t.rows.len()).map(|r| cell(&t, r, 1)).collect();
+    let best = cycles.iter().cloned().fold(f64::INFINITY, f64::min);
+    let worst = cycles.iter().cloned().fold(0.0f64, f64::max);
+    let mut rec = ExperimentRecord::from_table("table7", &t);
+    rec.comparisons = vec![
+        Comparison::gated("mappings", t.rows.len() as f64, 16.0, 1.0, 1.0),
+        // Paper: DSP/LUT binding shifts resources, not cycles; the
+        // sweep's cycle spread stays within 15% of flat.
+        Comparison::gated("cycle_spread", worst / best.max(1.0), 1.0, 0.9, 1.15),
+        Comparison::informational("best_cycles", best, 380.0),
+    ];
+    rec.notes.push(
+        "full gate lives in ci/check_bench_table7.py over BENCH_table7.json".to_string(),
+    );
+    rec
 }
 
 /// The four Table 8 configurations with their paper rows.
@@ -394,6 +635,92 @@ pub fn fig8() -> String {
     out
 }
 
+/// Structured Fig. 8 record: the power/energy table behind the bars plus
+/// the rendered ASCII chart; modeled powers are informational.
+pub fn fig8_record() -> ExperimentRecord {
+    let rows = table8_rows();
+    let mut t = Table::new(
+        "Fig 8: Power and energy per output across configurations",
+        &["Configuration", "Power (W)", "Energy/output (J)"],
+    );
+    let paper_power = [5.11, 4.736, 3.013, 4.15];
+    let mut comparisons = vec![Comparison::gated("configs", rows.len() as f64, 4.0, 1.0, 1.0)];
+    for ((name, _, _, _, power, energy), pw) in rows.iter().zip(paper_power) {
+        t.row(vec![name.clone(), fmt(*power, 3), sci(*energy)]);
+        let key = name.to_lowercase().replace(' ', "_");
+        comparisons.push(Comparison::informational(format!("{key}_power_w"), *power, pw));
+    }
+    let mut rec = ExperimentRecord::from_table("fig8", &t);
+    rec.comparisons = comparisons;
+    rec.chart = Some(fig8());
+    rec.notes.push("powers from the resource/power model, not board telemetry".to_string());
+    rec
+}
+
+/// Structured record for the §6 headline cycle comparison (the
+/// `BENCH_cycles.json` trajectory): dataflow vs sequential GRU vs
+/// sequential LTC through the deterministic cycle model, with the exact
+/// event simulation cross-checked against the closed form.
+/// `MERINDA_BENCH_SEQ` overrides the window length (CI shrinks it).
+pub fn cycles_record() -> Result<ExperimentRecord> {
+    let seq: u64 = env_usize("MERINDA_BENCH_SEQ", 64) as u64;
+    let df_accel = GruAccel::new(GruAccelConfig::concurrent());
+    let df = df_accel.report();
+    let sq = GruAccel::new(GruAccelConfig::gru_baseline()).report();
+    let ltc = LtcAccel::new(LtcAccelConfig::base()).report();
+
+    let pipe = df_accel.stage_pipeline();
+    let analyzed = pipe.analyze(seq);
+    let simulated = pipe.simulate(seq);
+    if simulated != analyzed {
+        return Err(Error::numeric(
+            "event simulation drifted from the closed-form pipeline analysis",
+        ));
+    }
+
+    let w_df = df.window_cycles(seq);
+    let w_sq = sq.window_cycles(seq);
+    let w_ltc = ltc.window_cycles(seq);
+
+    let mut t = Table::new(
+        "Cycle comparison: dataflow GRU vs sequential GRU vs sequential LTC",
+        &["Design", "Cycles/step", "Interval", "Window cycles"],
+    );
+    for (name, r, w) in [
+        ("GRU dataflow", &df, w_df),
+        ("GRU sequential", &sq, w_sq),
+        ("LTC sequential", &ltc, w_ltc),
+    ] {
+        t.row(vec![
+            name.into(),
+            r.cycles.to_string(),
+            r.interval.to_string(),
+            w.to_string(),
+        ]);
+    }
+    let mut rec = ExperimentRecord::from_table("cycles", &t);
+    rec.comparisons = vec![
+        // Same silicon anchors as Table 8.
+        Comparison::gated("ltc_interval", ltc.interval as f64, 12014.0, 0.5, 1.5),
+        Comparison::gated("ltc_cycles", ltc.cycles as f64, 1201.0, 0.5, 2.0),
+        // Paper headline: up to 6.3x fewer cycles per window; our model
+        // lands far above it (ROADMAP trajectory note), so informational.
+        Comparison::informational(
+            "dataflow_vs_sequential_ltc",
+            w_ltc as f64 / w_df as f64,
+            6.3,
+        ),
+        Comparison::informational(
+            "gru_dataflow_vs_gru_sequential",
+            w_sq as f64 / w_df as f64,
+            1.87,
+        ),
+    ];
+    rec.notes.push(format!("window length seq={seq}"));
+    rec.notes.push("event simulation verified equal to the closed form".to_string());
+    Ok(rec)
+}
+
 /// Sanity metric reused by tests: MERINDA-vs-paper Table 8 speedup shape.
 pub fn table8_speedups() -> (f64, f64, f64) {
     let rows = table8_rows();
@@ -402,6 +729,62 @@ pub fn table8_speedups() -> (f64, f64, f64) {
     let conc = rows[2].2 as f64;
     let bank = rows[3].2 as f64;
     (ltc / base, base / conc, conc / bank)
+}
+
+/// Structured Table 8 record. Cycle-model numbers are deterministic:
+/// the LTC and GRU-baseline cycle counts land near the paper's silicon,
+/// so those are gated; intervals and the aggressive dataflow rows
+/// diverge from silicon by design (documented in ROADMAP's trajectory
+/// note) and stay informational, as do modeled powers.
+pub fn table8_record() -> ExperimentRecord {
+    let t = table8();
+    let rows = table8_rows();
+    // Paper per-config (cycles, interval, power W), in row order.
+    let paper = [
+        ("ltc", 1201.0, 12014.0, 5.11),
+        ("gru_baseline", 1045.0, 271.0, 4.736),
+        ("concurrent", 380.0, 145.0, 3.013),
+        ("bram_optimal", 190.0, 107.0, 4.15),
+    ];
+    let mut rec = ExperimentRecord::from_table("table8", &t);
+    rec.comparisons
+        .push(Comparison::gated("configs", rows.len() as f64, 4.0, 1.0, 1.0));
+    for ((_, cycles, interval, _, power, _), (key, pc, pi, pw)) in rows.iter().zip(paper) {
+        let (c, i) = (*cycles as f64, *interval as f64);
+        match key {
+            "ltc" => {
+                rec.comparisons
+                    .push(Comparison::gated("ltc_cycles", c, pc, 0.5, 2.0));
+                rec.comparisons
+                    .push(Comparison::gated("ltc_interval", i, pi, 0.5, 1.5));
+            }
+            "gru_baseline" => {
+                rec.comparisons
+                    .push(Comparison::gated("gru_baseline_cycles", c, pc, 0.5, 2.0));
+                rec.comparisons
+                    .push(Comparison::informational("gru_baseline_interval", i, pi));
+            }
+            _ => {
+                rec.comparisons
+                    .push(Comparison::informational(format!("{key}_cycles"), c, pc));
+                rec.comparisons
+                    .push(Comparison::informational(format!("{key}_interval"), i, pi));
+            }
+        }
+        rec.comparisons
+            .push(Comparison::informational(format!("{key}_power_w"), *power, pw));
+    }
+    let (s1, s2, s3) = table8_speedups();
+    rec.comparisons
+        .push(Comparison::informational("speedup_ltc_to_gru", s1, 44.3));
+    rec.comparisons
+        .push(Comparison::informational("speedup_gru_to_dataflow", s2, 1.87));
+    rec.comparisons
+        .push(Comparison::informational("speedup_dataflow_to_banking", s3, 1.36));
+    rec.notes.push(
+        "dataflow rows beat the paper's silicon; ratios tracked informationally".to_string(),
+    );
+    rec
 }
 
 /// End-to-end AID demo metric for EXPERIMENTS.md: final loss after a
@@ -486,7 +869,28 @@ mod tests {
 
     #[test]
     fn table5_has_twelve_rows() {
-        let t = table5(None).unwrap();
+        let t = table5().unwrap();
         assert_eq!(t.rows.len(), 12); // 4 workloads × 3 platforms
+    }
+
+    #[test]
+    fn table3_roster_shape() {
+        let t = table3();
+        assert_eq!(t.rows.len(), 7);
+        assert_eq!(t.headers[0], "System");
+        // Every row's library size must be positive.
+        for r in 0..t.rows.len() {
+            assert!(cell(&t, r, 3) > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_records_pass_their_gates() {
+        for rec in [table3_record(), table7_record(), table8_record(), fig8_record()] {
+            assert!(rec.gated_ok(), "{}: gated comparison out of band", rec.id);
+            assert!(!rec.comparisons.is_empty(), "{}: no comparisons", rec.id);
+        }
+        let cyc = cycles_record().unwrap();
+        assert!(cyc.gated_ok(), "cycles: gated comparison out of band");
     }
 }

@@ -2,6 +2,7 @@
 //! charts for the bench harness and EXPERIMENTS.md.
 
 pub mod experiments;
+pub mod runner;
 
 use std::fmt::Write as _;
 

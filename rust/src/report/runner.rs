@@ -1,0 +1,700 @@
+//! Parse-or-execute experiments runner: one registry entry per paper
+//! table/figure, regenerated from committed JSON logs under
+//! `experiments/` at the repo root.
+//!
+//! The discipline follows the NSDI figure-script shape: each artifact is
+//! backed by a per-experiment log; a run *parses* the log when it is
+//! present and fresh and *executes* the generator only when the log is
+//! missing, stale (schema-version mismatch) or explicitly forced. Two
+//! consecutive `merinda experiments` runs therefore converge: the first
+//! may execute missing entries and write their logs, the second
+//! regenerates every table/figure purely by parsing. Every run emits the
+//! aggregated `BENCH_experiments.json`, gated in CI by
+//! `ci/check_bench_experiments.py`. See EXPERIMENTS.md §Paper results
+//! for the table→command reproduction index.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::runtime::Runtime;
+use crate::util::bench::{artifact_path, env_usize, BenchJson};
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+use super::experiments as exp;
+use super::Table;
+
+/// Log-format version. Bumping it invalidates every committed log: the
+/// next run re-executes all entries (the "stale" half of parse-or-execute).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// How [`Runner::run_one`] resolves a log-vs-generator decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Parse the log when present and fresh; execute (and write the log)
+    /// otherwise. The default, and what `--execute` names explicitly.
+    ParseOrExecute,
+    /// Never execute: a missing or stale log is an error. This is how CI
+    /// asserts that a second run performs zero executions.
+    ParseOnly,
+    /// Always execute and rewrite the log, ignoring any committed state.
+    Force,
+}
+
+/// Where a regenerated record came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// Read back from the committed per-experiment log.
+    Parsed,
+    /// Freshly executed by the generator (log rewritten).
+    Executed,
+}
+
+impl fmt::Display for Source {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Source::Parsed => write!(f, "parsed"),
+            Source::Executed => write!(f, "executed"),
+        }
+    }
+}
+
+/// One our-value / paper-value pair with a declared tolerance band on
+/// the `ours / paper` ratio.
+///
+/// Gated comparisons are enforced by `ci/check_bench_experiments.py`;
+/// informational ones (wall-clock-derived, or where the simulator is
+/// documented to diverge from the paper's silicon) are emitted for the
+/// trajectory but never fail the gate.
+///
+/// ```
+/// use merinda::report::runner::Comparison;
+/// let c = Comparison::gated("cycles", 1212.0, 1201.0, 0.5, 2.0);
+/// assert!((c.ratio() - 1.00916).abs() < 1e-3);
+/// assert!(c.within_band());
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct Comparison {
+    /// Metric name, unique within one experiment.
+    pub metric: String,
+    /// Our measured / modeled value.
+    pub ours: f64,
+    /// The paper's reported value (must be > 0).
+    pub paper: f64,
+    /// Declared `(lo, hi)` band on `ours / paper`; `(0, 0)` and unused
+    /// when not gated.
+    pub band: (f64, f64),
+    /// Whether the CI gate enforces the band.
+    pub gated: bool,
+}
+
+impl Comparison {
+    /// A gated comparison: CI fails if `ours / paper` leaves `[lo, hi]`.
+    pub fn gated(metric: impl Into<String>, ours: f64, paper: f64, lo: f64, hi: f64) -> Comparison {
+        assert!(paper > 0.0, "paper value must be positive");
+        assert!(lo <= hi, "band lo must not exceed hi");
+        Comparison {
+            metric: metric.into(),
+            ours,
+            paper,
+            band: (lo, hi),
+            gated: true,
+        }
+    }
+
+    /// An informational comparison: recorded for the trajectory, never
+    /// enforced.
+    pub fn informational(metric: impl Into<String>, ours: f64, paper: f64) -> Comparison {
+        assert!(paper > 0.0, "paper value must be positive");
+        Comparison {
+            metric: metric.into(),
+            ours,
+            paper,
+            band: (0.0, 0.0),
+            gated: false,
+        }
+    }
+
+    /// `ours / paper`.
+    pub fn ratio(&self) -> f64 {
+        self.ours / self.paper
+    }
+
+    /// Gated band check; informational comparisons always pass.
+    pub fn within_band(&self) -> bool {
+        !self.gated || (self.ratio() >= self.band.0 && self.ratio() <= self.band.1)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("metric", Json::str(self.metric.clone())),
+            ("ours", Json::num(self.ours)),
+            ("paper", Json::num(self.paper)),
+            ("ratio", Json::num(self.ratio())),
+            ("band_lo", Json::num(self.band.0)),
+            ("band_hi", Json::num(self.band.1)),
+            ("gated", Json::Bool(self.gated)),
+            ("within_band", Json::Bool(self.within_band())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Comparison> {
+        let field = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::config(format!("comparison missing numeric {k:?}")))
+        };
+        let metric = j
+            .get("metric")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::config("comparison missing metric"))?
+            .to_string();
+        let gated = matches!(j.get("gated"), Some(Json::Bool(true)));
+        Ok(Comparison {
+            metric,
+            ours: field("ours")?,
+            paper: field("paper")?,
+            band: (field("band_lo")?, field("band_hi")?),
+            gated,
+        })
+    }
+}
+
+/// The structured result of one regenerated paper table/figure: the
+/// rendered table (title/headers/rows), the our-vs-paper comparisons,
+/// an optional ASCII chart (Fig. 8), and free-form provenance notes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentRecord {
+    /// Registry id (`table1` … `table8`, `fig8`, `cycles`).
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub comparisons: Vec<Comparison>,
+    /// ASCII chart body (Fig. 8's power/energy bars).
+    pub chart: Option<String>,
+    /// Provenance: fallbacks taken, workload knobs, calibration caveats.
+    pub notes: Vec<String>,
+}
+
+impl ExperimentRecord {
+    /// Build a record from a rendered [`Table`].
+    pub fn from_table(id: &str, t: &Table) -> ExperimentRecord {
+        ExperimentRecord {
+            id: id.to_string(),
+            title: t.title.clone(),
+            headers: t.headers.clone(),
+            rows: t.rows.clone(),
+            comparisons: Vec::new(),
+            chart: None,
+            notes: Vec::new(),
+        }
+    }
+
+    /// The record's table view (what benches and the CLI print).
+    pub fn table(&self) -> Table {
+        Table {
+            title: self.title.clone(),
+            headers: self.headers.clone(),
+            rows: self.rows.clone(),
+        }
+    }
+
+    /// All gated comparisons sit inside their declared bands.
+    pub fn gated_ok(&self) -> bool {
+        self.comparisons.iter().all(Comparison::within_band)
+    }
+
+    /// Serialize as the per-experiment log body (includes the schema
+    /// version that staleness detection keys on).
+    pub fn to_json(&self) -> Json {
+        let strs = |xs: &[String]| Json::Arr(xs.iter().map(Json::str).collect());
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("title", Json::str(self.title.clone())),
+            ("headers", strs(&self.headers)),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(|r| strs(r)).collect()),
+            ),
+            (
+                "comparisons",
+                Json::Arr(self.comparisons.iter().map(Comparison::to_json).collect()),
+            ),
+            (
+                "chart",
+                match &self.chart {
+                    Some(c) => Json::str(c.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("notes", strs(&self.notes)),
+        ])
+    }
+
+    /// Parse a log body; rejects schema-version mismatches (the caller
+    /// treats that as "stale → re-execute").
+    pub fn from_json(j: &Json) -> Result<ExperimentRecord> {
+        let version = j
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::config("log missing schema_version"))? as u64;
+        if version != SCHEMA_VERSION {
+            return Err(Error::config(format!(
+                "log schema_version {version} != {SCHEMA_VERSION}"
+            )));
+        }
+        let text = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| Error::config(format!("log missing {k:?}")))
+        };
+        let str_arr = |v: &Json| -> Result<Vec<String>> {
+            v.as_arr()
+                .ok_or_else(|| Error::config("expected a string array"))?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| Error::config("expected a string"))
+                })
+                .collect()
+        };
+        let headers = str_arr(
+            j.get("headers")
+                .ok_or_else(|| Error::config("log missing headers"))?,
+        )?;
+        let rows = j
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::config("log missing rows"))?
+            .iter()
+            .map(&str_arr)
+            .collect::<Result<Vec<_>>>()?;
+        let comparisons = j
+            .get("comparisons")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::config("log missing comparisons"))?
+            .iter()
+            .map(Comparison::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let chart = match j.get("chart") {
+            Some(Json::Str(c)) => Some(c.clone()),
+            _ => None,
+        };
+        let notes = match j.get("notes") {
+            Some(v) => str_arr(v)?,
+            None => Vec::new(),
+        };
+        Ok(ExperimentRecord {
+            id: text("id")?,
+            title: text("title")?,
+            headers,
+            rows,
+            comparisons,
+            chart,
+            notes,
+        })
+    }
+}
+
+/// Workload knobs the executing generators consume.
+#[derive(Clone, Debug)]
+pub struct ExecCtx {
+    /// PJRT artifact directory probed by the Table 6 entry; when absent
+    /// the entry falls back to the native MERINDA polish.
+    pub artifact_dir: String,
+    /// Samples per system for the Table 6 recovery comparison
+    /// (`MERINDA_EXP_SAMPLES` shrinks it in CI).
+    pub table6_samples: usize,
+    /// Seed for the stochastic generators.
+    pub seed: u64,
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx {
+            artifact_dir: "artifacts".to_string(),
+            table6_samples: env_usize("MERINDA_EXP_SAMPLES", 1200),
+            seed: 23,
+        }
+    }
+}
+
+/// One registry entry: a paper artifact and its generator.
+pub struct Entry {
+    /// Registry id and log-file stem.
+    pub id: &'static str,
+    /// The paper artifact this entry reproduces.
+    pub anchor: &'static str,
+    execute: fn(&ExecCtx) -> Result<ExperimentRecord>,
+}
+
+fn run_table1(_: &ExecCtx) -> Result<ExperimentRecord> {
+    Ok(exp::table1_record())
+}
+
+fn run_table2(_: &ExecCtx) -> Result<ExperimentRecord> {
+    Ok(exp::table2_record())
+}
+
+fn run_table3(_: &ExecCtx) -> Result<ExperimentRecord> {
+    Ok(exp::table3_record())
+}
+
+fn run_table4(_: &ExecCtx) -> Result<ExperimentRecord> {
+    exp::table4_record()
+}
+
+fn run_table5(_: &ExecCtx) -> Result<ExperimentRecord> {
+    exp::table5_record()
+}
+
+fn run_table6(ctx: &ExecCtx) -> Result<ExperimentRecord> {
+    let opts = exp::Table6Opts {
+        samples: ctx.table6_samples,
+        seed: ctx.seed,
+        ..Default::default()
+    };
+    match Runtime::new(&ctx.artifact_dir) {
+        Ok(rt) => exp::table6_record(&rt, opts),
+        Err(_) => exp::table6_native_record(opts),
+    }
+}
+
+fn run_table7(_: &ExecCtx) -> Result<ExperimentRecord> {
+    Ok(exp::table7_record())
+}
+
+fn run_table8(_: &ExecCtx) -> Result<ExperimentRecord> {
+    Ok(exp::table8_record())
+}
+
+fn run_fig8(_: &ExecCtx) -> Result<ExperimentRecord> {
+    Ok(exp::fig8_record())
+}
+
+fn run_cycles(_: &ExecCtx) -> Result<ExperimentRecord> {
+    exp::cycles_record()
+}
+
+static ENTRIES: [Entry; 10] = [
+    Entry {
+        id: "table1",
+        anchor: "Table 1 (forward-pass split)",
+        execute: run_table1,
+    },
+    Entry {
+        id: "table2",
+        anchor: "Table 2 (ODE-step breakdown)",
+        execute: run_table2,
+    },
+    Entry {
+        id: "table3",
+        anchor: "Table 3 (case-study systems)",
+        execute: run_table3,
+    },
+    Entry {
+        id: "table4",
+        anchor: "Table 4 (SINDy MR time/energy/DRAM)",
+        execute: run_table4,
+    },
+    Entry {
+        id: "table5",
+        anchor: "Table 5 (cross-platform comparison)",
+        execute: run_table5,
+    },
+    Entry {
+        id: "table6",
+        anchor: "Table 6 (recovery accuracy)",
+        execute: run_table6,
+    },
+    Entry {
+        id: "table7",
+        anchor: "Table 7 (stage-mapping sweep)",
+        execute: run_table7,
+    },
+    Entry {
+        id: "table8",
+        anchor: "Table 8 (accelerator configs)",
+        execute: run_table8,
+    },
+    Entry {
+        id: "fig8",
+        anchor: "Fig. 8 (power/energy bars)",
+        execute: run_fig8,
+    },
+    Entry {
+        id: "cycles",
+        anchor: "§6 headline cycle ratios",
+        execute: run_cycles,
+    },
+];
+
+/// One regenerated experiment with its provenance.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub record: ExperimentRecord,
+    pub source: Source,
+}
+
+/// The parse-or-execute runner over a log directory.
+///
+/// ```
+/// use merinda::report::runner::{Mode, Runner, Source};
+/// let dir = std::env::temp_dir().join("merinda-doc-runner");
+/// let runner = Runner::new(&dir);
+/// // Force one execution, then the committed log alone must suffice.
+/// let first = runner.run_one("table8", Mode::Force).unwrap();
+/// let second = runner.run_one("table8", Mode::ParseOnly).unwrap();
+/// assert_eq!(first.source, Source::Executed);
+/// assert_eq!(second.source, Source::Parsed);
+/// assert_eq!(first.record.rows, second.record.rows);
+/// ```
+pub struct Runner {
+    log_dir: PathBuf,
+    ctx: ExecCtx,
+}
+
+impl Runner {
+    /// A runner over `log_dir` with the default [`ExecCtx`].
+    pub fn new(log_dir: impl AsRef<Path>) -> Runner {
+        Runner {
+            log_dir: log_dir.as_ref().to_path_buf(),
+            ctx: ExecCtx::default(),
+        }
+    }
+
+    /// A runner with explicit workload knobs.
+    pub fn with_ctx(log_dir: impl AsRef<Path>, ctx: ExecCtx) -> Runner {
+        Runner {
+            log_dir: log_dir.as_ref().to_path_buf(),
+            ctx,
+        }
+    }
+
+    /// The canonical runner: logs live in `experiments/` at the repo root
+    /// (one level above the crate manifest, like the `BENCH_*.json`
+    /// artifacts).
+    pub fn at_repo_root() -> Runner {
+        Runner::new(artifact_path("experiments"))
+    }
+
+    pub fn log_dir(&self) -> &Path {
+        &self.log_dir
+    }
+
+    /// All registry ids, in paper order.
+    pub fn ids() -> Vec<&'static str> {
+        ENTRIES.iter().map(|e| e.id).collect()
+    }
+
+    /// The full registry (id + paper anchor), for index rendering.
+    pub fn entries() -> &'static [Entry] {
+        &ENTRIES
+    }
+
+    /// Look up a registry entry by id.
+    pub fn entry(id: &str) -> Result<&'static Entry> {
+        ENTRIES.iter().find(|e| e.id == id).ok_or_else(|| {
+            Error::config(format!(
+                "unknown experiment {id:?}; valid ids: {}",
+                Runner::ids().join(", ")
+            ))
+        })
+    }
+
+    /// The per-experiment log path (`<log_dir>/<id>.json`).
+    pub fn log_path(&self, id: &str) -> PathBuf {
+        self.log_dir.join(format!("{id}.json"))
+    }
+
+    /// Read back a fresh log, or `None` when it is missing, unparsable,
+    /// stale (schema-version mismatch) or recorded under another id.
+    pub fn load(&self, id: &str) -> Option<ExperimentRecord> {
+        let text = std::fs::read_to_string(self.log_path(id)).ok()?;
+        let json = Json::parse(&text).ok()?;
+        let rec = ExperimentRecord::from_json(&json).ok()?;
+        if rec.id == id {
+            Some(rec)
+        } else {
+            None
+        }
+    }
+
+    /// Parse-or-execute one experiment (see [`Mode`]). Executions write
+    /// the log back so the next run parses.
+    pub fn run_one(&self, id: &str, mode: Mode) -> Result<RunOutcome> {
+        let entry = Runner::entry(id)?;
+        if mode != Mode::Force {
+            if let Some(record) = self.load(id) {
+                return Ok(RunOutcome {
+                    record,
+                    source: Source::Parsed,
+                });
+            }
+            if mode == Mode::ParseOnly {
+                return Err(Error::config(format!(
+                    "no fresh log for {id} at {}; run `merinda experiments` \
+                     (or --force) to regenerate it",
+                    self.log_path(id).display()
+                )));
+            }
+        }
+        let record = (entry.execute)(&self.ctx)?;
+        std::fs::create_dir_all(&self.log_dir)?;
+        std::fs::write(self.log_path(id), record.to_json().to_pretty())?;
+        Ok(RunOutcome {
+            record,
+            source: Source::Executed,
+        })
+    }
+
+    /// Run a set of experiments in registry order.
+    pub fn run(&self, ids: &[&str], mode: Mode) -> Result<Vec<RunOutcome>> {
+        ids.iter().map(|id| self.run_one(id, mode)).collect()
+    }
+
+    /// Aggregate outcomes into the `BENCH_experiments.json` report:
+    /// one `experiments.<id>` section per record (with its `source`) and
+    /// a `summary` envelope the CI gate cross-checks.
+    pub fn bench_report(outcomes: &[RunOutcome]) -> BenchJson {
+        let mut experiments = std::collections::BTreeMap::new();
+        let mut executed = 0usize;
+        let mut comparisons = 0usize;
+        let mut gated = 0usize;
+        let mut gated_within = 0usize;
+        for out in outcomes {
+            if out.source == Source::Executed {
+                executed += 1;
+            }
+            comparisons += out.record.comparisons.len();
+            for c in &out.record.comparisons {
+                if c.gated {
+                    gated += 1;
+                    if c.within_band() {
+                        gated_within += 1;
+                    }
+                }
+            }
+            let mut obj = match out.record.to_json() {
+                Json::Obj(o) => o,
+                _ => unreachable!("record json is an object"),
+            };
+            obj.insert("source".to_string(), Json::str(out.source.to_string()));
+            experiments.insert(out.record.id.clone(), Json::Obj(obj));
+        }
+        let mut report = BenchJson::new("experiments");
+        report.section("experiments", Json::Obj(experiments));
+        report.section(
+            "summary",
+            Json::obj(vec![
+                ("experiments", Json::num(outcomes.len() as f64)),
+                ("executed", Json::num(executed as f64)),
+                ("parsed", Json::num((outcomes.len() - executed) as f64)),
+                ("comparisons", Json::num(comparisons as f64)),
+                ("gated_comparisons", Json::num(gated as f64)),
+                ("gated_within_band", Json::num(gated_within as f64)),
+                ("all_within_band", Json::Bool(gated == gated_within)),
+            ]),
+        );
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record() -> ExperimentRecord {
+        ExperimentRecord {
+            id: "table9".to_string(),
+            title: "Table 9: unit".to_string(),
+            headers: vec!["a".into(), "b".into()],
+            rows: vec![vec!["1".into(), "2".into()]],
+            comparisons: vec![
+                Comparison::gated("x", 2.0, 1.0, 0.5, 3.0),
+                Comparison::informational("y", 10.0, 1.0),
+            ],
+            chart: Some("##".to_string()),
+            notes: vec!["unit fixture".to_string()],
+        }
+    }
+
+    #[test]
+    fn record_json_round_trips() {
+        let rec = sample_record();
+        let back = ExperimentRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(rec, back);
+    }
+
+    #[test]
+    fn stale_schema_version_is_rejected() {
+        let mut obj = match sample_record().to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.insert("schema_version".to_string(), Json::num(999.0));
+        assert!(ExperimentRecord::from_json(&Json::Obj(obj)).is_err());
+    }
+
+    #[test]
+    fn comparison_band_semantics() {
+        let inside = Comparison::gated("m", 190.0, 107.0, 0.5, 2.0);
+        assert!(inside.within_band());
+        let outside = Comparison::gated("m", 1000.0, 107.0, 0.5, 2.0);
+        assert!(!outside.within_band());
+        // Informational comparisons never fail the gate.
+        let info = Comparison::informational("m", 1000.0, 107.0);
+        assert!(info.within_band());
+    }
+
+    #[test]
+    fn registry_ids_are_distinct_and_complete() {
+        let ids = Runner::ids();
+        // Joined comparison pins count, order and distinctness at once.
+        assert_eq!(
+            ids.join(","),
+            "table1,table2,table3,table4,table5,table6,table7,table8,fig8,cycles"
+        );
+        assert!(Runner::entry("table99").is_err());
+    }
+
+    #[test]
+    fn bench_report_summary_is_consistent() {
+        let outcomes = vec![
+            RunOutcome {
+                record: sample_record(),
+                source: Source::Executed,
+            },
+            RunOutcome {
+                record: ExperimentRecord {
+                    id: "table10".to_string(),
+                    ..sample_record()
+                },
+                source: Source::Parsed,
+            },
+        ];
+        let j = Json::parse(&Runner::bench_report(&outcomes).to_json().to_pretty()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "experiments");
+        let s = j.get("summary").unwrap();
+        assert_eq!(s.get("experiments").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(s.get("executed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(s.get("parsed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(s.get("comparisons").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(s.get("gated_comparisons").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(s.get("gated_within_band").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(s.get("all_within_band").unwrap(), &Json::Bool(true));
+        let exps = j.get("experiments").unwrap();
+        assert_eq!(
+            exps.get("table9").unwrap().get("source").unwrap().as_str(),
+            Some("executed")
+        );
+        assert_eq!(
+            exps.get("table10").unwrap().get("source").unwrap().as_str(),
+            Some("parsed")
+        );
+    }
+}

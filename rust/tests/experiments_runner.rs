@@ -1,0 +1,194 @@
+//! Integration tests for the paper-results harness: generator shapes
+//! (row counts / column names vs the paper's tables) and the
+//! parse-or-execute contract of `report::runner` (second run executes
+//! nothing and reproduces the first run's records byte-for-byte).
+
+use merinda::report::experiments as exp;
+use merinda::report::runner::{ExperimentRecord, Mode, Runner, Source, SCHEMA_VERSION};
+use merinda::util::json::Json;
+
+/// Cheap, fully deterministic registry subset (no wall-clock profiling,
+/// no multi-second SINDy runs) used for round-trip tests.
+const CHEAP: [&str; 6] = ["table3", "table5", "table7", "table8", "fig8", "cycles"];
+
+fn temp_log_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("merinda-exp-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn table2_shape_matches_paper() {
+    let t = exp::table2();
+    // Five components + the per-step total row.
+    assert_eq!(t.rows.len(), 6);
+    assert_eq!(
+        t.headers,
+        vec!["Operation", "Time (ms)", "Share (%)", "Paper share"]
+    );
+    assert_eq!(t.rows[0][0], "Recurrent Sigmoid");
+    assert_eq!(t.rows[5][0], "Single ODE Step Total");
+}
+
+#[test]
+fn table4_shape_matches_paper() {
+    let t = exp::table4().unwrap();
+    assert_eq!(t.rows.len(), 3); // AID, AV lateral, APC
+    assert_eq!(
+        t.headers,
+        vec![
+            "System",
+            "Time (s)",
+            "Energy (J)",
+            "DRAM (MB)",
+            "Paper (s / J / MB)"
+        ]
+    );
+}
+
+#[test]
+fn table5_shape_matches_paper() {
+    let t = exp::table5().unwrap();
+    assert_eq!(t.rows.len(), 12); // 4 workloads x 3 platforms
+    assert_eq!(
+        t.headers,
+        vec![
+            "Workload",
+            "Platform",
+            "Runtime (s)",
+            "Power (W)",
+            "DRAM (MB)",
+            "Freq (MHz)"
+        ]
+    );
+    // Every third row is the FPGA row.
+    for w in 0..4 {
+        assert_eq!(t.rows[w * 3 + 2][1], "FPGA (PYNQ-Z2)");
+    }
+}
+
+#[test]
+fn table8_shape_matches_paper() {
+    let t = exp::table8();
+    assert_eq!(t.rows.len(), 4); // LTC, GRU baseline, concurrent, BRAM-optimal
+    assert_eq!(t.headers[0], "Configuration");
+    assert_eq!(t.rows[0][0], "LTC");
+    assert_eq!(t.rows[3][0], "BRAM optimal GRU");
+}
+
+#[test]
+fn table8_speedups_sane_and_composable() {
+    let (s1, s2, s3) = exp::table8_speedups();
+    // Each optimization step must strictly improve the interval.
+    assert!(s1 > 1.0, "LTC->GRU speedup {s1}");
+    assert!(s2 > 1.0, "GRU->DATAFLOW speedup {s2}");
+    assert!(s3 > 1.0, "DATAFLOW->banking speedup {s3}");
+    // The chained ratios must compose to the end-to-end LTC->banked
+    // ratio read straight off the Table 8 rows.
+    let rows = exp::table8_rows();
+    let end_to_end = rows[0].2 as f64 / rows[3].2 as f64;
+    assert!(
+        (s1 * s2 * s3 - end_to_end).abs() < 1e-9,
+        "composition {} vs end-to-end {end_to_end}",
+        s1 * s2 * s3
+    );
+}
+
+#[test]
+fn runner_round_trip_second_run_executes_nothing() {
+    let dir = temp_log_dir("roundtrip");
+    let runner = Runner::new(&dir);
+
+    let first = runner.run(&CHEAP, Mode::ParseOrExecute).unwrap();
+    assert!(
+        first.iter().all(|o| o.source == Source::Executed),
+        "fresh log dir must execute every entry"
+    );
+
+    // Second run: everything regenerates purely by parsing.
+    let second = runner.run(&CHEAP, Mode::ParseOrExecute).unwrap();
+    assert!(
+        second.iter().all(|o| o.source == Source::Parsed),
+        "second run must parse the committed logs only"
+    );
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.record, b.record, "{}: parsed log drifted", a.record.id);
+    }
+
+    // Parse-only mode succeeds now that the logs exist...
+    let third = runner.run(&CHEAP, Mode::ParseOnly).unwrap();
+    assert!(third.iter().all(|o| o.source == Source::Parsed));
+
+    // ...and the aggregated report records zero executions.
+    let report = Runner::bench_report(&second);
+    let j = Json::parse(&report.to_json().to_pretty()).unwrap();
+    let summary = j.get("summary").unwrap();
+    assert_eq!(summary.get("executed").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(
+        summary.get("parsed").unwrap().as_usize().unwrap(),
+        CHEAP.len()
+    );
+    assert_eq!(summary.get("all_within_band").unwrap(), &Json::Bool(true));
+}
+
+#[test]
+fn parse_only_fails_on_missing_log() {
+    let dir = temp_log_dir("parseonly");
+    let runner = Runner::new(&dir);
+    let err = runner.run_one("table8", Mode::ParseOnly).unwrap_err();
+    assert!(err.to_string().contains("no fresh log"), "{err}");
+}
+
+#[test]
+fn stale_schema_version_triggers_reexecution() {
+    let dir = temp_log_dir("stale");
+    let runner = Runner::new(&dir);
+    runner.run_one("table8", Mode::Force).unwrap();
+
+    // Corrupt the committed log's schema version.
+    let path = runner.log_path("table8");
+    let mut obj = match Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap() {
+        Json::Obj(o) => o,
+        _ => unreachable!(),
+    };
+    obj.insert(
+        "schema_version".to_string(),
+        Json::num((SCHEMA_VERSION + 1) as f64),
+    );
+    std::fs::write(&path, Json::Obj(obj).to_pretty()).unwrap();
+
+    let out = runner.run_one("table8", Mode::ParseOrExecute).unwrap();
+    assert_eq!(out.source, Source::Executed, "stale log must re-execute");
+    // The rewritten log is fresh again.
+    let again = runner.run_one("table8", Mode::ParseOnly).unwrap();
+    assert_eq!(again.source, Source::Parsed);
+}
+
+#[test]
+fn force_mode_rewrites_fresh_logs() {
+    let dir = temp_log_dir("force");
+    let runner = Runner::new(&dir);
+    runner.run_one("fig8", Mode::ParseOrExecute).unwrap();
+    let out = runner.run_one("fig8", Mode::Force).unwrap();
+    assert_eq!(out.source, Source::Executed);
+    assert!(out.record.chart.is_some(), "fig8 must carry its chart");
+}
+
+#[test]
+fn unknown_id_is_rejected_before_execution() {
+    let dir = temp_log_dir("unknown");
+    let runner = Runner::new(&dir);
+    assert!(runner.run_one("table99", Mode::ParseOrExecute).is_err());
+}
+
+#[test]
+fn logs_round_trip_through_disk_json() {
+    let dir = temp_log_dir("diskjson");
+    let runner = Runner::new(&dir);
+    let out = runner.run_one("table7", Mode::Force).unwrap();
+    let text = std::fs::read_to_string(runner.log_path("table7")).unwrap();
+    let parsed = ExperimentRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(parsed, out.record);
+    assert!(parsed.gated_ok());
+}

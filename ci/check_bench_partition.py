@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Validate BENCH_partition.json (schema + multi-board partitioning gate).
+
+Usage: check_bench_partition.py
+
+Run after `merinda partition`. Every gated value is cycle-model based,
+so the gate is machine-independent:
+
+* schema: workload / designs / summary sections with per-design whole,
+  split, sweep-counter and chosen entries;
+* every design whose whole-graph plan does NOT fit one board must
+  become feasible split — more than one part, every part fitting and
+  closing timing (splitting is the point of the subsystem);
+* the composed end-to-end window never undershoots its slowest member
+  board (max-plus composition cannot beat a member pipeline);
+* for designs that DO fit one board whole, the chosen plan never
+  models more cycles than the whole-graph plan (never-worse gate);
+* hops carry real payloads with positive serialization cost, and the
+  sweep counters are coherent (evaluated >= feasible >= 1).
+"""
+import json
+
+d = json.load(open("BENCH_partition.json"))
+
+# --- schema ---
+for key in ("bench", "workload", "designs", "summary", "rows", "speedups"):
+    assert key in d, f"missing key: {key}"
+assert d["bench"] == "partition"
+for k in ("window", "slots", "board", "link"):
+    assert k in d["workload"], f"missing workload.{k}"
+for k in ("designs", "whole_feasible", "split_feasible", "rescued_by_split"):
+    assert k in d["summary"], f"missing summary.{k}"
+
+designs = d["designs"]
+assert len(designs) == d["summary"]["designs"] >= 1
+
+rescued = 0
+whole_feasible = 0
+for name, b in designs.items():
+    for k in ("whole", "split", "evaluated", "feasible_candidates", "chosen",
+              "chosen_window_cycles", "chosen_window_s"):
+        assert k in b, f"{name}: missing {k}"
+    for k in ("fits", "feasible", "window_cycles", "window_s", "bram18"):
+        assert k in b["whole"], f"{name}: missing whole.{k}"
+    sp = b["split"]
+    for k in ("n_parts", "feasible", "parts", "hops", "end_to_end"):
+        assert k in sp, f"{name}: missing split.{k}"
+    e2e = sp["end_to_end"]
+    for k in ("window_cycles", "interval_cycles", "fill_s", "interval_s",
+              "window_s", "reference_clock_mhz"):
+        assert k in e2e, f"{name}: missing end_to_end.{k}"
+    assert len(sp["parts"]) == sp["n_parts"] >= 1
+    assert 1 <= b["feasible_candidates"] <= b["evaluated"]
+
+    # --- the winning plan must actually deploy ---
+    assert sp["feasible"] is True, f"{name}: chosen plan must be feasible"
+    for p in sp["parts"]:
+        assert p["fits"] is True, f"{name}: part {p['board']} must fit"
+        assert p["clock_ok"] is True, f"{name}: part {p['board']} timing"
+        assert p["window_cycles"] > 0
+
+    # --- oversized designs must be rescued by splitting ---
+    if b["whole"]["fits"]:
+        whole_feasible += 1
+    else:
+        rescued += 1
+        assert sp["n_parts"] > 1, \
+            f"{name}: does not fit one board, so it must split"
+        assert len(sp["hops"]) >= 1, f"{name}: a real split has cut traffic"
+
+    # --- composition law: end to end dominates the slowest member ---
+    member_max = max(p["window_cycles"] for p in sp["parts"])
+    assert e2e["window_cycles"] + 2 >= member_max, \
+        f"{name}: end-to-end {e2e['window_cycles']} beats a member {member_max}"
+    assert e2e["window_s"] >= e2e["fill_s"] > 0
+    assert e2e["interval_s"] > 0 and e2e["reference_clock_mhz"] > 0
+
+    # --- hops carry real link traffic ---
+    for h in sp["hops"]:
+        assert h["bytes_per_item"] > 0 and h["elems"] > 0
+        assert h["serialize_s"] > 0 and h["latency_s"] > 0
+        assert h["from_part"] < h["to_part"], f"{name}: hop must point forward"
+
+    # --- never worse than the whole-graph plan where it exists ---
+    if b["whole"]["feasible"]:
+        assert b["chosen_window_cycles"] <= b["whole"]["window_cycles"], \
+            f"{name}: chose {b['chosen_window_cycles']} cycles over whole " \
+            f"{b['whole']['window_cycles']}"
+        assert b["chosen_window_s"] <= b["whole"]["window_s"] + 1e-12
+    assert b["chosen"] in ("whole", "split")
+    if b["chosen"] == "whole":
+        assert sp["n_parts"] == 1
+
+s = d["summary"]
+assert s["whole_feasible"] == whole_feasible
+assert s["rescued_by_split"] == rescued
+assert rescued >= 1, "the report must include at least one rescued design"
+assert whole_feasible >= 1, "the report must include a never-worse row"
+assert s["split_feasible"] == len(designs), \
+    "every report design must end up deployable after the sweep"
+
+print(f"BENCH_partition.json OK: {len(designs)} designs, "
+      f"{rescued} rescued by splitting, {whole_feasible} fit whole")

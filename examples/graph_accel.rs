@@ -9,13 +9,18 @@
 //!   2. lower it through the shared cycle/fit/power models (`lower`),
 //!   3. tune the family over the shared design axes (`tune_graph`),
 //!   4. join the heterogeneous GRU fleet via
-//!      `coordinator::placement::GraphInstanceSpec`.
+//!      `coordinator::placement::GraphInstanceSpec`,
+//!   5. outgrow one board and split the same graph across a rack via
+//!      `fpga::partition::best_partition`.
 //!
 //! Run with:  `cargo run --release --example graph_accel`
 
-use merinda::coordinator::placement::{placement_cost, rank, GraphInstanceSpec, InstanceSpec};
+use merinda::coordinator::placement::{
+    placement_cost, rank, GraphInstanceSpec, InstanceSpec, PartitionedInstanceSpec,
+};
 use merinda::fpga::cluster::{heterogeneous_fleet, Link};
 use merinda::fpga::graph::{lower, Target};
+use merinda::fpga::partition::{best_partition, pynq_rack};
 use merinda::fpga::resources::Device;
 use merinda::fpga::sindy_accel::SindyAccelConfig;
 use merinda::fpga::tuner::{tune_graph, TunerOptions};
@@ -127,4 +132,72 @@ fn main() {
             m.max_outstanding
         );
     }
+
+    // --- 5. Outgrow the board: split the same description over a rack. ---
+    // A production-depth SINDy head (order-3 library over 10 states, 256
+    // hidden units, 900 Θ coefficients) blows past one PYNQ-Z2's BRAM.
+    // The partitioner cuts the SAME graph along its FIFO edges and finds
+    // the fastest fleet-feasible split — no per-board redescription.
+    let big = SindyAccelConfig {
+        xdim: 10,
+        udim: 2,
+        order: 3,
+        hidden: 256,
+        output: 900,
+        ..SindyAccelConfig::concurrent()
+    };
+    let big_graph = big.graph();
+    let whole = lower(&big_graph, &Target::default()).expect("oversized graph still lowers");
+    println!(
+        "\npartition: {:?} whole-graph on one PYNQ-Z2: {} BRAM18, fits: {}",
+        big_graph.name,
+        whole.resources.bram18,
+        if whole.fits { "yes" } else { "NO" }
+    );
+    let out = best_partition(&big_graph, &pynq_rack(2), 64)
+        .expect("a two-board rack must rescue the oversized head");
+    let plan = &out.plan;
+    println!(
+        "  best of {} cuts ({} feasible): {} boards, feasible: {}",
+        out.evaluated,
+        out.feasible,
+        plan.n_parts(),
+        plan.feasible()
+    );
+    for p in &plan.parts {
+        println!(
+            "    {:<8} ops {:?}: {} BRAM18, window {} cycles",
+            p.board,
+            p.ops,
+            p.resources().bram18,
+            p.lowered.window_cycles(64)
+        );
+    }
+    for h in &plan.hops {
+        println!(
+            "    link {}->{} op {}->{}: {} elems/item, serialize {:.1} us",
+            h.from_part,
+            h.to_part,
+            h.from_op,
+            h.to_op,
+            h.elems,
+            h.serialize_s() * 1e6
+        );
+    }
+    println!(
+        "  end to end: window {} cycles @ {:.0} MHz reference ({:.3} ms)",
+        plan.window_cycles(64),
+        plan.reference_clock_mhz(),
+        plan.window_s(64) * 1e3
+    );
+    // The split plan places like any single-board instance: one model,
+    // whole-window cost, capacity capped by its scarcest member board.
+    let split = PartitionedInstanceSpec::new("sindy-rack", plan.clone(), Link::ten_gbe());
+    let m = split.model(64, 10, 2, big.output);
+    println!(
+        "  placement model: cost {:.3} ms, budget {} in flight, fits: {}",
+        placement_cost(&m, 0) * 1e3,
+        m.max_outstanding,
+        m.fits
+    );
 }

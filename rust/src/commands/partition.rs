@@ -1,0 +1,198 @@
+//! `merinda partition` — multi-board graph partitioning report.
+//!
+//! Runs `fpga::partition::best_partition` over three representative
+//! designs on a two-slot PYNQ-Z2 rack (10 GbE between boards): a serving
+//! GRU that fits one board (the never-worse row — the sweep must keep
+//! the whole-graph plan), an oversized GRU whose gate/candidate weight
+//! tiles blow one board's BRAM, and an oversized SINDy head. For each
+//! design the whole-graph single-board plan is computed through the
+//! *same* `partition` code path (zero cuts), so the whole-vs-split
+//! comparison is cycle-model-exact by construction. Writes
+//! `BENCH_partition.json` at the repo root — deterministic and
+//! machine-independent, gated in CI by `ci/check_bench_partition.py`
+//! (every oversized design must become feasible split, end-to-end
+//! cycles must dominate every member's, and designs that fit whole must
+//! never choose a slower split).
+
+use std::collections::BTreeMap;
+
+use merinda::fpga::fixedpoint::FixedFormat;
+use merinda::fpga::graph::Graph;
+use merinda::fpga::gru_accel::GruAccelConfig;
+use merinda::fpga::partition::{
+    best_partition, partition, pynq_rack, BoardSlot, LinkHop, PartitionedPlan,
+};
+use merinda::fpga::sindy_accel::SindyAccelConfig;
+use merinda::util::bench::{artifact_path, BenchJson};
+use merinda::util::cli::Args;
+use merinda::util::json::Json;
+use merinda::util::{Error, Result};
+
+/// The canonical partitioning workload: two identical PYNQ-Z2 slots.
+const RACK_SLOTS: usize = 2;
+
+fn hop_json(h: &LinkHop) -> Json {
+    Json::obj(vec![
+        ("from_part", Json::num(h.from_part as f64)),
+        ("to_part", Json::num(h.to_part as f64)),
+        ("from_op", Json::num(h.from_op as f64)),
+        ("to_op", Json::num(h.to_op as f64)),
+        ("elems", Json::num(h.elems as f64)),
+        ("bytes_per_item", Json::num(h.bytes_per_item as f64)),
+        ("serialize_s", Json::num(h.serialize_s())),
+        ("latency_s", Json::num(h.link.latency_s)),
+    ])
+}
+
+fn plan_json(plan: &PartitionedPlan, window: u64) -> Json {
+    let parts: Vec<Json> = plan
+        .parts
+        .iter()
+        .map(|p| {
+            let r = p.resources();
+            Json::obj(vec![
+                ("board", Json::str(p.board.clone())),
+                ("ops", Json::Arr(p.ops.iter().map(|&i| Json::num(i as f64)).collect())),
+                ("window_cycles", Json::num(p.lowered.window_cycles(window) as f64)),
+                ("interval_cycles", Json::num(p.lowered.interval as f64)),
+                ("lut", Json::num(r.lut as f64)),
+                ("ff", Json::num(r.ff as f64)),
+                ("dsp", Json::num(r.dsp as f64)),
+                ("bram18", Json::num(r.bram18 as f64)),
+                ("fits", Json::Bool(p.fits())),
+                ("clock_ok", Json::Bool(p.clock_ok())),
+            ])
+        })
+        .collect();
+    let hops: Vec<Json> = plan.hops.iter().map(hop_json).collect();
+    Json::obj(vec![
+        ("n_parts", Json::num(plan.n_parts() as f64)),
+        ("feasible", Json::Bool(plan.feasible())),
+        ("parts", Json::Arr(parts)),
+        ("hops", Json::Arr(hops)),
+        (
+            "end_to_end",
+            Json::obj(vec![
+                ("window_cycles", Json::num(plan.window_cycles(window) as f64)),
+                ("interval_cycles", Json::num(plan.interval_cycles() as f64)),
+                ("fill_s", Json::num(plan.fill_s())),
+                ("interval_s", Json::num(plan.interval_s())),
+                ("window_s", Json::num(plan.window_s(window))),
+                ("reference_clock_mhz", Json::num(plan.reference_clock_mhz())),
+            ]),
+        ),
+    ])
+}
+
+/// One design's whole-vs-split row. The whole-graph plan goes through
+/// `partition` with zero cuts (same code path, cycle-exact vs `lower`).
+fn design_json(g: &Graph, slots: &[BoardSlot], window: u64) -> Result<(Json, bool, bool)> {
+    let whole = partition(g, &[], &slots[..1])?;
+    let out = best_partition(g, slots, window)?;
+    let split_chosen = out.plan.n_parts() > 1;
+    let chosen = if split_chosen { "split" } else { "whole" };
+    let json = Json::obj(vec![
+        (
+            "whole",
+            Json::obj(vec![
+                ("fits", Json::Bool(whole.fits())),
+                ("feasible", Json::Bool(whole.feasible())),
+                ("window_cycles", Json::num(whole.window_cycles(window) as f64)),
+                ("window_s", Json::num(whole.window_s(window))),
+                ("bram18", Json::num(whole.resources().bram18 as f64)),
+            ]),
+        ),
+        ("split", plan_json(&out.plan, window)),
+        ("evaluated", Json::num(out.evaluated as f64)),
+        ("feasible_candidates", Json::num(out.feasible as f64)),
+        ("chosen", Json::str(chosen)),
+        ("chosen_window_cycles", Json::num(out.plan.window_cycles(window) as f64)),
+        ("chosen_window_s", Json::num(out.plan.window_s(window))),
+    ]);
+    Ok((json, whole.feasible(), out.plan.feasible()))
+}
+
+/// The three report designs: (key, validated graph).
+fn report_designs() -> Vec<(&'static str, Graph)> {
+    let fmt = FixedFormat::q8_8();
+    let oversized_sindy = SindyAccelConfig {
+        xdim: 10,
+        udim: 2,
+        order: 3,
+        hidden: 256,
+        output: 900,
+        ..SindyAccelConfig::concurrent()
+    };
+    vec![
+        // Fits one PYNQ-Z2 whole: the never-worse row.
+        ("gru_serving", GruAccelConfig::serving(4, 32, fmt, fmt).graph()),
+        // Gate/candidate weight tiles overflow one board's BRAM.
+        ("gru_oversized", GruAccelConfig::serving(4, 384, fmt, fmt).graph()),
+        // Wide library × wide head: w1/w2 tiles overflow one board.
+        ("sindy_oversized", oversized_sindy.graph()),
+    ]
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let window = args.get_usize("window", 64);
+    if window == 0 {
+        return Err(Error::config("partition needs --window >= 1"));
+    }
+    let slots = pynq_rack(RACK_SLOTS);
+    let designs = report_designs();
+    println!(
+        "partition: {} design(s), {RACK_SLOTS}-slot pynq_z2 rack, {window}-step windows",
+        designs.len()
+    );
+
+    let mut designs_json = BTreeMap::new();
+    let mut whole_feasible = 0usize;
+    let mut split_feasible = 0usize;
+    let mut rescued = 0usize;
+    for (key, g) in &designs {
+        let (json, whole_ok, split_ok) = design_json(g, &slots, window as u64)?;
+        whole_feasible += usize::from(whole_ok);
+        split_feasible += usize::from(split_ok);
+        rescued += usize::from(!whole_ok && split_ok);
+        let chosen = json.get("chosen").and_then(Json::as_str).unwrap_or("?");
+        let cycles = json
+            .get("chosen_window_cycles")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        println!(
+            "  [{key:<16}] whole {} -> chose {chosen} at {cycles:.0} cycles/window",
+            if whole_ok { "feasible" } else { "infeasible" }
+        );
+        designs_json.insert((*key).to_string(), json);
+    }
+    println!(
+        "\nsummary: {whole_feasible}/{} feasible whole, {split_feasible} feasible after the \
+         sweep, {rescued} rescued by splitting",
+        designs.len()
+    );
+
+    let mut report = BenchJson::new("partition");
+    report.section(
+        "workload",
+        Json::obj(vec![
+            ("window", Json::num(window as f64)),
+            ("slots", Json::num(RACK_SLOTS as f64)),
+            ("board", Json::str("pynq_z2")),
+            ("link", Json::str("10gbe")),
+        ]),
+    );
+    report.section("designs", Json::Obj(designs_json));
+    report.section(
+        "summary",
+        Json::obj(vec![
+            ("designs", Json::num(designs.len() as f64)),
+            ("whole_feasible", Json::num(whole_feasible as f64)),
+            ("split_feasible", Json::num(split_feasible as f64)),
+            ("rescued_by_split", Json::num(rescued as f64)),
+        ]),
+    );
+    let path = artifact_path("BENCH_partition.json");
+    report.write(&path)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -54,7 +54,7 @@ pub use fixed::{FixedCycleReport, FixedPointBackend, FixedPointConfig};
 pub use native::{
     NativeBackend, NATIVE_DENSE, NATIVE_HID, NATIVE_PLIB, NATIVE_SEQ, NATIVE_UDIM, NATIVE_XDIM,
 };
-pub use placement::{GraphInstanceSpec, InstanceModel, InstanceSpec};
+pub use placement::{GraphInstanceSpec, InstanceModel, InstanceSpec, PartitionedInstanceSpec};
 pub use stream::{
     window_plan, InstanceStats, RecoveredWindow, RefinedWindow, ShedPolicy, StreamConfig,
     StreamCoordinator, StreamStats, TenantStats, WarmStartConfig, WindowConfig, Windower,

@@ -55,6 +55,7 @@
 
 use crate::fpga::cluster::{BoardSpec, Link};
 use crate::fpga::graph::LoweredGraph;
+use crate::fpga::partition::PartitionedPlan;
 use crate::fpga::resources::{Device, Resources};
 use crate::fpga::tuner::TunedConfig;
 
@@ -211,6 +212,76 @@ impl GraphInstanceSpec {
             payload_bytes: payload,
             max_outstanding,
             resources: self.lowered.resources,
+            fits,
+        }
+    }
+}
+
+/// An accelerator instance backed by a *multi-board partitioned plan*
+/// (`fpga::partition`): one design cut along its FIFO edges across
+/// several boards, entering the fleet as a single placement target. The
+/// cost model derives from the plan's max-plus composition law
+/// ([`PartitionedPlan::window_timing`]), so `rank`/`choose` price a
+/// split design against whole-window siblings with no special casing —
+/// a design that fits nowhere whole becomes feasible here, and one that
+/// fits a single board only wins as a split if the split models
+/// strictly fewer seconds.
+#[derive(Clone, Debug)]
+pub struct PartitionedInstanceSpec {
+    pub name: String,
+    pub plan: PartitionedPlan,
+    /// Host ingest link feeding the plan's head board.
+    pub link: Link,
+}
+
+impl PartitionedInstanceSpec {
+    pub fn new(name: impl Into<String>, plan: PartitionedPlan, link: Link) -> Self {
+        PartitionedInstanceSpec {
+            name: name.into(),
+            plan,
+            link,
+        }
+    }
+
+    /// Derive the static placement model — same shape and semantics as
+    /// [`InstanceSpec::model`]. Cycle figures are quoted at the plan's
+    /// reference clock (its slowest member); seconds come straight from
+    /// the composition, so heterogeneous member clocks stay exact. The
+    /// concurrency budget is the *minimum* member budget: every board
+    /// must double-buffer a window's payload for the pipeline to accept
+    /// it, so the tightest member bounds the whole plan.
+    pub fn model(
+        &self,
+        window: usize,
+        xdim: usize,
+        udim: usize,
+        theta_len: usize,
+    ) -> InstanceModel {
+        let plan = &self.plan;
+        let timing = plan.window_timing(window as u64);
+        let timing_s = plan.window_timing_s(window as u64);
+        let payload = window_payload_bytes(&plan.act_fmt, window, xdim, udim, theta_len);
+        let fits = plan.feasible();
+        let max_outstanding = if fits {
+            plan.parts
+                .iter()
+                .map(|p| p.device.double_buffer_windows(&p.resources(), payload))
+                .min()
+                .unwrap_or(0)
+                .clamp(1, 512)
+        } else {
+            0
+        };
+        InstanceModel {
+            name: self.name.clone(),
+            window_cycles: timing.total_cycles,
+            service_cycles: timing.interval * window as u64,
+            window_s: timing_s.total_s,
+            service_s: timing_s.interval_s * window as f64,
+            transfer_s: self.link.transfer_s(payload),
+            payload_bytes: payload,
+            max_outstanding,
+            resources: plan.resources(),
             fits,
         }
     }
@@ -557,6 +628,39 @@ mod tests {
         let idle = vec![0usize; ms.len()];
         let order = rank(&ms, &idle);
         assert_eq!(order.len(), ms.len());
+        assert!(order.contains(&(ms.len() - 1)));
+    }
+
+    #[test]
+    fn partitioned_instance_joins_the_fleet_where_whole_cannot() {
+        use crate::fpga::fixedpoint::FixedFormat;
+        use crate::fpga::graph::{lower, Target};
+        use crate::fpga::gru_accel::{GruAccel, GruAccelConfig};
+        use crate::fpga::partition::{best_partition, pynq_rack};
+
+        // A GRU whose weight tiles exceed one PYNQ-Z2's BRAM: the
+        // whole-window graph instance admits nothing...
+        let fmt = FixedFormat::q8_8();
+        let g = GruAccel::new(GruAccelConfig::serving(4, 384, fmt, fmt)).graph();
+        let low = lower(&g, &Target::default()).unwrap();
+        let whole = GraphInstanceSpec::new("gru-whole", low, Device::pynq_z2(), Link::ten_gbe())
+            .model(64, 3, 1, 45);
+        assert!(!whole.fits && whole.max_outstanding == 0);
+
+        // ...but the same design split across two boards serves.
+        let out = best_partition(&g, &pynq_rack(2), 64).unwrap();
+        let split = PartitionedInstanceSpec::new("gru-split", out.plan, Link::ten_gbe())
+            .model(64, 3, 1, 45);
+        assert!(split.fits, "split plan must be feasible: {:?}", split.resources);
+        assert!(split.max_outstanding >= 1);
+        assert!(split.window_s > 0.0 && split.service_s > 0.0);
+
+        // Mixed fleet: the partitioned instance ranks alongside
+        // whole-window boards with no special casing.
+        let mut ms = models();
+        ms.push(split);
+        let idle = vec![0usize; ms.len()];
+        let order = rank(&ms, &idle);
         assert!(order.contains(&(ms.len() - 1)));
     }
 

@@ -633,6 +633,13 @@ pub struct StreamCoordinator {
     /// degrades), if one was registered via
     /// [`add_standby`](Self::add_standby).
     standby: Option<usize>,
+    /// Per-instance member-board lists, parallel to `instances`. Empty
+    /// for ordinary whole-window instances; a *partitioned* instance
+    /// ([`add_partitioned`](Self::add_partitioned)) lists the fleet
+    /// indices of the boards its plan spans — each placed window
+    /// occupies a slot on every member, and any member going down
+    /// invalidates the whole plan.
+    members: Vec<Vec<usize>>,
     /// Degraded mode: placeable capacity below the configured fraction.
     degraded: bool,
     fault_stats: FaultStats,
@@ -725,6 +732,7 @@ impl StreamCoordinator {
             done: BTreeSet::new(),
             late: Vec::new(),
             standby: None,
+            members: vec![Vec::new(); n],
             degraded: false,
             fault_stats: FaultStats::default(),
             jitter: Prng::new(0xC0FF_EE00_D15EA5E5),
@@ -775,9 +783,112 @@ impl StreamCoordinator {
         self.stall_until.push(None);
         self.link_factor.push(1.0);
         self.link_expire.push(0);
+        self.members.push(Vec::new());
         let idx = self.instances.len() - 1;
         self.standby = Some(idx);
         idx
+    }
+
+    /// Register a *partitioned* instance: one design split across the
+    /// member boards named by `member_of` (fleet indices), entering
+    /// placement as a single instance whose cost model is the plan's
+    /// composition (see
+    /// [`PartitionedInstanceSpec`](super::placement::PartitionedInstanceSpec)).
+    /// Every window placed here also occupies one concurrency slot on
+    /// *each* member board (the pipeline runs on all of them at once),
+    /// and a member going permanently down invalidates the plan: its
+    /// in-flight windows fail over to whole-window siblings and the
+    /// instance leaves the roster. Returns the new fleet index.
+    pub fn add_partitioned(
+        &mut self,
+        model: InstanceModel,
+        member_of: Vec<usize>,
+        svc: Service,
+    ) -> Result<usize> {
+        if member_of.is_empty() {
+            return Err(Error::config(
+                "a partitioned instance needs at least one member board",
+            ));
+        }
+        for &m in &member_of {
+            if m >= self.instances.len() {
+                return Err(Error::config(format!(
+                    "partitioned member {m} is out of range for a fleet of {}",
+                    self.instances.len()
+                )));
+            }
+            if !self.members[m].is_empty() {
+                return Err(Error::config(format!(
+                    "partitioned member {m} is itself a partitioned instance"
+                )));
+            }
+            if self.standby == Some(m) {
+                return Err(Error::config(format!(
+                    "partitioned member {m} is the standby instance"
+                )));
+            }
+        }
+        self.models.push(model);
+        self.instances.push(InstanceRt {
+            svc,
+            outstanding: 0,
+        });
+        self.health.push(InstanceHealth::new(&self.cfg.faults.health));
+        self.responses_from.push(0);
+        self.stall_until.push(None);
+        self.link_factor.push(1.0);
+        self.link_expire.push(0);
+        self.members.push(member_of);
+        Ok(self.instances.len() - 1)
+    }
+
+    /// A partitioned instance is transiently unplaceable while any
+    /// member board is (down, recovering-without-probe or stalled).
+    /// Always false for ordinary instances.
+    fn members_blocked(&self, i: usize) -> bool {
+        self.members[i]
+            .iter()
+            .any(|&m| !self.health[m].placeable() || self.stall_active(m))
+    }
+
+    /// A partitioned instance is *dead* once any member board is
+    /// permanently down: the pipeline spans that board, so the plan can
+    /// never serve again. Always false for ordinary instances.
+    fn members_dead(&self, i: usize) -> bool {
+        self.members[i]
+            .iter()
+            .any(|&m| self.health[m].is_permanently_down())
+    }
+
+    /// Free member slots a partitioned instance may still claim: the
+    /// minimum over members of (member cap − member outstanding).
+    /// `None` for ordinary instances (no member constraint).
+    fn member_headroom(&self, i: usize) -> Option<usize> {
+        if self.members[i].is_empty() {
+            return None;
+        }
+        let mut free = usize::MAX;
+        for &m in &self.members[i] {
+            let budget = self.models[m].max_outstanding;
+            let cap = match self.health[m].probe_cap() {
+                Some(c) => c.min(budget),
+                None => budget,
+            };
+            free = free.min(cap.saturating_sub(self.instances[m].outstanding));
+        }
+        Some(free)
+    }
+
+    /// Release one occupancy slot on instance `i` — and, for a
+    /// partitioned instance, on every member board it spans.
+    fn release_slot(&mut self, i: usize) {
+        let rt = &mut self.instances[i];
+        rt.outstanding = rt.outstanding.saturating_sub(1);
+        for k in 0..self.members[i].len() {
+            let m = self.members[i][k];
+            let rt = &mut self.instances[m];
+            rt.outstanding = rt.outstanding.saturating_sub(1);
+        }
     }
 
     /// Fault-layer counters (injections, detections, failovers), with
@@ -900,16 +1011,27 @@ impl StreamCoordinator {
     /// and the standby joins the roster only in degraded mode.
     fn placement_overrides(&self) -> Vec<PlacementOverride> {
         (0..self.models.len())
-            .map(|i| PlacementOverride {
-                masked: !self.health[i].placeable()
-                    || self.stall_active(i)
-                    || (self.standby == Some(i) && !self.degraded),
-                transfer_factor: if self.submit_clock < self.link_expire[i] {
-                    self.link_factor[i]
-                } else {
-                    1.0
-                },
-                cap: self.health[i].probe_cap(),
+            .map(|i| {
+                // A partitioned instance needs a free slot on every
+                // member board: its effective cap is what it already
+                // holds plus the tightest member's headroom.
+                let mut cap = self.health[i].probe_cap();
+                if let Some(free) = self.member_headroom(i) {
+                    let combined = self.instances[i].outstanding.saturating_add(free);
+                    cap = Some(cap.map_or(combined, |c| c.min(combined)));
+                }
+                PlacementOverride {
+                    masked: !self.health[i].placeable()
+                        || self.stall_active(i)
+                        || self.members_blocked(i)
+                        || (self.standby == Some(i) && !self.degraded),
+                    transfer_factor: if self.submit_clock < self.link_expire[i] {
+                        self.link_factor[i]
+                    } else {
+                        1.0
+                    },
+                    cap,
+                }
             })
             .collect()
     }
@@ -919,10 +1041,11 @@ impl StreamCoordinator {
     /// activated) standby instances; only a fleet of permanently dead or
     /// zero-capacity instances is hopeless.
     fn any_hope(&self) -> bool {
-        self.models
-            .iter()
-            .enumerate()
-            .any(|(i, m)| m.max_outstanding > 0 && !self.health[i].is_permanently_down())
+        self.models.iter().enumerate().any(|(i, m)| {
+            m.max_outstanding > 0
+                && !self.health[i].is_permanently_down()
+                && !self.members_dead(i)
+        })
     }
 
     /// Recompute degraded mode: placeable primary capacity (standby
@@ -940,7 +1063,7 @@ impl StreamCoordinator {
             // stays a meaningful ratio.
             let cap = m.max_outstanding.min(1 << 20) as f64;
             full += cap;
-            if self.health[i].placeable() && !self.stall_active(i) {
+            if self.health[i].placeable() && !self.stall_active(i) && !self.members_blocked(i) {
                 avail += self.health[i].probe_cap().map_or(cap, |c| (c as f64).min(cap));
             }
         }
@@ -986,11 +1109,19 @@ impl StreamCoordinator {
         for &i in &order {
             match self.instances[i].svc.try_submit(req) {
                 Ok(rx) => {
-                    let inst = &mut self.instances[i];
-                    inst.outstanding += 1;
+                    self.instances[i].outstanding += 1;
                     self.submit_clock += 1;
                     self.metrics.on_instance_placed(i);
-                    self.metrics.on_instance_queue_depth(i, inst.outstanding);
+                    self.metrics
+                        .on_instance_queue_depth(i, self.instances[i].outstanding);
+                    // A partitioned placement occupies one slot on
+                    // every member board the plan spans.
+                    for k in 0..self.members[i].len() {
+                        let m = self.members[i][k];
+                        self.instances[m].outstanding += 1;
+                        self.metrics
+                            .on_instance_queue_depth(m, self.instances[m].outstanding);
+                    }
                     self.in_flight.push_back(InFlightWindow {
                         tenant,
                         seq_no,
@@ -1147,6 +1278,14 @@ impl StreamCoordinator {
                 kept.push_back(inf);
                 continue;
             }
+            // A partitioned plan with a permanently-down member can
+            // never answer (the pipeline spans the dead board): fail
+            // the window over to a whole-window sibling now. Dropping
+            // `rx` here also guarantees no late duplicate.
+            if self.members_dead(inf.instance) {
+                self.invalidate_partitioned(inf);
+                continue;
+            }
             // A stalled instance's responses are deliberately left
             // unread (the stall models an unresponsive instance): the
             // window either outlives the stall or blows its deadline.
@@ -1206,6 +1345,17 @@ impl StreamCoordinator {
         received
     }
 
+    /// One member board of a partitioned plan is permanently down:
+    /// take the whole plan out of the roster (it spans the dead board)
+    /// and re-place its window on a surviving whole-window sibling.
+    fn invalidate_partitioned(&mut self, inf: InFlightWindow) {
+        self.fault_stats.failed_over += 1;
+        self.metrics.on_instance_failover(inf.instance);
+        self.release_slot(inf.instance);
+        self.health[inf.instance].on_dead(self.rounds, true);
+        self.retry_or_fail(inf.tenant, inf.seq_no, inf.start, inf.payload, inf.attempts);
+    }
+
     /// A window blew its completion deadline: charge the instance an
     /// anomaly, release its slot, park the original submission in
     /// `late` (its response may still arrive) and hedge a retry onto a
@@ -1214,8 +1364,7 @@ impl StreamCoordinator {
         self.fault_stats.detected_timeouts += 1;
         self.fault_stats.failed_over += 1;
         self.metrics.on_instance_failover(inf.instance);
-        let rt = &mut self.instances[inf.instance];
-        rt.outstanding = rt.outstanding.saturating_sub(1);
+        self.release_slot(inf.instance);
         self.health[inf.instance].on_anomaly(&self.cfg.faults.health, self.rounds);
         self.hedged.insert(encode_id(inf.tenant, inf.seq_no));
         let (tenant, seq_no, start, attempts) = (inf.tenant, inf.seq_no, inf.start, inf.attempts);
@@ -1231,8 +1380,7 @@ impl StreamCoordinator {
         self.fault_stats.detected_disconnects += 1;
         self.fault_stats.failed_over += 1;
         self.metrics.on_instance_failover(inf.instance);
-        let rt = &mut self.instances[inf.instance];
-        rt.outstanding = rt.outstanding.saturating_sub(1);
+        self.release_slot(inf.instance);
         self.health[inf.instance].on_anomaly(&self.cfg.faults.health, self.rounds);
         self.retry_or_fail(inf.tenant, inf.seq_no, inf.start, inf.payload, inf.attempts);
     }
@@ -1439,8 +1587,7 @@ impl StreamCoordinator {
         } = inf;
         debug_assert_eq!(resp.id, encode_id(tenant, seq_no), "response demux mismatch");
         if !late {
-            let rt = &mut self.instances[instance];
-            rt.outstanding = rt.outstanding.saturating_sub(1);
+            self.release_slot(instance);
         }
         let id = encode_id(tenant, seq_no);
         if self.hedged.contains(&id) && self.done.contains(&id) {

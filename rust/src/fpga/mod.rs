@@ -21,7 +21,11 @@
 //! [`tune_graph`](tuner::tune_graph) — scores candidates with the
 //! cycle/resource/power models, and hands the chosen
 //! [`TunedConfig`](tuner::TunedConfig) to placement — the models stop
-//! describing designs and start picking them.
+//! describing designs and start picking them. `partition` goes past the
+//! single device entirely: it cuts one graph along its FIFO edges into
+//! per-board subgraphs joined by explicit link hops, so a design too big
+//! for any one device still streams across the fleet
+//! ([`PartitionedPlan`](partition::PartitionedPlan)).
 
 pub mod bram;
 pub mod cluster;
@@ -33,6 +37,7 @@ pub mod hls;
 pub mod interconnect;
 pub mod lut;
 pub mod ltc_accel;
+pub mod partition;
 pub mod pipeline;
 pub mod power;
 pub mod resources;

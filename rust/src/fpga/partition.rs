@@ -1,0 +1,691 @@
+//! Multi-board graph partitioning: split one accelerator design across
+//! the fleet.
+//!
+//! `coordinator::placement` is whole-window-to-one-board: a design whose
+//! tiles exceed one device's BRAM is simply infeasible, no matter how
+//! many boards sit idle. This module cuts a validated
+//! [`Graph`](super::graph::Graph) into per-board subgraphs **along its
+//! FIFO edges** — every cut edge becomes an explicit board-to-board
+//! [`Link`](super::cluster::Link) transfer ([`LinkHop`]) with
+//! serialization *and* latency modeled separately — lowers each subgraph
+//! through the unchanged [`lower`] path on its own
+//! [`Target`](super::graph::Target), and composes a [`PartitionedPlan`]
+//! whose end-to-end window timing is the max-plus composition of the
+//! member stage pipelines plus the link hops:
+//!
+//! ```text
+//! fill     = Σ part fill + Σ hop (latency + serialization)
+//! interval = max(max part interval, max hop serialization)
+//! window   = fill + (seq − 1) · interval
+//! ```
+//!
+//! Links are double-buffered (one buffer drains to the wire while the
+//! next item fills), so hop *latency* is paid once in the fill and
+//! steady-state throughput is bounded by the slowest board or the
+//! busiest wire — never the sum of the boards. A zero-cut partition runs
+//! the whole graph through the same code path, which is why
+//! `rust/tests/partition.rs` can hold the composition cycle-exact
+//! against whole-graph lowering.
+//!
+//! [`best_partition`] sweeps every contiguous cut assignment (the
+//! whole-graph candidate included), tallying fit and timing-closure
+//! rejections separately through the tuner's feasibility ledger, and
+//! [`PartitionedInstanceSpec`](crate::coordinator::placement::PartitionedInstanceSpec)
+//! turns the winning plan into a fleet cost model so split and
+//! whole-window plans rank against each other per tenant.
+//!
+//! # Example
+//!
+//! ```
+//! use merinda::fpga::gru_accel::GruAccelConfig;
+//! use merinda::fpga::partition::{best_partition, pynq_rack};
+//!
+//! // A GRU too big for one PYNQ-Z2 streams once split across two.
+//! let fmt = merinda::fpga::fixedpoint::FixedFormat::q8_8();
+//! let g = GruAccelConfig::serving(4, 384, fmt, fmt).graph();
+//! let out = best_partition(&g, &pynq_rack(2), 64).unwrap();
+//! assert!(out.plan.n_parts() > 1 && out.plan.feasible());
+//! ```
+
+use super::cluster::Link;
+use super::fixedpoint::FixedFormat;
+use super::graph::{lower, Edge, Graph, LoweredGraph, Profile, Target};
+use super::pipeline::PipelineTiming;
+use super::resources::{Device, Resources};
+use super::tuner::FeasibilityTally;
+use crate::util::error::{Error, Result};
+
+/// One board position a partition part can be assigned to.
+#[derive(Clone, Debug)]
+pub struct BoardSlot {
+    pub name: String,
+    /// Device + DDR + power calibrations the part lowers onto.
+    pub target: Target,
+    /// The link *into* this slot: the host ingest link for slot 0, the
+    /// board-to-board link carrying its cut traffic otherwise.
+    pub link: Link,
+    /// The device's stock clock — timing closure of a part is judged
+    /// against `base_clock_mhz × clock_scale`, so a derated slot
+    /// ([`BoardSlot::derated`]) remembers what it derated from.
+    pub base_clock_mhz: f64,
+}
+
+impl BoardSlot {
+    pub fn new(name: impl Into<String>, device: Device, link: Link) -> BoardSlot {
+        BoardSlot {
+            name: name.into(),
+            target: Target::for_device(device),
+            link,
+            base_clock_mhz: device.clock_mhz,
+        }
+    }
+
+    /// The same slot with the PL clock scaled to `scale ×` the stock
+    /// clock (capacity unchanged) — how a wide design that cannot close
+    /// timing at stock rate still gets a feasible home.
+    pub fn derated(mut self, scale: f64) -> BoardSlot {
+        let mhz = self.base_clock_mhz * scale;
+        self.target.device = self.target.device.with_clock(mhz);
+        self
+    }
+}
+
+/// A rack of `n` identical PYNQ-Z2 slots, every link 10 GbE: the host
+/// feeds the head board and cut traffic hops board to board.
+pub fn pynq_rack(n: usize) -> Vec<BoardSlot> {
+    (0..n)
+        .map(|i| BoardSlot::new(format!("pynq-{i}"), Device::pynq_z2(), Link::ten_gbe()))
+        .collect()
+}
+
+/// Fabric one link endpoint costs a board: MAC/PHY control plus the
+/// double-buffered link FIFO pair. Charged per hop endpoint on top of
+/// the part's lowered resources.
+pub fn link_endpoint_overhead() -> Resources {
+    Resources::new(2_400, 3_200, 0, 4)
+}
+
+/// A cut edge turned into an explicit board-to-board transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkHop {
+    pub from_part: usize,
+    pub to_part: usize,
+    /// Producing / consuming op as indices into the *original* graph.
+    pub from_op: usize,
+    pub to_op: usize,
+    /// Elements the original edge carried per item.
+    pub elems: u64,
+    /// The original edge's DDR round trips — preserved for conservation
+    /// accounting only: over the link the value crosses exactly once
+    /// (the link FIFO replaces the DDR spill bounce).
+    pub round_trips: u64,
+    /// Wire bytes per item (`elems ×` activation word bytes).
+    pub bytes_per_item: u64,
+    /// The link into the consuming part's slot.
+    pub link: Link,
+}
+
+impl LinkHop {
+    /// Wire occupancy per item — the hop's contribution to the
+    /// steady-state interval (the buffer drains while the next fills).
+    pub fn serialize_s(&self) -> f64 {
+        self.bytes_per_item as f64 / self.link.bandwidth_bps
+    }
+
+    /// Full one-item traversal (latency + serialization) — paid once in
+    /// the pipeline fill.
+    pub fn hop_s(&self) -> f64 {
+        self.link.transfer_s(self.bytes_per_item)
+    }
+}
+
+/// One board's share of a partitioned design.
+#[derive(Clone, Debug)]
+pub struct PartPlan {
+    /// Slot name this part is assigned to.
+    pub board: String,
+    pub device: Device,
+    /// Stock clock the slot derated from (equals `device.clock_mhz`
+    /// when not derated).
+    pub base_clock_mhz: f64,
+    /// This part's ops as indices into the original graph.
+    pub ops: Vec<usize>,
+    /// The subgraph itself (inspectable by tests and reports).
+    pub graph: Graph,
+    pub lowered: LoweredGraph,
+    /// Link endpoint fabric charged on top of the lowered resources.
+    pub link_overhead: Resources,
+}
+
+impl PartPlan {
+    /// Fabric this part consumes: the lowered design plus its link
+    /// endpoints.
+    pub fn resources(&self) -> Resources {
+        self.lowered.resources + self.link_overhead
+    }
+
+    /// Part (including link endpoints) fits its device.
+    pub fn fits(&self) -> bool {
+        self.device.fits(&self.resources())
+    }
+
+    /// Part closes timing at the slot's clock: the slot may run at most
+    /// `base_clock × clock_scale` for this subgraph's derate class.
+    pub fn clock_ok(&self) -> bool {
+        self.device.clock_mhz <= self.base_clock_mhz * self.lowered.clock_scale + 1e-9
+    }
+}
+
+/// Plan-level timing in seconds (members may run at different clocks,
+/// so seconds is the only shared currency; [`PartitionedPlan::window_timing`]
+/// re-quotes it in cycles at the reference clock).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanTiming {
+    /// First input to last output for the whole window.
+    pub total_s: f64,
+    /// Steady-state spacing between window items.
+    pub interval_s: f64,
+    /// First input to first output (part fills + link hops).
+    pub fill_s: f64,
+}
+
+/// A design split across boards: per-part lowered subgraphs plus the
+/// cut-edge link hops, composed into end-to-end window timing.
+#[derive(Clone, Debug)]
+pub struct PartitionedPlan {
+    /// The original graph's name.
+    pub name: String,
+    /// Activation format (link payload word width).
+    pub act_fmt: FixedFormat,
+    pub parts: Vec<PartPlan>,
+    pub hops: Vec<LinkHop>,
+}
+
+impl PartitionedPlan {
+    pub fn n_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Every part (with its link endpoints) fits its device.
+    pub fn fits(&self) -> bool {
+        self.parts.iter().all(|p| p.fits())
+    }
+
+    /// Every part closes timing at its slot's clock.
+    pub fn clock_ok(&self) -> bool {
+        self.parts.iter().all(|p| p.clock_ok())
+    }
+
+    /// Deployable: fits everywhere and closes timing everywhere.
+    pub fn feasible(&self) -> bool {
+        self.fits() && self.clock_ok()
+    }
+
+    /// Total fabric across all member boards (link endpoints included).
+    pub fn resources(&self) -> Resources {
+        let mut r = Resources::ZERO;
+        for p in &self.parts {
+            r += p.resources();
+        }
+        r
+    }
+
+    /// The slowest member's clock — the plan's common cycle currency.
+    pub fn reference_clock_mhz(&self) -> f64 {
+        self.parts
+            .iter()
+            .map(|p| p.device.clock_mhz)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn ref_cycles(&self, seconds: f64) -> u64 {
+        (seconds * self.reference_clock_mhz() * 1e6).round() as u64
+    }
+
+    /// Pipeline-view steady-state interval: the slowest member's stage
+    /// interval or the busiest hop's serialization, whichever binds.
+    fn pipeline_interval_s(&self) -> f64 {
+        let mut iv = 0f64;
+        for p in &self.parts {
+            iv = iv.max(p.device.cycles_to_seconds(p.lowered.window_timing(1).interval));
+        }
+        for h in &self.hops {
+            iv = iv.max(h.serialize_s());
+        }
+        iv
+    }
+
+    /// Pipeline-view fill: member fills plus full hop traversals.
+    fn pipeline_fill_s(&self) -> f64 {
+        let parts: f64 = self
+            .parts
+            .iter()
+            .map(|p| p.device.cycles_to_seconds(p.lowered.window_timing(1).fill_latency))
+            .sum();
+        let hops: f64 = self.hops.iter().map(LinkHop::hop_s).sum();
+        parts + hops
+    }
+
+    /// Max-plus window timing in seconds — the composition law the
+    /// module docs state, over [`LoweredGraph::window_timing`]'s
+    /// pipeline view of each part.
+    pub fn window_timing_s(&self, seq: u64) -> PlanTiming {
+        let interval_s = self.pipeline_interval_s();
+        let fill_s = self.pipeline_fill_s();
+        let total_s = if seq == 0 {
+            0.0
+        } else {
+            fill_s + (seq - 1) as f64 * interval_s
+        };
+        PlanTiming {
+            total_s,
+            interval_s,
+            fill_s,
+        }
+    }
+
+    /// [`window_timing_s`](PartitionedPlan::window_timing_s) re-quoted
+    /// in cycles at the reference clock — drop-in for
+    /// [`LoweredGraph::window_timing`] in the placement cost model (and
+    /// exactly equal to it for a single-part plan).
+    pub fn window_timing(&self, seq: u64) -> PipelineTiming {
+        let t = self.window_timing_s(seq);
+        PipelineTiming {
+            total_cycles: self.ref_cycles(t.total_s),
+            interval: self.ref_cycles(t.interval_s),
+            fill_latency: self.ref_cycles(t.fill_s),
+        }
+    }
+
+    /// Report-view steady-state interval in seconds (the lowered
+    /// `interval` law, DDR cycles included), against the busiest wire.
+    pub fn interval_s(&self) -> f64 {
+        let mut iv = 0f64;
+        for p in &self.parts {
+            iv = iv.max(p.device.cycles_to_seconds(p.lowered.interval));
+        }
+        for h in &self.hops {
+            iv = iv.max(h.serialize_s());
+        }
+        iv
+    }
+
+    /// Report-view fill in seconds: member one-item latencies plus full
+    /// hop traversals.
+    pub fn fill_s(&self) -> f64 {
+        let parts: f64 = self
+            .parts
+            .iter()
+            .map(|p| p.device.cycles_to_seconds(p.lowered.cycles))
+            .sum();
+        let hops: f64 = self.hops.iter().map(LinkHop::hop_s).sum();
+        parts + hops
+    }
+
+    /// Report-style window seconds: fill then steady state — the
+    /// partitioned counterpart of [`LoweredGraph::window_cycles`] at
+    /// each member's own clock.
+    pub fn window_s(&self, seq: u64) -> f64 {
+        if seq == 0 {
+            return 0.0;
+        }
+        self.fill_s() + (seq - 1) as f64 * self.interval_s()
+    }
+
+    /// [`window_s`](PartitionedPlan::window_s) in reference-clock cycles
+    /// (exactly [`LoweredGraph::window_cycles`] for a single-part plan).
+    pub fn window_cycles(&self, seq: u64) -> u64 {
+        self.ref_cycles(self.window_s(seq))
+    }
+
+    /// Report-view interval in reference-clock cycles.
+    pub fn interval_cycles(&self) -> u64 {
+        self.ref_cycles(self.interval_s())
+    }
+
+    /// Index of the member bounding steady-state throughput (ties break
+    /// toward the earlier part).
+    pub fn slowest_part(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_s = f64::NEG_INFINITY;
+        for (i, p) in self.parts.iter().enumerate() {
+            let s = p.device.cycles_to_seconds(p.lowered.interval);
+            if s > best_s {
+                best_s = s;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Deterministic topological order over a validated graph's ops (Kahn,
+/// lowest ready index first).
+fn topo_order(g: &Graph) -> Vec<usize> {
+    let n = g.ops.len();
+    let mut indeg = vec![0usize; n];
+    for e in &g.edges {
+        indeg[e.to] += 1;
+    }
+    let mut done = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    while order.len() < n {
+        let i = (0..n)
+            .find(|&i| !done[i] && indeg[i] == 0)
+            .expect("validated graphs are acyclic");
+        done[i] = true;
+        order.push(i);
+        for e in &g.edges {
+            if e.from == i {
+                indeg[e.to] -= 1;
+            }
+        }
+    }
+    order
+}
+
+/// Cut a validated graph into `cuts.len() + 1` contiguous parts of its
+/// topological order and assign them to `slots` in order.
+///
+/// `cuts` are boundary positions in `1..n_ops`, strictly increasing: cut
+/// `c` places the first `c` topo-ordered ops before the boundary. Every
+/// inter-part edge then points from a lower part to a higher one by
+/// construction (cut acyclicity), and becomes a [`LinkHop`] on the
+/// consuming slot's link. Part 0 keeps the graph's host I/O
+/// (`io_elems`) and explicit [`Transfer`](super::graph::Transfer)s —
+/// the head board owns the DMA channel; downstream parts receive
+/// everything over cut links.
+///
+/// Returns the composed plan whether or not it is feasible (callers
+/// check [`PartitionedPlan::fits`] / [`PartitionedPlan::clock_ok`]);
+/// errors are structural only: invalid graph, iterative profile (every
+/// iteration host-syncs, so a split would serialize on the link),
+/// malformed cuts, or a slot-count mismatch.
+pub fn partition(g: &Graph, cuts: &[usize], slots: &[BoardSlot]) -> Result<PartitionedPlan> {
+    g.validate()?;
+    if let Profile::Iterative { .. } = g.profile {
+        return Err(Error::config(format!(
+            "graph {:?} is iterative: it host-syncs every iteration, so a multi-board split \
+             would serialize on the link; partition streaming graphs only",
+            g.name
+        )));
+    }
+    let n = g.ops.len();
+    if slots.len() != cuts.len() + 1 {
+        return Err(Error::config(format!(
+            "graph {:?}: {} cut(s) make {} part(s) but {} board slot(s) were given",
+            g.name,
+            cuts.len(),
+            cuts.len() + 1,
+            slots.len()
+        )));
+    }
+    let mut prev = 0usize;
+    for &c in cuts {
+        if c <= prev || c >= n {
+            return Err(Error::config(format!(
+                "graph {:?}: cut positions must be strictly increasing within 1..{n} \
+                 (got {cuts:?})",
+                g.name
+            )));
+        }
+        prev = c;
+    }
+
+    // Assign each op to its part by topological position.
+    let order = topo_order(g);
+    let mut part_of = vec![0usize; n];
+    {
+        let mut bounds: Vec<usize> = cuts.to_vec();
+        bounds.push(n);
+        let mut lo = 0usize;
+        for (j, &hi) in bounds.iter().enumerate() {
+            for &oi in &order[lo..hi] {
+                part_of[oi] = j;
+            }
+            lo = hi;
+        }
+    }
+
+    // Cut edges become link hops on the consuming slot's link.
+    let wb = (g.act_fmt.word_bits as u64).div_ceil(8);
+    let mut hops = Vec::new();
+    for e in &g.edges {
+        let (fp, tp) = (part_of[e.from], part_of[e.to]);
+        if fp == tp {
+            continue;
+        }
+        debug_assert!(fp < tp, "contiguous topo cuts only cut forward");
+        hops.push(LinkHop {
+            from_part: fp,
+            to_part: tp,
+            from_op: e.from,
+            to_op: e.to,
+            elems: e.elems,
+            round_trips: e.round_trips,
+            bytes_per_item: e.elems * wb,
+            link: slots[tp].link,
+        });
+    }
+
+    // Build and lower each part's subgraph (ops keep their original
+    // relative order, so a zero-cut partition reproduces the graph
+    // verbatim and lowers cycle-identically).
+    let n_parts = cuts.len() + 1;
+    let mut new_index = vec![usize::MAX; n];
+    let mut parts = Vec::with_capacity(n_parts);
+    for (j, slot) in slots.iter().enumerate() {
+        let member_ops: Vec<usize> = (0..n).filter(|&i| part_of[i] == j).collect();
+        let mut sg = Graph::new(format!("{}.p{j}", g.name), g.act_fmt, g.weight_fmt)
+            .streaming(g.dataflow, g.ddr_spill)
+            .with_fifo_depth(g.fifo_depth);
+        if j == 0 {
+            sg = sg.with_io_elems(g.io_elems);
+            for &t in &g.transfers {
+                sg.transfer(t);
+            }
+        }
+        for (k, &oi) in member_ops.iter().enumerate() {
+            new_index[oi] = k;
+            sg.push_op(g.ops[oi].clone());
+        }
+        for e in &g.edges {
+            if part_of[e.from] == j && part_of[e.to] == j {
+                sg.edges.push(Edge {
+                    from: new_index[e.from],
+                    to: new_index[e.to],
+                    ..*e
+                });
+            }
+        }
+        let lowered = lower(&sg, &slot.target)?;
+        let endpoints = hops
+            .iter()
+            .filter(|h| h.from_part == j || h.to_part == j)
+            .count() as u64;
+        parts.push(PartPlan {
+            board: slot.name.clone(),
+            device: slot.target.device,
+            base_clock_mhz: slot.base_clock_mhz,
+            ops: member_ops,
+            graph: sg,
+            lowered,
+            link_overhead: link_endpoint_overhead().scaled(endpoints),
+        });
+    }
+
+    Ok(PartitionedPlan {
+        name: g.name.clone(),
+        act_fmt: g.act_fmt,
+        parts,
+        hops,
+    })
+}
+
+/// What [`best_partition`] found: the winning plan plus sweep counters
+/// for benches and CI.
+#[derive(Clone, Debug)]
+pub struct PartitionOutcome {
+    pub plan: PartitionedPlan,
+    /// Cut assignments evaluated (the whole-graph candidate included).
+    pub evaluated: usize,
+    /// Of those, how many were deployable.
+    pub feasible: usize,
+}
+
+/// All strictly increasing `(k-1)`-subsets of `1..n`: the cut boundary
+/// sets splitting `n` topo-ordered ops into `k` non-empty parts.
+fn cut_sets(n: usize, k: usize) -> Vec<Vec<usize>> {
+    fn rec(start: usize, n: usize, left: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if left == 0 {
+            out.push(cur.clone());
+            return;
+        }
+        for c in start..n {
+            cur.push(c);
+            rec(c + 1, n, left - 1, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(1, n, k - 1, &mut Vec::with_capacity(k.saturating_sub(1)), &mut out);
+    out
+}
+
+/// Sweep every contiguous cut assignment of `g` onto a prefix of
+/// `slots` — from the whole graph on one board up to
+/// `min(slots, n_ops)` parts — and pick the plan with the smallest
+/// modeled [`window_s`](PartitionedPlan::window_s) for a `window`-item
+/// window. Because the whole-graph candidate is in the space and a
+/// replacement must be *strictly* faster, the chosen plan never models
+/// more time than the whole-window plan whenever that plan is feasible.
+///
+/// Rejections are tallied through the tuner's feasibility ledger with
+/// fit and timing closure as **separate verdicts**: a split that fits
+/// the fabric but cannot close timing at a member's clock is reported
+/// as `failing timing closure`, never as `over the fabric budget`. A
+/// dry sweep returns the ledger as a typed [`Error::Config`] naming the
+/// binding constraint.
+pub fn best_partition(g: &Graph, slots: &[BoardSlot], window: u64) -> Result<PartitionOutcome> {
+    g.validate()?;
+    if slots.is_empty() {
+        return Err(Error::config(format!(
+            "graph {:?}: cannot partition onto an empty slot roster",
+            g.name
+        )));
+    }
+    let n = g.ops.len();
+    let mut tally = FeasibilityTally::default();
+    let mut evaluated = 0usize;
+    let mut feasible = 0usize;
+    let mut best: Option<PartitionedPlan> = None;
+    let mut best_s = f64::INFINITY;
+    for k in 1..=slots.len().min(n) {
+        for cuts in cut_sets(n, k) {
+            let plan = partition(g, &cuts, &slots[..k])?;
+            evaluated += 1;
+            let fits = plan.fits();
+            let clock = plan.clock_ok();
+            tally.add(fits, true, clock, true, true);
+            if !(fits && clock) {
+                continue;
+            }
+            feasible += 1;
+            let s = plan.window_s(window);
+            if s < best_s {
+                best_s = s;
+                best = Some(plan);
+            }
+        }
+    }
+    match best {
+        Some(plan) => Ok(PartitionOutcome {
+            plan,
+            evaluated,
+            feasible,
+        }),
+        None => Err(tally.error(&g.name)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::fixedpoint::FixedFormat;
+    use crate::fpga::graph::Op;
+
+    fn chain(n: usize) -> Graph {
+        let fmt = FixedFormat::q8_8();
+        let mut g = Graph::new("chain", fmt, fmt)
+            .streaming(true, false)
+            .with_io_elems(8);
+        let mut prev = None;
+        for i in 0..n {
+            let id = g.push_op(Op::elementwise(format!("e{i}"), 64, 1).unrolled(4));
+            if let Some(p) = prev {
+                g.connect(p, id, 16, 1);
+            }
+            prev = Some(id);
+        }
+        g
+    }
+
+    #[test]
+    fn cut_sets_enumerate_compositions() {
+        assert_eq!(cut_sets(4, 1), vec![Vec::<usize>::new()]);
+        assert_eq!(cut_sets(4, 2).len(), 3); // C(3,1)
+        assert_eq!(cut_sets(4, 3).len(), 3); // C(3,2)
+        assert_eq!(cut_sets(4, 4), vec![vec![1, 2, 3]]);
+    }
+
+    #[test]
+    fn slot_count_must_match_cuts() {
+        let g = chain(3);
+        let err = partition(&g, &[1], &pynq_rack(3)).unwrap_err();
+        assert!(format!("{err:?}").contains("board slot"));
+    }
+
+    #[test]
+    fn cuts_must_be_strictly_increasing_and_in_range() {
+        let g = chain(3);
+        for cuts in [vec![0], vec![3], vec![2, 2], vec![2, 1]] {
+            let slots = pynq_rack(cuts.len() + 1);
+            let err = partition(&g, &cuts, &slots).unwrap_err();
+            assert!(format!("{err:?}").contains("strictly increasing"), "{cuts:?}");
+        }
+    }
+
+    #[test]
+    fn iterative_graphs_are_rejected() {
+        let fmt = FixedFormat::q8_8();
+        let mut g = Graph::new("iter", fmt, fmt).iterative(5, 100);
+        g.push_op(Op::matvec("mv", 64));
+        let err = partition(&g, &[], &pynq_rack(1)).unwrap_err();
+        assert!(format!("{err:?}").contains("iterative"));
+    }
+
+    #[test]
+    fn two_part_chain_has_one_hop_and_io_on_head() {
+        let g = chain(4);
+        let plan = partition(&g, &[2], &pynq_rack(2)).unwrap();
+        assert_eq!(plan.n_parts(), 2);
+        assert_eq!(plan.hops.len(), 1);
+        assert_eq!(plan.parts[0].graph.io_elems, g.io_elems);
+        assert_eq!(plan.parts[1].graph.io_elems, 0);
+        // Both endpoints pay the link fabric.
+        assert_eq!(plan.parts[0].link_overhead, link_endpoint_overhead());
+        assert_eq!(plan.parts[1].link_overhead, link_endpoint_overhead());
+        // Steady state is bounded below by the slowest member.
+        let slowest = plan.slowest_part();
+        let member_iv = plan.parts[slowest]
+            .device
+            .cycles_to_seconds(plan.parts[slowest].lowered.interval);
+        assert!(plan.interval_s() >= member_iv - 1e-15);
+    }
+
+    #[test]
+    fn empty_roster_is_a_config_error() {
+        let g = chain(2);
+        assert!(best_partition(&g, &[], 64).is_err());
+    }
+}

@@ -417,8 +417,14 @@ fn cmp_speed_power(a: &TuneCandidate, b: &TuneCandidate) -> Ordering {
 /// Why a search came up empty: every constraint rejection counted
 /// separately, so the `Error::config` a dry search returns names the
 /// binding constraint instead of a silent absence.
+///
+/// Shared with the partitioned sweep (`fpga::partition::best_partition`),
+/// which must pass fit and timing closure as *separate* verdicts: a
+/// split candidate that fits the fabric but cannot close timing at a
+/// member board's clock is a `clock_fail`, never an `unfit` — collapsing
+/// the two would misreport a clock-derated split as not fitting.
 #[derive(Default)]
-struct FeasibilityTally {
+pub(crate) struct FeasibilityTally {
     evaluated: usize,
     unfit: usize,
     no_headroom: usize,
@@ -428,7 +434,14 @@ struct FeasibilityTally {
 }
 
 impl FeasibilityTally {
-    fn add(&mut self, fits: bool, headroom: bool, clock: bool, fidelity: bool, power: bool) {
+    pub(crate) fn add(
+        &mut self,
+        fits: bool,
+        headroom: bool,
+        clock: bool,
+        fidelity: bool,
+        power: bool,
+    ) {
         self.evaluated += 1;
         self.unfit += usize::from(!fits);
         self.no_headroom += usize::from(!headroom);
@@ -437,7 +450,7 @@ impl FeasibilityTally {
         self.over_power += usize::from(!power);
     }
 
-    fn error(&self, name: &str) -> Error {
+    pub(crate) fn error(&self, name: &str) -> Error {
         Error::config(format!(
             "no feasible design point for {name}: {} candidates evaluated \
              ({} over the fabric budget, {} without BRAM double-buffer headroom, \

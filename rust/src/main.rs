@@ -8,6 +8,8 @@
 //!   serve    --requests N      — run the streaming service demo
 //!   soak     --tenants N --fleet M — multi-tenant streaming workload on a fleet
 //!   tune     [--window N]      — design-space autotuner, writes BENCH_tune.json
+//!   partition [--window N]     — multi-board graph partitioner, writes
+//!       BENCH_partition.json
 //!   table <1|2|3|4|5|6|7|8|fig8> — regenerate a paper table/figure
 //!   experiments [--only ids] [--parse-only|--force] — parse-or-execute
 //!       runner over every paper table/figure, writes BENCH_experiments.json
@@ -18,6 +20,7 @@ use merinda::util::cli;
 
 mod commands {
     pub mod experiments;
+    pub mod partition;
     pub mod recover;
     pub mod serve;
     pub mod simulate;
@@ -46,10 +49,11 @@ fn main() {
         Some("serve") => commands::serve::run(&args),
         Some("soak") => commands::soak::run(&args),
         Some("tune") => commands::tune::run(&args),
+        Some("partition") => commands::partition::run(&args),
         Some("table") => commands::tables::run(&args),
         _ => {
             eprintln!(
-                "usage: merinda <info|recover|train|simulate|serve|soak|tune|table|experiments> [--flags]\n\
+                "usage: merinda <info|recover|train|simulate|serve|soak|tune|partition|table|experiments> [--flags]\n\
                  examples:\n\
                  \x20 merinda recover --system lotka --method merinda\n\
                  \x20 merinda train --system aid --steps 300\n\
@@ -59,6 +63,7 @@ fn main() {
                  \x20 merinda soak --fleet 3 --tuned\n\
                  \x20 merinda soak --fleet 3 --chaos crash:2@6,flip:1@2 --deadline-ms 250\n\
                  \x20 merinda tune --window 64\n\
+                 \x20 merinda partition --window 64\n\
                  \x20 merinda table 8\n\
                  \x20 merinda experiments --only table8,fig8\n\
                  \x20 merinda experiments --parse-only"

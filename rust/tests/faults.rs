@@ -12,15 +12,24 @@
 //! * a stalled instance's windows blow the deadline, hedge to a
 //!   sibling, and the late original is deduped, not double-counted;
 //! * losing the whole fleet fails windows *with closed accounting*
-//!   instead of hanging or panicking.
+//!   instead of hanging or panicking;
+//! * fault-plan specs round-trip (`seeded → spec → parse` is the
+//!   identity), so a chaos run is reproducible from its own artifact;
+//! * a partitioned plan occupies capacity on **every** member board,
+//!   and crashing one member invalidates the whole plan — its in-flight
+//!   windows re-place on whole-window siblings, exactly once.
 
 use std::collections::BTreeSet;
 use std::time::Duration;
 
 use merinda::coordinator::{
-    BatcherConfig, FaultPlan, FaultToleranceConfig, InstanceModel, MockBackend, Service,
-    ServiceConfig, StreamConfig, StreamCoordinator,
+    BatcherConfig, FaultPlan, FaultToleranceConfig, InstanceModel, MockBackend,
+    PartitionedInstanceSpec, Service, ServiceConfig, StreamConfig, StreamCoordinator,
 };
+use merinda::fpga::cluster::Link;
+use merinda::fpga::fixedpoint::FixedFormat;
+use merinda::fpga::gru_accel::GruAccelConfig;
+use merinda::fpga::partition::{best_partition, pynq_rack};
 use merinda::util::Prng;
 
 /// Push `samples` rows for each of `tenants` streams (xdim 3 / udim 1,
@@ -304,5 +313,171 @@ fn whole_fleet_loss_fails_windows_with_closed_accounting() {
     assert!(stats.degraded, "an empty fleet is degraded by definition");
     assert_eq!(stats.per_instance[0].health, "down");
     assert_eq!(stats.faults.injected_crash, 1);
+    assert_accounting_closes(&mut coord);
+}
+
+/// Property: the spec grammar is a faithful serialization — any seeded
+/// plan survives `spec → parse` event for event, and re-serializing the
+/// parsed plan is a fixed point. This is what makes the chaos artifacts
+/// (`BENCH_soak.json` records the plan spec) actually reproducible.
+#[test]
+fn prop_fault_plan_specs_round_trip_through_parse() {
+    for seed in 0..64u64 {
+        let plan = FaultPlan::seeded(seed, 5, 40);
+        let spec = plan.spec();
+        let back = FaultPlan::parse(&spec, 5)
+            .unwrap_or_else(|e| panic!("seed {seed}: `{spec}` failed to re-parse: {e}"));
+        assert_eq!(back.events.len(), plan.events.len(), "seed {seed}: `{spec}`");
+        for (a, b) in plan.events.iter().zip(&back.events) {
+            assert_eq!(a.instance, b.instance, "seed {seed}: `{spec}`");
+            assert_eq!(a.at, b.at, "seed {seed}: `{spec}`");
+            assert_eq!(a.kind, b.kind, "seed {seed}: `{spec}`");
+        }
+        assert_eq!(back.spec(), spec, "seed {seed}: spec must be a fixed point");
+    }
+}
+
+/// Crash one member board of a two-board partitioned plan mid-stream:
+/// the whole plan must leave the roster, its in-flight windows must be
+/// invalidated and re-placed on a whole-window sibling, and the ledger
+/// must close with no duplicate delivery.
+#[test]
+fn crashing_one_member_of_a_partitioned_plan_re_places_on_whole_window_plans() {
+    // A real two-board split: the oversized serving GRU across two
+    // PYNQ-Z2 slots, turned into a fleet cost model. Modeled ~7 ms per
+    // window, so it out-ranks the 30 ms whole-window siblings.
+    let fmt = FixedFormat::q8_8();
+    let g = GruAccelConfig::serving(4, 384, fmt, fmt).graph();
+    let out = best_partition(&g, &pynq_rack(2), 64).expect("the split is feasible");
+    assert_eq!(out.plan.n_parts(), 2, "the oversized GRU needs both boards");
+    let split_model =
+        PartitionedInstanceSpec::new("split-gru", out.plan, Link::ten_gbe()).model(64, 3, 1, 135);
+    assert!(split_model.fits && split_model.max_outstanding >= 1);
+
+    let member_svc = || Service::start(ServiceConfig::default(), MockBackend::default);
+    let fleet = vec![
+        (InstanceModel::synthetic("board-a", 30e-3, 8), member_svc()),
+        (InstanceModel::synthetic("board-b", 30e-3, 8), member_svc()),
+    ];
+    let cfg = StreamConfig {
+        burst_initial: 8,
+        burst_max: 8,
+        ..StreamConfig::default()
+    };
+    let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1).expect("fleet");
+    // Slow split backend: windows linger in flight so the member crash
+    // catches some mid-window (the invalidation path under test).
+    let split_svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            ..Default::default()
+        },
+        || MockBackend {
+            batch: 1,
+            delay: Duration::from_millis(25),
+            ..Default::default()
+        },
+    );
+    let split_idx = coord
+        .add_partitioned(split_model, vec![0, 1], split_svc)
+        .expect("members are whole-window instances");
+    assert_eq!(split_idx, 2);
+    coord
+        .inject_faults(FaultPlan::parse("crash:1@4", 3).expect("spec"))
+        .expect("in range");
+
+    feed(&mut coord, 2, 64 + 7 * 16, 61); // 8 windows x 2 tenants
+    coord.drain();
+
+    let stats = coord.stats();
+    assert_eq!(stats.windows_emitted, 16);
+    assert_eq!(
+        stats.windows_completed, 16,
+        "surviving whole-window capacity must absorb the invalidated plan"
+    );
+    assert_eq!(stats.windows_failed, 0);
+    assert!(
+        stats.per_instance[2].placed >= 1,
+        "the split must have served before the crash: {:?}",
+        stats.per_instance
+    );
+    assert_eq!(stats.per_instance[1].health, "down", "the crashed member");
+    assert_eq!(
+        stats.per_instance[2].health, "down",
+        "a plan with a dead member must leave the roster"
+    );
+    assert!(
+        stats.per_instance[2].failed_over >= 1,
+        "in-flight split windows must be invalidated, not left to hang: {:?}",
+        stats.per_instance
+    );
+    assert!(
+        stats.per_instance[0].placed >= 1,
+        "post-crash traffic must re-place on the surviving sibling"
+    );
+    assert_accounting_closes(&mut coord);
+}
+
+/// A partitioned plan's occupancy is mirrored onto every member board
+/// and capped by the *scarcest* member's headroom: with a cap-2 member,
+/// the split never holds more than two windows — its own budget of 8
+/// notwithstanding — and the mirror fills the member's own capacity so
+/// overflow lands on the roomier sibling only.
+#[test]
+fn partitioned_occupancy_is_mirrored_and_capped_by_member_headroom() {
+    let member_svc = || Service::start(ServiceConfig::default(), MockBackend::default);
+    let fleet = vec![
+        (InstanceModel::synthetic("tight", 50e-3, 2), member_svc()),
+        (InstanceModel::synthetic("roomy", 50e-3, 4), member_svc()),
+    ];
+    let cfg = StreamConfig {
+        burst_initial: 4,
+        burst_max: 4,
+        ..StreamConfig::default()
+    };
+    let mut coord = StreamCoordinator::with_fleet(fleet, cfg, 3, 1).expect("fleet");
+    let split_svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            ..Default::default()
+        },
+        || MockBackend {
+            batch: 1,
+            delay: Duration::from_millis(20),
+            ..Default::default()
+        },
+    );
+    coord
+        .add_partitioned(InstanceModel::synthetic("split", 1e-6, 8), vec![0, 1], split_svc)
+        .expect("wiring");
+
+    feed(&mut coord, 1, 64 + 5 * 16, 71); // 6 windows, one tenant
+    coord.drain();
+
+    let stats = coord.stats();
+    assert_eq!(stats.windows_emitted, 6);
+    assert_eq!(stats.windows_completed, 6);
+    assert_eq!(stats.windows_failed, 0);
+    assert_eq!(
+        stats.per_instance[2].outstanding_max, 2,
+        "the scarcest member's headroom caps the split, not its own budget: {:?}",
+        stats.per_instance
+    );
+    assert_eq!(
+        stats.per_instance[0].outstanding_max, 2,
+        "occupancy is mirrored onto the member board"
+    );
+    assert_eq!(
+        stats.per_instance[0].placed, 0,
+        "the mirror consumes the tight member's own capacity entirely"
+    );
     assert_accounting_closes(&mut coord);
 }

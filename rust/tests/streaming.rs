@@ -11,6 +11,7 @@ use merinda::coordinator::stream::{decode_id, encode_id};
 use merinda::coordinator::{
     window_plan, FixedPointBackend, FixedPointConfig, NativeBackend, RecoveredWindow,
     RecoveryRequest, Service, ServiceConfig, StreamConfig, StreamCoordinator, WindowConfig,
+    Windower,
 };
 use merinda::systems::streaming_systems;
 use merinda::util::Prng;
@@ -217,4 +218,84 @@ fn typed_overload_lets_streaming_distinguish_shed_from_fail() {
     assert_eq!(stats.windows_shed, 0, "deep tenant queues must not shed");
     assert_eq!(stats.windows_completed, stats.windows_emitted);
     assert!(stats.burst_backoffs > 0, "saturation must trigger backoff");
+}
+
+/// Stride above the window length would drop samples; the config
+/// normalizes it to back-to-back tiling and the windower must then
+/// cover the stream exactly once — no gap, no overlap, no tail.
+#[test]
+fn stride_above_window_clamps_to_back_to_back_tiling() {
+    let cfg = WindowConfig {
+        window: 8,
+        stride: 20,
+    };
+    assert_eq!(cfg.normalized().stride, 8, "stride clamps to the window");
+    let mut w = Windower::new(cfg, 1, 1);
+    let mut starts = Vec::new();
+    for i in 0..32 {
+        if let Some((s, y, u)) = w.push(&[i as f32], &[0.0]) {
+            assert_eq!(y.len(), 8);
+            assert_eq!(u.len(), 8);
+            // The payload is the contiguous run starting at `s`.
+            assert_eq!(y[0], s as f32);
+            assert_eq!(y[7], (s + 7) as f32);
+            starts.push(s);
+        }
+    }
+    assert_eq!(starts, vec![0, 8, 16, 24], "exactly-once tiling");
+    assert_eq!(window_plan(32, 8, 20), starts, "incremental == batch plan");
+    assert!(w.finish().is_none(), "nothing uncovered to flush");
+    assert_eq!(w.emitted(), 4);
+}
+
+/// With a clamped oversized stride and a length that is not a multiple
+/// of the window, the trailing samples must still be covered: `finish`
+/// flushes one overlapping tail window, exactly as the batch plan says.
+#[test]
+fn clamped_stride_tail_is_flushed_losslessly() {
+    let cfg = WindowConfig {
+        window: 8,
+        stride: 9999,
+    };
+    let mut w = Windower::new(cfg, 1, 1);
+    let mut starts = Vec::new();
+    for i in 0..30 {
+        if let Some((s, _, _)) = w.push(&[i as f32], &[0.0]) {
+            starts.push(s);
+        }
+    }
+    assert_eq!(starts, vec![0, 8, 16]);
+    let (s, y, _) = w.finish().expect("6 trailing samples need a tail window");
+    assert_eq!(s, 22, "tail window backs up to cover the stream end");
+    assert_eq!(y[0], 22.0);
+    assert!(w.finish().is_none(), "finish is idempotent after the flush");
+    starts.push(s);
+    assert_eq!(window_plan(30, 8, 9999), starts, "incremental == batch plan");
+}
+
+/// A stream shorter than one window emits nothing — not a padded or a
+/// truncated window — and the sample that completes the first window
+/// emits it at start 0.
+#[test]
+fn stream_shorter_than_one_window_emits_nothing() {
+    let cfg = WindowConfig {
+        window: W,
+        stride: STRIDE,
+    };
+    let mut w = Windower::new(cfg, XD, UD);
+    let y = [0.5f32; XD];
+    let u = [0.25f32; UD];
+    for _ in 0..W - 1 {
+        assert!(w.push(&y, &u).is_none(), "no window before {W} samples");
+    }
+    assert!(w.finish().is_none(), "{} of {W} samples is not a window", W - 1);
+    assert!(w.finish().is_none(), "finish is idempotent");
+    assert_eq!(w.emitted(), 0);
+    assert!(window_plan(W - 1, W, STRIDE).is_empty(), "batch plan agrees");
+    // The W-th sample completes the first (and only) window at start 0.
+    let (s, wy, wu) = w.push(&y, &u).expect("window completes on sample W");
+    assert_eq!(s, 0);
+    assert_eq!(wy.len(), W * XD);
+    assert_eq!(wu.len(), W * UD);
+    assert!(w.finish().is_none(), "fully covered: no tail to flush");
 }

@@ -1,14 +1,14 @@
 #!/usr/bin/env python3
 """Validate BENCH_stream.json (schema + deterministic throughput floor).
 
-Usage: check_bench_stream.py <expected-backend> [tuned] [chaos]
+Usage: check_bench_stream.py <expected-backend> [tuned] [chaos] [open-loop]
 
 Run after `merinda soak` with MERINDA_SOAK_TENANTS / MERINDA_SOAK_SAMPLES
 set; every gated value below is window-count or cycle-model based, so the
 gate is machine-independent (wall-clock numbers live in the ungated
-"wall" section). Pass `tuned` when the soak ran with `--tuned`, and
-`chaos` when it ran with `--chaos`, so CI notices if either path
-silently stops being exercised.
+"wall" section). Pass `tuned` when the soak ran with `--tuned`, `chaos`
+when it ran with `--chaos`, and `open-loop` when it ran with
+`--open-loop`, so CI notices if any path silently stops being exercised.
 
 In chaos mode the completion gate is *stronger in spirit*: the fixed
 smoke plan injects a crash, a stall and a bit-flip, and every window
@@ -16,6 +16,16 @@ must still complete (failover + retry absorb the faults), every injected
 flip must be caught by the fidelity check, and every crashed instance
 must be reported down. Wall-clock-dependent counters (timeouts,
 duplicates) are not gated — only their ledger consistency is.
+
+In open-loop mode the fixed smoke spec drives a drifting realtime burst
+through the QoS traffic tier, so the gates shift from "every planned
+window completes" to the tier ledgers: offered == admitted + rejected
+and admitted == completed + shed + failed per tier, the realtime p99
+must meet its SLO with completed realtime windows to show for it, the
+drift episode must have fired the online retune, and every completed
+window must still verify bitwise against one-shot recovery. Chaos and
+open-loop are separate smokes — combining the flags is rejected here
+(the chaos completion gate is meaningless under deliberate overload).
 """
 import json
 import os
@@ -23,19 +33,25 @@ import sys
 
 expected_backend = sys.argv[1] if len(sys.argv) > 1 else "native"
 flags = set(sys.argv[2:])
-unknown = flags - {"tuned", "chaos"}
+unknown = flags - {"tuned", "chaos", "open-loop"}
 assert not unknown, f"unknown flags: {sorted(unknown)}"
 expected_tuned = "tuned" in flags
 expected_chaos = "chaos" in flags
+expected_open = "open-loop" in flags
+assert not (expected_chaos and expected_open), \
+    "chaos and open-loop are separate smokes — gate them separately"
 tenants = int(os.environ.get("MERINDA_SOAK_TENANTS", "6"))
 samples = int(os.environ.get("MERINDA_SOAK_SAMPLES", "400"))
+
+TIERS = ("realtime", "standard", "batch")
 
 d = json.load(open("BENCH_stream.json"))
 
 # --- schema ---
 for key in ("bench", "workload", "totals", "fairness", "queue",
             "cycle_model", "verify", "placement", "warm_start", "faults",
-            "wall", "rows", "speedups"):
+            "traffic", "qos", "admission", "retune", "wall", "rows",
+            "speedups"):
     assert key in d, f"missing key: {key}"
 assert d["bench"] == "stream"
 for k in ("tenants", "samples_per_tenant", "window", "stride", "backend",
@@ -70,33 +86,68 @@ for k in ("chaos", "plan", "deadline_ms", "injected_crash",
           "instances_down", "instances_recovered",
           "recovery_rounds_total", "accounting_closed"):
     assert k in d["faults"], f"missing faults.{k}"
+for k in ("open_loop", "spec", "ticks", "offered_total", "backlog_budget",
+          "max_drift", "per_tier"):
+    assert k in d["traffic"], f"missing traffic.{k}"
+for tier in TIERS:
+    assert tier in d["traffic"]["per_tier"], f"missing traffic.per_tier.{tier}"
+    for k in ("offered", "admitted", "rejected", "shed_budget"):
+        assert k in d["traffic"]["per_tier"][tier], \
+            f"missing traffic.per_tier.{tier}.{k}"
+    assert tier in d["qos"], f"missing qos.{tier}"
+    for k in ("offered", "admitted", "rejected", "placed", "completed",
+              "shed", "failed", "latency_count", "p50_ms", "p99_ms",
+              "p999_ms", "max_ms", "slo_ms", "slo_met"):
+        assert k in d["qos"][tier], f"missing qos.{tier}.{k}"
+for k in ("enabled", "slo_realtime_ms", "slo_standard_ms", "slo_batch_ms",
+          "rejected_total", "closes"):
+    assert k in d["admission"], f"missing admission.{k}"
+for k in ("enabled", "drift_threshold", "count", "max_drift", "events"):
+    assert k in d["retune"], f"missing retune.{k}"
 
 # --- workload matches the env knobs ---
 w = d["workload"]
 assert w["backend"] == expected_backend, \
     f"backend {w['backend']!r} != expected {expected_backend!r}"
-assert w["tenants"] == tenants and w["samples_per_tenant"] == samples
+# Open-loop tenant population comes from the arrival spec's `tenants:`/
+# `mix:` fields, not the env knob; the ring trajectories still honor it.
+if not expected_open:
+    assert w["tenants"] == tenants
+assert w["samples_per_tenant"] == samples
 assert w["tuned"] is expected_tuned, \
     f"tuned {w['tuned']} != expected {expected_tuned}"
 
-# --- deterministic completion gate: every planned window recovered ---
 t = d["totals"]
 window, stride = w["window"], w["stride"]
 per_tenant = (samples - window) // stride + 1 if samples >= window else 0
 # +1 tail window when the strided walk leaves trailing samples uncovered.
 if samples >= window and (per_tenant - 1) * stride + window < samples:
     per_tenant += 1
-expected_windows = tenants * per_tenant
-assert t["windows_emitted"] == expected_windows, \
-    f"emitted {t['windows_emitted']} != planned {expected_windows}"
-assert t["windows_completed"] == t["windows_emitted"], \
-    "smoke workload must complete every window (no shed/fail) — " \
-    "under chaos, failover and retry must absorb the injected faults"
-assert t["windows_shed"] == 0 and t["windows_failed"] == 0
+expected_windows = t["windows_emitted"] if expected_open \
+    else w["tenants"] * per_tenant
 
-# --- fairness: identical-length streams must complete identically ---
+if expected_open:
+    # --- open-loop: emission is driven by the arrival plan, and the
+    # gate is ledger closure, not full completion (overload may shed).
+    assert t["windows_completed"] + t["windows_shed"] == t["windows_emitted"], \
+        "open-loop disposition must close: completed + shed == emitted"
+    assert t["windows_failed"] == 0, \
+        "a healthy open-loop fleet must not fail windows (shed, never lose)"
+    assert t["windows_completed"] > 0, "open-loop smoke completed nothing"
+else:
+    # --- deterministic completion gate: every planned window recovered ---
+    assert t["windows_emitted"] == expected_windows, \
+        f"emitted {t['windows_emitted']} != planned {expected_windows}"
+    assert t["windows_completed"] == t["windows_emitted"], \
+        "smoke workload must complete every window (no shed/fail) — " \
+        "under chaos, failover and retry must absorb the injected faults"
+    assert t["windows_shed"] == 0 and t["windows_failed"] == 0
+
+# --- fairness: identical-length streams must complete identically
+# (closed loop only — open-loop arrivals are Poisson-split by design) ---
 f = d["fairness"]
-assert f["min_tenant_completed"] == f["max_tenant_completed"] == per_tenant
+if not expected_open:
+    assert f["min_tenant_completed"] == f["max_tenant_completed"] == per_tenant
 
 # --- sustained-throughput floor from the accelerator cycle model ---
 wpm = d["cycle_model"]["windows_per_mcycle"]
@@ -105,7 +156,8 @@ assert wpm >= 5.0, f"sustained throughput regressed: {wpm} windows/Mcycle"
 # --- streaming must equal the one-shot path bitwise ---
 v = d["verify"]
 assert v["checked"], "soak smoke must run with verification on"
-assert v["compared"] == expected_windows
+assert v["compared"] == (t["windows_completed"] if expected_open
+                         else expected_windows)
 assert v["max_abs_delta"] == 0.0, \
     f"streaming diverged from one-shot recovery: {v['max_abs_delta']}"
 
@@ -113,14 +165,20 @@ assert v["max_abs_delta"] == 0.0, \
 p = d["placement"]
 per_inst = p["per_instance"]
 assert len(per_inst) == p["instances"] >= 1
+placed_total = sum(q["placed"] for q in d["qos"].values())
 if expected_chaos:
     # Failed-over windows are placed more than once, so the placed sum
     # exceeds the window count by exactly the observable failovers.
     assert sum(i["placed"] for i in per_inst) >= expected_windows
+elif expected_open:
+    # Shed windows never reach placement; everything placed completes.
+    assert sum(i["placed"] for i in per_inst) == placed_total
+    assert sum(i["completed"] for i in per_inst) == t["windows_completed"]
 else:
     assert sum(i["placed"] for i in per_inst) == expected_windows, \
         "every completed window must be attributed to an instance"
-assert sum(i["completed"] for i in per_inst) == expected_windows
+if not expected_open:
+    assert sum(i["completed"] for i in per_inst) == expected_windows
 for i in per_inst:
     assert i["completed"] <= i["placed"]
     assert i["window_cycles"] > 0, f"{i['name']}: cycle model must be wired in"
@@ -135,15 +193,18 @@ if p["instances"] > 1 and expected_windows >= 2 * tenants:
 # --- warm-start recovery: fewer iterations than cold, per scenario ---
 # Under chaos, corruption retries invalidate the warm cache, so the
 # paired-window count is workload-dependent; the iteration gates apply
-# only to the healthy-fleet smoke.
+# only to the healthy-fleet smoke. The open-loop smoke runs --no-warm
+# (ring arrivals repeat windows, which would double-count pairs), so its
+# warm-start section is reported but not gated.
 ws = d["warm_start"]
-assert ws["enabled"], "soak smoke must run with warm-start on"
+if not expected_open:
+    assert ws["enabled"], "soak smoke must run with warm-start on"
 if expected_chaos:
     assert ws["paired_windows"] <= tenants * max(per_tenant - 1, 0)
-else:
+elif not expected_open:
     assert ws["paired_windows"] == tenants * max(per_tenant - 1, 0), \
         "every non-first window must be measured warm AND cold"
-if not expected_chaos and ws["paired_windows"] > 0:
+if not expected_chaos and not expected_open and ws["paired_windows"] > 0:
     assert ws["warm_iters"] < ws["cold_iters"], \
         f"warm-start must save iterations: {ws['warm_iters']} vs {ws['cold_iters']}"
     assert 0.0 < ws["iter_ratio"] < 1.0 or ws["warm_iters"] == 0
@@ -191,9 +252,69 @@ else:
         assert fa[k] == 0, \
             f"healthy-fleet smoke observed faults.{k} = {fa[k]}"
 
-mode = " +chaos" if expected_chaos else ""
+# --- traffic tier: ledgers closed in both modes, live gates when open ---
+tr, qos, adm, rt = d["traffic"], d["qos"], d["admission"], d["retune"]
+assert tr["open_loop"] is expected_open
+assert adm["enabled"] is expected_open and rt["enabled"] is expected_open
+assert adm["closes"], "admission ledger must close (vacuously when closed-loop)"
+for tier in TIERS:
+    tt, q = tr["per_tier"][tier], qos[tier]
+    assert tt["offered"] == tt["admitted"] + tt["rejected"], \
+        f"{tier}: traffic admission ledger must close"
+    # The driver's report and the metrics sink count the same events.
+    for k in ("offered", "admitted", "rejected"):
+        assert tt[k] == q[k], f"{tier}: traffic.{k} != qos.{k}"
+    if q["latency_count"] > 0:
+        assert q["p50_ms"] <= q["p99_ms"] <= q["p999_ms"] <= q["max_ms"], \
+            f"{tier}: latency percentiles must be ordered"
+assert tr["offered_total"] == sum(tr["per_tier"][x]["offered"] for x in TIERS)
+assert adm["rejected_total"] == sum(qos[x]["rejected"] for x in TIERS)
+# Per-tier completions partition the totals in both modes (closed-loop
+# tenants all ride the default standard tier).
+assert sum(qos[x]["completed"] for x in TIERS) == t["windows_completed"]
+assert sum(qos[x]["shed"] for x in TIERS) == t["windows_shed"]
+assert sum(qos[x]["failed"] for x in TIERS) == t["windows_failed"]
+assert qos["batch"]["slo_ms"] is None and qos["batch"]["rejected"] == 0, \
+    "batch has no SLO and must never be rejected"
+if expected_open:
+    assert tr["spec"], "an open-loop run must record its arrival spec"
+    assert tr["ticks"] >= 1 and tr["offered_total"] >= 1
+    for tier in TIERS:
+        q = qos[tier]
+        assert q["admitted"] == q["completed"] + q["shed"] + q["failed"], \
+            f"{tier}: disposition ledger must close under open loop"
+    # The acceptance bar: the realtime tier actually served load AND met
+    # its SLO — admission control is what makes this hold under a burst.
+    assert qos["realtime"]["completed"] > 0, \
+        "open-loop smoke must complete realtime windows"
+    assert qos["realtime"]["slo_ms"] is not None
+    assert qos["realtime"]["slo_met"], \
+        (f"realtime p99 {qos['realtime']['p99_ms']:.1f}ms breached its "
+         f"{qos['realtime']['slo_ms']}ms SLO")
+    # The fixed smoke spec drifts past the threshold by construction, so
+    # the online retune must fire and refresh the placement models.
+    assert rt["count"] >= 1 and len(rt["events"]) == rt["count"], \
+        "the drifting smoke spec must trigger at least one retune"
+    assert rt["max_drift"] > rt["drift_threshold"]
+    for ev in rt["events"]:
+        assert 0 <= ev["tick"] < tr["ticks"]
+        assert ev["drift"] > rt["drift_threshold"]
+        assert ev["models_refreshed"], \
+            "the soak retune hook must re-derive models via the tuner"
+else:
+    assert tr["spec"] == "" and tr["offered_total"] == 0
+    assert adm["rejected_total"] == 0
+    assert rt["count"] == 0 and rt["events"] == []
+
+mode = "".join((" +chaos" if expected_chaos else "",
+                " +open-loop" if expected_open else ""))
+extra = ""
+if expected_open:
+    extra = (f", rt p99 {qos['realtime']['p99_ms']:.1f}ms"
+             f"/{qos['realtime']['slo_ms']}ms SLO, "
+             f"{adm['rejected_total']} rejected, {rt['count']} retune(s)")
 print(f"BENCH_stream.json OK: {expected_windows} windows on "
       f"{w['backend']}{mode}, {wpm:.1f} windows/Mcycle, "
       f"{p['instances_used']}/{p['instances']} instances used, "
       f"warm/cold iters {ws['warm_iters']}/{ws['cold_iters']}, "
-      f"bitwise-verified")
+      f"bitwise-verified{extra}")

@@ -42,6 +42,26 @@
 //! bitwise one-shot comparison still runs — surviving windows carry
 //! uncorrupted Θ. `--deadline-ms` bounds window completion before
 //! hedged failover (default 30000).
+//!
+//! `--open-loop --arrivals <spec>` switches from closed-loop sample
+//! replay to the production traffic tier (`coordinator::traffic`): a
+//! deterministic seeded arrival process (grammar
+//! `poisson:R,tenants:N,mix:A/B/C,ticks:T,seed:S,diurnal:P*A[@tier],`
+//! `burst:T0+L*F[@tier]`, or the literal `seeded`) fires windows on a
+//! logical clock regardless of completion rate, tenants carry
+//! realtime/standard/batch QoS tiers from the `mix`, an admission
+//! controller rejects arrivals whose tier SLO projection is breached
+//! (`--slo-rt-ms` / `--slo-std-ms`; batch is never rejected), the
+//! backlog is shed to `--backlog` budget batch-first every tick, and a
+//! traffic-mix drift past `--drift-threshold` re-derives the placement
+//! cost models mid-stream through the tuner. Per-tier latency
+//! percentiles, admission and retune accounting land in new
+//! `BENCH_stream.json` sections (`traffic`/`qos`/`admission`/`retune`,
+//! present in both modes) and the run self-verifies per-tier closure:
+//! offered == admitted + rejected and admitted == completed + shed +
+//! failed. The bitwise one-shot comparison covers every completed
+//! window (arrivals cycle a pre-sliced window ring, so each result's
+//! start sample reconstructs its exact request).
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -50,14 +70,16 @@ use std::time::{Duration, Instant};
 use merinda::coordinator::placement::refine_cycle_model;
 use merinda::coordinator::stream::{decode_id, encode_id};
 use merinda::coordinator::{
-    window_plan, FaultKind, FaultPlan, FaultToleranceConfig, FixedPointBackend, FixedPointConfig,
-    InstanceModel, InstanceSpec, Metrics, NativeBackend, NATIVE_HID, NATIVE_PLIB, NATIVE_SEQ,
-    NATIVE_UDIM, NATIVE_XDIM, RecoveredWindow, RecoveryRequest, Service, ServiceConfig,
-    ShedPolicy, StreamConfig, StreamCoordinator, WarmStartConfig, WindowConfig,
+    run_open_loop, window_plan, ArrivalSpec, DriftConfig, FaultKind, FaultPlan,
+    FaultToleranceConfig, FixedPointBackend, FixedPointConfig, InstanceModel, InstanceSpec,
+    Metrics, NativeBackend, OpenLoopConfig, SloPolicy, TenantTraffic, TrafficReport, NATIVE_HID,
+    NATIVE_PLIB, NATIVE_SEQ, NATIVE_UDIM, NATIVE_XDIM, RecoveredWindow, RecoveryRequest, Service,
+    ServiceConfig, ShedPolicy, StreamConfig, StreamCoordinator, WarmStartConfig, WindowConfig,
+    QOS_CLASSES,
 };
 use merinda::fpga::cluster::heterogeneous_fleet;
 use merinda::fpga::gru_accel::{GruAccel, GruAccelConfig};
-use merinda::fpga::tuner::{tune_board, TunerOptions};
+use merinda::fpga::tuner::{retune_roster, TunerOptions};
 use merinda::systems::streaming_systems;
 use merinda::util::bench::{artifact_path, env_usize};
 use merinda::util::cli::Args;
@@ -178,18 +200,21 @@ fn fleet_models(fleet: usize, window: usize, tuned: bool) -> Result<Vec<Instance
             theta_len: NATIVE_XDIM * NATIVE_PLIB,
             ..TunerOptions::default()
         };
+        // All-or-nothing roster retune: the same hook the online-retune
+        // path uses mid-stream, so startup and drift-triggered retunes
+        // derive their models identically.
+        let outs = retune_roster(&roster, &opts)?;
         let mut tuned_boards = Vec::with_capacity(roster.len());
-        for board in &roster {
-            let out = tune_board(board, &opts)?;
+        for out in &outs {
             if out.chosen.window_cycles > out.default_window_cycles {
                 return Err(Error::numeric(format!(
                     "tuned config regressed {}: {} > {} cycles/window",
-                    board.name, out.chosen.window_cycles, out.default_window_cycles
+                    out.board_name, out.chosen.window_cycles, out.default_window_cycles
                 )));
             }
             println!(
                 "  tuned [{:<16}] {} -> {} cycles/window ({:.2}x)",
-                board.name,
+                out.board_name,
                 out.default_window_cycles,
                 out.chosen.window_cycles,
                 out.chosen.speedup_vs_default()
@@ -255,6 +280,23 @@ pub fn run(args: &Args) -> Result<()> {
         .map(str::to_string)
         .or_else(|| std::env::var("MERINDA_SOAK_CHAOS").ok().filter(|s| !s.is_empty()));
     let chaos = chaos_spec.is_some();
+    let open_loop = args.flag("open-loop");
+    let arrivals = args.get_or("arrivals", "seeded");
+    let backlog = args.get_usize("backlog", 512);
+    let slo_rt_ms = args.get_f64("slo-rt-ms", 500.0);
+    let slo_std_ms = args.get_f64("slo-std-ms", 2000.0);
+    let drift_threshold = args.get_f64("drift-threshold", 0.2);
+    let arrival_spec = if open_loop {
+        Some(match arrivals.as_str() {
+            "seeded" => ArrivalSpec::seeded(seed),
+            s => ArrivalSpec::parse(s)?,
+        })
+    } else {
+        None
+    };
+    // Open-loop tenant population comes from the arrival spec (the QoS
+    // mix assigns tiers by tenant index), overriding --tenants/env.
+    let tenants = arrival_spec.as_ref().map_or(tenants, |s| s.tenants);
 
     if window != NATIVE_SEQ {
         return Err(Error::config(format!(
@@ -324,18 +366,78 @@ pub fn run(args: &Args) -> Result<()> {
         );
     }
 
-    // Samples arrive interleaved round-robin across tenants — the
-    // concurrent-stream shape, not tenant-after-tenant replay.
     let t0 = Instant::now();
-    for s in 0..samples {
-        for (t, st) in streams.iter().enumerate() {
-            coord.push(t as u32, &st.y[s * XD..(s + 1) * XD], &st.u[s * UD..(s + 1) * UD]);
+    let traffic_report: Option<TrafficReport> = if let Some(spec) = &arrival_spec {
+        // Open-loop: the arrival plan fires windows on a logical clock
+        // regardless of completion rate. Each tenant cycles a
+        // pre-sliced window ring over its own trajectory, so every
+        // completed result still verifies bitwise against one-shot.
+        if plan_starts.is_empty() {
+            return Err(Error::config(format!(
+                "open-loop needs at least one full window: {samples} samples < window {}",
+                wcfg.window
+            )));
         }
-        coord.pump();
-        coord.poll();
-    }
-    coord.flush_tails();
-    coord.drain();
+        let plan = spec.plan();
+        println!(
+            "open-loop: [{}] -> {} arrivals over {} ticks (rt/std/batch {}/{}/{}), \
+             backlog budget {backlog}, SLO rt {slo_rt_ms}ms / std {slo_std_ms}ms / batch none",
+            spec.spec(),
+            plan.arrivals.len(),
+            plan.ticks,
+            plan.offered_per_tier[0],
+            plan.offered_per_tier[1],
+            plan.offered_per_tier[2]
+        );
+        let rings: Vec<TenantTraffic> = streams
+            .iter()
+            .map(|st| TenantTraffic {
+                windows: plan_starts
+                    .iter()
+                    .map(|&s0| {
+                        (
+                            s0,
+                            st.y[s0 * XD..(s0 + wcfg.window) * XD].to_vec(),
+                            st.u[s0 * UD..(s0 + wcfg.window) * UD].to_vec(),
+                        )
+                    })
+                    .collect(),
+            })
+            .collect();
+        let olcfg = OpenLoopConfig {
+            backlog_budget: backlog,
+            slo: SloPolicy {
+                p99_ms: [Some(slo_rt_ms), Some(slo_std_ms), None],
+            },
+            drift: DriftConfig {
+                threshold: drift_threshold,
+                ..DriftConfig::default()
+            },
+            ..OpenLoopConfig::default()
+        };
+        let rep = run_open_loop(&mut coord, &plan, &rings, &olcfg, |ev| {
+            println!(
+                "  retune @tick {}: drift {:.3} (rt/std/batch {:.2}/{:.2}/{:.2}) — \
+                 re-deriving placement models from the tuner",
+                ev.tick, ev.drift, ev.observed[0], ev.observed[1], ev.observed[2]
+            );
+            fleet_models(fleet_n, wcfg.window, true).ok()
+        })?;
+        Some(rep)
+    } else {
+        // Samples arrive interleaved round-robin across tenants — the
+        // concurrent-stream shape, not tenant-after-tenant replay.
+        for s in 0..samples {
+            for (t, st) in streams.iter().enumerate() {
+                coord.push(t as u32, &st.y[s * XD..(s + 1) * XD], &st.u[s * UD..(s + 1) * UD]);
+            }
+            coord.pump();
+            coord.poll();
+        }
+        coord.flush_tails();
+        coord.drain();
+        None
+    };
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
 
     let mut results = coord.take_results();
@@ -385,6 +487,67 @@ pub fn run(args: &Args) -> Result<()> {
             inst.window_cycles,
             inst.health,
             inst.failed_over
+        );
+    }
+
+    // Open-loop traffic accounting: per-tier disposition table, retune
+    // log, and the closure self-checks (admission: offered == admitted
+    // + rejected; disposition: admitted == completed + shed + failed).
+    if let Some(rep) = &traffic_report {
+        println!(
+            "traffic: {} tick(s), max drift {:.3}, {} retune(s)",
+            rep.ticks,
+            rep.max_drift,
+            rep.retunes.len()
+        );
+        for (i, q) in QOS_CLASSES.iter().enumerate() {
+            let tt = &rep.per_tier[i];
+            let ts = &m.per_tier[i];
+            println!(
+                "  tier {:<8} offered {:>5}  admitted {:>5}  rejected {:>5}  \
+                 completed {:>5}  shed {:>4}  failed {:>3}  \
+                 p50/p99/p999 {:.1}/{:.1}/{:.1} ms",
+                q.name(),
+                tt.offered,
+                tt.admitted,
+                tt.rejected,
+                ts.completed,
+                ts.shed,
+                ts.failed,
+                ts.p50_ms,
+                ts.p99_ms,
+                ts.p999_ms
+            );
+        }
+        for ev in &rep.retunes {
+            println!(
+                "  retuned @tick {:>4}: drift {:.3}, models {}",
+                ev.tick,
+                ev.drift,
+                if ev.models_refreshed { "refreshed" } else { "kept" }
+            );
+        }
+        if !rep.admission_closes() {
+            return Err(Error::numeric(
+                "open-loop admission accounting did not close \
+                 (offered != admitted + rejected on some tier)",
+            ));
+        }
+        for (i, q) in QOS_CLASSES.iter().enumerate() {
+            let ts = &m.per_tier[i];
+            if ts.admitted != ts.completed + ts.shed + ts.failed {
+                return Err(Error::numeric(format!(
+                    "tier {} lost windows: {} admitted != {} completed + {} shed + {} failed",
+                    q.name(),
+                    ts.admitted,
+                    ts.completed,
+                    ts.shed,
+                    ts.failed
+                )));
+            }
+        }
+        println!(
+            "open-loop self-check: admission + disposition accounting closed on all 3 tiers"
         );
     }
 
@@ -510,15 +673,28 @@ pub fn run(args: &Args) -> Result<()> {
     // same coefficients bitwise (the pipeline adds routing, not math).
     let (verify_compared, verify_delta) = if verify {
         let (svc2, _) = make_service(&backend, &fmt, workers, seed, Arc::new(Metrics::new()))?;
-        let plan = window_plan(samples, wcfg.window, wcfg.stride);
         let mut reqs = Vec::new();
-        for (t, st) in streams.iter().enumerate() {
-            for (k, &s0) in plan.iter().enumerate() {
+        if open_loop {
+            // Open-loop arrivals cycle each tenant's window ring, so
+            // the exact request set is reconstructed from the completed
+            // results: every result carries its start sample.
+            for r in &results {
+                let st = &streams[r.tenant as usize];
                 reqs.push(RecoveryRequest {
-                    id: encode_id(t as u32, k as u32),
-                    y: st.y[s0 * XD..(s0 + wcfg.window) * XD].to_vec(),
-                    u: st.u[s0 * UD..(s0 + wcfg.window) * UD].to_vec(),
+                    id: encode_id(r.tenant, r.seq_no),
+                    y: st.y[r.start * XD..(r.start + wcfg.window) * XD].to_vec(),
+                    u: st.u[r.start * UD..(r.start + wcfg.window) * UD].to_vec(),
                 });
+            }
+        } else {
+            for (t, st) in streams.iter().enumerate() {
+                for (k, &s0) in plan_starts.iter().enumerate() {
+                    reqs.push(RecoveryRequest {
+                        id: encode_id(t as u32, k as u32),
+                        y: st.y[s0 * XD..(s0 + wcfg.window) * XD].to_vec(),
+                        u: st.u[s0 * UD..(s0 + wcfg.window) * UD].to_vec(),
+                    });
+                }
             }
         }
         // Chunked below the service queue depth: `recover_many` silently
@@ -778,6 +954,125 @@ pub fn run(args: &Args) -> Result<()> {
                         .per_tenant
                         .iter()
                         .all(|t| t.completed + t.shed + t.failed == t.emitted),
+                ),
+            ),
+        ]),
+    );
+    // Traffic / QoS / admission / retune sections: always present so
+    // `ci/check_bench_stream.py` can gate both modes (closed-loop runs
+    // carry `open_loop: false` with zeroed driver counters; the per-tier
+    // QoS metrics are live in both modes).
+    let rep_default = TrafficReport::default();
+    let rep = traffic_report.as_ref().unwrap_or(&rep_default);
+    let spec_str = arrival_spec.as_ref().map(|s| s.spec()).unwrap_or_default();
+    let offered_total: u64 = rep.per_tier.iter().map(|t| t.offered).sum();
+    let rejected_total: u64 = rep.per_tier.iter().map(|t| t.rejected).sum();
+    let slos: [Option<f64>; 3] = if open_loop {
+        [Some(slo_rt_ms), Some(slo_std_ms), None]
+    } else {
+        [None; 3]
+    };
+    report.section(
+        "traffic",
+        Json::obj(vec![
+            ("open_loop", Json::Bool(open_loop)),
+            ("spec", Json::str(spec_str)),
+            ("ticks", Json::num(rep.ticks as f64)),
+            ("offered_total", Json::num(offered_total as f64)),
+            ("backlog_budget", Json::num(backlog as f64)),
+            ("max_drift", Json::num(rep.max_drift)),
+            (
+                "per_tier",
+                Json::Obj(
+                    QOS_CLASSES
+                        .iter()
+                        .enumerate()
+                        .map(|(i, q)| {
+                            let t = &rep.per_tier[i];
+                            (
+                                q.name().to_string(),
+                                Json::obj(vec![
+                                    ("offered", Json::num(t.offered as f64)),
+                                    ("admitted", Json::num(t.admitted as f64)),
+                                    ("rejected", Json::num(t.rejected as f64)),
+                                    ("shed_budget", Json::num(t.shed_budget as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+    report.section(
+        "qos",
+        Json::Obj(
+            QOS_CLASSES
+                .iter()
+                .enumerate()
+                .map(|(i, q)| {
+                    let ts = &m.per_tier[i];
+                    let slo = slos[i];
+                    (
+                        q.name().to_string(),
+                        Json::obj(vec![
+                            ("offered", Json::num(ts.offered as f64)),
+                            ("admitted", Json::num(ts.admitted as f64)),
+                            ("rejected", Json::num(ts.rejected as f64)),
+                            ("placed", Json::num(ts.placed as f64)),
+                            ("completed", Json::num(ts.completed as f64)),
+                            ("shed", Json::num(ts.shed as f64)),
+                            ("failed", Json::num(ts.failed as f64)),
+                            ("latency_count", Json::num(ts.latency_count as f64)),
+                            ("p50_ms", Json::num(ts.p50_ms)),
+                            ("p99_ms", Json::num(ts.p99_ms)),
+                            ("p999_ms", Json::num(ts.p999_ms)),
+                            ("max_ms", Json::num(ts.max_ms)),
+                            (
+                                "slo_ms",
+                                match slo {
+                                    Some(s) => Json::num(s),
+                                    None => Json::Null,
+                                },
+                            ),
+                            ("slo_met", Json::Bool(slo.map_or(true, |s| ts.p99_ms <= s))),
+                        ]),
+                    )
+                })
+                .collect(),
+        ),
+    );
+    report.section(
+        "admission",
+        Json::obj(vec![
+            ("enabled", Json::Bool(open_loop)),
+            ("slo_realtime_ms", Json::num(slo_rt_ms)),
+            ("slo_standard_ms", Json::num(slo_std_ms)),
+            ("slo_batch_ms", Json::Null),
+            ("rejected_total", Json::num(rejected_total as f64)),
+            ("closes", Json::Bool(rep.admission_closes())),
+        ]),
+    );
+    report.section(
+        "retune",
+        Json::obj(vec![
+            ("enabled", Json::Bool(open_loop)),
+            ("drift_threshold", Json::num(drift_threshold)),
+            ("count", Json::num(rep.retunes.len() as f64)),
+            ("max_drift", Json::num(rep.max_drift)),
+            (
+                "events",
+                Json::Arr(
+                    rep.retunes
+                        .iter()
+                        .map(|ev| {
+                            Json::obj(vec![
+                                ("tick", Json::num(ev.tick as f64)),
+                                ("drift", Json::num(ev.drift)),
+                                ("models_refreshed", Json::Bool(ev.models_refreshed)),
+                            ])
+                        })
+                        .collect(),
                 ),
             ),
         ]),

@@ -5,6 +5,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::traffic::QosClass;
+
 /// Latency statistics over recorded samples.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LatencyStats {
@@ -46,6 +48,53 @@ pub struct InstanceSnapshot {
     pub failed_over: u64,
 }
 
+/// Per-QoS-tier counters and end-to-end latency samples.
+///
+/// Unlike the global counters (which conflate tiers), these make the
+/// per-tier placed/shed/rejected story first-class: the admission
+/// controller, the shed-ordering sweep, and the completion path each
+/// report under the window's tier, and the open-loop gate closes the
+/// books per tier (`offered == admitted + rejected`,
+/// `admitted == completed + shed + failed`).
+#[derive(Clone, Debug, Default)]
+struct TierCounters {
+    offered: u64,
+    admitted: u64,
+    rejected: u64,
+    placed: u64,
+    shed: u64,
+    completed: u64,
+    failed: u64,
+    /// End-to-end (enqueue → result) latencies, ms.
+    latencies_ms: Vec<f64>,
+}
+
+/// A point-in-time copy of one QoS tier's counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierSnapshot {
+    /// Open-loop arrivals targeted at this tier.
+    pub offered: u64,
+    /// Arrivals the admission controller let through.
+    pub admitted: u64,
+    /// Arrivals rejected to protect the tier's SLO.
+    pub rejected: u64,
+    /// Windows the placement layer routed to an instance.
+    pub placed: u64,
+    /// Windows deliberately dropped by shed policy (queue overflow or
+    /// the backlog-budget sweep).
+    pub shed: u64,
+    /// Windows that completed with a recovered Θ.
+    pub completed: u64,
+    /// Windows that exhausted retries.
+    pub failed: u64,
+    /// End-to-end latency distribution over completed windows.
+    pub latency_count: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub max_ms: f64,
+}
+
 /// Shared metrics sink (thread-safe).
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -59,6 +108,8 @@ pub struct Metrics {
     latencies_ms: Mutex<Vec<f64>>,
     /// Indexed by fleet instance id, grown on first touch.
     instances: Mutex<Vec<InstanceCounters>>,
+    /// Indexed by [`QosClass::index`].
+    tiers: Mutex<[TierCounters; 3]>,
 }
 
 /// A point-in-time copy of the counters.
@@ -79,6 +130,9 @@ pub struct MetricsSnapshot {
     /// Per-fleet-instance breakdown (empty for single-service setups
     /// that never report placement).
     pub per_instance: Vec<InstanceSnapshot>,
+    /// Per-QoS-tier breakdown, indexed by [`QosClass::index`] (all-zero
+    /// for drivers that never set tenant tiers).
+    pub per_tier: [TierSnapshot; 3],
 }
 
 impl Metrics {
@@ -147,6 +201,54 @@ impl Metrics {
         self.with_instance(idx, |c| c.queue_depth_max = c.queue_depth_max.max(depth as u64));
     }
 
+    fn with_tier(&self, tier: QosClass, f: impl FnOnce(&mut TierCounters)) {
+        let mut tiers = self
+            .tiers
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        f(&mut tiers[tier.index()]);
+    }
+
+    /// Record an open-loop arrival targeted at `tier`.
+    pub fn on_tier_offered(&self, tier: QosClass) {
+        self.with_tier(tier, |c| c.offered += 1);
+    }
+
+    /// Record an arrival admitted past the SLO controller.
+    pub fn on_tier_admitted(&self, tier: QosClass) {
+        self.with_tier(tier, |c| c.admitted += 1);
+    }
+
+    /// Record an arrival rejected to protect `tier`'s SLO.
+    pub fn on_tier_rejected(&self, tier: QosClass) {
+        self.with_tier(tier, |c| c.rejected += 1);
+    }
+
+    /// Record a window of `tier` placed onto a fleet instance.
+    pub fn on_tier_placed(&self, tier: QosClass) {
+        self.with_tier(tier, |c| c.placed += 1);
+    }
+
+    /// Record a window of `tier` deliberately shed.
+    pub fn on_tier_shed(&self, tier: QosClass) {
+        self.with_tier(tier, |c| c.shed += 1);
+    }
+
+    /// Record a completed window of `tier` with its end-to-end
+    /// (enqueue → result) latency — queue wait included, unlike the
+    /// global [`Metrics::on_complete`] service latency.
+    pub fn on_tier_completed(&self, tier: QosClass, latency: Duration) {
+        self.with_tier(tier, |c| {
+            c.completed += 1;
+            c.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        });
+    }
+
+    /// Record a window of `tier` that exhausted its retries.
+    pub fn on_tier_failed(&self, tier: QosClass) {
+        self.with_tier(tier, |c| c.failed += 1);
+    }
+
     pub fn on_batch(&self, items: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(items, Ordering::Relaxed);
@@ -182,6 +284,17 @@ impl Metrics {
                 failed_over: c.failed_over,
             })
             .collect();
+        let per_tier = {
+            let tiers = self
+                .tiers
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            let mut out = [TierSnapshot::default(); 3];
+            for (snap, c) in out.iter_mut().zip(tiers.iter()) {
+                *snap = tier_snapshot(c);
+            }
+            out
+        };
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -196,7 +309,37 @@ impl Metrics {
             },
             latency: latency_stats(&lats),
             per_instance,
+            per_tier,
         }
+    }
+}
+
+fn tier_snapshot(c: &TierCounters) -> TierSnapshot {
+    use crate::util::stats;
+    let lats = &c.latencies_ms;
+    let (p50, p99, p999, max) = if lats.is_empty() {
+        (0.0, 0.0, 0.0, 0.0)
+    } else {
+        (
+            stats::percentile(lats, 50.0),
+            stats::percentile(lats, 99.0),
+            stats::percentile(lats, 99.9),
+            lats.iter().cloned().fold(0.0, f64::max),
+        )
+    };
+    TierSnapshot {
+        offered: c.offered,
+        admitted: c.admitted,
+        rejected: c.rejected,
+        placed: c.placed,
+        shed: c.shed,
+        completed: c.completed,
+        failed: c.failed,
+        latency_count: lats.len() as u64,
+        p50_ms: p50,
+        p99_ms: p99,
+        p999_ms: p999,
+        max_ms: max,
     }
 }
 
@@ -281,6 +424,56 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.per_instance[1].failed_over, 2);
         assert_eq!(s.per_instance[0].failed_over, 0);
+    }
+
+    #[test]
+    fn tier_counters_are_first_class() {
+        let m = Metrics::new();
+        // Realtime: 3 offered, 2 admitted (1 rejected), both complete.
+        for _ in 0..3 {
+            m.on_tier_offered(QosClass::Realtime);
+        }
+        m.on_tier_admitted(QosClass::Realtime);
+        m.on_tier_admitted(QosClass::Realtime);
+        m.on_tier_rejected(QosClass::Realtime);
+        m.on_tier_placed(QosClass::Realtime);
+        m.on_tier_placed(QosClass::Realtime);
+        m.on_tier_completed(QosClass::Realtime, Duration::from_millis(4));
+        m.on_tier_completed(QosClass::Realtime, Duration::from_millis(8));
+        // Batch: 2 offered and admitted, one shed, one failed.
+        m.on_tier_offered(QosClass::Batch);
+        m.on_tier_offered(QosClass::Batch);
+        m.on_tier_admitted(QosClass::Batch);
+        m.on_tier_admitted(QosClass::Batch);
+        m.on_tier_shed(QosClass::Batch);
+        m.on_tier_failed(QosClass::Batch);
+        let s = m.snapshot();
+        let rt = s.per_tier[QosClass::Realtime.index()];
+        assert_eq!(rt.offered, 3);
+        assert_eq!(rt.admitted, 2);
+        assert_eq!(rt.rejected, 1);
+        assert_eq!(rt.placed, 2);
+        assert_eq!(rt.completed, 2);
+        assert_eq!(rt.latency_count, 2);
+        assert_eq!(rt.offered, rt.admitted + rt.rejected, "admission closes");
+        let b = s.per_tier[QosClass::Batch.index()];
+        assert_eq!(b.admitted, b.completed + b.shed + b.failed, "books close");
+        let std_tier = s.per_tier[QosClass::Standard.index()];
+        assert_eq!(std_tier.offered, 0, "untouched tier stays zero");
+    }
+
+    #[test]
+    fn tier_latency_percentiles_ordered_with_p999() {
+        let m = Metrics::new();
+        for i in 1..=2000u64 {
+            m.on_tier_completed(QosClass::Standard, Duration::from_micros(i * 100));
+        }
+        let t = m.snapshot().per_tier[QosClass::Standard.index()];
+        assert_eq!(t.latency_count, 2000);
+        assert!(t.p50_ms <= t.p99_ms);
+        assert!(t.p99_ms <= t.p999_ms, "p999 must dominate p99");
+        assert!(t.p999_ms <= t.max_ms);
+        assert!(t.p999_ms > t.p50_ms, "tail must separate from the median");
     }
 
     #[test]

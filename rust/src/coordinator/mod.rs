@@ -31,6 +31,15 @@
 //! (standby capacity, lower burst) when the fleet shrinks
 //! (`merinda soak --chaos`).
 //!
+//! Above it all sits the open-loop production traffic tier: [`traffic`]
+//! generates deterministic seeded arrival processes (Poisson + diurnal +
+//! burst profiles) that fire regardless of completion rate, assigns
+//! tenants to `realtime`/`standard`/`batch` QoS tiers that drive shed
+//! ordering and placement priority, admission-rejects work whose tier
+//! SLO would be breached, and re-derives the placement cost models
+//! mid-stream when the observed mix drifts
+//! (`merinda soak --open-loop --arrivals <spec>`).
+//!
 //! The design is deliberately the vLLM-router shape scaled to this paper:
 //! request router → batcher → executor → response demux, with metrics.
 
@@ -42,6 +51,7 @@ mod native;
 pub mod placement;
 mod service;
 pub mod stream;
+pub mod traffic;
 
 pub use batcher::{AimdBurst, BatcherConfig, PendingBatch};
 pub use faults::{
@@ -57,14 +67,20 @@ pub use native::{
 pub use placement::{GraphInstanceSpec, InstanceModel, InstanceSpec, PartitionedInstanceSpec};
 pub use stream::{
     window_plan, InstanceStats, RecoveredWindow, RefinedWindow, ShedPolicy, StreamConfig,
-    StreamCoordinator, StreamStats, TenantStats, WarmStartConfig, WindowConfig, Windower,
+    StreamCoordinator, StreamStats, TenantStats, TierStats, WarmStartConfig, WindowConfig,
+    Windower,
+};
+pub use traffic::{
+    run_open_loop, AdmissionController, Arrival, ArrivalPlan, ArrivalSpec, DriftConfig,
+    DriftDetector, OpenLoopConfig, QosClass, RetuneEvent, SloPolicy, TenantTraffic, TierTraffic,
+    TrafficReport, QOS_CLASSES,
 };
 
 /// Re-export of the padding helper for out-of-crate property tests.
 pub fn pad_rows_for_tests(data: Vec<f32>, row_len: usize, batch: usize) -> (Vec<f32>, usize) {
     batcher::pad_rows(data, row_len, batch)
 }
-pub use metrics::{InstanceSnapshot, LatencyStats, Metrics, MetricsSnapshot};
+pub use metrics::{InstanceSnapshot, LatencyStats, Metrics, MetricsSnapshot, TierSnapshot};
 pub use service::{
     InferenceBackend, MockBackend, PjrtBackend, RecoveryRequest, RecoveryResponse, Service,
     ServiceConfig,

@@ -65,6 +65,7 @@ use super::faults::{
 use super::metrics::Metrics;
 use super::placement::{rank_with, InstanceModel, PlacementOverride};
 use super::service::{RecoveryRequest, RecoveryResponse, Service};
+use super::traffic::QosClass;
 
 /// How a continuous stream is sliced into recovery windows.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -412,6 +413,17 @@ pub struct InstanceStats {
     pub downs: u64,
 }
 
+/// Per-QoS-tier streaming counters (window lifecycle only; admission
+/// counters live with the open-loop driver in
+/// [`traffic`](super::traffic)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    pub emitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub failed: u64,
+}
+
 /// Whole-pipeline streaming counters.
 #[derive(Clone, Debug, Default)]
 pub struct StreamStats {
@@ -429,6 +441,9 @@ pub struct StreamStats {
     /// Burst size the controller converged to.
     pub burst_final: usize,
     pub per_tenant: Vec<TenantStats>,
+    /// Window-lifecycle breakdown per QoS tier, indexed by
+    /// [`QosClass::index`].
+    pub per_tier: [TierStats; 3],
     /// Placement breakdown, one entry per fleet instance.
     pub per_instance: Vec<InstanceStats>,
     /// Warm-start totals over the paired windows (see [`TenantStats`]).
@@ -463,6 +478,11 @@ struct PendingWindow {
     /// Earliest pump round this window may be resubmitted (retry
     /// backoff). 0 for fresh windows.
     not_before: u64,
+    /// When the window entered the pipeline. Per-tier latency is
+    /// end-to-end (`born` → result), so queue wait under load counts
+    /// against the tier's SLO, unlike the service's submit→response
+    /// latency.
+    born: Instant,
 }
 
 struct TenantState {
@@ -475,6 +495,10 @@ struct TenantState {
     shed: u64,
     failed: u64,
     next_seq: u32,
+    /// QoS tier: drives pump priority, shed ordering and the per-tier
+    /// metrics attribution. Standard unless set via
+    /// [`StreamCoordinator::set_qos`].
+    qos: QosClass,
     /// Warm-start cache: the previous window's refined Θ.
     warm_theta: Option<Vec<f32>>,
     refine_warm_iters: u64,
@@ -483,10 +507,34 @@ struct TenantState {
     refine_first_iters: u64,
 }
 
+impl TenantState {
+    fn new(wcfg: WindowConfig, xdim: usize, udim: usize) -> TenantState {
+        TenantState {
+            windower: Windower::new(wcfg, xdim, udim),
+            queue: VecDeque::new(),
+            queue_high: 0,
+            samples: 0,
+            emitted: 0,
+            completed: 0,
+            shed: 0,
+            failed: 0,
+            next_seq: 0,
+            qos: QosClass::Standard,
+            warm_theta: None,
+            refine_warm_iters: 0,
+            refine_cold_iters: 0,
+            refine_paired: 0,
+            refine_first_iters: 0,
+        }
+    }
+}
+
 struct InFlightWindow {
     tenant: u32,
     seq_no: u32,
     start: usize,
+    /// Pipeline-entry time carried from [`PendingWindow::born`].
+    born: Instant,
     /// Fleet instance the window was placed on.
     instance: usize,
     /// Window payload `(y, u)` retained so a stranded window (crash,
@@ -538,6 +586,7 @@ fn enqueue_window(
     if t.queue.len() >= cap {
         t.shed += 1;
         metrics.on_shed();
+        metrics.on_tier_shed(t.qos);
         match shed {
             // Drop the incoming window, keep the backlog.
             ShedPolicy::Newest => return,
@@ -914,22 +963,10 @@ impl StreamCoordinator {
     /// periodically to move enqueued windows into the service.
     pub fn push(&mut self, tenant: u32, y_row: &[f32], u_row: &[f32]) {
         let (wcfg, xdim, udim) = (self.cfg.window, self.xdim, self.udim);
-        let t = self.tenants.entry(tenant).or_insert_with(|| TenantState {
-            windower: Windower::new(wcfg, xdim, udim),
-            queue: VecDeque::new(),
-            queue_high: 0,
-            samples: 0,
-            emitted: 0,
-            completed: 0,
-            shed: 0,
-            failed: 0,
-            next_seq: 0,
-            warm_theta: None,
-            refine_warm_iters: 0,
-            refine_cold_iters: 0,
-            refine_paired: 0,
-            refine_first_iters: 0,
-        });
+        let t = self
+            .tenants
+            .entry(tenant)
+            .or_insert_with(|| TenantState::new(wcfg, xdim, udim));
         t.samples += 1;
         if let Some((start, y, u)) = t.windower.push(y_row, u_row) {
             let w = PendingWindow {
@@ -939,11 +976,74 @@ impl StreamCoordinator {
                 u,
                 attempts: 0,
                 not_before: 0,
+                born: Instant::now(),
             };
             t.next_seq += 1;
             t.emitted += 1;
             enqueue_window(t, w, self.cfg.tenant_queue, self.cfg.shed, &self.metrics);
         }
+    }
+
+    /// Assign `tenant` to a QoS tier (creating its state if needed).
+    /// Tiers drive pump priority (realtime first), shed ordering
+    /// ([`shed_to_budget`](Self::shed_to_budget) drops batch before
+    /// standard before realtime) and the per-tier metrics attribution.
+    /// Tenants default to [`QosClass::Standard`].
+    pub fn set_qos(&mut self, tenant: u32, qos: QosClass) {
+        let (wcfg, xdim, udim) = (self.cfg.window, self.xdim, self.udim);
+        let t = self
+            .tenants
+            .entry(tenant)
+            .or_insert_with(|| TenantState::new(wcfg, xdim, udim));
+        t.qos = qos;
+    }
+
+    /// QoS tier of `tenant` (Standard for unknown tenants).
+    pub fn qos_of(&self, tenant: u32) -> QosClass {
+        self.tenants.get(&tenant).map(|t| t.qos).unwrap_or_default()
+    }
+
+    /// Offer one pre-sliced window directly (the open-loop arrival path:
+    /// traffic fires on a logical clock, bypassing the per-sample
+    /// [`Windower`]). The window is enqueued like a windower emission —
+    /// bounded queue, shed policy and per-tier accounting all apply.
+    /// Payload lengths must match the configured window geometry.
+    pub fn offer_window(
+        &mut self,
+        tenant: u32,
+        start: usize,
+        y: Vec<f32>,
+        u: Vec<f32>,
+    ) -> Result<()> {
+        let rows = self.cfg.window.window;
+        if y.len() != rows * self.xdim || u.len() != rows * self.udim {
+            return Err(Error::config(format!(
+                "offered window payload {}x{} does not match window {} (xdim {}, udim {})",
+                y.len(),
+                u.len(),
+                rows,
+                self.xdim,
+                self.udim
+            )));
+        }
+        let (wcfg, xdim, udim) = (self.cfg.window, self.xdim, self.udim);
+        let t = self
+            .tenants
+            .entry(tenant)
+            .or_insert_with(|| TenantState::new(wcfg, xdim, udim));
+        let w = PendingWindow {
+            seq_no: t.next_seq,
+            start,
+            y,
+            u,
+            attempts: 0,
+            not_before: 0,
+            born: Instant::now(),
+        };
+        t.next_seq += 1;
+        t.emitted += 1;
+        enqueue_window(t, w, self.cfg.tenant_queue, self.cfg.shed, &self.metrics);
+        Ok(())
     }
 
     /// End-of-stream: flush every tenant's tail window into its queue.
@@ -957,12 +1057,97 @@ impl StreamCoordinator {
                     u,
                     attempts: 0,
                     not_before: 0,
+                    born: Instant::now(),
                 };
                 t.next_seq += 1;
                 t.emitted += 1;
                 enqueue_window(t, w, self.cfg.tenant_queue, self.cfg.shed, &self.metrics);
             }
         }
+    }
+
+    /// Shed queued windows until at most `budget` remain, strictly in
+    /// reverse priority order: every batch window sheds before any
+    /// standard window, and every standard window before any realtime
+    /// window (within a tier, the longest queue loses first; ties break
+    /// on the highest tenant id, so the sweep is deterministic). The
+    /// configured [`ShedPolicy`] picks which end of the victim queue
+    /// drops. Returns windows shed per tier, indexed by
+    /// [`QosClass::index`].
+    pub fn shed_to_budget(&mut self, budget: usize) -> [u64; 3] {
+        let mut shed = [0u64; 3];
+        while self.queued_windows() > budget {
+            let victim = self
+                .tenants
+                .iter()
+                .filter(|(_, t)| !t.queue.is_empty())
+                .max_by_key(|(id, t)| (t.qos.index(), t.queue.len(), **id))
+                .map(|(id, _)| *id);
+            let Some(tid) = victim else { break };
+            let policy = self.cfg.shed;
+            let Some(t) = self.tenants.get_mut(&tid) else { break };
+            let dropped = match policy {
+                ShedPolicy::Oldest => t.queue.pop_front(),
+                ShedPolicy::Newest => t.queue.pop_back(),
+            };
+            if dropped.is_none() {
+                break;
+            }
+            t.shed += 1;
+            shed[t.qos.index()] += 1;
+            self.metrics.on_shed();
+            self.metrics.on_tier_shed(t.qos);
+        }
+        shed
+    }
+
+    /// Windows queued at `qos` priority or higher (the admission
+    /// controller's view of how much work drains ahead of a new arrival
+    /// at that tier).
+    pub fn queued_at_or_above(&self, qos: QosClass) -> usize {
+        self.tenants
+            .values()
+            .filter(|t| t.qos.index() <= qos.index())
+            .map(|t| t.queue.len())
+            .sum()
+    }
+
+    /// Total concurrency slots currently placeable across the fleet
+    /// (masked/stalled/down instances excluded, health-probe and
+    /// partitioned-member caps applied; the uniform single-service
+    /// model's unbounded budget is clamped to keep the sum meaningful).
+    pub fn placement_slots(&self) -> usize {
+        let overrides = self.placement_overrides();
+        self.models
+            .iter()
+            .enumerate()
+            .filter(|(i, m)| !overrides[*i].masked && m.max_outstanding > 0)
+            .map(|(i, m)| {
+                let budget = m.max_outstanding.min(1 << 16);
+                overrides[i].cap.map_or(budget, |c| c.min(budget))
+            })
+            .sum()
+    }
+
+    /// Swap the placement cost models of the primary roster mid-stream
+    /// (online retuning: the traffic mix drifted, the tuner re-derived
+    /// per-board configs). `models` replaces the first `models.len()`
+    /// roster entries in order; instances registered later (standby,
+    /// partitioned) keep their models. In-flight windows finish under
+    /// the placement decision that launched them; only future
+    /// placements see the new costs.
+    pub fn retarget_models(&mut self, models: Vec<InstanceModel>) -> Result<()> {
+        if models.is_empty() || models.len() > self.models.len() {
+            return Err(Error::config(format!(
+                "retarget with {} models but the fleet has {}",
+                models.len(),
+                self.models.len()
+            )));
+        }
+        for (slot, m) in self.models.iter_mut().zip(models) {
+            *slot = m;
+        }
+        Ok(())
     }
 
     /// Fire every armed submission-clocked fault event whose trigger has
@@ -1086,6 +1271,7 @@ impl StreamCoordinator {
     fn submit_placed(&mut self, tenant: u32, w: PendingWindow) -> SubmitOutcome {
         self.fire_submission_faults();
         self.update_degraded();
+        let qos = self.qos_of(tenant);
         let PendingWindow {
             seq_no,
             start,
@@ -1093,6 +1279,7 @@ impl StreamCoordinator {
             u,
             attempts,
             not_before,
+            born,
         } = w;
         // Retained so a stranded window can be re-placed (and for
         // warm-start refinement inputs).
@@ -1112,6 +1299,7 @@ impl StreamCoordinator {
                     self.instances[i].outstanding += 1;
                     self.submit_clock += 1;
                     self.metrics.on_instance_placed(i);
+                    self.metrics.on_tier_placed(qos);
                     self.metrics
                         .on_instance_queue_depth(i, self.instances[i].outstanding);
                     // A partitioned placement occupies one slot on
@@ -1126,6 +1314,7 @@ impl StreamCoordinator {
                         tenant,
                         seq_no,
                         start,
+                        born,
                         instance: i,
                         payload,
                         attempts,
@@ -1163,6 +1352,7 @@ impl StreamCoordinator {
                 u: payload.1,
                 attempts,
                 not_before,
+                born,
             })
         } else {
             SubmitOutcome::Failed
@@ -1186,11 +1376,24 @@ impl StreamCoordinator {
             h.tick(&self.cfg.faults.health, self.rounds);
         }
         self.update_degraded();
-        let ids: Vec<u32> = self.tenants.keys().copied().collect();
+        // Priority-ordered sweep: realtime tenants pump before standard
+        // before batch, so under saturation the freed slots reach the
+        // tightest-SLO tier first. Within a tier the rotation resumes at
+        // the tenant the fleet last refused (anti-starvation), exactly
+        // the pre-QoS behaviour when every tenant is Standard.
+        let mut by_tier: [Vec<u32>; 3] = Default::default();
+        for (&id, t) in &self.tenants {
+            by_tier[t.qos.index()].push(id);
+        }
+        let mut ids: Vec<u32> = Vec::with_capacity(self.tenants.len());
+        for mut list in by_tier {
+            let pivot = list.iter().position(|&id| id >= self.rr_resume).unwrap_or(0);
+            list.rotate_left(pivot);
+            ids.extend(list);
+        }
         if ids.is_empty() {
             return 0;
         }
-        let pivot = ids.iter().position(|&id| id >= self.rr_resume).unwrap_or(0);
         let mut total = 0usize;
         loop {
             // Degraded mode caps the burst so a shrunken fleet is not
@@ -1202,8 +1405,7 @@ impl StreamCoordinator {
             };
             let mut submitted = 0usize;
             let mut overloaded = false;
-            'tenants: for k in 0..ids.len() {
-                let tid = ids[(pivot + k) % ids.len()];
+            'tenants: for &tid in &ids {
                 for _ in 0..burst {
                     let round = self.rounds;
                     // Tenants are never removed, but a missing entry must
@@ -1225,6 +1427,7 @@ impl StreamCoordinator {
                             // No instance can ever serve this window.
                             if let Some(t) = self.tenants.get_mut(&tid) {
                                 t.failed += 1;
+                                self.metrics.on_tier_failed(t.qos);
                             }
                         }
                         SubmitOutcome::Saturated(back) => {
@@ -1353,7 +1556,14 @@ impl StreamCoordinator {
         self.metrics.on_instance_failover(inf.instance);
         self.release_slot(inf.instance);
         self.health[inf.instance].on_dead(self.rounds, true);
-        self.retry_or_fail(inf.tenant, inf.seq_no, inf.start, inf.payload, inf.attempts);
+        self.retry_or_fail(
+            inf.tenant,
+            inf.seq_no,
+            inf.start,
+            inf.born,
+            inf.payload,
+            inf.attempts,
+        );
     }
 
     /// A window blew its completion deadline: charge the instance an
@@ -1367,10 +1577,11 @@ impl StreamCoordinator {
         self.release_slot(inf.instance);
         self.health[inf.instance].on_anomaly(&self.cfg.faults.health, self.rounds);
         self.hedged.insert(encode_id(inf.tenant, inf.seq_no));
-        let (tenant, seq_no, start, attempts) = (inf.tenant, inf.seq_no, inf.start, inf.attempts);
+        let (tenant, seq_no, start, born, attempts) =
+            (inf.tenant, inf.seq_no, inf.start, inf.born, inf.attempts);
         let payload = inf.payload.clone();
         self.late.push(inf);
-        self.retry_or_fail(tenant, seq_no, start, payload, attempts);
+        self.retry_or_fail(tenant, seq_no, start, born, payload, attempts);
     }
 
     /// A response channel died (service killed or shut down
@@ -1382,7 +1593,14 @@ impl StreamCoordinator {
         self.metrics.on_instance_failover(inf.instance);
         self.release_slot(inf.instance);
         self.health[inf.instance].on_anomaly(&self.cfg.faults.health, self.rounds);
-        self.retry_or_fail(inf.tenant, inf.seq_no, inf.start, inf.payload, inf.attempts);
+        self.retry_or_fail(
+            inf.tenant,
+            inf.seq_no,
+            inf.start,
+            inf.born,
+            inf.payload,
+            inf.attempts,
+        );
     }
 
     /// Re-enqueue a stranded window at the front of its tenant queue
@@ -1393,6 +1611,7 @@ impl StreamCoordinator {
         tenant: u32,
         seq_no: u32,
         start: usize,
+        born: Instant,
         payload: (Vec<f32>, Vec<f32>),
         attempts: u32,
     ) {
@@ -1407,6 +1626,7 @@ impl StreamCoordinator {
             }
             if let Some(t) = self.tenants.get_mut(&tenant) {
                 t.failed += 1;
+                self.metrics.on_tier_failed(t.qos);
             }
             return;
         }
@@ -1419,6 +1639,7 @@ impl StreamCoordinator {
             u: payload.1,
             attempts: attempts + 1,
             not_before: self.rounds + delay,
+            born,
         };
         if let Some(t) = self.tenants.get_mut(&tenant) {
             // Front of the queue: the stranded window is the tenant's
@@ -1477,6 +1698,7 @@ impl StreamCoordinator {
                     t.shed += n;
                     for _ in 0..n {
                         self.metrics.on_shed();
+                        self.metrics.on_tier_shed(t.qos);
                     }
                 }
                 break;
@@ -1514,6 +1736,11 @@ impl StreamCoordinator {
             s.windows_completed += t.completed;
             s.windows_shed += t.shed;
             s.windows_failed += t.failed;
+            let tier = &mut s.per_tier[t.qos.index()];
+            tier.emitted += t.emitted;
+            tier.completed += t.completed;
+            tier.shed += t.shed;
+            tier.failed += t.failed;
             s.tenant_queue_max = s.tenant_queue_max.max(t.queue_high);
             s.refine_warm_iters += t.refine_warm_iters;
             s.refine_cold_iters += t.refine_cold_iters;
@@ -1579,6 +1806,7 @@ impl StreamCoordinator {
             tenant,
             seq_no,
             start,
+            born,
             instance,
             payload,
             attempts,
@@ -1608,7 +1836,7 @@ impl StreamCoordinator {
             if let Some(t) = self.tenants.get_mut(&tenant) {
                 t.warm_theta = None;
             }
-            self.retry_or_fail(tenant, seq_no, start, payload, attempts);
+            self.retry_or_fail(tenant, seq_no, start, born, payload, attempts);
             return;
         }
         if self.hedged.contains(&id) {
@@ -1627,6 +1855,9 @@ impl StreamCoordinator {
         }
         if let Some(t) = self.tenants.get_mut(&tenant) {
             t.completed += 1;
+            // Per-tier latency is end-to-end (enqueue → result), so SLO
+            // accounting charges queue wait, not just service time.
+            self.metrics.on_tier_completed(t.qos, born.elapsed());
         }
         self.results.push(RecoveredWindow {
             tenant,
@@ -2068,5 +2299,125 @@ mod tests {
         assert_eq!(got, 1);
         assert_eq!(coord.in_flight(), 0);
         assert_eq!(coord.take_results().len(), 1);
+    }
+
+    #[test]
+    fn offer_window_validates_geometry_and_enqueues() {
+        let svc = mock_service(1, 256);
+        let cfg = StreamConfig {
+            window: WindowConfig {
+                window: 8,
+                stride: 8,
+            },
+            ..StreamConfig::default()
+        };
+        let mut coord = StreamCoordinator::new(svc, cfg, 3, 1);
+        // Wrong payload geometry is a typed config error.
+        assert!(coord.offer_window(0, 0, vec![0.0; 5], vec![0.0; 8]).is_err());
+        coord
+            .offer_window(0, 0, vec![0.5; 8 * 3], vec![0.0; 8])
+            .unwrap();
+        coord
+            .offer_window(0, 4, vec![0.25; 8 * 3], vec![0.0; 8])
+            .unwrap();
+        assert_eq!(coord.queued_windows(), 2);
+        coord.drain();
+        let results = coord.take_results();
+        assert_eq!(results.len(), 2);
+        // seq_nos are assigned in offer order, like windower emissions.
+        assert_eq!(results.iter().map(|r| r.seq_no).max(), Some(1));
+        let stats = coord.stats();
+        assert_eq!(stats.windows_emitted, 2);
+        assert_eq!(stats.windows_completed, 2);
+    }
+
+    #[test]
+    fn shed_to_budget_drops_batch_before_standard_before_realtime() {
+        let svc = mock_service(1, 256);
+        let cfg = StreamConfig {
+            window: WindowConfig {
+                window: 8,
+                stride: 8,
+            },
+            tenant_queue: 64,
+            ..StreamConfig::default()
+        };
+        let mut coord = StreamCoordinator::new(svc, cfg, 3, 1);
+        coord.set_qos(0, QosClass::Realtime);
+        coord.set_qos(1, QosClass::Standard);
+        coord.set_qos(2, QosClass::Batch);
+        for tenant in 0..3u32 {
+            for k in 0..10 {
+                coord
+                    .offer_window(tenant, k, vec![0.1; 8 * 3], vec![0.0; 8])
+                    .unwrap();
+            }
+        }
+        assert_eq!(coord.queued_windows(), 30);
+        // First sweep: only batch pays.
+        let shed = coord.shed_to_budget(25);
+        assert_eq!(shed, [0, 0, 5]);
+        // Second sweep: batch drains fully before standard is touched.
+        let shed = coord.shed_to_budget(12);
+        assert_eq!(shed, [0, 8, 5]);
+        // Realtime sheds only once every lower tier is empty.
+        let shed = coord.shed_to_budget(0);
+        assert_eq!(shed, [10, 2, 0]);
+        assert_eq!(coord.queued_windows(), 0);
+        let stats = coord.stats();
+        assert_eq!(stats.per_tier[QosClass::Batch.index()].shed, 10);
+        assert_eq!(stats.per_tier[QosClass::Standard.index()].shed, 10);
+        assert_eq!(stats.per_tier[QosClass::Realtime.index()].shed, 10);
+        // The metrics sink mirrors the tier attribution.
+        let m = coord.metrics().snapshot();
+        assert_eq!(m.per_tier[QosClass::Batch.index()].shed, 10);
+        assert_eq!(m.shed, 30);
+    }
+
+    #[test]
+    fn queued_at_or_above_sees_same_and_higher_priority_backlog() {
+        let svc = mock_service(1, 256);
+        let cfg = StreamConfig {
+            window: WindowConfig {
+                window: 8,
+                stride: 8,
+            },
+            ..StreamConfig::default()
+        };
+        let mut coord = StreamCoordinator::new(svc, cfg, 3, 1);
+        coord.set_qos(0, QosClass::Realtime);
+        coord.set_qos(1, QosClass::Standard);
+        coord.set_qos(2, QosClass::Batch);
+        for (tenant, n) in [(0u32, 2usize), (1, 3), (2, 4)] {
+            for k in 0..n {
+                coord
+                    .offer_window(tenant, k, vec![0.1; 8 * 3], vec![0.0; 8])
+                    .unwrap();
+            }
+        }
+        assert_eq!(coord.queued_at_or_above(QosClass::Realtime), 2);
+        assert_eq!(coord.queued_at_or_above(QosClass::Standard), 5);
+        assert_eq!(coord.queued_at_or_above(QosClass::Batch), 9);
+        assert!(coord.placement_slots() > 0);
+    }
+
+    #[test]
+    fn retarget_models_swaps_prefix_and_rejects_bad_lengths() {
+        let fleet = vec![
+            (InstanceModel::synthetic("a", 1e-6, 4), mock_service(1, 64)),
+            (InstanceModel::synthetic("b", 1e-3, 4), mock_service(1, 64)),
+        ];
+        let mut coord =
+            StreamCoordinator::with_fleet(fleet, StreamConfig::default(), 3, 1).unwrap();
+        assert!(coord.retarget_models(Vec::new()).is_err());
+        assert!(coord
+            .retarget_models(vec![InstanceModel::synthetic("x", 1e-6, 4); 3])
+            .is_err());
+        coord
+            .retarget_models(vec![InstanceModel::synthetic("a2", 2e-6, 4)])
+            .unwrap();
+        let stats = coord.stats();
+        assert_eq!(stats.per_instance[0].name, "a2");
+        assert_eq!(stats.per_instance[1].name, "b", "suffix keeps its model");
     }
 }

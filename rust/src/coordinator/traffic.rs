@@ -1,0 +1,1044 @@
+//! Open-loop production traffic tier.
+//!
+//! Closed-loop drivers (`merinda soak` without `--open-loop`) only offer
+//! the next window once the previous one completes, so the fleet never
+//! sees more load than it can absorb. Real serving is open-loop: arrivals
+//! fire on a clock regardless of completion rate, and the serving stack
+//! has to shed, reject, and re-tune to survive. This module provides that
+//! tier:
+//!
+//! - [`ArrivalSpec`] / [`ArrivalPlan`]: a deterministic arrival-process
+//!   generator — seeded Poisson arrivals per logical tick with diurnal
+//!   and burst modulation profiles, multiplexed over synthetic tenants.
+//!   Like [`super::faults::FaultPlan`], a plan is a pure function of its
+//!   spec string and seed: same spec ⇒ bit-identical schedule, so every
+//!   soak run is replayable.
+//! - [`QosClass`]: per-tenant SLO tiers (`realtime` / `standard` /
+//!   `batch`) that drive shed ordering (batch sheds before standard
+//!   before realtime), placement priority, and admission.
+//! - [`AdmissionController`]: rejects new work with a typed
+//!   [`Error::Admission`] once the projected p99 for a tier would breach
+//!   its SLO — policy-level backpressure in front of the queues.
+//! - [`DriftDetector`] + online retuning: when the observed traffic mix
+//!   drifts past a threshold, [`run_open_loop`] invokes a retune
+//!   callback that may re-derive the placement cost models (re-running
+//!   the `fpga::tuner`) mid-stream instead of only at startup.
+//!
+//! Determinism contract: the arrival *plan* is bit-identical for a given
+//! spec. Admission and shed decisions additionally depend on runtime
+//! backlog (thread timing), but per-tier accounting always closes:
+//! `offered == admitted + rejected` and
+//! `admitted == completed + shed + failed`.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use super::placement::InstanceModel;
+use super::stream::StreamCoordinator;
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prng;
+
+/// Per-tenant QoS tier. Lower [`QosClass::index`] = higher priority.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum QosClass {
+    /// Time-critical physical-system tenants: placed first, shed last,
+    /// admission-protected by the tightest SLO.
+    Realtime,
+    /// The default tier (all closed-loop tenants land here).
+    #[default]
+    Standard,
+    /// Best-effort backfill: shed first, never admission-rejected (its
+    /// SLO is unbounded — it absorbs overload via shedding instead).
+    Batch,
+}
+
+/// All tiers in priority order (highest first).
+pub const QOS_CLASSES: [QosClass; 3] = [QosClass::Realtime, QosClass::Standard, QosClass::Batch];
+
+impl QosClass {
+    /// Priority index: 0 = realtime, 1 = standard, 2 = batch.
+    pub fn index(self) -> usize {
+        match self {
+            QosClass::Realtime => 0,
+            QosClass::Standard => 1,
+            QosClass::Batch => 2,
+        }
+    }
+
+    /// Canonical long name (used in metrics sections and errors).
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Realtime => "realtime",
+            QosClass::Standard => "standard",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    /// Short name used in arrival-spec grammar (`@rt`, `@std`, `@batch`).
+    pub fn short(self) -> &'static str {
+        match self {
+            QosClass::Realtime => "rt",
+            QosClass::Standard => "std",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    /// Parse either the long or the short tier name.
+    pub fn from_name(s: &str) -> Result<QosClass> {
+        match s {
+            "rt" | "realtime" => Ok(QosClass::Realtime),
+            "std" | "standard" => Ok(QosClass::Standard),
+            "batch" => Ok(QosClass::Batch),
+            other => Err(Error::config(format!(
+                "unknown QoS tier {other:?} (want rt|std|batch)"
+            ))),
+        }
+    }
+}
+
+/// Rate-modulation profile applied on top of the base Poisson rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum ModKind {
+    /// Sinusoidal day/night swing: rate × `(1 + amp·sin(2π·tick/period))`.
+    Diurnal { period: u64, amp: f64 },
+    /// Flash crowd: rate × `factor` while `at <= tick < at + len`.
+    Burst { at: u64, len: u64, factor: f64 },
+}
+
+/// One modulation profile, optionally scoped to a single tier (that is
+/// how drifting mixes are constructed: burst only the realtime tier and
+/// the observed shares move away from the spec's base mix).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Modulation {
+    kind: ModKind,
+    tier: Option<QosClass>,
+}
+
+impl Modulation {
+    fn factor_at(&self, tick: u64, tier: QosClass) -> f64 {
+        if self.tier.is_some() && self.tier != Some(tier) {
+            return 1.0;
+        }
+        match self.kind {
+            ModKind::Diurnal { period, amp } => {
+                let phase = 2.0 * std::f64::consts::PI * (tick % period) as f64 / period as f64;
+                (1.0 + amp * phase.sin()).max(0.0)
+            }
+            ModKind::Burst { at, len, factor } => {
+                if tick >= at && tick < at + len {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    fn spec(&self) -> String {
+        let tier = match self.tier {
+            Some(t) => format!("@{}", t.short()),
+            None => String::new(),
+        };
+        match self.kind {
+            ModKind::Diurnal { period, amp } => format!("diurnal:{period}*{amp}{tier}"),
+            ModKind::Burst { at, len, factor } => format!("burst:{at}+{len}*{factor}{tier}"),
+        }
+    }
+}
+
+/// A deterministic open-loop arrival process over logical ticks.
+///
+/// Grammar (comma-separated `key:value` components, mirroring
+/// [`super::faults::FaultPlan::parse`]):
+///
+/// | component | meaning |
+/// |---|---|
+/// | `poisson:R` | mean window arrivals per tick across all tiers (required) |
+/// | `tenants:N` | synthetic tenant count (default 6) |
+/// | `mix:A/B/C` | integer tier weights realtime/standard/batch (default 1/4/1) |
+/// | `ticks:T` | logical-clock horizon (default 256) |
+/// | `seed:S` | PRNG seed for the Poisson draws (default 1) |
+/// | `diurnal:P*A[@tier]` | sinusoidal swing, period `P` ticks, amplitude `A` |
+/// | `burst:T0+L*F[@tier]` | rate ×`F` during `[T0, T0+L)` |
+///
+/// `@tier` is `rt`, `std`, or `batch`; omitted means the profile applies
+/// to every tier. Multiple `diurnal`/`burst` components compose
+/// multiplicatively.
+///
+/// ```
+/// use merinda::coordinator::traffic::{ArrivalSpec, QosClass};
+/// let spec = ArrivalSpec::parse("poisson:2.5,tenants:12,mix:1/2/1,ticks:64,seed:9,burst:20+10*4@rt")?;
+/// let plan = spec.plan();
+/// // Pure function of the spec: replaying is bit-identical.
+/// assert_eq!(plan, ArrivalSpec::parse(&spec.spec())?.plan());
+/// // Tenants cycle the mix pattern: tenant 0 is realtime under 1/2/1.
+/// assert_eq!(spec.tier_of(0), QosClass::Realtime);
+/// # Ok::<(), merinda::util::error::Error>(())
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalSpec {
+    /// Mean arrivals per tick summed over all tiers.
+    pub rate: f64,
+    /// Number of synthetic tenants multiplexed over the case-study
+    /// systems (tenant `i` streams scenario `i mod 6`).
+    pub tenants: usize,
+    /// Tier weights `[realtime, standard, batch]`.
+    pub mix: [u32; 3],
+    /// Logical-clock horizon.
+    pub ticks: u64,
+    /// Seed for the Poisson and tenant-assignment draws.
+    pub seed: u64,
+    mods: Vec<Modulation>,
+}
+
+impl Default for ArrivalSpec {
+    fn default() -> Self {
+        ArrivalSpec {
+            rate: 1.0,
+            tenants: 6,
+            mix: [1, 4, 1],
+            ticks: 256,
+            seed: 1,
+            mods: Vec::new(),
+        }
+    }
+}
+
+impl ArrivalSpec {
+    /// Parse a spec string (see the type-level grammar table).
+    pub fn parse(spec: &str) -> Result<ArrivalSpec> {
+        let mut out = ArrivalSpec {
+            mods: Vec::new(),
+            ..ArrivalSpec::default()
+        };
+        let mut saw_rate = false;
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, val) = tok
+                .split_once(':')
+                .ok_or_else(|| Error::config(format!("arrival component {tok:?}: want key:value")))?;
+            match key {
+                "poisson" => {
+                    out.rate = val
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|r| *r > 0.0 && r.is_finite())
+                        .ok_or_else(|| {
+                            Error::config(format!("poisson rate {val:?}: want a positive number"))
+                        })?;
+                    saw_rate = true;
+                }
+                "tenants" => {
+                    out.tenants = val
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|n| *n >= 1)
+                        .ok_or_else(|| Error::config(format!("tenants {val:?}: want >= 1")))?;
+                }
+                "ticks" => {
+                    out.ticks = val
+                        .parse::<u64>()
+                        .ok()
+                        .filter(|n| *n >= 1)
+                        .ok_or_else(|| Error::config(format!("ticks {val:?}: want >= 1")))?;
+                }
+                "seed" => {
+                    out.seed = val
+                        .parse::<u64>()
+                        .map_err(|_| Error::config(format!("seed {val:?}: want u64")))?;
+                }
+                "mix" => {
+                    let parts: Vec<&str> = val.split('/').collect();
+                    if parts.len() != 3 {
+                        return Err(Error::config(format!("mix {val:?}: want A/B/C")));
+                    }
+                    let mut mix = [0u32; 3];
+                    for (slot, p) in mix.iter_mut().zip(&parts) {
+                        *slot = p
+                            .parse::<u32>()
+                            .map_err(|_| Error::config(format!("mix weight {p:?}: want u32")))?;
+                    }
+                    if mix.iter().sum::<u32>() == 0 {
+                        return Err(Error::config("mix 0/0/0: at least one weight must be > 0"));
+                    }
+                    out.mix = mix;
+                }
+                "diurnal" => {
+                    let (body, tier) = split_tier(val)?;
+                    let (p, a) = body.split_once('*').ok_or_else(|| {
+                        Error::config(format!("diurnal {val:?}: want P*A[@tier]"))
+                    })?;
+                    let period = p
+                        .parse::<u64>()
+                        .ok()
+                        .filter(|p| *p >= 2)
+                        .ok_or_else(|| Error::config(format!("diurnal period {p:?}: want >= 2")))?;
+                    let amp = a
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|a| *a >= 0.0 && a.is_finite())
+                        .ok_or_else(|| Error::config(format!("diurnal amp {a:?}: want >= 0")))?;
+                    out.mods.push(Modulation {
+                        kind: ModKind::Diurnal { period, amp },
+                        tier,
+                    });
+                }
+                "burst" => {
+                    let (body, tier) = split_tier(val)?;
+                    let parsed = body.split_once('+').and_then(|(t0, rest)| {
+                        let (l, f) = rest.split_once('*')?;
+                        Some((t0.parse::<u64>().ok()?, l.parse::<u64>().ok()?, f.parse::<f64>().ok()?))
+                    });
+                    let (at, len, factor) = parsed.ok_or_else(|| {
+                        Error::config(format!("burst {val:?}: want T0+L*F[@tier]"))
+                    })?;
+                    if len == 0 || factor < 0.0 || !factor.is_finite() {
+                        return Err(Error::config(format!(
+                            "burst {val:?}: want L >= 1 and F >= 0"
+                        )));
+                    }
+                    out.mods.push(Modulation {
+                        kind: ModKind::Burst { at, len, factor },
+                        tier,
+                    });
+                }
+                other => {
+                    return Err(Error::config(format!(
+                        "unknown arrival component {other:?} \
+                         (want poisson|tenants|mix|ticks|seed|diurnal|burst)"
+                    )));
+                }
+            }
+        }
+        if !saw_rate {
+            return Err(Error::config("arrival spec needs a poisson:R component"));
+        }
+        Ok(out)
+    }
+
+    /// Canonical spec string; `parse(spec()).plan() == plan()` round-trips.
+    pub fn spec(&self) -> String {
+        let mut s = format!(
+            "poisson:{},tenants:{},mix:{}/{}/{},ticks:{},seed:{}",
+            self.rate, self.tenants, self.mix[0], self.mix[1], self.mix[2], self.ticks, self.seed
+        );
+        for m in &self.mods {
+            s.push(',');
+            s.push_str(&m.spec());
+        }
+        s
+    }
+
+    /// Draw a random-but-replayable spec (soak fuzzing): every field is a
+    /// pure function of `seed`, and every drawn value survives the
+    /// `spec()`/`parse()` round trip exactly (rates and amplitudes are
+    /// quarter steps, which print and re-parse losslessly).
+    pub fn seeded(seed: u64) -> ArrivalSpec {
+        let mut rng = Prng::new(seed ^ 0x5eed_0a11_4117_0015);
+        let mut spec = ArrivalSpec {
+            rate: (2 + rng.below(9)) as f64 * 0.5,
+            tenants: 4 + rng.below(12),
+            mix: [
+                1 + rng.below(3) as u32,
+                1 + rng.below(4) as u32,
+                1 + rng.below(3) as u32,
+            ],
+            ticks: 64 + 32 * rng.below(6) as u64,
+            seed,
+            mods: Vec::new(),
+        };
+        for _ in 0..rng.below(3) {
+            let tier = match rng.below(4) {
+                0 => Some(QosClass::Realtime),
+                1 => Some(QosClass::Standard),
+                2 => Some(QosClass::Batch),
+                _ => None,
+            };
+            let kind = if rng.bernoulli(0.5) {
+                ModKind::Diurnal {
+                    period: 32 + 16 * rng.below(6) as u64,
+                    amp: 0.25 * (1 + rng.below(3)) as f64,
+                }
+            } else {
+                ModKind::Burst {
+                    at: rng.below((spec.ticks / 2) as usize) as u64,
+                    len: 8 + 8 * rng.below(5) as u64,
+                    factor: (2 + rng.below(4)) as f64,
+                }
+            };
+            spec.mods.push(Modulation { kind, tier });
+        }
+        spec
+    }
+
+    /// Tier of tenant `i`: the `mix` weights expand into a repeating
+    /// pattern (`1/4/1` ⇒ rt, std, std, std, std, batch, rt, …).
+    pub fn tier_of(&self, tenant: usize) -> QosClass {
+        let wsum: u32 = self.mix.iter().sum();
+        let pos = (tenant as u64 % wsum as u64) as u32;
+        if pos < self.mix[0] {
+            QosClass::Realtime
+        } else if pos < self.mix[0] + self.mix[1] {
+            QosClass::Standard
+        } else {
+            QosClass::Batch
+        }
+    }
+
+    /// Base (unmodulated) share of the total rate each tier receives.
+    pub fn base_shares(&self) -> [f64; 3] {
+        let wsum: u32 = self.mix.iter().sum();
+        let mut shares = [0.0; 3];
+        for (s, w) in shares.iter_mut().zip(self.mix) {
+            *s = w as f64 / wsum as f64;
+        }
+        shares
+    }
+
+    /// Mean arrivals per tick for `tier` at logical time `tick`.
+    pub fn rate_at(&self, tick: u64, tier: QosClass) -> f64 {
+        let base = self.rate * self.base_shares()[tier.index()];
+        self.mods
+            .iter()
+            .fold(base, |r, m| r * m.factor_at(tick, tier))
+    }
+
+    /// Materialize the deterministic schedule. Pure function of the spec:
+    /// no wall clock, no shared state, no hash-order dependence.
+    pub fn plan(&self) -> ArrivalPlan {
+        let tenant_tiers: Vec<QosClass> = (0..self.tenants).map(|i| self.tier_of(i)).collect();
+        let mut members: [Vec<u32>; 3] = Default::default();
+        for (i, t) in tenant_tiers.iter().enumerate() {
+            members[t.index()].push(i as u32);
+        }
+        let mut rng = Prng::new(self.seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ 0x0a11_4117);
+        let mut arrivals = Vec::new();
+        let mut offered_per_tier = [0u64; 3];
+        for tick in 0..self.ticks {
+            for tier in QOS_CLASSES {
+                let pool = &members[tier.index()];
+                if pool.is_empty() {
+                    continue;
+                }
+                // Cap λ so a pathological spec cannot hang the draw loop.
+                let lam = self.rate_at(tick, tier).min(64.0);
+                if lam <= 0.0 {
+                    continue;
+                }
+                for _ in 0..poisson(&mut rng, lam) {
+                    let tenant = pool[rng.below(pool.len())];
+                    arrivals.push(Arrival { tick, tenant });
+                    offered_per_tier[tier.index()] += 1;
+                }
+            }
+        }
+        ArrivalPlan {
+            ticks: self.ticks,
+            arrivals,
+            tenant_tiers,
+            offered_per_tier,
+            base_shares: self.base_shares(),
+        }
+    }
+}
+
+/// Strip an optional `@tier` suffix off a modulation body.
+fn split_tier(val: &str) -> Result<(&str, Option<QosClass>)> {
+    match val.split_once('@') {
+        Some((body, tier)) => Ok((body, Some(QosClass::from_name(tier)?))),
+        None => Ok((val, None)),
+    }
+}
+
+/// Knuth's Poisson sampler: multiply uniforms until the product drops
+/// below `e^{-λ}`. Fine for the modest per-tick rates the soak uses.
+fn poisson(rng: &mut Prng, lambda: f64) -> u64 {
+    let limit = (-lambda).exp();
+    let mut k = 0u64;
+    let mut p = 1.0;
+    loop {
+        p *= rng.uniform();
+        if p <= limit {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// One scheduled window arrival.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Arrival {
+    /// Logical tick the arrival fires on.
+    pub tick: u64,
+    /// Target tenant (its tier is `tenant_tiers[tenant]`).
+    pub tenant: u32,
+}
+
+/// A fully materialized arrival schedule (bit-identical per spec).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalPlan {
+    /// Logical-clock horizon copied from the spec.
+    pub ticks: u64,
+    /// Arrivals in firing order (non-decreasing `tick`).
+    pub arrivals: Vec<Arrival>,
+    /// Tier assignment per tenant id.
+    pub tenant_tiers: Vec<QosClass>,
+    /// Total offered load per tier over the horizon.
+    pub offered_per_tier: [u64; 3],
+    /// The spec's unmodulated tier shares (drift-detector reference).
+    pub base_shares: [f64; 3],
+}
+
+impl ArrivalPlan {
+    /// Per-tick offered counts per tier (what the drift detector sees).
+    pub fn tier_counts_by_tick(&self) -> Vec<[u64; 3]> {
+        let mut counts = vec![[0u64; 3]; self.ticks as usize];
+        for a in &self.arrivals {
+            let tier = self.tenant_tiers[a.tenant as usize];
+            counts[a.tick as usize][tier.index()] += 1;
+        }
+        counts
+    }
+}
+
+/// Drift-detector knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftConfig {
+    /// Sliding window of ticks the observed mix is estimated over.
+    pub window: usize,
+    /// L1-share distance (halved) above which a drift episode begins.
+    pub threshold: f64,
+    /// Hysteresis: the episode ends (re-arming the trigger) only once
+    /// drift falls below `threshold * exit_frac`.
+    pub exit_frac: f64,
+    /// Minimum arrivals in the window before shares are trusted.
+    pub min_arrivals: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            window: 32,
+            threshold: 0.2,
+            exit_frac: 0.5,
+            min_arrivals: 24,
+        }
+    }
+}
+
+/// Fired by [`DriftDetector::observe`] on the rising edge of a drift
+/// episode.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftTrigger {
+    /// Drift magnitude at the trigger: `0.5 · Σ|observed − reference|`.
+    pub drift: f64,
+    /// Observed per-tier shares over the sliding window.
+    pub observed: [f64; 3],
+}
+
+/// Latched traffic-mix drift detector.
+///
+/// The reference mix is *fixed* at the spec's base shares, so a burst
+/// that shifts the mix fires exactly once (latched) and the trigger
+/// re-arms only after the observed mix returns near the reference —
+/// one drift episode, one retune.
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    reference: [f64; 3],
+    history: VecDeque<[u64; 3]>,
+    in_drift: bool,
+    last_drift: f64,
+    fires: u64,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig, reference: [f64; 3]) -> DriftDetector {
+        DriftDetector {
+            cfg,
+            reference,
+            history: VecDeque::new(),
+            in_drift: false,
+            last_drift: 0.0,
+            fires: 0,
+        }
+    }
+
+    /// Feed one tick's per-tier arrival counts; `Some` on the rising
+    /// edge of a new drift episode.
+    pub fn observe(&mut self, counts: [u64; 3]) -> Option<DriftTrigger> {
+        self.history.push_back(counts);
+        while self.history.len() > self.cfg.window {
+            self.history.pop_front();
+        }
+        let mut sums = [0u64; 3];
+        for c in &self.history {
+            for (s, v) in sums.iter_mut().zip(c) {
+                *s += v;
+            }
+        }
+        let total: u64 = sums.iter().sum();
+        if total < self.cfg.min_arrivals {
+            return None;
+        }
+        let mut drift = 0.0;
+        let mut observed = [0.0; 3];
+        for i in 0..3 {
+            observed[i] = sums[i] as f64 / total as f64;
+            drift += (observed[i] - self.reference[i]).abs();
+        }
+        drift *= 0.5;
+        self.last_drift = drift;
+        if !self.in_drift && drift > self.cfg.threshold {
+            self.in_drift = true;
+            self.fires += 1;
+            return Some(DriftTrigger { drift, observed });
+        }
+        if self.in_drift && drift < self.cfg.threshold * self.cfg.exit_frac {
+            self.in_drift = false;
+        }
+        None
+    }
+
+    /// Drift magnitude at the most recent trusted observation.
+    pub fn last_drift(&self) -> f64 {
+        self.last_drift
+    }
+
+    /// Whether a drift episode is currently latched.
+    pub fn in_drift(&self) -> bool {
+        self.in_drift
+    }
+
+    /// Rising edges seen so far (== retunes requested).
+    pub fn fires(&self) -> u64 {
+        self.fires
+    }
+}
+
+/// Per-tier p99 SLO targets in milliseconds (`None` = unbounded).
+#[derive(Clone, Copy, Debug)]
+pub struct SloPolicy {
+    /// Indexed by [`QosClass::index`].
+    pub p99_ms: [Option<f64>; 3],
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            p99_ms: [Some(500.0), Some(2000.0), None],
+        }
+    }
+}
+
+impl SloPolicy {
+    pub fn slo_ms(&self, tier: QosClass) -> Option<f64> {
+        self.p99_ms[tier.index()]
+    }
+}
+
+/// SLO-protecting admission controller.
+///
+/// Projected p99 for an arriving window is a queueing estimate: the
+/// windows already queued at the same or higher priority plus the
+/// in-flight set all drain ahead of it through `slots` placement slots,
+/// each taking the observed mean service latency, so
+/// `projected = (ahead / slots + 1) · svc_ms`. If that breaches the
+/// tier's SLO the window is rejected with [`Error::Admission`] before it
+/// enters any queue. Batch has no SLO and is never rejected (it absorbs
+/// overload through shed ordering instead).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionController {
+    pub slo: SloPolicy,
+}
+
+impl AdmissionController {
+    /// Check one arrival; `Ok(projected_ms)` admits it.
+    pub fn check(&self, tier: QosClass, ahead: usize, slots: usize, svc_ms: f64) -> Result<f64> {
+        let projected = (ahead as f64 / slots.max(1) as f64 + 1.0) * svc_ms;
+        match self.slo.slo_ms(tier) {
+            Some(slo) if projected > slo => Err(Error::admission(tier.name(), projected, slo)),
+            _ => Ok(projected),
+        }
+    }
+}
+
+/// The window payload ring for one tenant: pre-sliced `(start, Y, U)`
+/// windows cycled as arrivals fire (open-loop load is unbounded; the
+/// underlying sample stream is not).
+pub struct TenantTraffic {
+    /// `(window start sample, Y slice, U slice)` in plan order.
+    pub windows: Vec<(usize, Vec<f32>, Vec<f32>)>,
+}
+
+/// Knobs for [`run_open_loop`].
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoopConfig {
+    /// Global queued-window budget enforced after every tick via
+    /// [`StreamCoordinator::shed_to_budget`] (batch sheds first).
+    pub backlog_budget: usize,
+    /// Per-tier SLO targets driving admission.
+    pub slo: SloPolicy,
+    /// Drift-detector knobs for online retuning.
+    pub drift: DriftConfig,
+    /// Service-latency estimate (ms) used by admission before any
+    /// completion has been observed.
+    pub svc_ms_hint: f64,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig {
+            backlog_budget: 512,
+            slo: SloPolicy::default(),
+            drift: DriftConfig::default(),
+            svc_ms_hint: 5.0,
+        }
+    }
+}
+
+/// One online-retune event (drift episode rising edge).
+#[derive(Clone, Copy, Debug)]
+pub struct RetuneEvent {
+    /// Logical tick the drift episode was detected on.
+    pub tick: u64,
+    /// Drift magnitude at the trigger.
+    pub drift: f64,
+    /// Observed per-tier shares at the trigger.
+    pub observed: [f64; 3],
+    /// Whether the retune callback installed a fresh model set.
+    pub models_refreshed: bool,
+}
+
+/// Per-tier traffic counters accumulated by the driver.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierTraffic {
+    /// Arrivals the plan fired for this tier.
+    pub offered: u64,
+    /// Arrivals the admission controller let through.
+    pub admitted: u64,
+    /// Arrivals rejected with [`Error::Admission`].
+    pub rejected: u64,
+    /// Windows shed by the backlog-budget sweep (a subset of the
+    /// coordinator's total shed count for the tier).
+    pub shed_budget: u64,
+}
+
+/// What [`run_open_loop`] hands back.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficReport {
+    /// Ticks driven.
+    pub ticks: u64,
+    /// Indexed by [`QosClass::index`].
+    pub per_tier: [TierTraffic; 3],
+    /// Online-retune events in firing order.
+    pub retunes: Vec<RetuneEvent>,
+    /// Largest drift magnitude observed over the run.
+    pub max_drift: f64,
+}
+
+impl TrafficReport {
+    /// `offered == admitted + rejected` for every tier.
+    pub fn admission_closes(&self) -> bool {
+        self.per_tier
+            .iter()
+            .all(|t| t.offered == t.admitted + t.rejected)
+    }
+}
+
+/// Drive a [`StreamCoordinator`] open-loop through an [`ArrivalPlan`].
+///
+/// Each logical tick: fire the tick's arrivals (admission-checked, then
+/// offered to the coordinator regardless of completion rate), pump and
+/// poll the fleet, shed the global backlog down to budget (batch before
+/// standard before realtime), and feed the drift detector. On a drift
+/// episode's rising edge `retune` is invoked; if it returns a fresh
+/// model set the coordinator's placement cost models are swapped
+/// mid-stream. Finishes with a full drain, so every admitted window is
+/// completed, shed, or failed when this returns.
+pub fn run_open_loop<F>(
+    coord: &mut StreamCoordinator,
+    plan: &ArrivalPlan,
+    traffic: &[TenantTraffic],
+    cfg: &OpenLoopConfig,
+    mut retune: F,
+) -> Result<TrafficReport>
+where
+    F: FnMut(&RetuneEvent) -> Option<Vec<InstanceModel>>,
+{
+    if traffic.len() != plan.tenant_tiers.len() {
+        return Err(Error::config(format!(
+            "traffic rings for {} tenants but plan has {}",
+            traffic.len(),
+            plan.tenant_tiers.len()
+        )));
+    }
+    for (t, ring) in traffic.iter().enumerate() {
+        if ring.windows.is_empty() {
+            return Err(Error::config(format!("tenant {t} has an empty window ring")));
+        }
+        coord.set_qos(t as u32, plan.tenant_tiers[t]);
+    }
+    let metrics: Arc<Metrics> = coord.metrics();
+    let admission = AdmissionController { slo: cfg.slo };
+    let mut detector = DriftDetector::new(cfg.drift, plan.base_shares);
+    let mut next_ring = vec![0usize; traffic.len()];
+    let mut report = TrafficReport {
+        ticks: plan.ticks,
+        ..TrafficReport::default()
+    };
+    let mut arr_idx = 0usize;
+    for tick in 0..plan.ticks {
+        // One latency estimate per tick, shared by every admission check
+        // in it (snapshotting per arrival would be quadratic in load).
+        let snap = metrics.snapshot();
+        let svc_ms = if snap.latency.count > 0 {
+            snap.latency.mean_ms
+        } else {
+            cfg.svc_ms_hint
+        };
+        let slots = coord.placement_slots();
+        let mut tick_counts = [0u64; 3];
+        while arr_idx < plan.arrivals.len() && plan.arrivals[arr_idx].tick == tick {
+            let a = plan.arrivals[arr_idx];
+            arr_idx += 1;
+            let tier = plan.tenant_tiers[a.tenant as usize];
+            let ti = tier.index();
+            tick_counts[ti] += 1;
+            report.per_tier[ti].offered += 1;
+            metrics.on_tier_offered(tier);
+            let ahead = coord.queued_at_or_above(tier) + coord.in_flight();
+            match admission.check(tier, ahead, slots, svc_ms) {
+                Ok(_) => {
+                    report.per_tier[ti].admitted += 1;
+                    metrics.on_tier_admitted(tier);
+                    let ring = &traffic[a.tenant as usize].windows;
+                    let (start, y, u) = &ring[next_ring[a.tenant as usize] % ring.len()];
+                    next_ring[a.tenant as usize] += 1;
+                    coord.offer_window(a.tenant, *start, y.clone(), u.clone())?;
+                }
+                Err(e) if e.is_admission() => {
+                    report.per_tier[ti].rejected += 1;
+                    metrics.on_tier_rejected(tier);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        coord.pump();
+        coord.poll();
+        let shed = coord.shed_to_budget(cfg.backlog_budget);
+        for (acc, s) in report.per_tier.iter_mut().zip(shed) {
+            acc.shed_budget += s;
+        }
+        if let Some(trigger) = detector.observe(tick_counts) {
+            let mut ev = RetuneEvent {
+                tick,
+                drift: trigger.drift,
+                observed: trigger.observed,
+                models_refreshed: false,
+            };
+            if let Some(models) = retune(&ev) {
+                coord.retarget_models(models)?;
+                ev.models_refreshed = true;
+            }
+            report.retunes.push(ev);
+        }
+        report.max_drift = report.max_drift.max(detector.last_drift());
+    }
+    coord.drain();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_through_spec() {
+        let s = "poisson:2.5,tenants:12,mix:1/2/1,ticks:64,seed:9,\
+                 diurnal:32*0.5,burst:20+10*4@rt";
+        let spec = ArrivalSpec::parse(s).unwrap();
+        assert_eq!(spec.rate, 2.5);
+        assert_eq!(spec.tenants, 12);
+        assert_eq!(spec.mix, [1, 2, 1]);
+        let again = ArrivalSpec::parse(&spec.spec()).unwrap();
+        assert_eq!(spec, again, "spec() must re-parse to the same spec");
+        assert_eq!(spec.plan(), again.plan());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_components() {
+        for bad in [
+            "tenants:4",              // missing required poisson rate
+            "poisson:0",              // rate must be positive
+            "poisson:2,mix:0/0/0",    // all-zero mix
+            "poisson:2,mix:1/2",      // mix needs 3 weights
+            "poisson:2,burst:5*3",    // burst grammar is T0+L*F
+            "poisson:2,burst:5+0*3",  // zero-length burst
+            "poisson:2,diurnal:1*.5", // period >= 2
+            "poisson:2,burst:5+4*3@gold", // unknown tier
+            "poisson:2,warp:9",       // unknown component
+        ] {
+            assert!(ArrivalSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn tier_assignment_cycles_the_mix() {
+        let spec = ArrivalSpec::parse("poisson:1,tenants:8,mix:1/2/1").unwrap();
+        let tiers: Vec<QosClass> = (0..8).map(|i| spec.tier_of(i)).collect();
+        assert_eq!(
+            tiers,
+            [
+                QosClass::Realtime,
+                QosClass::Standard,
+                QosClass::Standard,
+                QosClass::Batch,
+                QosClass::Realtime,
+                QosClass::Standard,
+                QosClass::Standard,
+                QosClass::Batch,
+            ]
+        );
+    }
+
+    #[test]
+    fn burst_modulation_is_tier_scoped_and_windowed() {
+        let spec = ArrivalSpec::parse("poisson:3,mix:1/1/1,burst:10+5*4@rt").unwrap();
+        let base = 1.0; // 3 split evenly across three tiers
+        assert!((spec.rate_at(9, QosClass::Realtime) - base).abs() < 1e-12);
+        assert!((spec.rate_at(10, QosClass::Realtime) - 4.0 * base).abs() < 1e-12);
+        assert!((spec.rate_at(14, QosClass::Realtime) - 4.0 * base).abs() < 1e-12);
+        assert!((spec.rate_at(15, QosClass::Realtime) - base).abs() < 1e-12);
+        assert!((spec.rate_at(12, QosClass::Batch) - base).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diurnal_modulation_never_goes_negative() {
+        let spec = ArrivalSpec::parse("poisson:2,diurnal:24*1").unwrap();
+        for tick in 0..96 {
+            for tier in QOS_CLASSES {
+                assert!(spec.rate_at(tick, tier) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_pure_and_seed_sensitive() {
+        let spec = ArrivalSpec::parse("poisson:2,tenants:6,ticks:64,seed:5").unwrap();
+        assert_eq!(spec.plan(), spec.plan(), "same spec ⇒ bit-identical plan");
+        let other = ArrivalSpec::parse("poisson:2,tenants:6,ticks:64,seed:6").unwrap();
+        assert_ne!(spec.plan().arrivals, other.plan().arrivals);
+    }
+
+    #[test]
+    fn plan_accounting_is_internally_consistent() {
+        let spec = ArrivalSpec::seeded(42);
+        let plan = spec.plan();
+        assert_eq!(plan.tenant_tiers.len(), spec.tenants);
+        let offered: u64 = plan.offered_per_tier.iter().sum();
+        assert_eq!(offered, plan.arrivals.len() as u64);
+        let by_tick: u64 = plan
+            .tier_counts_by_tick()
+            .iter()
+            .map(|c| c.iter().sum::<u64>())
+            .sum();
+        assert_eq!(by_tick, offered);
+        // Ticks are non-decreasing (the open-loop driver walks linearly).
+        assert!(plan.arrivals.windows(2).all(|w| w[0].tick <= w[1].tick));
+    }
+
+    #[test]
+    fn seeded_specs_round_trip_losslessly() {
+        for seed in 0..64 {
+            let spec = ArrivalSpec::seeded(seed);
+            let again = ArrivalSpec::parse(&spec.spec()).unwrap();
+            assert_eq!(spec, again, "seed {seed}: spec string must round-trip");
+        }
+    }
+
+    #[test]
+    fn drift_detector_latches_per_episode() {
+        let cfg = DriftConfig {
+            window: 8,
+            threshold: 0.2,
+            exit_frac: 0.5,
+            min_arrivals: 8,
+        };
+        let mut det = DriftDetector::new(cfg, [0.25, 0.5, 0.25]);
+        let balanced = [2u64, 4, 2];
+        let skewed = [8u64, 1, 1];
+        for _ in 0..8 {
+            assert!(det.observe(balanced).is_none());
+        }
+        // Episode 1: skew fires exactly once even while skew persists.
+        let mut fires = 0;
+        for _ in 0..12 {
+            if det.observe(skewed).is_some() {
+                fires += 1;
+            }
+        }
+        assert_eq!(fires, 1, "latched: one fire per episode");
+        assert!(det.in_drift());
+        // Recovery: balanced traffic re-arms the trigger...
+        for _ in 0..16 {
+            assert!(det.observe(balanced).is_none());
+        }
+        assert!(!det.in_drift());
+        // ...and a second episode fires exactly once more.
+        let mut fires2 = 0;
+        for _ in 0..12 {
+            if det.observe(skewed).is_some() {
+                fires2 += 1;
+            }
+        }
+        assert_eq!(fires2, 1);
+        assert_eq!(det.fires(), 2);
+    }
+
+    #[test]
+    fn drift_detector_ignores_sparse_windows() {
+        let cfg = DriftConfig {
+            window: 4,
+            threshold: 0.1,
+            exit_frac: 0.5,
+            min_arrivals: 100,
+        };
+        let mut det = DriftDetector::new(cfg, [0.33, 0.34, 0.33]);
+        // Wildly skewed but far below min_arrivals: never trusted.
+        for _ in 0..32 {
+            assert!(det.observe([3, 0, 0]).is_none());
+        }
+        assert_eq!(det.fires(), 0);
+    }
+
+    #[test]
+    fn admission_rejects_only_past_slo() {
+        let ctl = AdmissionController {
+            slo: SloPolicy {
+                p99_ms: [Some(100.0), Some(1000.0), None],
+            },
+        };
+        // 10 ahead over 2 slots at 30ms each: projected (5+1)*30 = 180ms.
+        let err = ctl.check(QosClass::Realtime, 10, 2, 30.0).unwrap_err();
+        assert!(err.is_admission());
+        assert!(err.to_string().contains("realtime"));
+        // Same backlog is fine for the looser standard SLO.
+        assert!(ctl.check(QosClass::Standard, 10, 2, 30.0).is_ok());
+        // Batch has no SLO: admitted under arbitrary backlog.
+        assert!(ctl.check(QosClass::Batch, 1_000_000, 1, 30.0).is_ok());
+        // Zero slots must not divide by zero.
+        assert!(ctl.check(QosClass::Realtime, 0, 0, 30.0).is_ok());
+    }
+
+    #[test]
+    fn qos_names_round_trip() {
+        for q in QOS_CLASSES {
+            assert_eq!(QosClass::from_name(q.name()).unwrap(), q);
+            assert_eq!(QosClass::from_name(q.short()).unwrap(), q);
+        }
+        assert!(QosClass::from_name("gold").is_err());
+        assert_eq!(QosClass::default(), QosClass::Standard);
+        assert!(QosClass::Realtime.index() < QosClass::Batch.index());
+    }
+}

@@ -616,6 +616,21 @@ pub fn tune_fleet(boards: &[BoardSpec], opts: &TunerOptions) -> Vec<Result<TuneO
     boards.iter().map(|b| tune_board(b, opts)).collect()
 }
 
+/// Re-tune an entire serving roster, all-or-nothing.
+///
+/// The online-retune path (`coordinator::traffic` reacting to traffic-mix
+/// drift) swaps the live placement cost models mid-stream, so a partial
+/// roster is worse than no retune at all: if *any* board has no feasible
+/// design point the whole retune is abandoned (the stream keeps its
+/// current models) and the binding constraint is reported. Board order is
+/// preserved so outcomes line up index-for-index with the fleet.
+pub fn retune_roster(boards: &[BoardSpec], opts: &TunerOptions) -> Result<Vec<TuneOutcome>> {
+    if boards.is_empty() {
+        return Err(Error::config("retune_roster: empty board roster"));
+    }
+    boards.iter().map(|b| tune_board(b, opts)).collect()
+}
+
 /// One point on the shared design axes every family sweep walks:
 /// everything a graph builder needs to materialize one candidate
 /// design. The GRU family maps it onto `GruAccelConfig`
@@ -920,6 +935,19 @@ mod tests {
             .into_iter()
             .map(|o| o.expect("every canonical board must tune"))
             .collect()
+    }
+
+    #[test]
+    fn retune_roster_is_all_or_nothing() {
+        let fleet = heterogeneous_fleet(4, 32);
+        let outs = retune_roster(&fleet, &TunerOptions::default())
+            .expect("canonical fleet must retune wholesale");
+        assert_eq!(outs.len(), fleet.len(), "order-preserving, one per board");
+        for (board, out) in fleet.iter().zip(&outs) {
+            assert_eq!(out.board_name, board.name);
+            assert!(out.chosen.window_s > 0.0);
+        }
+        assert!(retune_roster(&[], &TunerOptions::default()).is_err());
     }
 
     #[test]

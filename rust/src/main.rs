@@ -7,6 +7,7 @@
 //!   simulate --config C        — FPGA accelerator report (table-8 configs)
 //!   serve    --requests N      — run the streaming service demo
 //!   soak     --tenants N --fleet M — multi-tenant streaming workload on a fleet
+//!       (--open-loop --arrivals <spec> drives the QoS traffic tier open-loop)
 //!   tune     [--window N]      — design-space autotuner, writes BENCH_tune.json
 //!   partition [--window N]     — multi-board graph partitioner, writes
 //!       BENCH_partition.json
@@ -37,7 +38,8 @@ fn main() {
         &[
             "system", "method", "steps", "config", "requests", "seed", "samples", "dt", "lr",
             "artifacts", "out", "workers", "backend", "fmt", "tenants", "window", "stride",
-            "queue", "shed", "fleet", "chaos", "deadline-ms", "only", "logdir",
+            "queue", "shed", "fleet", "chaos", "deadline-ms", "only", "logdir", "arrivals",
+            "backlog", "slo-rt-ms", "slo-std-ms", "drift-threshold",
         ],
     );
     let result = match args.subcommand() {
@@ -62,6 +64,7 @@ fn main() {
                  \x20 merinda soak --tenants 6 --samples 400 --backend native --fleet 3\n\
                  \x20 merinda soak --fleet 3 --tuned\n\
                  \x20 merinda soak --fleet 3 --chaos crash:2@6,flip:1@2 --deadline-ms 250\n\
+                 \x20 merinda soak --open-loop --arrivals poisson:3,tenants:6,mix:1/2/1,ticks:120,seed:7,burst:40+40*4@rt\n\
                  \x20 merinda tune --window 64\n\
                  \x20 merinda partition --window 64\n\
                  \x20 merinda table 8\n\

@@ -54,6 +54,23 @@ pub enum Error {
         /// What the fidelity check saw.
         detail: String,
     },
+    /// The admission controller refused new work: accepting the window
+    /// would push the projected p99 latency of its QoS tier past the
+    /// tier's SLO.
+    ///
+    /// Unlike [`Error::Overloaded`] (a bounded queue is *full* right
+    /// now), admission rejection is a *policy* decision made before the
+    /// work enters any queue — the caller should down-tier, retry after
+    /// backlog drains, or drop the request. The open-loop traffic driver
+    /// keys its per-tier rejected counters on this variant.
+    Admission {
+        /// QoS tier whose SLO would have been breached.
+        tier: String,
+        /// Projected p99 latency had the window been admitted (ms).
+        projected_ms: f64,
+        /// The tier's SLO target (ms).
+        slo_ms: f64,
+    },
 }
 
 impl fmt::Display for Error {
@@ -75,6 +92,17 @@ impl fmt::Display for Error {
             }
             Error::Corrupted { detail } => {
                 write!(f, "corrupted result: {detail} (retry)")
+            }
+            Error::Admission {
+                tier,
+                projected_ms,
+                slo_ms,
+            } => {
+                write!(
+                    f,
+                    "admission rejected: {tier} tier projected p99 {projected_ms:.1}ms \
+                     exceeds SLO {slo_ms:.1}ms"
+                )
             }
         }
     }
@@ -142,6 +170,21 @@ impl Error {
     pub fn is_corrupted(&self) -> bool {
         matches!(self, Error::Corrupted { .. })
     }
+
+    /// Helper for admission-control rejections.
+    pub fn admission(tier: impl Into<String>, projected_ms: f64, slo_ms: f64) -> Self {
+        Error::Admission {
+            tier: tier.into(),
+            projected_ms,
+            slo_ms,
+        }
+    }
+
+    /// True when the error is an SLO-protecting admission rejection (the
+    /// work never entered a queue; the caller may down-tier or drop it).
+    pub fn is_admission(&self) -> bool {
+        matches!(self, Error::Admission { .. })
+    }
 }
 
 #[cfg(test)]
@@ -183,6 +226,18 @@ mod tests {
         assert!(!e.is_overload());
         assert!(e.to_string().contains("queue closed"));
         assert!(!Error::config("shut down").is_service_down());
+    }
+
+    #[test]
+    fn admission_is_typed_and_policy_level() {
+        let e = Error::admission("realtime", 812.5, 500.0);
+        assert!(e.is_admission());
+        assert!(!e.is_overload(), "admission is policy, not backpressure");
+        let s = e.to_string();
+        assert!(s.contains("realtime"));
+        assert!(s.contains("812.5"));
+        assert!(s.contains("500.0"));
+        assert!(!Error::config("slo").is_admission());
     }
 
     #[test]

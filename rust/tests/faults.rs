@@ -17,14 +17,18 @@
 //!   identity), so a chaos run is reproducible from its own artifact;
 //! * a partitioned plan occupies capacity on **every** member board,
 //!   and crashing one member invalidates the whole plan — its in-flight
-//!   windows re-place on whole-window siblings, exactly once.
+//!   windows re-place on whole-window siblings, exactly once;
+//! * an open-loop QoS burst driven through a crash plan keeps the
+//!   per-tier admission and disposition ledgers closed and still
+//!   reports realtime SLO latency metrics during failover.
 
 use std::collections::BTreeSet;
 use std::time::Duration;
 
 use merinda::coordinator::{
-    BatcherConfig, FaultPlan, FaultToleranceConfig, InstanceModel, MockBackend,
-    PartitionedInstanceSpec, Service, ServiceConfig, StreamConfig, StreamCoordinator,
+    run_open_loop, ArrivalSpec, BatcherConfig, FaultPlan, FaultToleranceConfig, InstanceModel,
+    MockBackend, OpenLoopConfig, PartitionedInstanceSpec, Service, ServiceConfig, SloPolicy,
+    StreamConfig, StreamCoordinator, TenantTraffic,
 };
 use merinda::fpga::cluster::Link;
 use merinda::fpga::fixedpoint::FixedFormat;
@@ -478,6 +482,85 @@ fn partitioned_occupancy_is_mirrored_and_capped_by_member_headroom() {
     assert_eq!(
         stats.per_instance[0].placed, 0,
         "the mirror consumes the tight member's own capacity entirely"
+    );
+    assert_accounting_closes(&mut coord);
+}
+
+/// Chaos × traffic: an open-loop realtime burst rides through a crash
+/// plan. The tier ledger must close (offered == admitted + rejected and
+/// admitted == completed + shed + failed, per tier), realtime SLO
+/// latency metrics must still be reported while the fleet fails over,
+/// and the crashed instance must be observably down.
+#[test]
+fn open_loop_burst_survives_crash_with_closed_tier_accounting() {
+    let fleet: Vec<(InstanceModel, Service)> = [("a", 1e-6), ("b", 2e-6), ("c", 3e-6)]
+        .iter()
+        .map(|&(name, w)| {
+            let svc = Service::start(ServiceConfig::default(), || MockBackend {
+                delay: Duration::from_millis(1),
+                ..Default::default()
+            });
+            (InstanceModel::synthetic(name, w, 4), svc)
+        })
+        .collect();
+    let mut coord =
+        StreamCoordinator::with_fleet(fleet, StreamConfig::default(), 3, 1).expect("fleet");
+    coord
+        .inject_faults(FaultPlan::parse("crash:1@6", 3).expect("plan"))
+        .expect("plan targets the fleet");
+    let spec =
+        ArrivalSpec::parse("poisson:3,tenants:6,mix:1/2/1,ticks:64,seed:9,burst:16+24*4@rt")
+            .expect("spec");
+    let plan = spec.plan();
+    let mut rng = Prng::new(0xc4a05);
+    let rings: Vec<TenantTraffic> = (0..6)
+        .map(|_| TenantTraffic {
+            windows: (0..3)
+                .map(|k| {
+                    (
+                        k * 64,
+                        rng.normal_vec_f32(64 * 3, 0.5),
+                        rng.normal_vec_f32(64, 0.5),
+                    )
+                })
+                .collect(),
+        })
+        .collect();
+    let cfg = OpenLoopConfig {
+        backlog_budget: 10_000,
+        slo: SloPolicy {
+            p99_ms: [Some(1e9), Some(1e9), None],
+        },
+        ..OpenLoopConfig::default()
+    };
+    let rep = run_open_loop(&mut coord, &plan, &rings, &cfg, |_| None).expect("open loop");
+    assert!(rep.admission_closes(), "offered == admitted + rejected per tier");
+    assert!(
+        rep.per_tier[0].offered > 0,
+        "the burst spec must actually offer realtime load"
+    );
+    let m = coord.metrics().snapshot();
+    for (i, ts) in m.per_tier.iter().enumerate() {
+        assert_eq!(
+            ts.admitted,
+            ts.completed + ts.shed + ts.failed,
+            "tier {i}: disposition ledger must close under chaos"
+        );
+    }
+    assert!(
+        m.per_tier[0].latency_count > 0,
+        "realtime SLO latency metrics must be reported during failover"
+    );
+    assert!(m.per_tier[0].p99_ms >= m.per_tier[0].p50_ms);
+    let stats = coord.stats();
+    assert_eq!(
+        stats.per_instance[1].health, "down",
+        "the crashed instance must be observably down"
+    );
+    assert!(
+        stats.faults.injected_crash >= 1,
+        "the crash must have fired: {:?}",
+        stats.faults
     );
     assert_accounting_closes(&mut coord);
 }

@@ -1,0 +1,388 @@
+//! Open-loop traffic-tier acceptance tests: determinism, QoS ordering,
+//! admission accounting, online retuning, and open-loop vs one-shot
+//! bitwise equivalence.
+//!
+//! Claims held here:
+//! * a seeded arrival spec replays bit-identically — `seeded → spec →
+//!   parse → plan` is the identity across ≥ 32 seeds, and `plan()` is a
+//!   pure function (no wall clock, no hidden state);
+//! * `shed_to_budget` enforces strict QoS shed ordering: every batch
+//!   window sheds before any standard window, and every standard before
+//!   any realtime window, for arbitrary queue shapes and budgets;
+//! * admission accounting closes — per tier, offered == admitted +
+//!   rejected, and every admitted window drains to completed, shed, or
+//!   failed; a tier with an unreachable SLO rejects its entire offered
+//!   load while other tiers are untouched;
+//! * traffic-mix drift triggers the retune callback exactly once per
+//!   drift episode (latched with hysteresis), at the tick a pure replay
+//!   of the plan through a fresh `DriftDetector` predicts, and the
+//!   returned models are installed mid-stream;
+//! * windows admitted open-loop recover bitwise-identical Θ to the
+//!   one-shot `Service::recover_many` path on an identically seeded
+//!   backend (open-loop adds arrival timing and policy, never math).
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use merinda::coordinator::stream::encode_id;
+use merinda::coordinator::{
+    run_open_loop, window_plan, ArrivalSpec, DriftConfig, DriftDetector, InstanceModel,
+    MockBackend, NativeBackend, OpenLoopConfig, QosClass, RecoveryRequest, Service, ServiceConfig,
+    SloPolicy, StreamConfig, StreamCoordinator, TenantTraffic, QOS_CLASSES,
+};
+use merinda::systems::streaming_systems;
+use merinda::util::Prng;
+
+const XD: usize = 3;
+const UD: usize = 1;
+const W: usize = 64;
+
+/// A 3-instance mock fleet (1 ms service time per batch).
+fn mock_fleet() -> Vec<(InstanceModel, Service)> {
+    [("a", 1e-6), ("b", 2e-6), ("c", 3e-6)]
+        .iter()
+        .map(|&(name, w)| {
+            let svc = Service::start(ServiceConfig::default(), || MockBackend {
+                delay: Duration::from_millis(1),
+                ..Default::default()
+            });
+            (InstanceModel::synthetic(name, w, 4), svc)
+        })
+        .collect()
+}
+
+/// Synthetic window rings at the canonical geometry (W=64, xdim 3,
+/// udim 1): `per_tenant` windows of random-but-seeded payload each.
+fn synthetic_rings(tenants: usize, per_tenant: usize, seed: u64) -> Vec<TenantTraffic> {
+    let mut rng = Prng::new(seed);
+    (0..tenants)
+        .map(|_| TenantTraffic {
+            windows: (0..per_tenant)
+                .map(|k| {
+                    (
+                        k * W,
+                        rng.normal_vec_f32(W * XD, 0.5),
+                        rng.normal_vec_f32(W * UD, 0.5),
+                    )
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_seeded_arrival_plans_replay_bit_identically() {
+    let mut distinct = BTreeSet::new();
+    for seed in 0..48u64 {
+        let spec = ArrivalSpec::seeded(seed);
+        let plan = spec.plan();
+        let round = ArrivalSpec::parse(&spec.spec())
+            .unwrap_or_else(|e| panic!("seed {seed}: seeded spec must re-parse: {e}"));
+        assert_eq!(spec, round, "seed {seed}: spec() must round-trip losslessly");
+        assert_eq!(
+            plan,
+            round.plan(),
+            "seed {seed}: a replayed spec must produce a bit-identical plan"
+        );
+        assert_eq!(plan, spec.plan(), "seed {seed}: plan() must be pure");
+        // Internal consistency of the materialized schedule.
+        assert_eq!(
+            plan.offered_per_tier.iter().sum::<u64>() as usize,
+            plan.arrivals.len(),
+            "seed {seed}"
+        );
+        assert!(
+            plan.arrivals.windows(2).all(|w| w[0].tick <= w[1].tick),
+            "seed {seed}: arrivals must be in firing order"
+        );
+        for a in &plan.arrivals {
+            assert!((a.tenant as usize) < spec.tenants, "seed {seed}");
+            assert!(a.tick < spec.ticks, "seed {seed}");
+        }
+        distinct.insert(spec.spec());
+    }
+    assert!(
+        distinct.len() >= 32,
+        "48 seeds must explore >= 32 distinct specs, got {}",
+        distinct.len()
+    );
+}
+
+#[test]
+fn prop_shed_to_budget_never_sheds_a_higher_tier_first() {
+    for seed in 0..16u64 {
+        let mut rng = Prng::new(0x7aff_1c ^ seed);
+        let mut coord =
+            StreamCoordinator::with_fleet(mock_fleet(), StreamConfig::default(), XD, UD)
+                .expect("fleet");
+        // 9 tenants, 3 per tier, random queue depths; never pumped so
+        // every offered window stays queued.
+        let mut per_tier_before = [0usize; 3];
+        for t in 0..9u32 {
+            let qos = QOS_CLASSES[(t % 3) as usize];
+            coord.set_qos(t, qos);
+            let depth = rng.below(12);
+            per_tier_before[qos.index()] += depth;
+            for k in 0..depth {
+                coord
+                    .offer_window(t, k * W, vec![0.1; W * XD], vec![0.1; W * UD])
+                    .expect("geometry is canonical");
+            }
+        }
+        let total: usize = per_tier_before.iter().sum();
+        let budget = rng.below(total + 1);
+        let shed = coord.shed_to_budget(budget);
+        let rem_total = coord.queued_at_or_above(QosClass::Batch);
+        let rem_rt_std = coord.queued_at_or_above(QosClass::Standard);
+        let rem_rt = coord.queued_at_or_above(QosClass::Realtime);
+        let (rem_std, rem_batch) = (rem_rt_std - rem_rt, rem_total - rem_rt_std);
+        assert_eq!(rem_total, total.min(budget), "seed {seed}: budget enforced");
+        assert_eq!(
+            shed.iter().sum::<u64>() as usize,
+            total - rem_total,
+            "seed {seed}: shed counts must account for every drop"
+        );
+        if shed[0] > 0 {
+            assert_eq!(
+                (rem_std, rem_batch),
+                (0, 0),
+                "seed {seed}: realtime shed while lower tiers still queued"
+            );
+        }
+        if shed[1] > 0 {
+            assert_eq!(rem_batch, 0, "seed {seed}: standard shed while batch still queued");
+        }
+    }
+}
+
+#[test]
+fn admission_accounting_closes_and_unreachable_slo_rejects_the_whole_tier() {
+    let spec = ArrivalSpec::parse("poisson:4,tenants:6,mix:1/2/1,ticks:40,seed:5").expect("spec");
+    let plan = spec.plan();
+    assert!(plan.offered_per_tier[0] > 0, "spec must offer realtime load");
+    let mut coord = StreamCoordinator::with_fleet(mock_fleet(), StreamConfig::default(), XD, UD)
+        .expect("fleet");
+    let cfg = OpenLoopConfig {
+        // Realtime SLO below any possible projection (svc_ms_hint is
+        // 5 ms and projections only grow with backlog) => every
+        // realtime arrival is rejected; standard/batch are unbounded.
+        slo: SloPolicy {
+            p99_ms: [Some(1e-3), None, None],
+        },
+        backlog_budget: 10_000,
+        ..OpenLoopConfig::default()
+    };
+    let rep = run_open_loop(&mut coord, &plan, &synthetic_rings(6, 3, 11), &cfg, |_| None)
+        .expect("open loop");
+    assert!(rep.admission_closes(), "offered == admitted + rejected per tier");
+    let rt = &rep.per_tier[0];
+    assert_eq!(rt.offered, plan.offered_per_tier[0]);
+    assert_eq!(rt.rejected, rt.offered, "unreachable SLO must reject all realtime");
+    assert_eq!(rt.admitted, 0);
+    for (i, tier) in rep.per_tier.iter().enumerate().skip(1) {
+        assert_eq!(
+            tier.rejected, 0,
+            "tier {i} has no SLO and must never be admission-rejected"
+        );
+        assert_eq!(tier.admitted, tier.offered);
+    }
+    // Every admitted window drains to exactly one disposition.
+    let m = coord.metrics().snapshot();
+    for (i, q) in QOS_CLASSES.iter().enumerate() {
+        let ts = &m.per_tier[i];
+        assert_eq!(ts.offered, rep.per_tier[i].offered, "tier {}", q.name());
+        assert_eq!(ts.admitted, rep.per_tier[i].admitted, "tier {}", q.name());
+        assert_eq!(ts.rejected, rep.per_tier[i].rejected, "tier {}", q.name());
+        assert_eq!(
+            ts.admitted,
+            ts.completed + ts.shed + ts.failed,
+            "tier {}: disposition must close",
+            q.name()
+        );
+    }
+    assert_eq!(m.per_tier[0].completed, 0, "no realtime window was admitted");
+    assert!(m.per_tier[1].completed > 0, "standard load must flow");
+}
+
+#[test]
+fn drift_detector_fires_exactly_once_per_episode() {
+    let cfg = DriftConfig::default();
+    let mut det = DriftDetector::new(cfg, [0.25, 0.5, 0.25]);
+    let mut fires_at = Vec::new();
+    // Deterministic counts: settle at the reference mix, surge realtime
+    // (episode 1), decay fully, surge batch (episode 2), tail.
+    let phases: &[([u64; 3], u64)] = &[
+        ([1, 2, 1], 40),
+        ([8, 2, 1], 40),
+        ([1, 2, 1], 80),
+        ([1, 2, 8], 40),
+        ([1, 2, 1], 10),
+    ];
+    let mut tick = 0u64;
+    for (counts, len) in phases {
+        for _ in 0..*len {
+            if det.observe(*counts).is_some() {
+                fires_at.push(tick);
+            }
+            tick += 1;
+        }
+    }
+    assert_eq!(
+        det.fires(),
+        2,
+        "two drift episodes must fire exactly twice, at {fires_at:?}"
+    );
+    assert!(
+        fires_at[0] >= 40 && fires_at[0] < 80,
+        "episode 1 must fire inside the first surge: {fires_at:?}"
+    );
+    assert!(
+        fires_at[1] >= 160 && fires_at[1] < 200,
+        "episode 2 must fire inside the second surge: {fires_at:?}"
+    );
+}
+
+#[test]
+fn open_loop_retune_fires_once_per_episode_and_installs_models() {
+    let spec =
+        ArrivalSpec::parse("poisson:3,tenants:6,mix:1/2/1,ticks:96,seed:7,burst:40+40*6@rt")
+            .expect("spec");
+    let plan = spec.plan();
+    let cfg = OpenLoopConfig {
+        backlog_budget: 10_000,
+        slo: SloPolicy { p99_ms: [None; 3] },
+        ..OpenLoopConfig::default()
+    };
+    // A pure replay of the plan through a fresh detector predicts the
+    // exact retune schedule the live run must reproduce.
+    let mut det = DriftDetector::new(cfg.drift, plan.base_shares);
+    let expected: Vec<u64> = plan
+        .tier_counts_by_tick()
+        .iter()
+        .enumerate()
+        .filter_map(|(t, c)| det.observe(*c).map(|_| t as u64))
+        .collect();
+    assert_eq!(
+        expected.len(),
+        1,
+        "the single realtime burst must drive exactly one drift episode"
+    );
+    let mut coord = StreamCoordinator::with_fleet(mock_fleet(), StreamConfig::default(), XD, UD)
+        .expect("fleet");
+    let mut calls = 0u64;
+    let rep = run_open_loop(&mut coord, &plan, &synthetic_rings(6, 3, 13), &cfg, |ev| {
+        calls += 1;
+        assert!(ev.drift > cfg.drift.threshold, "trigger below threshold");
+        Some(vec![InstanceModel::synthetic("retuned", 5e-7, 8); 3])
+    })
+    .expect("open loop");
+    assert_eq!(calls, 1, "retune callback must fire exactly once");
+    assert_eq!(rep.retunes.len(), 1);
+    assert_eq!(
+        rep.retunes[0].tick, expected[0],
+        "live retune must fire at the tick the pure replay predicts"
+    );
+    assert!(rep.retunes[0].models_refreshed, "returned models must be installed");
+    assert!(rep.admission_closes());
+    assert!(rep.max_drift > cfg.drift.threshold);
+}
+
+#[test]
+fn open_loop_matches_oneshot_bitwise_on_admitted_windows() {
+    const SAMPLES: usize = 200;
+    const SEED: u64 = 42;
+    let scfg = ServiceConfig {
+        workers: 2,
+        ..Default::default()
+    };
+    // One real tenant trajectory per tenant, pre-sliced into the same
+    // window ring `merinda soak --open-loop` uses.
+    let mut rng = Prng::new(SEED);
+    let roster = streaming_systems();
+    let streams: Vec<(Vec<f32>, Vec<f32>)> = (0..4)
+        .map(|t| {
+            let (sys, dt) = &roster[t % roster.len()];
+            let tr = sys.generate(SAMPLES, *dt, &mut rng);
+            let (y, u) = tr.padded_f32(XD, UD);
+            let ys = y.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            let us = u.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            (
+                y.iter().map(|v| v / ys).collect(),
+                u.iter().map(|v| v / us).collect(),
+            )
+        })
+        .collect();
+    let starts = window_plan(SAMPLES, W, 16);
+    let rings: Vec<TenantTraffic> = streams
+        .iter()
+        .map(|(y, u)| TenantTraffic {
+            windows: starts
+                .iter()
+                .map(|&s0| {
+                    (
+                        s0,
+                        y[s0 * XD..(s0 + W) * XD].to_vec(),
+                        u[s0 * UD..(s0 + W) * UD].to_vec(),
+                    )
+                })
+                .collect(),
+        })
+        .collect();
+    let spec = ArrivalSpec::parse("poisson:2,tenants:4,mix:1/2/1,ticks:48,seed:3").expect("spec");
+    let plan = spec.plan();
+    let cfg = OpenLoopConfig {
+        // Generous budget + unbounded SLOs: every arrival is admitted
+        // and completes, so the bitwise comparison covers all of them.
+        backlog_budget: 100_000,
+        slo: SloPolicy { p99_ms: [None; 3] },
+        ..OpenLoopConfig::default()
+    };
+    let svc = Service::start(scfg, || NativeBackend::new(8, SEED));
+    let mut coord = StreamCoordinator::new(svc, StreamConfig::default(), XD, UD);
+    let rep = run_open_loop(&mut coord, &plan, &rings, &cfg, |_| None).expect("open loop");
+    assert!(rep.admission_closes());
+    let offered: u64 = rep.per_tier.iter().map(|t| t.offered).sum();
+    let admitted: u64 = rep.per_tier.iter().map(|t| t.admitted).sum();
+    assert_eq!(admitted, offered, "unbounded SLOs must admit everything");
+    let mut results = coord.take_results();
+    results.sort_by_key(|r| (r.tenant, r.seq_no));
+    assert_eq!(
+        results.len() as u64,
+        admitted,
+        "every admitted window must complete (no shed/fail in this regime)"
+    );
+    assert!(!results.is_empty(), "the plan must offer load");
+    // Same windows through one-shot recovery on an identically seeded
+    // backend: Θ must match bitwise.
+    let svc2 = Service::start(scfg, || NativeBackend::new(8, SEED));
+    let mut oneshot = Vec::with_capacity(results.len());
+    let mut reqs: Vec<RecoveryRequest> = results
+        .iter()
+        .map(|r| {
+            let (y, u) = &streams[r.tenant as usize];
+            RecoveryRequest {
+                id: encode_id(r.tenant, r.seq_no),
+                y: y[r.start * XD..(r.start + W) * XD].to_vec(),
+                u: u[r.start * UD..(r.start + W) * UD].to_vec(),
+            }
+        })
+        .collect();
+    while !reqs.is_empty() {
+        let take = reqs.len().min(128);
+        let chunk: Vec<RecoveryRequest> = reqs.drain(..take).collect();
+        oneshot.extend(svc2.recover_many(chunk));
+    }
+    assert_eq!(oneshot.len(), results.len(), "one-shot path must serve every window");
+    let mut by_id: std::collections::BTreeMap<u64, Vec<f32>> =
+        oneshot.into_iter().map(|r| (r.id, r.theta)).collect();
+    for r in &results {
+        let theta = by_id
+            .remove(&encode_id(r.tenant, r.seq_no))
+            .expect("every streamed window has a one-shot twin");
+        assert_eq!(
+            r.theta, theta,
+            "tenant {} window {}: open-loop Θ must be bitwise identical",
+            r.tenant, r.seq_no
+        );
+    }
+}
